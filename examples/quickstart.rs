@@ -1,0 +1,87 @@
+//! Quickstart: a five-minute tour of the CR-CIM library.
+//!
+//! 1. Instantiate a die (mismatch + noise Monte-Carlo model).
+//! 2. Read one column's accuracy metrics with and without CSNR boost.
+//! 3. Run an integer matvec through the full macro and compare with the
+//!    exact digital result.
+//! 4. Ask the SAC policy engine what the ViT workload costs.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use cr_cim::cim::params::{CbMode, MacroParams};
+use cr_cim::cim::{CimMacro, Column};
+use cr_cim::coordinator::sac::{self, NoiseCalibration};
+use cr_cim::coordinator::Scheduler;
+use cr_cim::metrics::{characterize, measure_csnr, sqnr_db, CharacterizeOpts, CsnrEnsemble};
+use cr_cim::util::pool::default_threads;
+use cr_cim::util::rng::Rng;
+use cr_cim::vit::plan::PrecisionPlan;
+use cr_cim::vit::VitConfig;
+
+fn main() -> Result<(), String> {
+    let threads = default_threads();
+    println!("== 1. a CR-CIM die ==");
+    let params = MacroParams::default();
+    println!(
+        "array {}x{}, {}-bit reconfigured SAR, {} fF unit caps, {:.2} V",
+        params.rows, params.cols, params.adc_bits, params.c_unit_ff, params.supply_v
+    );
+
+    println!("\n== 2. column accuracy (Fig. 5 in miniature) ==");
+    let col = Column::new(&params, 0)?;
+    let opts = CharacterizeOpts { step: 16, trials: 32, threads, stream: 0 };
+    for mode in [CbMode::On, CbMode::Off] {
+        let curve = characterize(&col, mode, &opts);
+        let csnr = measure_csnr(&col, mode, &CsnrEnsemble::default(), threads);
+        println!(
+            "  {:>6}: INL {:.2} LSB | noise {:.2} LSB | SQNR {:.1} dB | CSNR {:.1} dB",
+            mode.label(),
+            curve.max_abs_inl(),
+            curve.mean_noise_lsb(),
+            sqnr_db(&curve),
+            csnr.csnr_db,
+        );
+    }
+
+    println!("\n== 3. a multi-bit matvec on the macro ==");
+    let mut m = CimMacro::new(&params)?;
+    let mut rng = Rng::new(7);
+    let rows = 512;
+    let n_out = 8;
+    let w: Vec<Vec<i32>> = (0..rows)
+        .map(|_| (0..n_out).map(|_| rng.below(15) as i32 - 7).collect())
+        .collect();
+    let x: Vec<i32> = (0..rows).map(|_| rng.below(15) as i32 - 7).collect();
+    m.load_weights(&w, 4)?;
+    let exact = m.matvec_exact(&w, &x);
+    let got = m.matvec(&x, 4, CbMode::On)?;
+    println!("  exact digital: {exact:?}");
+    println!("  CR-CIM w/CB:   {:?}", got.y);
+    println!(
+        "  {} conversions, {:.1} nJ, {:.2} µs",
+        got.conversions,
+        got.energy_pj * 1e-3,
+        got.latency_ns * 1e-3
+    );
+
+    println!("\n== 4. SAC policy over the ViT workload ==");
+    let calib = NoiseCalibration::measure(&params, threads)?;
+    println!(
+        "  calibrated read noise: {:.2} LSB w/CB, {:.2} LSB wo/CB",
+        calib.sigma_cb_on, calib.sigma_cb_off
+    );
+    let sched = Scheduler::new(&params);
+    let cfg = VitConfig::vit_small();
+    for plan in PrecisionPlan::ablation_series() {
+        let cost = sac::evaluate_plan(&sched, &cfg, 1, &plan);
+        println!(
+            "  {:<44} {:>8.1} µJ/inf {:>9.1} µs",
+            plan.name, cost.energy_uj, cost.latency_us
+        );
+    }
+    println!(
+        "  SAC end-to-end efficiency gain: {:.2}x (paper: up to 2.1x)",
+        sac::sac_efficiency_improvement(&sched, &cfg, 1)
+    );
+    Ok(())
+}

@@ -1,0 +1,80 @@
+//! SAC design-space sweep: how the co-design decision changes with the
+//! accuracy budget, the network shape, and the supply point.
+//!
+//! Three sweeps:
+//!   1. accuracy budget → chosen per-class operating points (the policy
+//!      flips attention to wo/CB long before MLP);
+//!   2. network geometry (MLP ratio) → SAC gain (the more MLP-heavy the
+//!      network, the closer the gain is to the CB-only ceiling);
+//!   3. supply sweep under the SAC plan (Fig. 6's TOPS panel, SAC view).
+//!
+//! Run: `cargo run --release --example sac_sweep`
+
+use cr_cim::cim::energy::supply_sweep;
+use cr_cim::cim::netstats::LayerClass;
+use cr_cim::cim::params::{CbMode, MacroParams};
+use cr_cim::coordinator::sac::{self, choose_operating_point, NoiseCalibration};
+use cr_cim::coordinator::Scheduler;
+use cr_cim::util::pool::default_threads;
+use cr_cim::vit::plan::PrecisionPlan;
+use cr_cim::vit::VitConfig;
+
+fn main() -> Result<(), String> {
+    let params = MacroParams::default();
+    let threads = default_threads();
+    let calib = NoiseCalibration::measure(&params, threads)?;
+    let sched = Scheduler::new(&params);
+
+    println!("== 1. policy vs accuracy budget ==");
+    println!("{:<14} {:<26} {:<26}", "max drop", "attention", "MLP");
+    for drop in [0.05, 0.02, 0.01, 0.005, 0.002] {
+        let att = choose_operating_point(LayerClass::TransformerAttention, &calib, drop);
+        let mlp = choose_operating_point(LayerClass::TransformerMlp, &calib, drop);
+        println!(
+            "{:<14} {:<26} {:<26}",
+            format!("{:.1} pt", drop * 100.0),
+            format!("{}b {}", att.a_bits, att.cb.label()),
+            format!("{}b {}", mlp.a_bits, mlp.cb.label()),
+        );
+    }
+
+    println!("\n== 2. SAC gain vs network geometry ==");
+    println!("{:<28} {:>12} {:>12} {:>8}", "network", "None µJ", "SAC µJ", "gain");
+    for (name, cfg) in [
+        ("ViT-tiny (d96, r2)", VitConfig::default()),
+        (
+            "ViT-small (d384, r4)",
+            VitConfig::vit_small(),
+        ),
+        (
+            "attention-heavy (r1)",
+            VitConfig { dim: 256, depth: 8, mlp_ratio: 1, ..VitConfig::default() },
+        ),
+        (
+            "mlp-heavy (r8)",
+            VitConfig { dim: 256, depth: 8, mlp_ratio: 8, ..VitConfig::default() },
+        ),
+    ] {
+        let none = sac::evaluate_plan(&sched, &cfg, 1, &PrecisionPlan::uniform_safe());
+        let sacp = sac::evaluate_plan(&sched, &cfg, 1, &PrecisionPlan::paper_sac());
+        println!(
+            "{:<28} {:>12.1} {:>12.1} {:>7.2}x",
+            name,
+            none.energy_uj,
+            sacp.energy_uj,
+            none.energy_uj / sacp.energy_uj
+        );
+    }
+
+    println!("\n== 3. supply sweep (CB off / peak mode) ==");
+    println!("{:>8} {:>10} {:>12}", "V", "TOPS", "TOPS/W");
+    for p in supply_sweep(&params, CbMode::Off, 6) {
+        println!("{:>8.2} {:>10.2} {:>12.0}", p.supply_v, p.tops, p.tops_per_watt);
+    }
+
+    println!(
+        "\nSAC end-to-end gain on ViT-small: {:.2}x (paper: up to 2.1x)",
+        sac::sac_efficiency_improvement(&sched, &VitConfig::vit_small(), 1)
+    );
+    Ok(())
+}

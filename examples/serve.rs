@@ -1,0 +1,125 @@
+//! Trace-driven serving experiment: open-loop request arrivals against
+//! the batched PJRT ViT executor — the "serving paper" view of the
+//! system: throughput, batch occupancy, queue + execute latency
+//! percentiles, and energy per request under the SAC plan.
+//!
+//! Run: `make artifacts && cargo run --release --example serve [-- --rate 200]`
+
+use std::path::PathBuf;
+use std::time::Instant;
+
+use anyhow::{anyhow, Result};
+
+use cr_cim::cim::params::MacroParams;
+use cr_cim::coordinator::batcher::{Batcher, Request};
+use cr_cim::coordinator::ledger::Ledger;
+use cr_cim::coordinator::sac::{self, NoiseCalibration};
+use cr_cim::coordinator::Scheduler;
+use cr_cim::runtime::{Manifest, Runtime, VitExecutable};
+use cr_cim::util::args::Args;
+use cr_cim::util::pool::default_threads;
+use cr_cim::util::stats::percentile;
+use cr_cim::vit::plan::PrecisionPlan;
+use cr_cim::vit::VitConfig;
+use cr_cim::workload::{trace, ArrivalProcess, EvalSet};
+
+fn main() -> Result<()> {
+    let args = Args::new("serve", "trace-driven serving experiment")
+        .opt("artifacts", "artifacts", "artifacts dir")
+        .opt("requests", "400", "number of requests")
+        .opt("rate", "200", "mean arrival rate [req/s]")
+        .opt("max-wait-ms", "20", "batching window")
+        .flag("bursty", "use the bursty arrival process")
+        .parse_env()
+        .map_err(|e| anyhow!("{e}"))?;
+
+    let dir = PathBuf::from(args.get("artifacts").unwrap());
+    let manifest = Manifest::load(&dir).map_err(|e| anyhow!(e))?;
+    let eval = EvalSet::load(&dir).map_err(|e| anyhow!(e))?;
+    let rt = Runtime::cpu()?;
+    let exe = VitExecutable::new(
+        &rt,
+        manifest.get("vit_cim_b16").ok_or_else(|| anyhow!("no artifact"))?,
+    )?;
+
+    let params = MacroParams::default();
+    let calib = NoiseCalibration::measure(&params, default_threads()).map_err(|e| anyhow!(e))?;
+    let (sa, sm) = sac::plan_sigmas(&PrecisionPlan::paper_sac(), &calib);
+    let sched = Scheduler::new(&params);
+    let cost = sac::evaluate_plan(&sched, &VitConfig::default(), 1, &PrecisionPlan::paper_sac());
+
+    let n: usize = args.get_parse("requests").map_err(|e| anyhow!("{e}"))?;
+    let rate: f64 = args.get_parse("rate").map_err(|e| anyhow!("{e}"))?;
+    let process = if args.get_flag("bursty") {
+        ArrivalProcess::Bursty { rate_low: rate * 0.2, rate_high: rate * 4.0, dwell_ms: 100.0 }
+    } else {
+        ArrivalProcess::Poisson { rate }
+    };
+    let events = trace::generate(process, n, eval.n, 99);
+    let batcher = Batcher::new(
+        vec![1, exe.batch],
+        std::time::Duration::from_millis(args.get_parse("max-wait-ms").map_err(|e| anyhow!("{e}"))?),
+    );
+
+    println!(
+        "serving {n} requests at ~{rate}/s ({}), batch {} window {:?}",
+        if args.get_flag("bursty") { "bursty" } else { "poisson" },
+        exe.batch,
+        batcher.max_wait
+    );
+
+    // Open-loop replay: requests arrive on the trace clock; the executor
+    // drains with the batching policy.
+    let w = eval.image_floats();
+    let mut pending: Vec<Request<usize>> = Vec::new();
+    let mut ledger = Ledger::new();
+    let mut latencies_us: Vec<f64> = Vec::new();
+    let start = Instant::now();
+    let mut next_event = 0usize;
+    let mut seed = 0i32;
+    while latencies_us.len() < n {
+        let now_us = start.elapsed().as_secs_f64() * 1e6;
+        // Admit due arrivals.
+        while next_event < events.len() && events[next_event].t_us <= now_us {
+            pending.push(Request {
+                id: next_event as u64,
+                payload: events[next_event].image_index,
+                arrived: Instant::now(),
+            });
+            next_event += 1;
+        }
+        let Some(batch) = batcher.form_batch(&mut pending, Instant::now()) else {
+            std::thread::sleep(std::time::Duration::from_micros(100));
+            continue;
+        };
+        // Execute.
+        let t0 = Instant::now();
+        let mut flat = vec![0f32; exe.batch * w];
+        for (i, req) in batch.requests.iter().enumerate() {
+            flat[i * w..(i + 1) * w].copy_from_slice(eval.image_slice(req.payload));
+        }
+        seed += 1;
+        let _logits = exe.infer(&flat, seed, sa as f32, sm as f32)?;
+        let wall = t0.elapsed();
+        ledger.record_batch(batch.requests.len(), batch.exec_size, &cost, wall);
+        let done = Instant::now();
+        for req in &batch.requests {
+            latencies_us.push(done.duration_since(req.arrived).as_secs_f64() * 1e6);
+        }
+    }
+    let span_s = start.elapsed().as_secs_f64();
+
+    println!("\n== results ==");
+    println!("throughput          : {:.1} req/s over {:.1} s", n as f64 / span_s, span_s);
+    println!(
+        "latency p50/p90/p99 : {:.1} / {:.1} / {:.1} ms",
+        percentile(&latencies_us, 0.5) / 1e3,
+        percentile(&latencies_us, 0.9) / 1e3,
+        percentile(&latencies_us, 0.99) / 1e3
+    );
+    println!("mean batch occupancy: {:.2}", ledger.mean_occupancy());
+    println!("macro energy/request: {:.1} µJ (modeled)", ledger.energy_per_request_uj());
+    println!("effective TOPS/W    : {:.0}", ledger.effective_tops_per_watt());
+    println!("\nledger: {}", ledger.to_json().to_string_pretty());
+    Ok(())
+}

@@ -1,0 +1,160 @@
+//! END-TO-END DRIVER: ViT inference through the full three-layer stack.
+//!
+//! Loads the AOT-compiled ViT artifacts (JAX+Pallas → HLO text → PJRT),
+//! the shared held-out eval set, and the circuit-calibrated noise sigmas,
+//! then measures:
+//!
+//!   - ideal (fp32) accuracy            — the paper's 96.8% row
+//!   - CIM + SAC plan accuracy          — the paper's 95.8% row
+//!   - CIM all-4b-no-CB accuracy        — why SAC is needed
+//!   - modeled macro energy/latency per inference for each plan
+//!
+//! Results are appended to EXPERIMENTS.md by hand; the JSON goes to
+//! `target/vit_inference.json`.
+//!
+//! Run: `make artifacts && cargo run --release --example vit_inference`
+
+use std::path::PathBuf;
+use std::time::Instant;
+
+use anyhow::{anyhow, Result};
+
+use cr_cim::cim::params::MacroParams;
+use cr_cim::coordinator::sac::{self, NoiseCalibration};
+use cr_cim::coordinator::Scheduler;
+use cr_cim::runtime::{Manifest, Runtime, VitExecutable};
+use cr_cim::util::json::Json;
+use cr_cim::util::pool::default_threads;
+use cr_cim::vit::plan::PrecisionPlan;
+use cr_cim::vit::VitConfig;
+use cr_cim::workload::EvalSet;
+
+struct EvalOutcome {
+    accuracy: f64,
+    wall_s: f64,
+    images: usize,
+}
+
+fn eval_accuracy(
+    exe: &VitExecutable,
+    eval: &EvalSet,
+    count: usize,
+    sigma_attn: f32,
+    sigma_mlp: f32,
+) -> Result<EvalOutcome> {
+    let w = eval.image_floats();
+    let count = count.min(eval.n);
+    let mut correct = 0usize;
+    let mut done = 0usize;
+    let t0 = Instant::now();
+    while done < count {
+        let b = exe.batch.min(count - done);
+        let mut flat = vec![0f32; exe.batch * w];
+        for i in 0..b {
+            flat[i * w..(i + 1) * w].copy_from_slice(eval.image_slice(done + i));
+        }
+        let logits = exe.infer(&flat, done as i32 + 1, sigma_attn, sigma_mlp)?;
+        let preds = exe.predict(&logits);
+        for i in 0..b {
+            if preds[i] == eval.labels[done + i] as usize {
+                correct += 1;
+            }
+        }
+        done += b;
+    }
+    Ok(EvalOutcome {
+        accuracy: correct as f64 / count as f64,
+        wall_s: t0.elapsed().as_secs_f64(),
+        images: count,
+    })
+}
+
+fn main() -> Result<()> {
+    let artifacts = std::env::args().nth(1).unwrap_or_else(|| "artifacts".to_string());
+    let dir = PathBuf::from(&artifacts);
+    let manifest = Manifest::load(&dir).map_err(|e| anyhow!(e))?;
+    manifest.check_files().map_err(|e| anyhow!(e))?;
+    let eval = EvalSet::load(&dir).map_err(|e| anyhow!(e))?;
+    let count: usize = std::env::var("CRCIM_EVAL_COUNT")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(256);
+
+    println!("== CR-CIM end-to-end: ViT on the synthetic CIFAR-like corpus ==");
+    println!("artifacts: {artifacts}; eval images: {count}/{}", eval.n);
+
+    let rt = Runtime::cpu()?;
+    println!("PJRT platform: {}", rt.platform());
+    let t0 = Instant::now();
+    let fp = VitExecutable::new(&rt, manifest.get("vit_fp_b16").ok_or_else(|| anyhow!("no fp artifact"))?)?;
+    let cim = VitExecutable::new(&rt, manifest.get("vit_cim_b16").ok_or_else(|| anyhow!("no cim artifact"))?)?;
+    println!("compile time: {:.1} s", t0.elapsed().as_secs_f64());
+
+    // Circuit-sim calibration → L2 noise inputs.
+    let params = MacroParams::default();
+    let threads = default_threads();
+    let calib = NoiseCalibration::measure(&params, threads).map_err(|e| anyhow!(e))?;
+    println!(
+        "calibrated read noise: {:.3} LSB (CB on) / {:.3} LSB (CB off)",
+        calib.sigma_cb_on, calib.sigma_cb_off
+    );
+
+    let sched = Scheduler::new(&params);
+    let cfg = VitConfig::default(); // matches the trained artifact
+    let mut report = Json::obj();
+    report.set("eval_images", Json::num(count as f64));
+    if let Some(acc) = manifest.acc_fp {
+        report.set("trainer_reported_fp_acc", Json::num(acc));
+    }
+
+    // 1. Ideal inference.
+    let ideal = eval_accuracy(&fp, &eval, count, 0.0, 0.0)?;
+    println!(
+        "\nideal (fp32)        : {:.1}%  ({} imgs, {:.1} s)   [paper: 96.8%]",
+        ideal.accuracy * 100.0,
+        ideal.images,
+        ideal.wall_s
+    );
+    report.set("ideal_accuracy", Json::num(ideal.accuracy));
+
+    // 2/3. CIM plans.
+    let plans = [
+        ("cim_sac (paper plan)", PrecisionPlan::paper_sac(), "[paper: 95.8%]"),
+        ("cim_all4b_noCB", PrecisionPlan::uniform_fast(), "(why SAC is needed)"),
+    ];
+    for (name, plan, tag) in plans {
+        let (sa, sm) = sac::plan_sigmas(&plan, &calib);
+        // The artifact's bit-widths are baked (attn 4b / mlp 6b); the σ
+        // inputs carry the CB decision. For the all-4b plan we push the
+        // no-CB σ into both classes.
+        let out = eval_accuracy(&cim, &eval, count, sa as f32, sm as f32)?;
+        let cost = sac::evaluate_plan(&sched, &cfg, 1, &plan);
+        println!(
+            "{name:<20}: {:.1}%  ({} imgs, {:.1} s)   {tag}",
+            out.accuracy * 100.0,
+            out.images,
+            out.wall_s
+        );
+        println!(
+            "  modeled macro cost: {:.1} µJ/inf, {:.1} µs/inf, eff {:.0} TOPS/W",
+            cost.energy_uj, cost.latency_us, cost.tops_per_watt_effective
+        );
+        let mut o = Json::obj();
+        o.set("accuracy", Json::num(out.accuracy));
+        o.set("energy_uj", Json::num(cost.energy_uj));
+        o.set("latency_us", Json::num(cost.latency_us));
+        o.set("sigma_attn", Json::num(sa));
+        o.set("sigma_mlp", Json::num(sm));
+        report.set(name, Json::Obj(o));
+    }
+
+    // 4. Efficiency headline.
+    let gain = sac::sac_efficiency_improvement(&sched, &VitConfig::vit_small(), 1);
+    println!("\nSAC efficiency gain (ViT-small workload): {gain:.2}x   [paper: up to 2.1x]");
+    report.set("sac_gain_x", Json::num(gain));
+
+    std::fs::create_dir_all("target").ok();
+    std::fs::write("target/vit_inference.json", Json::Obj(report).to_string_pretty())?;
+    println!("report written to target/vit_inference.json");
+    Ok(())
+}

@@ -1,0 +1,70 @@
+//! Yield / corner analysis: the shmoo view a chip team would run before
+//! committing the design — multi-die Monte-Carlo against the published
+//! spec, a temperature sweep, and the post-calibration recovery.
+//!
+//! Run: `cargo run --release --example yield_analysis [-- --dies 24]`
+
+use cr_cim::cim::calibration::CalibrationTable;
+use cr_cim::cim::montecarlo::{summarize, sweep_dies, temperature_sweep, YieldSpec};
+use cr_cim::cim::params::{CbMode, MacroParams};
+use cr_cim::cim::Column;
+use cr_cim::metrics::CharacterizeOpts;
+use cr_cim::util::args::Args;
+use cr_cim::util::pool::default_threads;
+use cr_cim::util::stats::rms;
+
+fn main() -> Result<(), String> {
+    let args = Args::new("yield_analysis", "multi-die Monte-Carlo")
+        .opt("dies", "24", "dies to sample")
+        .parse_env()
+        .map_err(|e| e.to_string())?;
+    let dies: usize = args.get_parse("dies").map_err(|e| e.to_string())?;
+    let threads = default_threads();
+    let base = MacroParams::default();
+    let opts = CharacterizeOpts { step: 8, trials: 32, threads: 1, stream: 21 };
+
+    println!("== lot sweep: {dies} dies, CB on ==");
+    let results = sweep_dies(&base, CbMode::On, dies, &opts, threads);
+    let spec = YieldSpec::default();
+    let lot = summarize(&results, &spec);
+    println!(
+        "spec: INL<= {} LSB, SQNR >= {} dB, CSNR >= {} dB",
+        spec.max_inl_lsb, spec.min_sqnr_db, spec.min_csnr_db
+    );
+    println!("yield: {:.0}%", lot.yield_fraction * 100.0);
+    println!(
+        "SQNR: {:.1} ± {:.1} dB [{:.1}, {:.1}]",
+        lot.sqnr.mean(),
+        lot.sqnr.std(),
+        lot.sqnr.min(),
+        lot.sqnr.max()
+    );
+    println!(
+        "CSNR: {:.1} ± {:.1} dB | max|INL|: {:.2} ± {:.2} LSB",
+        lot.csnr.mean(),
+        lot.csnr.std(),
+        lot.inl.mean(),
+        lot.inl.std()
+    );
+
+    println!("\n== temperature sweep (die 0, CB on) ==");
+    println!("{:>8} {:>12} {:>10}", "T [K]", "noise [LSB]", "SQNR [dB]");
+    for (t, noise, sqnr) in
+        temperature_sweep(&base, CbMode::On, &[250.0, 300.0, 350.0, 400.0], &opts)
+    {
+        println!("{t:>8.0} {noise:>12.3} {sqnr:>10.1}");
+    }
+
+    println!("\n== per-die calibration recovery (static error rms, LSB) ==");
+    println!("{:>6} {:>10} {:>12}", "die", "raw", "calibrated");
+    for i in 0..4.min(dies) {
+        let p = base.clone().with_seed(base.seed.wrapping_add(1 + i as u64 * 7919));
+        let col = Column::new(&p, 0)?;
+        let raw: Vec<f64> =
+            (0..1024).map(|c| col.static_code(c) as f64 - c as f64).collect();
+        let table = CalibrationTable::measure(&col, CbMode::On, 12, threads);
+        let res = table.residual_inl(&col);
+        println!("{i:>6} {:>10.3} {:>12.3}", rms(&raw), rms(&res));
+    }
+    Ok(())
+}

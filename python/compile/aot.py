@@ -1,0 +1,176 @@
+"""AOT bridge: lower the jitted inference functions to HLO *text* for the
+rust runtime.
+
+HLO text -- NOT `lowered.compile()` or proto `.serialize()` -- is the
+interchange format: jax >= 0.5 emits HloModuleProtos with 64-bit
+instruction ids which the crate's xla_extension 0.5.1 rejects
+(`proto.id() <= INT_MAX`); the text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/README.md).
+
+Artifacts (all under artifacts/):
+  vit_cim_b{B}.hlo.txt   (images, seed, sigma_attn, sigma_mlp) -> logits
+                         -- the hardware path, weights baked as constants
+  vit_fp_b{B}.hlo.txt    (images,) -> logits -- ideal reference
+  cim_linear_micro.hlo.txt  standalone L1 kernel for the runtime micro-bench
+  manifest.json          shapes/dtypes the rust loader checks against
+
+Python runs ONCE here; the rust binary is self-contained afterwards.
+"""
+
+from __future__ import annotations
+
+import json
+from functools import partial
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from .kernels.cim_matmul import cim_linear
+from .model import VitConfig, forward_cim, forward_fp
+from .train import unflatten_params
+
+ARTIFACTS = Path(__file__).resolve().parents[2] / "artifacts"
+
+BATCHES = (1, 16)
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange).
+
+    print_large_constants=True is REQUIRED: the baked ViT weights are
+    multi-thousand-element constants which the default printer elides as
+    `constant({...})` -- text that parses but silently zeroes the model.
+    A guard below makes that failure loud instead.
+    """
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    text = comp.as_hlo_text(True)
+    if "{...}" in text:
+        raise RuntimeError("HLO text contains elided constants; artifact would be corrupt")
+    return text
+
+
+def load_trained():
+    flat = dict(np.load(ARTIFACTS / "vit_weights.npz"))
+    params = unflatten_params(flat)
+    meta = json.loads((ARTIFACTS / "vit_meta.json").read_text())
+    c = meta["config"]
+    cfg = VitConfig(
+        image=c["image"],
+        patch=c["patch"],
+        dim=c["dim"],
+        depth=c["depth"],
+        heads=c["heads"],
+        mlp_ratio=c["mlp_ratio"],
+        num_classes=c["num_classes"],
+        attn_bits=c["attn_bits"],
+        mlp_bits=c["mlp_bits"],
+    )
+    return params, cfg, meta
+
+
+def build_artifacts(out_dir: Path) -> dict:
+    params, cfg, meta = load_trained()
+    out_dir.mkdir(exist_ok=True)
+    manifest: dict = {"config": meta["config"], "artifacts": {}}
+
+    img_spec = lambda b: jax.ShapeDtypeStruct((b, cfg.image, cfg.image, 3), jnp.float32)
+    scalar_i = jax.ShapeDtypeStruct((), jnp.int32)
+    scalar_f = jax.ShapeDtypeStruct((), jnp.float32)
+
+    for b in BATCHES:
+        # Hardware path: weights closed over (baked as HLO constants).
+        def cim_fn(images, seed, sig_a, sig_m):
+            return (forward_cim(params, images, seed, sig_a, sig_m, cfg),)
+
+        lowered = jax.jit(cim_fn).lower(img_spec(b), scalar_i, scalar_f, scalar_f)
+        name = f"vit_cim_b{b}"
+        (out_dir / f"{name}.hlo.txt").write_text(to_hlo_text(lowered))
+        manifest["artifacts"][name] = {
+            "inputs": [
+                {"shape": [b, cfg.image, cfg.image, 3], "dtype": "f32"},
+                {"shape": [], "dtype": "i32"},
+                {"shape": [], "dtype": "f32"},
+                {"shape": [], "dtype": "f32"},
+            ],
+            "outputs": [{"shape": [b, cfg.num_classes], "dtype": "f32"}],
+        }
+
+        def fp_fn(images):
+            return (forward_fp(params, images, cfg),)
+
+        lowered = jax.jit(fp_fn).lower(img_spec(b))
+        name = f"vit_fp_b{b}"
+        (out_dir / f"{name}.hlo.txt").write_text(to_hlo_text(lowered))
+        manifest["artifacts"][name] = {
+            "inputs": [{"shape": [b, cfg.image, cfg.image, 3], "dtype": "f32"}],
+            "outputs": [{"shape": [b, cfg.num_classes], "dtype": "f32"}],
+        }
+
+    # Standalone L1 kernel artifact for the runtime micro-bench: one
+    # macro-shaped linear (K = dim, N = mlp_dim) at the MLP precision.
+    m, k, n = 64, cfg.dim, cfg.mlp_dim
+    micro = jax.jit(
+        partial(cim_linear, a_bits=cfg.mlp_bits, w_bits=cfg.mlp_bits)
+    )
+
+    def micro_fn(x, w):
+        return (micro(x, w),)
+
+    lowered = jax.jit(micro_fn).lower(
+        jax.ShapeDtypeStruct((m, k), jnp.float32),
+        jax.ShapeDtypeStruct((k, n), jnp.float32),
+    )
+    (out_dir / "cim_linear_micro.hlo.txt").write_text(to_hlo_text(lowered))
+    manifest["artifacts"]["cim_linear_micro"] = {
+        "inputs": [
+            {"shape": [m, k], "dtype": "f32"},
+            {"shape": [k, n], "dtype": "f32"},
+        ],
+        "outputs": [{"shape": [m, n], "dtype": "f32"}],
+    }
+
+    manifest["acc_fp"] = meta["acc_fp"]
+    manifest["acc_qat"] = meta["acc_qat"]
+
+    # Cross-language contract vectors: the rust coordinator re-implements
+    # output_noise_sigma (coordinator::sac::kernel_noise_sigma); these
+    # vectors make any drift a loud integration-test failure.
+    from .kernels.cim_matmul import output_noise_sigma, row_replication
+
+    bridge = []
+    for k in (48, 96, 192, 384, 1024, 1536, 4096):
+        for a_bits, w_bits in ((4, 4), (6, 6), (8, 8), (2, 6)):
+            bridge.append(
+                {
+                    "k": k,
+                    "a_bits": a_bits,
+                    "w_bits": w_bits,
+                    "replication": row_replication(k),
+                    "sigma_factor": output_noise_sigma(k, a_bits, w_bits, 1.0),
+                }
+            )
+    manifest["noise_bridge"] = bridge
+
+    (out_dir / "manifest.json").write_text(json.dumps(manifest, indent=1))
+    return manifest
+
+
+def main():
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default=str(ARTIFACTS))
+    args = ap.parse_args()
+    manifest = build_artifacts(Path(args.out))
+    names = ", ".join(manifest["artifacts"])
+    print(f"wrote artifacts: {names}")
+
+
+if __name__ == "__main__":
+    main()

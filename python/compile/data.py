@@ -1,0 +1,85 @@
+"""Synthetic CIFAR-like corpus for the end-to-end ViT experiment.
+
+The sandbox has no dataset downloads, so we procedurally generate a
+10-class 32x32x3 image corpus whose classes are separated by *structure*
+(orientation / frequency / texture), not by trivial color offsets -- a ViT
+must actually learn patch mixing to classify it, which is what makes the
+attention-vs-MLP noise-tolerance experiment meaningful (DESIGN.md
+substitution table).
+
+Classes (k = 0..9): oriented gratings at 4 angles, checkerboards at 2
+scales, radial rings, diagonal gradient, blobs, and high-freq noise
+texture. Every image gets random phase/shift/amplitude jitter, per-pixel
+noise, and a random low-frequency lighting field.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+NUM_CLASSES = 10
+IMG = 32
+
+
+def _grating(xx, yy, theta: float, freq: float, phase: float) -> np.ndarray:
+    t = xx * np.cos(theta) + yy * np.sin(theta)
+    return np.sin(2.0 * np.pi * freq * t + phase)
+
+
+def _make_one(cls: int, rng: np.random.Generator) -> np.ndarray:
+    lin = np.linspace(-0.5, 0.5, IMG)
+    xx, yy = np.meshgrid(lin, lin, indexing="ij")
+    phase = rng.uniform(0, 2 * np.pi)
+    jitter = rng.uniform(0.85, 1.15)
+    if cls < 4:  # oriented gratings at 0/45/90/135 degrees
+        base = _grating(xx, yy, np.pi * cls / 4.0, 3.0 * jitter, phase)
+    elif cls < 6:  # checkerboards, two scales
+        f = 2.0 if cls == 4 else 4.0
+        base = np.sign(_grating(xx, yy, 0.0, f * jitter, phase)) * np.sign(
+            _grating(xx, yy, np.pi / 2, f * jitter, phase)
+        )
+    elif cls == 6:  # radial rings
+        r = np.sqrt(xx**2 + yy**2)
+        base = np.sin(2 * np.pi * 4.0 * jitter * r + phase)
+    elif cls == 7:  # diagonal gradient
+        base = (xx + yy) * 2.0 * jitter
+    elif cls == 8:  # blobs: sum of a few gaussians
+        base = np.zeros_like(xx)
+        for _ in range(4):
+            cx, cy = rng.uniform(-0.4, 0.4, size=2)
+            s = rng.uniform(0.05, 0.12)
+            base += np.exp(-((xx - cx) ** 2 + (yy - cy) ** 2) / (2 * s * s))
+        base = base * 2.0 - 1.0
+    else:  # high-frequency texture
+        base = _grating(xx, yy, rng.uniform(0, np.pi), 8.0 * jitter, phase)
+
+    # Channel mixing: class-independent random tint so color alone cannot
+    # solve the task.
+    tint = rng.uniform(0.6, 1.0, size=3)
+    img = base[..., None] * tint[None, None, :]
+    # Low-frequency lighting field + pixel noise.
+    light = _grating(xx, yy, rng.uniform(0, np.pi), 0.7, rng.uniform(0, 2 * np.pi))
+    img = img + 0.3 * light[..., None]
+    img = img + rng.normal(0.0, 0.15, size=img.shape)
+    # Random circular shift (translation invariance pressure).
+    sx, sy = rng.integers(0, IMG, size=2)
+    img = np.roll(img, (sx, sy), axis=(0, 1))
+    return img.astype(np.float32)
+
+
+def make_corpus(n: int, seed: int) -> tuple[np.ndarray, np.ndarray]:
+    """Generate `n` images with balanced labels. Deterministic in `seed`."""
+    rng = np.random.default_rng(seed)
+    labels = np.arange(n) % NUM_CLASSES
+    rng.shuffle(labels)
+    imgs = np.stack([_make_one(int(c), rng) for c in labels])
+    # Normalize to zero mean / unit std globally (like CIFAR preprocessing).
+    imgs = (imgs - imgs.mean()) / (imgs.std() + 1e-8)
+    return imgs, labels.astype(np.int32)
+
+
+def train_test_split(n_train: int, n_test: int, seed: int = 1234):
+    """Standard split used by train.py and the rust workload generator."""
+    x_tr, y_tr = make_corpus(n_train, seed)
+    x_te, y_te = make_corpus(n_test, seed + 1)
+    return (x_tr, y_tr), (x_te, y_te)

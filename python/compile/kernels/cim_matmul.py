@@ -1,0 +1,192 @@
+"""L1: the CR-CIM behavioral matmul as a Pallas kernel.
+
+The macro computes y = x @ w with
+  - activations quantized to signed `a_bits` (bit-serial on chip),
+  - weights quantized to signed `w_bits` (bit-sliced across columns),
+  - each binary-plane MAC over <=1024 rows read by the reconfigured
+    10-bit SAR, whose 1024 codes exactly cover the 1024-row count range.
+
+Because the 10-bit ADC resolution matches the 1024-row array (the whole
+point of capacitor reconfiguration), the *noise-free* macro computes the
+integer matmul exactly; analog error enters as per-conversion read noise
+and static INL. The kernel therefore implements the exact quantized
+datapath with the macro's tiling structure (row tiles of 1024 = one
+compute phase each); the stochastic read noise is injected by the L2
+model (model.py) with the sigma calibrated from the rust circuit
+simulator, and static INL is absorbed by weight calibration (DESIGN.md
+section "Hardware-Adaptation").
+
+TPU mapping notes: one grid step processes one (row-tile, out-tile) pair,
+i.e. exactly one macro tile; the integer contraction inside a tile is a
+single dot_general shaped for the MXU; tiles are sized for VMEM (a
+1024x128 i32 accumulator is 512 KiB). interpret=True is mandatory on this
+CPU-only image -- real TPU lowering would emit a Mosaic custom-call.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Rows per macro compute phase (the 1024 binary-bank cells).
+MACRO_ROWS = 1024
+# Default output-column tile: the physical macro has 78 columns; the
+# kernel tiles logical output channels in chunks that fit VMEM.
+OUT_TILE = 128
+
+
+def quantize(x: jnp.ndarray, bits: int, scale: jnp.ndarray) -> jnp.ndarray:
+    """Symmetric signed quantization to `bits`: round(x/scale) clipped."""
+    qmax = 2 ** (bits - 1) - 1
+    q = jnp.round(x / scale)
+    return jnp.clip(q, -qmax - 1, qmax)
+
+
+def act_scale(x: jnp.ndarray, bits: int) -> jnp.ndarray:
+    """Dynamic per-tensor activation scale (digital periphery computes
+    max-abs before driving the input DACs)."""
+    qmax = 2 ** (bits - 1) - 1
+    return jnp.maximum(jnp.max(jnp.abs(x)), 1e-6) / qmax
+
+
+def weight_scale(w: jnp.ndarray, bits: int) -> jnp.ndarray:
+    """Static per-tensor weight scale (set at weight-load time)."""
+    qmax = 2 ** (bits - 1) - 1
+    return jnp.maximum(jnp.max(jnp.abs(w)), 1e-6) / qmax
+
+
+def _cim_tile_kernel(xq_ref, wq_ref, o_ref, *, k_tiles: int):
+    """One (M-tile, N-tile) grid step: accumulate k_tiles macro phases.
+
+    xq/wq are the *quantized integer* operands as f32 (exact for |q| <
+    2^24, far above the 6-bit operands the chip supports). Each k-slice of
+    MACRO_ROWS is one compute phase of the macro; the in-kernel loop is
+    the on-chip row-tile sequencing.
+    """
+    acc = jnp.zeros(o_ref.shape, dtype=jnp.float32)
+    for t in range(k_tiles):
+        xs = xq_ref[:, t * MACRO_ROWS : (t + 1) * MACRO_ROWS]
+        ws = wq_ref[t * MACRO_ROWS : (t + 1) * MACRO_ROWS, :]
+        # One macro tile: MXU-shaped contraction over <=1024 rows.
+        acc = acc + jnp.dot(xs, ws, preferred_element_type=jnp.float32)
+    o_ref[...] = acc
+
+
+def _auto_tile(extent: int, cap: int, align: int) -> int:
+    """Largest tile <= cap that covers `extent` in equal stripes (minimal
+    padding), aligned to `align`. §Perf: fewer grid steps dominate the
+    lowered graph's wall time (each step is a loop iteration in the
+    interpret-mode HLO), so we take the biggest VMEM-compatible tile:
+    a (1024 x 1024) f32 activation tile is 4 MiB; with the weight and
+    accumulator tiles the working set stays under half of a TPU core's
+    16 MiB VMEM."""
+    if extent <= cap:
+        return max(align, -(-extent // align) * align)
+    stripes = -(-extent // cap)
+    tile = -(-extent // stripes)
+    return max(align, -(-tile // align) * align)
+
+
+def cim_matmul_quantized(
+    xq: jnp.ndarray,
+    wq: jnp.ndarray,
+    *,
+    m_tile: int | None = None,
+    n_tile: int | None = None,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Integer (carried as f32) matmul with the macro's tiling structure.
+
+    xq: (M, K) quantized activations; wq: (K, N) quantized weights.
+    K is padded to a multiple of MACRO_ROWS, M/N to their tiles.
+    Tile sizes default to the largest VMEM-compatible stripes.
+    """
+    m, k = xq.shape
+    if m_tile is None:
+        m_tile = _auto_tile(m, 1024, 8)
+    if n_tile is None:
+        n_tile = _auto_tile(wq.shape[1], 512, 8)
+    k2, n = wq.shape
+    assert k == k2, f"inner dims {k} vs {k2}"
+    k_pad = (-k) % MACRO_ROWS
+    m_pad = (-m) % m_tile
+    n_pad = (-n) % n_tile
+    xq_p = jnp.pad(xq, ((0, m_pad), (0, k_pad)))
+    wq_p = jnp.pad(wq, ((0, k_pad), (0, n_pad)))
+    mp, kp = xq_p.shape
+    _, np_ = wq_p.shape
+    k_tiles = kp // MACRO_ROWS
+
+    out = pl.pallas_call(
+        functools.partial(_cim_tile_kernel, k_tiles=k_tiles),
+        grid=(mp // m_tile, np_ // n_tile),
+        in_specs=[
+            pl.BlockSpec((m_tile, kp), lambda i, j: (i, 0)),
+            pl.BlockSpec((kp, n_tile), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((m_tile, n_tile), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=interpret,
+    )(xq_p, wq_p)
+    return out[:m, :n]
+
+
+def cim_linear(
+    x: jnp.ndarray,
+    w: jnp.ndarray,
+    *,
+    a_bits: int,
+    w_bits: int,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Full behavioral CIM linear layer: quantize -> macro matmul ->
+    dequantize. Returns float32 of x @ w as the macro computes it
+    (noise-free part)."""
+    sx = act_scale(x, a_bits)
+    sw = weight_scale(w, w_bits)
+    xq = quantize(x, a_bits, sx)
+    wq = quantize(w, w_bits, sw)
+    y = cim_matmul_quantized(xq, wq, interpret=interpret)
+    return y * (sx * sw)
+
+
+def conversions_per_output(k: int, a_bits: int, w_bits: int) -> int:
+    """ADC conversions contributing to one output element: one per
+    (row-tile, activation-bit, weight-bit-plane)."""
+    k_tiles = -(-k // MACRO_ROWS)
+    return k_tiles * a_bits * w_bits
+
+
+def row_replication(k: int) -> int:
+    """Row replication factor: a layer with k < 1024 rows is replicated
+    r = floor(1024/k) times across the idle rows of the bank, so the
+    column integrates r copies of the dot product (count scales by r, up
+    to the full 1024-code range) and the periphery divides by r. Signal
+    grows r x at constant read noise -- the standard dynamic-range
+    recovery for small-K layers on a tall CIM array."""
+    if k >= MACRO_ROWS:
+        return 1
+    return max(1, MACRO_ROWS // k)
+
+
+def output_noise_sigma(
+    k: int, a_bits: int, w_bits: int, sigma_read_lsb: float
+) -> float:
+    """Std of the *integer-domain* output error induced by per-conversion
+    read noise sigma_read_lsb, propagated through the two's-complement
+    shift-add reconstruction and the row-replication divide:
+
+      y = (1/r) sum_{a,b} (+/-2^(a+b)) code[a,b]  =>
+      var = (sigma/r)^2 * k_tiles * sum_a 4^a * sum_b 4^b.
+
+    Mirrored by rust (coordinator::sac::kernel_noise_sigma) -- the
+    calibration bridge between L3's circuit sim and the L2 graph.
+    """
+    k_tiles = -(-k // MACRO_ROWS)
+    r = row_replication(k)
+    sa = sum(4.0**a for a in range(a_bits))
+    sb = sum(4.0**b for b in range(w_bits))
+    return float(sigma_read_lsb / r * (k_tiles * sa * sb) ** 0.5)

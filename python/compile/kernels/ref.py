@@ -1,0 +1,32 @@
+"""Pure-jnp oracle for the L1 Pallas kernel.
+
+Implements the identical behavioral-CIM semantics (symmetric quantization,
+exact integer matmul, dequantization) with no Pallas, no tiling -- the
+ground truth the kernel must match bit-for-bit (both paths are exact
+integer arithmetic carried in f32, so allclose tolerances are zero-ish).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .cim_matmul import act_scale, quantize, weight_scale
+
+
+def ref_matmul_quantized(xq: jnp.ndarray, wq: jnp.ndarray) -> jnp.ndarray:
+    """Exact integer matmul (f32 carrier)."""
+    return jnp.dot(xq, wq, preferred_element_type=jnp.float32)
+
+
+def ref_linear(x: jnp.ndarray, w: jnp.ndarray, *, a_bits: int, w_bits: int) -> jnp.ndarray:
+    """Oracle for cim_matmul.cim_linear."""
+    sx = act_scale(x, a_bits)
+    sw = weight_scale(w, w_bits)
+    xq = quantize(x, a_bits, sx)
+    wq = quantize(w, w_bits, sw)
+    return ref_matmul_quantized(xq, wq) * (sx * sw)
+
+
+def ref_linear_fp(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """Unquantized reference (for quantization-error assertions)."""
+    return jnp.dot(x, w)

@@ -1,0 +1,237 @@
+"""L2: the Vision Transformer, in plain JAX, with every linear layer
+routed through the L1 behavioral-CIM kernel.
+
+Paper mapping (Fig. 4/6): the macro computes the *Linear* layers; the SAC
+policy runs MLP-class linears (patch embed, MLP fc1/fc2, classifier head)
+with CB at 6b/6b, and attention-class linears (QKV/output projections)
+without CB at 4b/4b. Softmax, LayerNorm and the score/value matmuls run
+in the digital periphery (fp32 here).
+
+Three forward paths share one parameter pytree:
+  - forward_fp      -- float reference ("ideal inference", 96.8% row)
+  - forward_cim     -- quantized + read-noise path (the chip)
+  - forward_qat     -- straight-through-quantized path used for the
+                       co-design fine-tune in train.py
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.cim_matmul import (
+    act_scale,
+    cim_matmul_quantized,
+    output_noise_sigma,
+    quantize,
+    weight_scale,
+)
+
+
+@dataclass(frozen=True)
+class VitConfig:
+    image: int = 32
+    patch: int = 4
+    dim: int = 96
+    depth: int = 4
+    heads: int = 4
+    mlp_ratio: int = 2
+    num_classes: int = 10
+    # SAC precision plan (paper: MLP w/CB 6b, attention wo/CB 4b).
+    attn_bits: int = 4
+    mlp_bits: int = 6
+
+    @property
+    def tokens(self) -> int:
+        return (self.image // self.patch) ** 2 + 1  # + [CLS]
+
+    @property
+    def patch_dim(self) -> int:
+        return self.patch * self.patch * 3
+
+    @property
+    def mlp_dim(self) -> int:
+        return self.dim * self.mlp_ratio
+
+
+def init_params(key: jax.Array, cfg: VitConfig) -> dict:
+    """Initialize the full parameter pytree (dict of arrays)."""
+    keys = iter(jax.random.split(key, 64))
+
+    def dense(k, fan_in, fan_out):
+        w = jax.random.normal(k, (fan_in, fan_out)) * (2.0 / fan_in) ** 0.5
+        return {"w": w.astype(jnp.float32), "b": jnp.zeros((fan_out,), jnp.float32)}
+
+    params = {
+        "patch_embed": dense(next(keys), cfg.patch_dim, cfg.dim),
+        "pos": 0.02 * jax.random.normal(next(keys), (cfg.tokens, cfg.dim)).astype(jnp.float32),
+        "cls": jnp.zeros((cfg.dim,), jnp.float32),
+        "blocks": [],
+        "head_norm": {"g": jnp.ones((cfg.dim,)), "b": jnp.zeros((cfg.dim,))},
+        "head": dense(next(keys), cfg.dim, cfg.num_classes),
+    }
+    for _ in range(cfg.depth):
+        params["blocks"].append(
+            {
+                "ln1": {"g": jnp.ones((cfg.dim,)), "b": jnp.zeros((cfg.dim,))},
+                "qkv": dense(next(keys), cfg.dim, 3 * cfg.dim),
+                "proj": dense(next(keys), cfg.dim, cfg.dim),
+                "ln2": {"g": jnp.ones((cfg.dim,)), "b": jnp.zeros((cfg.dim,))},
+                "fc1": dense(next(keys), cfg.dim, cfg.mlp_dim),
+                "fc2": dense(next(keys), cfg.mlp_dim, cfg.dim),
+            }
+        )
+    return params
+
+
+def layer_norm(x, p, eps=1e-5):
+    mu = x.mean(-1, keepdims=True)
+    var = ((x - mu) ** 2).mean(-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * p["g"] + p["b"]
+
+
+def patchify(images: jnp.ndarray, cfg: VitConfig) -> jnp.ndarray:
+    """(B, 32, 32, 3) -> (B, T-1, patch_dim)."""
+    b, h, w, c = images.shape
+    p = cfg.patch
+    x = images.reshape(b, h // p, p, w // p, p, c)
+    x = x.transpose(0, 1, 3, 2, 4, 5)
+    return x.reshape(b, (h // p) * (w // p), p * p * c)
+
+
+# ---------------------------------------------------------------------------
+# Linear-layer variants: fp / straight-through-quantized / CIM-with-noise.
+# ---------------------------------------------------------------------------
+
+
+def _linear_fp(x, p):
+    return x @ p["w"] + p["b"]
+
+
+def _fake_quant(x, bits, scale):
+    """Straight-through quantization for the co-design fine-tune."""
+    return jax.lax.stop_gradient(quantize(x, bits, scale) * scale - x) + x
+
+
+def _linear_qat(x, p, bits):
+    sx = act_scale(x, bits)
+    sw = weight_scale(p["w"], bits)
+    xq = _fake_quant(x, bits, sx)
+    wq = _fake_quant(p["w"], bits, sw)
+    return xq @ wq + p["b"]
+
+
+def _linear_cim(x, p, bits, key, sigma_read, interpret=True):
+    """The hardware path: L1 kernel + calibrated read noise.
+
+    `sigma_read` is the per-conversion read-noise std in LSB, calibrated
+    from the rust circuit simulator (CbMode On/Off); it propagates through
+    the shift-add reconstruction via output_noise_sigma's static factor.
+    """
+    shape = x.shape
+    x2 = x.reshape(-1, shape[-1])
+    sx = act_scale(x2, bits)
+    sw = weight_scale(p["w"], bits)
+    xq = quantize(x2, bits, sx)
+    wq = quantize(p["w"], bits, sw)
+    y_int = cim_matmul_quantized(xq, wq, interpret=interpret)
+    k = x2.shape[-1]
+    noise_factor = output_noise_sigma(k, bits, bits, 1.0)  # linear in sigma
+    noise = jax.random.normal(key, y_int.shape) * (noise_factor * sigma_read)
+    y = (y_int + noise) * (sx * sw) + p["b"]
+    return y.reshape(*shape[:-1], -1)
+
+
+# ---------------------------------------------------------------------------
+# Forward passes.
+# ---------------------------------------------------------------------------
+
+
+def _attention(x, block, cfg: VitConfig, linear_attn):
+    b, t, d = x.shape
+    h = cfg.heads
+    qkv = linear_attn(layer_norm(x, block["ln1"]), block["qkv"])
+    qkv = qkv.reshape(b, t, 3, h, d // h).transpose(2, 0, 3, 1, 4)
+    q, k, v = qkv[0], qkv[1], qkv[2]
+    # Digital periphery: scores + softmax + value mixing.
+    att = (q @ k.transpose(0, 1, 3, 2)) / (d // h) ** 0.5
+    att = jax.nn.softmax(att, axis=-1)
+    y = (att @ v).transpose(0, 2, 1, 3).reshape(b, t, d)
+    return linear_attn(y, block["proj"])
+
+
+def _mlp(x, block, cfg: VitConfig, linear_mlp):
+    y = linear_mlp(layer_norm(x, block["ln2"]), block["fc1"])
+    y = jax.nn.gelu(y)
+    return linear_mlp(y, block["fc2"])
+
+
+def _trunk(params, images, cfg, linear_attn, linear_mlp):
+    x = patchify(images, cfg)
+    x = linear_mlp(x, params["patch_embed"])
+    b = x.shape[0]
+    cls = jnp.broadcast_to(params["cls"], (b, 1, cfg.dim))
+    x = jnp.concatenate([cls, x], axis=1) + params["pos"]
+    for block in params["blocks"]:
+        x = x + _attention(x, block, cfg, linear_attn)
+        x = x + _mlp(x, block, cfg, linear_mlp)
+    x = layer_norm(x[:, 0], params["head_norm"])
+    return linear_mlp(x, params["head"])
+
+
+def forward_fp(params, images, cfg: VitConfig):
+    """Float32 reference ("ideal inference")."""
+    return _trunk(params, images, cfg, _linear_fp, _linear_fp)
+
+
+def forward_qat(params, images, cfg: VitConfig):
+    """Straight-through-quantized forward at the SAC precision plan; used
+    for the software-analog co-design fine-tune."""
+    la = lambda x, p: _linear_qat(x, p, cfg.attn_bits)
+    lm = lambda x, p: _linear_qat(x, p, cfg.mlp_bits)
+    return _trunk(params, images, cfg, la, lm)
+
+
+def forward_cim(
+    params,
+    images,
+    seed: jnp.ndarray,
+    sigma_attn: jnp.ndarray,
+    sigma_mlp: jnp.ndarray,
+    cfg: VitConfig,
+    interpret: bool = True,
+):
+    """The hardware path: every linear goes through the behavioral macro.
+
+    seed: scalar int32 -- PRNG seed for the read noise of this batch.
+    sigma_attn/sigma_mlp: per-conversion read-noise std [LSB] for the
+    attention-class (wo/CB) and MLP-class (w/CB) layers, calibrated by L3.
+    """
+    root = jax.random.PRNGKey(seed)
+    counter = [0]
+
+    def next_key():
+        counter[0] += 1
+        return jax.random.fold_in(root, counter[0])
+
+    la = lambda x, p: _linear_cim(x, p, cfg.attn_bits, next_key(), sigma_attn, interpret)
+    lm = lambda x, p: _linear_cim(x, p, cfg.mlp_bits, next_key(), sigma_mlp, interpret)
+    return _trunk(params, images, cfg, la, lm)
+
+
+def count_linear_workload(cfg: VitConfig, batch: int) -> dict:
+    """Static per-inference workload description consumed by the rust
+    scheduler: for each linear-layer class, the (rows=K, outs=N, calls)
+    shapes. Token count includes [CLS]."""
+    t = cfg.tokens
+    layers = {"attention": [], "mlp": []}
+    layers["mlp"].append({"k": cfg.patch_dim, "n": cfg.dim, "m": batch * (t - 1)})
+    for _ in range(cfg.depth):
+        layers["attention"].append({"k": cfg.dim, "n": 3 * cfg.dim, "m": batch * t})
+        layers["attention"].append({"k": cfg.dim, "n": cfg.dim, "m": batch * t})
+        layers["mlp"].append({"k": cfg.dim, "n": cfg.mlp_dim, "m": batch * t})
+        layers["mlp"].append({"k": cfg.mlp_dim, "n": cfg.dim, "m": batch * t})
+    layers["mlp"].append({"k": cfg.dim, "n": cfg.num_classes, "m": batch})
+    return layers

@@ -1,0 +1,200 @@
+"""Build-time training of the ViT on the synthetic corpus.
+
+Two phases, mirroring the paper's software-analog co-design:
+  1. float pre-training (the "ideal" model, Fig. 6's 96.8% row), then
+  2. a QAT fine-tune at the SAC precision plan (attention 4b, MLP 6b)
+     with straight-through estimators -- the software half of SAC that
+     makes the chip's precisions viable.
+
+Hand-rolled Adam (optax is not installed). Weights land in
+artifacts/vit_weights.npz, metadata in artifacts/vit_meta.json, and the
+held-out corpus slice (shared with the rust driver) in
+artifacts/eval_set.npz. Run via `make artifacts` (cached: skipped when
+outputs are newer than sources).
+"""
+
+from __future__ import annotations
+
+import json
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import data
+from .model import VitConfig, forward_fp, forward_qat, init_params
+
+ARTIFACTS = Path(__file__).resolve().parents[2] / "artifacts"
+
+
+def cross_entropy(logits, labels):
+    logp = jax.nn.log_softmax(logits)
+    return -jnp.take_along_axis(logp, labels[:, None], axis=1).mean()
+
+
+def accuracy(logits, labels):
+    return (jnp.argmax(logits, axis=-1) == labels).mean()
+
+
+def adam_init(params):
+    zeros = jax.tree.map(jnp.zeros_like, params)
+    return {"m": zeros, "v": jax.tree.map(jnp.zeros_like, params), "t": jnp.zeros(())}
+
+
+def adam_update(params, grads, state, lr, b1=0.9, b2=0.999, eps=1e-8):
+    t = state["t"] + 1.0
+    m = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g, state["m"], grads)
+    v = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * g * g, state["v"], grads)
+    mhat_scale = 1.0 / (1 - b1**t)
+    vhat_scale = 1.0 / (1 - b2**t)
+    new_params = jax.tree.map(
+        lambda p, m_, v_: p - lr * (m_ * mhat_scale) / (jnp.sqrt(v_ * vhat_scale) + eps),
+        params,
+        m,
+        v,
+    )
+    return new_params, {"m": m, "v": v, "t": t}
+
+
+def train(
+    cfg: VitConfig,
+    steps_fp: int = 700,
+    steps_qat: int = 250,
+    batch: int = 128,
+    n_train: int = 8192,
+    n_test: int = 1024,
+    seed: int = 0,
+    verbose: bool = True,
+):
+    (x_tr, y_tr), (x_te, y_te) = data.train_test_split(n_train, n_test)
+    x_tr, y_tr = jnp.asarray(x_tr), jnp.asarray(y_tr)
+    x_te_j, y_te_j = jnp.asarray(x_te), jnp.asarray(y_te)
+
+    params = init_params(jax.random.PRNGKey(seed), cfg)
+    opt = adam_init(params)
+
+    @jax.jit
+    def step_fp(params, opt, xb, yb, lr):
+        loss, grads = jax.value_and_grad(
+            lambda p: cross_entropy(forward_fp(p, xb, cfg), yb)
+        )(params)
+        params, opt = adam_update(params, grads, opt, lr)
+        return params, opt, loss
+
+    @jax.jit
+    def step_qat(params, opt, xb, yb, lr):
+        loss, grads = jax.value_and_grad(
+            lambda p: cross_entropy(forward_qat(p, xb, cfg), yb)
+        )(params)
+        params, opt = adam_update(params, grads, opt, lr)
+        return params, opt, loss
+
+    @jax.jit
+    def eval_fp(params):
+        return accuracy(forward_fp(params, x_te_j, cfg), y_te_j)
+
+    @jax.jit
+    def eval_qat(params):
+        return accuracy(forward_qat(params, x_te_j, cfg), y_te_j)
+
+    rng = np.random.default_rng(seed + 99)
+    loss_log = []
+    t0 = time.time()
+    for phase, steps, step_fn, lr0 in (
+        ("fp", steps_fp, step_fp, 1e-3),
+        ("qat", steps_qat, step_qat, 2e-4),
+    ):
+        for i in range(steps):
+            idx = rng.integers(0, x_tr.shape[0], size=batch)
+            lr = lr0 * min(1.0, (i + 1) / 50) * (0.5 ** (i // max(1, steps // 2)))
+            params, opt, loss = step_fn(params, opt, x_tr[idx], y_tr[idx], lr)
+            loss_log.append({"phase": phase, "step": i, "loss": float(loss)})
+            if verbose and i % 50 == 0:
+                print(
+                    f"[{phase}] step {i:4d} loss {float(loss):.4f} "
+                    f"({time.time()-t0:.0f}s)",
+                    flush=True,
+                )
+    acc_fp = float(eval_fp(params))
+    acc_qat = float(eval_qat(params))
+    if verbose:
+        print(f"final: ideal(fp) acc={acc_fp:.4f}  qat acc={acc_qat:.4f}", flush=True)
+    return params, {"acc_fp": acc_fp, "acc_qat": acc_qat, "loss_log": loss_log}, (x_te, y_te)
+
+
+def flatten_params(params, prefix=""):
+    """Flatten the pytree into {dotted.name: array} for npz storage."""
+    flat = {}
+    if isinstance(params, dict):
+        for k, v in params.items():
+            flat.update(flatten_params(v, f"{prefix}{k}."))
+    elif isinstance(params, list):
+        for i, v in enumerate(params):
+            flat.update(flatten_params(v, f"{prefix}{i}."))
+    else:
+        flat[prefix[:-1]] = np.asarray(params)
+    return flat
+
+
+def unflatten_params(flat: dict):
+    """Inverse of flatten_params."""
+    root: dict = {}
+    for name, arr in flat.items():
+        parts = name.split(".")
+        node = root
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+        node[parts[-1]] = jnp.asarray(arr)
+
+    def listify(node):
+        if isinstance(node, dict):
+            keys = list(node.keys())
+            if keys and all(k.isdigit() for k in keys):
+                return [listify(node[str(i)]) for i in range(len(keys))]
+            return {k: listify(v) for k, v in node.items()}
+        return node
+
+    return listify(root)
+
+
+def main():
+    cfg = VitConfig()
+    ARTIFACTS.mkdir(exist_ok=True)
+    params, stats, (x_te, y_te) = train(cfg)
+    np.savez(ARTIFACTS / "vit_weights.npz", **flatten_params(params))
+    np.savez(ARTIFACTS / "eval_set.npz", images=x_te, labels=y_te)
+    # Raw little-endian mirror for the rust loader (no npz parser there).
+    x_te.astype("<f4").tofile(ARTIFACTS / "eval_images.bin")
+    (ARTIFACTS / "eval_set.json").write_text(
+        json.dumps(
+            {
+                "images_bin": "eval_images.bin",
+                "shape": list(x_te.shape),
+                "labels": [int(v) for v in y_te],
+            }
+        )
+    )
+    meta = {
+        "config": {
+            "image": cfg.image,
+            "patch": cfg.patch,
+            "dim": cfg.dim,
+            "depth": cfg.depth,
+            "heads": cfg.heads,
+            "mlp_ratio": cfg.mlp_ratio,
+            "num_classes": cfg.num_classes,
+            "attn_bits": cfg.attn_bits,
+            "mlp_bits": cfg.mlp_bits,
+        },
+        "acc_fp": stats["acc_fp"],
+        "acc_qat": stats["acc_qat"],
+        "loss_log": stats["loss_log"],
+    }
+    (ARTIFACTS / "vit_meta.json").write_text(json.dumps(meta, indent=1))
+    print(f"wrote weights + meta to {ARTIFACTS}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,8 @@
+"""Make `compile.*` importable regardless of pytest's invocation cwd
+(the Makefile runs from python/, the top-level validation command from
+the repo root)."""
+
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent))

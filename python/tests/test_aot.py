@@ -1,0 +1,72 @@
+"""AOT path tests: HLO text emission round-trips through the XLA text
+parser and executes with correct numerics on the CPU PJRT client --
+exactly what the rust runtime will do."""
+
+import json
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax._src.lib import xla_client as xc
+
+from compile.aot import ARTIFACTS, to_hlo_text
+from compile.kernels.cim_matmul import cim_linear
+
+
+def lower_simple():
+    def fn(x, w):
+        return (cim_linear(x, w, a_bits=4, w_bits=4),)
+
+    return jax.jit(fn).lower(
+        jax.ShapeDtypeStruct((8, 96), jnp.float32),
+        jax.ShapeDtypeStruct((96, 24), jnp.float32),
+    )
+
+
+class TestHloText:
+    def test_emits_parseable_hlo_text(self):
+        text = to_hlo_text(lower_simple())
+        assert "HloModule" in text
+        assert "ENTRY" in text
+
+    def test_text_round_trips_through_parser(self):
+        # The rust runtime's load path is HloModuleProto::from_text_file;
+        # verify the emitted text parses back through the same HLO text
+        # parser (id reassignment happens here) and keeps the entry
+        # signature. Actual execution of loaded text is covered by the
+        # rust integration tests (rust/tests/runtime_roundtrip.rs).
+        text = to_hlo_text(lower_simple())
+        module = xc._xla.hlo_module_from_text(text)
+        reparsed = module.to_string()
+        assert "ENTRY" in reparsed
+        # Parameters survive: two f32 inputs of the right shapes.
+        assert "f32[8,96]" in reparsed
+        assert "f32[96,24]" in reparsed
+
+    def test_lowered_numerics_match_eager(self):
+        rng = np.random.default_rng(0)
+        x = rng.normal(size=(8, 96)).astype("float32")
+        w = rng.normal(size=(96, 24)).astype("float32")
+        want = np.asarray(cim_linear(jnp.asarray(x), jnp.asarray(w), a_bits=4, w_bits=4))
+        compiled = lower_simple().compile()
+        (got,) = compiled(jnp.asarray(x), jnp.asarray(w))
+        np.testing.assert_allclose(np.asarray(got), want, atol=1e-5)
+
+
+@pytest.mark.skipif(
+    not (ARTIFACTS / "manifest.json").exists(),
+    reason="artifacts not built yet (make artifacts)",
+)
+class TestBuiltArtifacts:
+    def test_manifest_lists_all_artifacts(self):
+        manifest = json.loads((ARTIFACTS / "manifest.json").read_text())
+        for name in ("vit_cim_b1", "vit_cim_b16", "vit_fp_b16", "cim_linear_micro"):
+            assert name in manifest["artifacts"], name
+            assert (ARTIFACTS / f"{name}.hlo.txt").exists()
+
+    def test_artifact_files_are_hlo_text(self):
+        for p in Path(ARTIFACTS).glob("*.hlo.txt"):
+            head = p.read_text()[:200]
+            assert "HloModule" in head, p

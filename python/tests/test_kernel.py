@@ -1,0 +1,159 @@
+"""L1 correctness: the Pallas kernel against the pure-jnp oracle.
+
+This is the CORE correctness signal of the compile path: hypothesis
+sweeps shapes / bit-widths / value ranges and the kernel must match the
+oracle exactly (both are exact integer arithmetic in f32 carriers).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import cim_matmul as km
+from compile.kernels import ref
+
+
+def rand(shape, seed, scale=1.0):
+    return jnp.asarray(
+        np.random.default_rng(seed).normal(0, scale, size=shape).astype("float32")
+    )
+
+
+# ---------------------------------------------------------------------------
+# quantize / scales
+# ---------------------------------------------------------------------------
+
+
+class TestQuantize:
+    def test_range_is_clipped(self):
+        x = jnp.asarray([-100.0, -1.0, 0.0, 1.0, 100.0])
+        q = km.quantize(x, 4, jnp.float32(0.1))
+        assert float(q.min()) >= -8
+        assert float(q.max()) <= 7
+
+    def test_zero_maps_to_zero(self):
+        q = km.quantize(jnp.zeros((5,)), 6, jnp.float32(0.3))
+        np.testing.assert_array_equal(np.asarray(q), 0)
+
+    def test_act_scale_uses_maxabs(self):
+        x = jnp.asarray([0.5, -2.0, 1.0])
+        s = km.act_scale(x, 6)
+        assert float(s) == pytest.approx(2.0 / 31)
+
+    def test_weight_scale_positive_for_zero_tensor(self):
+        s = km.weight_scale(jnp.zeros((3, 3)), 6)
+        assert float(s) > 0
+
+    @given(bits=st.integers(2, 8), seed=st.integers(0, 50))
+    @settings(max_examples=20, deadline=None)
+    def test_quantization_error_bounded_by_half_scale(self, bits, seed):
+        x = rand((64,), seed, 2.0)
+        s = km.act_scale(x, bits)
+        q = km.quantize(x, bits, s)
+        err = np.abs(np.asarray(q * s - x))
+        assert err.max() <= float(s) / 2 + 1e-6
+
+
+# ---------------------------------------------------------------------------
+# kernel vs oracle
+# ---------------------------------------------------------------------------
+
+
+class TestKernelVsRef:
+    @given(
+        m=st.integers(1, 70),
+        k=st.integers(1, 300),
+        n=st.integers(1, 150),
+        a_bits=st.sampled_from([2, 4, 6, 8]),
+        w_bits=st.sampled_from([2, 4, 6, 8]),
+        seed=st.integers(0, 1000),
+    )
+    @settings(max_examples=25, deadline=None)
+    def test_matches_oracle_across_shapes_and_bits(self, m, k, n, a_bits, w_bits, seed):
+        x = rand((m, k), seed)
+        w = rand((k, n), seed + 1)
+        got = km.cim_linear(x, w, a_bits=a_bits, w_bits=w_bits)
+        want = ref.ref_linear(x, w, a_bits=a_bits, w_bits=w_bits)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=0, atol=1e-5)
+
+    def test_k_larger_than_macro_rows_tiles_exactly(self):
+        # K = 2.5 macro tiles exercises the row-tile accumulation loop.
+        x = rand((8, 2560), 3)
+        w = rand((2560, 32), 4)
+        got = km.cim_linear(x, w, a_bits=6, w_bits=6)
+        want = ref.ref_linear(x, w, a_bits=6, w_bits=6)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-4)
+
+    def test_integer_path_is_exact_integers(self):
+        xq = jnp.asarray(np.random.default_rng(0).integers(-31, 32, size=(16, 96)), jnp.float32)
+        wq = jnp.asarray(np.random.default_rng(1).integers(-31, 32, size=(96, 24)), jnp.float32)
+        got = km.cim_matmul_quantized(xq, wq)
+        want = ref.ref_matmul_quantized(xq, wq)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+        # And every entry is an exact integer.
+        g = np.asarray(got)
+        np.testing.assert_array_equal(g, np.round(g))
+
+    def test_quantization_error_shrinks_with_bits(self):
+        x = rand((32, 96), 7)
+        w = rand((96, 48), 8)
+        exact = np.asarray(ref.ref_linear_fp(x, w))
+        errs = []
+        for bits in (2, 4, 6, 8):
+            y = np.asarray(km.cim_linear(x, w, a_bits=bits, w_bits=bits))
+            errs.append(np.abs(y - exact).mean())
+        assert errs[0] > errs[1] > errs[2] > errs[3]
+
+
+# ---------------------------------------------------------------------------
+# noise propagation helper (the L3 <-> L2 calibration bridge)
+# ---------------------------------------------------------------------------
+
+
+class TestNoisePropagation:
+    def test_conversions_per_output(self):
+        assert km.conversions_per_output(96, 4, 4) == 16
+        assert km.conversions_per_output(1024, 6, 6) == 36
+        assert km.conversions_per_output(1025, 6, 6) == 72  # 2 row tiles
+
+    def test_sigma_linear_in_read_noise(self):
+        a = km.output_noise_sigma(96, 4, 4, 0.5)
+        b = km.output_noise_sigma(96, 4, 4, 1.0)
+        assert b == pytest.approx(2 * a)
+
+    def test_sigma_matches_monte_carlo(self):
+        # Empirically inject per-conversion noise through the shift-add
+        # reconstruction and compare with the analytic formula.
+        rng = np.random.default_rng(0)
+        a_bits, w_bits, sigma = 3, 2, 0.7
+        trials = 4000
+        vals = []
+        for _ in range(trials):
+            y = 0.0
+            for a in range(a_bits):
+                wa = -(2 ** a) if a == a_bits - 1 else 2 ** a
+                for b in range(w_bits):
+                    wb = -(2 ** b) if b == w_bits - 1 else 2 ** b
+                    y += wa * wb * rng.normal(0, sigma)
+            vals.append(y)
+        emp = np.std(vals)
+        ana = km.output_noise_sigma(1024, a_bits, w_bits, sigma)
+        assert emp == pytest.approx(ana, rel=0.08)
+
+    def test_more_bits_more_noise(self):
+        assert km.output_noise_sigma(96, 6, 6, 0.5) > km.output_noise_sigma(96, 4, 4, 0.5)
+
+    def test_row_replication_factors(self):
+        assert km.row_replication(1024) == 1
+        assert km.row_replication(2048) == 1
+        assert km.row_replication(512) == 2
+        assert km.row_replication(96) == 10
+        assert km.row_replication(1) == 1024
+
+    def test_replication_divides_noise(self):
+        # k=512 replicates 2x: same shift-add factor, half the noise.
+        full = km.output_noise_sigma(1024, 4, 4, 1.0)
+        half = km.output_noise_sigma(512, 4, 4, 1.0)
+        assert half == pytest.approx(full / 2)

@@ -1,0 +1,105 @@
+"""L2 model tests: shapes, determinism, quantization/noise behavior, and
+the workload catalog the rust scheduler consumes."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.model import (
+    VitConfig,
+    count_linear_workload,
+    forward_cim,
+    forward_fp,
+    forward_qat,
+    init_params,
+    patchify,
+)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = VitConfig(dim=32, depth=2, heads=2, mlp_ratio=2)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    x = jnp.asarray(np.random.default_rng(0).normal(size=(3, 32, 32, 3)).astype("float32"))
+    return cfg, params, x
+
+
+class TestShapes:
+    def test_patchify_shape_and_content(self, setup):
+        cfg, _, x = setup
+        p = patchify(x, cfg)
+        assert p.shape == (3, 64, cfg.patch_dim)
+        # First patch of first image equals the top-left 4x4 block.
+        block = np.asarray(x[0, :4, :4, :]).reshape(-1)
+        np.testing.assert_allclose(np.asarray(p[0, 0]), block, rtol=1e-6)
+
+    def test_forward_shapes(self, setup):
+        cfg, params, x = setup
+        for fn in (lambda: forward_fp(params, x, cfg), lambda: forward_qat(params, x, cfg)):
+            assert fn().shape == (3, cfg.num_classes)
+
+    def test_tokens_includes_cls(self, setup):
+        cfg, _, _ = setup
+        assert cfg.tokens == 65
+
+
+class TestCimPath:
+    def test_zero_noise_cim_close_to_qat(self, setup):
+        # With sigma = 0 the CIM path equals straight PTQ of the same
+        # precisions: both are exact integer matmuls of the same operands
+        # (QAT fwd uses fake-quant so small numeric diffs remain).
+        cfg, params, x = setup
+        y_cim = forward_cim(params, x, jnp.int32(0), jnp.float32(0.0), jnp.float32(0.0), cfg)
+        y_qat = forward_qat(params, x, cfg)
+        # Rankings should broadly agree even if values differ slightly.
+        assert y_cim.shape == y_qat.shape
+        corr = np.corrcoef(np.asarray(y_cim).ravel(), np.asarray(y_qat).ravel())[0, 1]
+        assert corr > 0.98, f"cim-vs-qat corr {corr}"
+
+    def test_same_seed_is_deterministic(self, setup):
+        cfg, params, x = setup
+        a = forward_cim(params, x, jnp.int32(7), jnp.float32(0.5), jnp.float32(0.5), cfg)
+        b = forward_cim(params, x, jnp.int32(7), jnp.float32(0.5), jnp.float32(0.5), cfg)
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_different_seed_changes_noise(self, setup):
+        cfg, params, x = setup
+        a = forward_cim(params, x, jnp.int32(1), jnp.float32(0.5), jnp.float32(0.5), cfg)
+        b = forward_cim(params, x, jnp.int32(2), jnp.float32(0.5), jnp.float32(0.5), cfg)
+        assert np.abs(np.asarray(a) - np.asarray(b)).max() > 0
+
+    def test_noise_grows_with_sigma(self, setup):
+        cfg, params, x = setup
+        base = forward_cim(params, x, jnp.int32(0), jnp.float32(0.0), jnp.float32(0.0), cfg)
+        devs = []
+        for sigma in (0.2, 1.0, 4.0):
+            y = forward_cim(
+                params, x, jnp.int32(3), jnp.float32(sigma), jnp.float32(sigma), cfg
+            )
+            devs.append(float(np.abs(np.asarray(y - base)).mean()))
+        assert devs[0] < devs[1] < devs[2]
+
+    def test_jittable(self, setup):
+        cfg, params, x = setup
+        f = jax.jit(lambda im, s, sa, sm: forward_cim(params, im, s, sa, sm, cfg))
+        y = f(x, jnp.int32(0), jnp.float32(0.1), jnp.float32(0.1))
+        assert y.shape == (3, cfg.num_classes)
+
+
+class TestWorkloadCatalog:
+    def test_layer_counts(self):
+        cfg = VitConfig()
+        wl = count_linear_workload(cfg, batch=1)
+        # depth attention blocks contribute 2 linears each.
+        assert len(wl["attention"]) == 2 * cfg.depth
+        # patch embed + 2 per block + head.
+        assert len(wl["mlp"]) == 2 * cfg.depth + 2
+
+    def test_shapes_are_consistent(self):
+        cfg = VitConfig()
+        wl = count_linear_workload(cfg, batch=4)
+        qkv = wl["attention"][0]
+        assert qkv == {"k": cfg.dim, "n": 3 * cfg.dim, "m": 4 * cfg.tokens}
+        head = wl["mlp"][-1]
+        assert head == {"k": cfg.dim, "n": cfg.num_classes, "m": 4}

@@ -1,0 +1,92 @@
+//! Design-choice ablations (DESIGN.md calls these out):
+//!
+//!   A. Majority-vote count (2/4/6/8/12 votes) — noise vs power: shows
+//!      why the paper stops at 6 (diminishing σ return vs linear energy).
+//!   B. How many trailing bits to vote (1..5) — the 3-bit choice is the
+//!      knee of the noise/time curve.
+//!   C. Comparator sigma sweep — CSNR and TOPS/W move oppositely; the
+//!      CR-CIM swing advantage shifts the whole frontier.
+//!   D. Row replication on/off — why small-K layers need the idle rows.
+
+use cr_cim::cim::params::{CbMode, MacroParams};
+use cr_cim::cim::Column;
+use cr_cim::coordinator::sac::kernel_noise_sigma;
+use cr_cim::metrics::{characterize, CharacterizeOpts};
+use cr_cim::util::bench::BenchSuite;
+use cr_cim::util::json::Json;
+use cr_cim::util::pool::default_threads;
+
+fn mean_noise(params: &MacroParams, mode: CbMode, threads: usize) -> f64 {
+    let col = Column::new(params, 0).unwrap();
+    let opts = CharacterizeOpts { step: 16, trials: 48, threads, stream: 11 };
+    characterize(&col, mode, &opts).mean_noise_lsb()
+}
+
+fn main() {
+    let mut suite = BenchSuite::new("ablation - design choices");
+    let threads = default_threads();
+    let base = MacroParams::default();
+
+    // --- A: vote count ---------------------------------------------------
+    let mut votes_tbl = Json::obj();
+    for votes in [2usize, 4, 6, 8, 12] {
+        let mut p = base.clone();
+        p.mv_votes = votes;
+        let noise = mean_noise(&p, CbMode::On, threads);
+        let comparisons = p.comparisons_per_conversion(CbMode::On);
+        let mut o = Json::obj();
+        o.set("mean_noise_lsb", Json::num(noise));
+        o.set("comparisons", Json::num(comparisons as f64));
+        o.set("rel_power_proxy", Json::num(comparisons as f64 / 10.0));
+        votes_tbl.set(&format!("votes_{votes}"), Json::Obj(o));
+    }
+    suite.note("A_vote_count (paper picks 6)", Json::Obj(votes_tbl));
+
+    // --- B: voted-bit count ------------------------------------------------
+    let mut bits_tbl = Json::obj();
+    for last in [1usize, 2, 3, 4, 5] {
+        let mut p = base.clone();
+        p.mv_last_bits = last;
+        let noise = mean_noise(&p, CbMode::On, threads);
+        let mut o = Json::obj();
+        o.set("mean_noise_lsb", Json::num(noise));
+        o.set("comparisons", Json::num(p.comparisons_per_conversion(CbMode::On) as f64));
+        bits_tbl.set(&format!("mv_last_bits_{last}"), Json::Obj(o));
+    }
+    suite.note("B_voted_bits (paper picks 3)", Json::Obj(bits_tbl));
+
+    // --- C: comparator sigma --------------------------------------------------
+    let mut sig_tbl = Json::obj();
+    for sigma in [0.55, 0.8, 1.1, 1.6, 2.2] {
+        let mut p = base.clone();
+        p.sigma_cmp_lsb = sigma;
+        let noise_on = mean_noise(&p, CbMode::On, threads);
+        let noise_off = mean_noise(&p, CbMode::Off, threads);
+        // Noise-limited comparator: energy ∝ 1/σ².
+        let e = cr_cim::cim::EnergyModel::cr_cim(&p);
+        let rel_cmp_e = (base.sigma_cmp_lsb / sigma).powi(2);
+        let mut o = Json::obj();
+        o.set("noise_on_lsb", Json::num(noise_on));
+        o.set("noise_off_lsb", Json::num(noise_off));
+        o.set("rel_comparator_energy", Json::num(rel_cmp_e));
+        o.set("tops_per_watt_off", Json::num(e.tops_per_watt(CbMode::Off)));
+        sig_tbl.set(&format!("sigma_{sigma}"), Json::Obj(o));
+    }
+    suite.note("C_comparator_sigma", Json::Obj(sig_tbl));
+
+    // --- D: row replication ------------------------------------------------
+    let mut rep_tbl = Json::obj();
+    for k in [96usize, 192, 384, 1024] {
+        let with = kernel_noise_sigma(k, 6, 6, 0.55);
+        let r = cr_cim::coordinator::sac::row_replication(k) as f64;
+        let without = with * r;
+        let mut o = Json::obj();
+        o.set("replication", Json::num(r));
+        o.set("sigma_with_replication", Json::num(with));
+        o.set("sigma_without", Json::num(without));
+        rep_tbl.set(&format!("k_{k}"), Json::Obj(o));
+    }
+    suite.note("D_row_replication (6b/6b, sigma_read 0.55)", Json::Obj(rep_tbl));
+
+    suite.finish();
+}

@@ -1,0 +1,63 @@
+//! Fig. 1(A): accuracy vs compute CSNR for CNN vs Transformer layers —
+//! the motivation figure: Transformers need ~10+ dB more compute accuracy
+//! than CNNs, and within a Transformer the MLP needs more than attention.
+//!
+//! Regenerates the accuracy-vs-CSNR series from the tolerance models
+//! (calibrated against the ViT-through-macro runs; see EXPERIMENTS.md) and
+//! times the underlying noisy-layer simulation primitive.
+
+use cr_cim::cim::netstats::{LayerClass, ToleranceModel};
+use cr_cim::cim::params::{CbMode, MacroParams};
+use cr_cim::cim::Column;
+use cr_cim::util::bench::{black_box, BenchSuite};
+use cr_cim::util::json::Json;
+use cr_cim::util::rng::Rng;
+
+fn main() {
+    let mut suite = BenchSuite::new("Fig 1(A) - accuracy vs CSNR requirement");
+
+    // --- the figure's series -------------------------------------------------
+    let classes = [
+        LayerClass::CnnConv,
+        LayerClass::TransformerAttention,
+        LayerClass::TransformerMlp,
+    ];
+    let csnr_grid: Vec<f64> = (0..=40).map(|i| i as f64).collect();
+    let mut series = Json::obj();
+    for class in classes {
+        let m = ToleranceModel::for_class(class);
+        let accs: Vec<f64> = csnr_grid.iter().map(|&c| m.accuracy(c)).collect();
+        let mut o = Json::obj();
+        o.set("csnr_db", Json::arr_f64(&csnr_grid));
+        o.set("accuracy", Json::arr_f64(&accs));
+        o.set("required_csnr_1pt_drop_db", Json::num(m.required_csnr_db(0.01)));
+        series.set(class.label(), Json::Obj(o));
+    }
+    suite.note("accuracy_vs_csnr", Json::Obj(series));
+
+    // Headline deltas the paper's Fig. 1(A)/Fig. 4 quote.
+    let cnn_req = ToleranceModel::for_class(LayerClass::CnnConv).required_csnr_db(0.01);
+    let att_req =
+        ToleranceModel::for_class(LayerClass::TransformerAttention).required_csnr_db(0.01);
+    let mlp_req = ToleranceModel::for_class(LayerClass::TransformerMlp).required_csnr_db(0.01);
+    let mut headline = Json::obj();
+    headline.set("cnn_required_db", Json::num(cnn_req));
+    headline.set("attention_required_db", Json::num(att_req));
+    headline.set("mlp_required_db", Json::num(mlp_req));
+    headline.set("transformer_minus_cnn_db", Json::num(mlp_req - cnn_req));
+    headline.set("mlp_minus_attention_db (paper: ~10)", Json::num(mlp_req - att_req));
+    suite.note("headline", Json::Obj(headline));
+
+    // --- microbenchmark: the noisy-MAC primitive the sweep rests on ---------
+    let params = MacroParams::default();
+    let col = Column::new(&params, 0).unwrap();
+    let mut rng = Rng::new(42);
+    suite.bench_throughput("column read (CB off)", 1.0, || {
+        black_box(col.read_count(black_box(512), CbMode::Off, &mut rng));
+    });
+    suite.bench_throughput("column read (CB on)", 1.0, || {
+        black_box(col.read_count(black_box(512), CbMode::On, &mut rng));
+    });
+
+    suite.finish();
+}

@@ -1,0 +1,72 @@
+//! Fig. 1(B): why conventional charge CIMs cannot afford a 10-bit ADC —
+//! per-column ADC area and comparator energy vs resolution, conventional
+//! (separate C-DAC, attenuated swing) vs CR-CIM (reconfigured bank, full
+//! swing).
+//!
+//! Shape to reproduce: conventional cost explodes ~2^B while CR-CIM stays
+//! flat in area and pays 4× less comparator energy at equal accuracy.
+
+use cr_cim::cim::area::AreaModel;
+use cr_cim::cim::comparator::comparator_energy_pj;
+use cr_cim::cim::energy::EnergyModel;
+use cr_cim::cim::params::MacroParams;
+use cr_cim::util::bench::{black_box, BenchSuite};
+use cr_cim::util::json::Json;
+
+fn main() {
+    let mut suite = BenchSuite::new("Fig 1(B) - ADC scaling: conventional vs CR-CIM");
+    let area = AreaModel::default();
+    let params = MacroParams::default();
+
+    // --- area vs ADC bits ----------------------------------------------------
+    let series = area.fig1b_series(4..=12);
+    let mut a = Json::obj();
+    a.set("bits", Json::arr_f64(&series.iter().map(|s| s.0 as f64).collect::<Vec<_>>()));
+    a.set(
+        "conventional_area_norm",
+        Json::arr_f64(&series.iter().map(|s| s.1).collect::<Vec<_>>()),
+    );
+    a.set("cr_cim_area_norm", Json::arr_f64(&series.iter().map(|s| s.2).collect::<Vec<_>>()));
+    let ten = series.iter().find(|s| s.0 == 10).unwrap();
+    a.set("area_gap_at_10b", Json::num(ten.1 / ten.2));
+    suite.note("adc_area_vs_bits (normalized to 4b conventional)", Json::Obj(a));
+
+    // --- comparator energy vs ADC bits at equal conversion accuracy ---------
+    // σ requirement halves per extra bit; conventional pays a further 2×
+    // tighter σ (half swing) ⇒ 4× energy at every resolution.
+    let mut e = Json::obj();
+    let bits: Vec<f64> = (4..=12).map(|b| b as f64).collect();
+    let energy_at = |b: f64, swing: f64| {
+        let sigma_ref = 1.0; // LSB at 10b reference
+        let sigma_v = sigma_ref * 2f64.powf(10.0 - b) * swing;
+        comparator_energy_pj(params.e_cmp_pj, sigma_ref, 0.6, sigma_v, 0.6) * b
+    };
+    e.set("bits", Json::arr_f64(&bits));
+    e.set(
+        "conventional_energy_pj",
+        Json::arr_f64(&bits.iter().map(|&b| energy_at(b, 0.5)).collect::<Vec<_>>()),
+    );
+    e.set(
+        "cr_cim_energy_pj",
+        Json::arr_f64(&bits.iter().map(|&b| energy_at(b, 1.0)).collect::<Vec<_>>()),
+    );
+    suite.note("comparator_energy_vs_bits (per conversion)", Json::Obj(e));
+
+    // Headline: the 4× comparator-energy saving at 10 bits.
+    let cr = EnergyModel::cr_cim(&params);
+    let conv = EnergyModel::conventional(&params);
+    let mut h = Json::obj();
+    h.set(
+        "comparator_energy_ratio_conventional_over_crcim (paper: 4x)",
+        Json::num(conv.comparator_energy_per_firing_pj() / cr.comparator_energy_per_firing_pj()),
+    );
+    h.set("area_gap_at_10b_x", Json::num(ten.1 / ten.2));
+    suite.note("headline", Json::Obj(h));
+
+    // --- microbenchmark ------------------------------------------------------
+    suite.bench("area model full sweep", || {
+        black_box(area.fig1b_series(4..=12));
+    });
+
+    suite.finish();
+}

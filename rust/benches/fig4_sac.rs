@@ -1,0 +1,96 @@
+//! Fig. 4: software-analog co-design.
+//!
+//! Reproduces:
+//!   - the per-layer-class required CSNR (attention ≈ MLP − 10 dB),
+//!   - the CB trade: +CSNR, 1.9× power, 2.5× SAR time,
+//!   - the end-to-end efficiency ablation "None → w/CB → w/CB+BW-opt"
+//!     reaching ≈2.1× (also Fig. 6's SAC bars).
+
+use cr_cim::cim::netstats::LayerClass;
+use cr_cim::cim::params::{CbMode, MacroParams};
+use cr_cim::coordinator::sac::{
+    self, choose_operating_point, required_csnr_db, NoiseCalibration,
+};
+use cr_cim::coordinator::Scheduler;
+use cr_cim::util::bench::{black_box, BenchSuite};
+use cr_cim::util::json::Json;
+use cr_cim::util::pool::default_threads;
+use cr_cim::vit::plan::PrecisionPlan;
+use cr_cim::vit::VitConfig;
+
+fn main() {
+    let mut suite = BenchSuite::new("Fig 4 - software-analog co-design (SAC)");
+    let params = MacroParams::default();
+    let sched = Scheduler::new(&params);
+    let cfg = VitConfig::vit_small();
+
+    // --- per-layer required CSNR + chosen operating points -------------------
+    let calib = NoiseCalibration::measure(&params, default_threads()).unwrap();
+    let mut req = Json::obj();
+    for class in [LayerClass::TransformerAttention, LayerClass::TransformerMlp] {
+        let op = choose_operating_point(class, &calib, 0.01);
+        let mut o = Json::obj();
+        o.set("required_csnr_db", Json::num(required_csnr_db(class, 0.01)));
+        o.set("chosen_bits", Json::num(op.a_bits as f64));
+        o.set("chosen_cb", Json::str(op.cb.label()));
+        req.set(class.label(), Json::Obj(o));
+    }
+    req.set(
+        "mlp_minus_attention_db (paper: 10)",
+        Json::num(
+            required_csnr_db(LayerClass::TransformerMlp, 0.01)
+                - required_csnr_db(LayerClass::TransformerAttention, 0.01),
+        ),
+    );
+    suite.note("required_csnr_and_policy", Json::Obj(req));
+
+    // --- the CB trade itself --------------------------------------------------
+    let e = cr_cim::cim::EnergyModel::cr_cim(&params);
+    let mut cb = Json::obj();
+    cb.set("csnr_boost_db (paper: 5.5)", Json::num(calib.csnr_on.csnr_db - calib.csnr_off.csnr_db));
+    cb.set(
+        "power_overhead_x (paper: 1.9)",
+        Json::num(e.conversion_energy_pj(CbMode::On) / e.conversion_energy_pj(CbMode::Off)),
+    );
+    cb.set(
+        "sar_time_overhead_x (paper: 2.5)",
+        Json::num(
+            params.comparisons_per_conversion(CbMode::On) as f64
+                / params.comparisons_per_conversion(CbMode::Off) as f64,
+        ),
+    );
+    cb.set("read_noise_on_lsb (paper: 0.58)", Json::num(calib.sigma_cb_on));
+    cb.set("read_noise_off_lsb (paper: ~1.16)", Json::num(calib.sigma_cb_off));
+    suite.note("cb_tradeoff", Json::Obj(cb));
+
+    // --- the ablation bars (Fig. 6 bottom-right) ------------------------------
+    let mut bars = Json::obj();
+    let base = sac::evaluate_plan(&sched, &cfg, 1, &PrecisionPlan::uniform_safe());
+    for plan in PrecisionPlan::ablation_series() {
+        let cost = sac::evaluate_plan(&sched, &cfg, 1, &plan);
+        let mut o = Json::obj();
+        o.set("energy_uj_per_inference", Json::num(cost.energy_uj));
+        o.set("latency_us", Json::num(cost.latency_us));
+        o.set("efficiency_gain_x", Json::num(base.energy_uj / cost.energy_uj));
+        bars.set(plan.name, Json::Obj(o));
+    }
+    bars.set(
+        "sac_total_gain_x (paper: 2.1)",
+        Json::num(sac::sac_efficiency_improvement(&sched, &cfg, 1)),
+    );
+    suite.note("sac_ablation", Json::Obj(bars));
+
+    // --- microbenchmarks: policy + plan evaluation hot paths -----------------
+    suite.bench("choose_operating_point", || {
+        black_box(choose_operating_point(
+            black_box(LayerClass::TransformerMlp),
+            &calib,
+            0.01,
+        ));
+    });
+    suite.bench("evaluate_plan (ViT-small)", || {
+        black_box(sac::evaluate_plan(&sched, &cfg, 1, &PrecisionPlan::paper_sac()));
+    });
+
+    suite.finish();
+}

@@ -1,0 +1,77 @@
+//! Fig. 5: measured CR-CIM column characteristics.
+//!
+//! Reproduces the full measurement: transfer curve (INL < 2 LSB), read
+//! noise per code (0.58 LSB avg w/CB, higher without), and the derived
+//! SQNR (paper 45.3 dB) and CSNR (paper 31.3 dB). Also reports the
+//! across-column spread (the chip has 78 of them) and times the
+//! characterization pipeline itself.
+
+use cr_cim::cim::params::{CbMode, MacroParams};
+use cr_cim::cim::Column;
+use cr_cim::metrics::{
+    characterize, measure_csnr, sqnr_db, CharacterizeOpts, CsnrEnsemble,
+};
+use cr_cim::util::bench::{black_box, BenchSuite};
+use cr_cim::util::json::Json;
+use cr_cim::util::pool::default_threads;
+use cr_cim::util::stats;
+
+fn main() {
+    let mut suite = BenchSuite::new("Fig 5 - column characteristics");
+    let params = MacroParams::default();
+    let threads = default_threads();
+    let opts = CharacterizeOpts { step: 4, trials: 64, threads, stream: 0 };
+
+    // --- the headline column (column 0 of the die) ---------------------------
+    let col = Column::new(&params, 0).unwrap();
+    let mut table = Json::obj();
+    for mode in [CbMode::On, CbMode::Off] {
+        let curve = characterize(&col, mode, &opts);
+        let csnr = measure_csnr(&col, mode, &CsnrEnsemble::default(), threads);
+        let mut o = Json::obj();
+        o.set("max_abs_inl_lsb (paper: <2)", Json::num(curve.max_abs_inl()));
+        o.set("inl_rms_lsb", Json::num(curve.inl_rms()));
+        o.set(
+            "mean_read_noise_lsb (paper: 0.58 w/CB, 2x wo)",
+            Json::num(curve.mean_noise_lsb()),
+        );
+        o.set("sqnr_db (paper: 45.3 w/CB)", Json::num(sqnr_db(&curve)));
+        o.set("csnr_db (paper: 31.3 w/CB)", Json::num(csnr.csnr_db));
+        o.set("signal_sigma_lsb", Json::num(csnr.sigma_signal_lsb));
+        table.set(mode.label(), Json::Obj(o));
+    }
+    suite.note("column0", Json::Obj(table));
+
+    // --- across-column spread (process variation) ----------------------------
+    let quick = CharacterizeOpts { step: 16, trials: 24, threads, stream: 1 };
+    let mut inls = Vec::new();
+    let mut noises = Vec::new();
+    for c in 0..12 {
+        let col = Column::new(&params, c).unwrap();
+        let curve = characterize(&col, CbMode::On, &quick);
+        inls.push(curve.max_abs_inl());
+        noises.push(curve.mean_noise_lsb());
+    }
+    let mut spread = Json::obj();
+    spread.set("columns_measured", Json::num(inls.len() as f64));
+    spread.set("inl_max_mean", Json::num(stats::mean(&inls)));
+    spread.set("inl_max_worst", Json::num(inls.iter().fold(0.0f64, |m, &x| m.max(x))));
+    spread.set("noise_mean", Json::num(stats::mean(&noises)));
+    spread.set("noise_std_across_cols", Json::num(stats::std(&noises)));
+    suite.note("across_columns", Json::Obj(spread));
+
+    // --- characterization pipeline cost ---------------------------------------
+    let fast = CharacterizeOpts { step: 64, trials: 8, threads: 1, stream: 2 };
+    suite.bench("characterize column (step 64, 8 trials, 1 thread)", || {
+        black_box(characterize(&col, CbMode::On, &fast));
+    });
+    let fast_mt = CharacterizeOpts { step: 64, trials: 8, threads, stream: 2 };
+    suite.bench(
+        &format!("characterize column ({} threads)", threads),
+        || {
+            black_box(characterize(&col, CbMode::On, &fast_mt));
+        },
+    );
+
+    suite.finish();
+}

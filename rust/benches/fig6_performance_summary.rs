@@ -1,0 +1,133 @@
+//! Fig. 6: the performance-summary table + the TOPS-vs-supply panel.
+//!
+//! Emits three sections:
+//!   1. the comparison table — our *regenerated* rows (CR-CIM from the
+//!      energy/area/metric models; [4]-like and [2]-like from their
+//!      mechanism baselines) next to the published rows, with FoMs;
+//!   2. the supply sweep (0.6–1.1 V): TOPS vs TOPS/W;
+//!   3. FoM ratio headlines (paper: 2.3× SQNR-FoM, 1.5× CSNR-FoM).
+
+use cr_cim::cim::area::AreaModel;
+use cr_cim::cim::baselines::{conventional, current, digital, published, ChipSummary};
+use cr_cim::cim::energy::{supply_sweep, EnergyModel};
+use cr_cim::cim::params::{CbMode, MacroParams};
+use cr_cim::cim::Column;
+use cr_cim::metrics::{characterize, measure_csnr, sqnr_db, CharacterizeOpts, CsnrEnsemble};
+use cr_cim::util::bench::{black_box, BenchSuite};
+use cr_cim::util::json::Json;
+use cr_cim::util::pool::default_threads;
+
+fn chip_row(c: &ChipSummary) -> Json {
+    let mut o = Json::obj();
+    o.set("type", Json::str(c.cim_type));
+    o.set("process_nm", Json::num(c.process_nm as f64));
+    o.set("bits", Json::str(format!("{}b/{}b", c.act_bits, c.weight_bits)));
+    o.set("adc_bits", Json::num(c.adc_bits as f64));
+    o.set("tops_1b", Json::num(c.tops));
+    o.set("tops_per_mm2_1b", Json::num(c.tops_per_mm2));
+    o.set("tops_per_w_1b", Json::num(c.tops_per_watt));
+    o.set("sqnr_db", c.sqnr_db.map(Json::num).unwrap_or(Json::Null));
+    o.set("csnr_db", c.csnr_db.map(Json::num).unwrap_or(Json::Null));
+    o.set("sqnr_fom", c.sqnr_fom().map(Json::num).unwrap_or(Json::Null));
+    o.set("csnr_fom", c.csnr_fom().map(Json::num).unwrap_or(Json::Null));
+    o.set("transformer", Json::Bool(c.supports_transformer));
+    Json::Obj(o)
+}
+
+/// Regenerate "this work"'s row from the simulator, not the paper.
+fn this_work_simulated(params: &MacroParams, threads: usize) -> ChipSummary {
+    let col = Column::new(params, 0).unwrap();
+    let opts = CharacterizeOpts { step: 8, trials: 48, threads, stream: 0 };
+    let curve = characterize(&col, CbMode::On, &opts);
+    let csnr = measure_csnr(&col, CbMode::On, &CsnrEnsemble::default(), threads);
+    let e06 = EnergyModel::cr_cim(&params.clone().with_supply(0.6));
+    let e11 = EnergyModel::cr_cim(&params.clone().with_supply(1.1));
+    let area = AreaModel::default();
+    let tops = e11.tops(CbMode::Off);
+    ChipSummary {
+        name: "This work (simulated)",
+        cim_type: "Charge",
+        process_nm: 65,
+        array_kb: (params.rows * params.cols) as f64 / 8.0 / 1024.0,
+        act_bits: 6,
+        weight_bits: 6,
+        adc_bits: params.adc_bits,
+        tops,
+        tops_per_mm2: area.tops_per_mm2(params, tops),
+        tops_per_watt: e06.tops_per_watt(CbMode::Off),
+        sqnr_db: Some(sqnr_db(&curve)),
+        csnr_db: Some(csnr.csnr_db),
+        supports_transformer: true,
+    }
+}
+
+fn main() {
+    let mut suite = BenchSuite::new("Fig 6 - performance summary");
+    let params = MacroParams::default();
+    let threads = default_threads();
+
+    // --- section 1: the comparison table -------------------------------------
+    let sim = this_work_simulated(&params, threads);
+    let mut table = Json::obj();
+    table.set(sim.name, chip_row(&sim));
+    let conv = conventional::summary(&params);
+    table.set(conv.name, chip_row(&conv));
+    let cur = current::summary();
+    table.set(cur.name, chip_row(&cur));
+    let dig = digital::summary();
+    table.set(dig.name, chip_row(&dig));
+    for row in published::all_published() {
+        table.set(row.name, chip_row(&row));
+    }
+    suite.note("comparison_table", Json::Obj(table));
+
+    // --- section 2: TOPS vs supply (0.6-1.1 V) --------------------------------
+    let sweep = supply_sweep(&params, CbMode::Off, 6);
+    let mut sw = Json::obj();
+    sw.set("supply_v", Json::arr_f64(&sweep.iter().map(|p| p.supply_v).collect::<Vec<_>>()));
+    sw.set("tops_1b", Json::arr_f64(&sweep.iter().map(|p| p.tops).collect::<Vec<_>>()));
+    sw.set(
+        "tops_per_w_1b",
+        Json::arr_f64(&sweep.iter().map(|p| p.tops_per_watt).collect::<Vec<_>>()),
+    );
+    suite.note("supply_sweep", Json::Obj(sw));
+
+    // --- section 3: FoM headlines ---------------------------------------------
+    let best_other_sqnr = [&conv, &cur]
+        .iter()
+        .filter_map(|c| c.sqnr_fom())
+        .chain(published::vlsi2021_published().sqnr_fom())
+        .fold(0.0f64, f64::max);
+    let best_other_csnr = [&conv]
+        .iter()
+        .filter_map(|c| c.csnr_fom())
+        .chain(published::vlsi2021_published().csnr_fom())
+        .fold(0.0f64, f64::max);
+    let mut fom = Json::obj();
+    fom.set("this_work_sqnr_fom", sim.sqnr_fom().map(Json::num).unwrap_or(Json::Null));
+    fom.set("this_work_csnr_fom", sim.csnr_fom().map(Json::num).unwrap_or(Json::Null));
+    fom.set(
+        "sqnr_fom_ratio_vs_best_other (paper: 2.3x)",
+        Json::num(sim.sqnr_fom().unwrap_or(0.0) / best_other_sqnr),
+    );
+    fom.set(
+        "csnr_fom_ratio_vs_best_other (paper: 1.5x)",
+        Json::num(sim.csnr_fom().unwrap_or(0.0) / best_other_csnr),
+    );
+    fom.set(
+        "cifar10_accuracy (paper: 95.8 vs ideal 96.8)",
+        Json::str("see examples/vit_inference + EXPERIMENTS.md"),
+    );
+    suite.note("fom_headlines", Json::Obj(fom));
+
+    // --- microbenchmarks -------------------------------------------------------
+    let e = EnergyModel::cr_cim(&params);
+    suite.bench("energy model conversion breakdown", || {
+        black_box(e.conversion(black_box(CbMode::On)));
+    });
+    suite.bench("supply sweep (6 points)", || {
+        black_box(supply_sweep(&params, CbMode::Off, 6));
+    });
+
+    suite.finish();
+}

@@ -1,0 +1,78 @@
+//! Hot-path microbenchmarks for the §Perf optimization pass: the
+//! simulator's conversion inner loop, the macro matvec, the scheduler,
+//! and the serving-path bookkeeping. EXPERIMENTS.md §Perf records the
+//! before/after of each optimization against these numbers.
+
+use cr_cim::cim::capacitor::CapacitorBank;
+use cr_cim::cim::comparator::Comparator;
+use cr_cim::cim::params::{CbMode, MacroParams};
+use cr_cim::cim::sar::SarAdc;
+use cr_cim::cim::{CimMacro, Column};
+use cr_cim::coordinator::sac::evaluate_plan;
+use cr_cim::coordinator::Scheduler;
+use cr_cim::metrics::{characterize, CharacterizeOpts};
+use cr_cim::util::bench::{black_box, BenchSuite};
+use cr_cim::util::pool::default_threads;
+use cr_cim::util::rng::Rng;
+use cr_cim::vit::plan::PrecisionPlan;
+use cr_cim::vit::VitConfig;
+
+fn main() {
+    let mut suite = BenchSuite::new("hotpath - simulator and coordinator");
+    let params = MacroParams::default();
+    let threads = default_threads();
+
+    // L3 sim primitive: single SAR conversion (the Monte-Carlo unit).
+    let bank = CapacitorBank::sample(&params, 0);
+    let cmp = Comparator::new(params.sigma_cmp_lsb, 0.1);
+    let adc = SarAdc::new(&params, &bank, &cmp);
+    let mut rng = Rng::new(1);
+    suite.bench_throughput("sar conversion (CB off)", 1.0, || {
+        black_box(adc.convert(black_box(0.497), CbMode::Off, &mut rng));
+    });
+    suite.bench_throughput("sar conversion (CB on)", 1.0, || {
+        black_box(adc.convert(black_box(0.497), CbMode::On, &mut rng));
+    });
+
+    // Column read including compute phase + noise sampling.
+    let col = Column::new(&params, 0).unwrap();
+    suite.bench_throughput("column read_count", 1.0, || {
+        black_box(col.read_count(black_box(700), CbMode::Off, &mut rng));
+    });
+
+    // Full characterization sweep (the fig5 workload), single vs multi.
+    let opts1 = CharacterizeOpts { step: 16, trials: 16, threads: 1, stream: 0 };
+    suite.bench("characterize (1 thread)", || {
+        black_box(characterize(&col, CbMode::Off, &opts1));
+    });
+    let optsn = CharacterizeOpts { step: 16, trials: 16, threads, stream: 0 };
+    suite.bench(&format!("characterize ({threads} threads)"), || {
+        black_box(characterize(&col, CbMode::Off, &optsn));
+    });
+
+    // Macro-level multi-bit matvec (the hardware-accurate path).
+    let mut tiny = MacroParams::default();
+    tiny.adc_bits = 8;
+    tiny.active_rows = 256;
+    tiny.rows = 256;
+    tiny.cols = 24;
+    let mut m = CimMacro::new(&tiny).unwrap();
+    let mut wrng = Rng::new(2);
+    let w: Vec<Vec<i32>> = (0..256)
+        .map(|_| (0..6).map(|_| wrng.below(15) as i32 - 7).collect())
+        .collect();
+    m.load_weights(&w, 4).unwrap();
+    let x: Vec<i32> = (0..256).map(|_| wrng.below(15) as i32 - 7).collect();
+    suite.bench_throughput("macro matvec 256x6 @4b (ops)", (2 * 256 * 6) as f64, || {
+        black_box(m.matvec(black_box(&x), 4, CbMode::Off).unwrap());
+    });
+
+    // Coordinator: plan evaluation over ViT-small.
+    let sched = Scheduler::new(&params);
+    let cfg = VitConfig::vit_small();
+    suite.bench("evaluate_plan ViT-small", || {
+        black_box(evaluate_plan(&sched, &cfg, 1, &PrecisionPlan::paper_sac()));
+    });
+
+    suite.finish();
+}

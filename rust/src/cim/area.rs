@@ -1,0 +1,137 @@
+//! Area model (65 nm logic rules) for the macro and for the
+//! ADC-resolution scaling argument of Fig. 1(B).
+//!
+//! The key structural fact: a conventional charge-domain CIM that wants a
+//! B-bit SAR readout must place a *separate* binary C-DAC (2^B unit caps
+//! per column) next to the array, so its ADC area grows exponentially in
+//! B. CR-CIM reuses the compute caps as the C-DAC, so its per-column ADC
+//! area is just comparator + SAR logic, independent of B (as long as
+//! 2^B ≤ rows).
+
+use super::params::MacroParams;
+
+/// Areas in µm² unless noted.
+#[derive(Clone, Copy, Debug)]
+pub struct AreaModel {
+    /// CR-CIM 10T cell area (paper: 2.3 µm², ≈2× a 6T SRAM cell).
+    pub cell_um2: f64,
+    /// Unit C-DAC capacitor area if placed separately (fringe cap +
+    /// wiring pitch).
+    pub dac_unit_cap_um2: f64,
+    /// Comparator area per column.
+    pub comparator_um2: f64,
+    /// SAR logic + registers per column.
+    pub sar_logic_um2: f64,
+    /// Fixed periphery (row drivers, IO, controller) as a fraction of the
+    /// cell-array area.
+    pub periphery_frac: f64,
+}
+
+impl Default for AreaModel {
+    fn default() -> Self {
+        AreaModel {
+            cell_um2: 2.3,
+            dac_unit_cap_um2: 1.1,
+            comparator_um2: 180.0,
+            sar_logic_um2: 260.0,
+            periphery_frac: 1.30,
+        }
+    }
+}
+
+impl AreaModel {
+    /// Total CR-CIM macro area [mm²].
+    pub fn cr_cim_macro_mm2(&self, p: &MacroParams) -> f64 {
+        let array = p.rows as f64 * p.cols as f64 * self.cell_um2;
+        let per_col = self.comparator_um2 + self.sar_logic_um2;
+        let adc = p.cols as f64 * per_col;
+        (array * (1.0 + self.periphery_frac) + adc) * 1e-6
+    }
+
+    /// Per-column ADC area [µm²] for a CR-CIM at `bits` resolution: flat,
+    /// because the caps are reused (valid while 2^bits ≤ rows).
+    pub fn cr_cim_adc_col_um2(&self, _bits: u32) -> f64 {
+        self.comparator_um2 + self.sar_logic_um2
+    }
+
+    /// Per-column ADC area [µm²] for a conventional charge CIM at `bits`:
+    /// a separate binary C-DAC of 2^bits unit caps plus comparator+logic.
+    pub fn conventional_adc_col_um2(&self, bits: u32) -> f64 {
+        let dac = (1u64 << bits) as f64 * self.dac_unit_cap_um2;
+        dac + self.comparator_um2 + self.sar_logic_um2
+    }
+
+    /// Fig. 1(B) series: (bits, conventional ADC area, CR-CIM ADC area)
+    /// per column, normalized to the 4-bit conventional point.
+    pub fn fig1b_series(&self, bit_range: std::ops::RangeInclusive<u32>) -> Vec<(u32, f64, f64)> {
+        let base = self.conventional_adc_col_um2(4);
+        bit_range
+            .map(|b| {
+                (
+                    b,
+                    self.conventional_adc_col_um2(b) / base,
+                    self.cr_cim_adc_col_um2(b) / base,
+                )
+            })
+            .collect()
+    }
+
+    /// 1b-normalized areal efficiency [TOPS/mm²] given a throughput.
+    pub fn tops_per_mm2(&self, p: &MacroParams, tops: f64) -> f64 {
+        tops / self.cr_cim_macro_mm2(p)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cim::energy::EnergyModel;
+    use crate::cim::params::CbMode;
+
+    #[test]
+    fn macro_area_is_sub_mm2_scale() {
+        let a = AreaModel::default();
+        let p = MacroParams::default();
+        let mm2 = a.cr_cim_macro_mm2(&p);
+        // 1088×78 cells at 2.3 µm² ≈ 0.195 mm² array; with periphery the
+        // macro should land at a few tenths of a mm².
+        assert!(mm2 > 0.3 && mm2 < 0.8, "macro area {mm2} mm²");
+    }
+
+    #[test]
+    fn areal_efficiency_near_paper() {
+        let a = AreaModel::default();
+        let p = MacroParams::default().with_supply(1.1);
+        let tops = EnergyModel::cr_cim(&p).tops(CbMode::Off);
+        let tpmm = a.tops_per_mm2(&p, tops);
+        // Paper: 2.5 TOPS/mm² (1b-normalized).
+        assert!((tpmm - 2.5).abs() / 2.5 < 0.35, "TOPS/mm2 = {tpmm}");
+    }
+
+    #[test]
+    fn conventional_adc_area_explodes_with_bits() {
+        let a = AreaModel::default();
+        let at = |b| a.conventional_adc_col_um2(b);
+        assert!(at(10) / at(4) > 3.0);
+        // Each extra bit roughly doubles the DAC contribution at high B.
+        assert!(at(12) / at(11) > 1.5);
+        // CR-CIM stays flat.
+        assert_eq!(a.cr_cim_adc_col_um2(4), a.cr_cim_adc_col_um2(12));
+    }
+
+    #[test]
+    fn fig1b_series_shapes() {
+        let a = AreaModel::default();
+        let series = a.fig1b_series(4..=12);
+        assert_eq!(series.len(), 9);
+        // Conventional normalized to 1.0 at 4 bits and increasing.
+        assert!((series[0].1 - 1.0).abs() < 1e-12);
+        for w in series.windows(2) {
+            assert!(w[1].1 > w[0].1);
+            assert!((w[1].2 - w[0].2).abs() < 1e-12, "CR-CIM flat");
+        }
+        // At 10 bits the gap is large (the paper's "impractical" point).
+        let ten = series.iter().find(|s| s.0 == 10).unwrap();
+        assert!(ten.1 / ten.2 > 2.0, "10b conventional/CR-CIM = {}", ten.1 / ten.2);
+    }
+}

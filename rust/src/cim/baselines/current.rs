@@ -1,0 +1,147 @@
+//! Current-domain CIM baseline, modeled after [2] (Dong et al., ISSCC
+//! 2020, 7 nm): each cell sinks a weight-dependent current onto the
+//! bitline; the summed current is digitized by a coarse (4-bit) ADC.
+//!
+//! Mechanisms captured:
+//! - **Transistor mismatch**: cell currents vary with Vth mismatch
+//!   (log-normal-ish; we use a clipped Gaussian on the current factor),
+//!   which — unlike capacitor mismatch — drifts with operating point and
+//!   cannot reach >8b linearity (the paper's Fig. 1 claim).
+//! - **I–V nonlinearity**: the bitline voltage droops as more cells pull,
+//!   compressing large MAC values (saturating transfer).
+//! - **4-bit readout** with high energy efficiency: current-domain
+//!   summation is cheap, which is why its TOPS/W is high despite the poor
+//!   compute accuracy.
+
+use crate::util::rng::Rng;
+
+use super::ChipSummary;
+
+/// One current-domain column.
+pub struct CurrentColumn {
+    /// Per-cell current factor (nominal 1.0) — Vth mismatch.
+    cell_factor: Vec<f64>,
+    /// Saturation knee: fraction of full-scale where compression starts.
+    knee: f64,
+    /// ADC bits.
+    bits: u32,
+    /// Readout noise in LSB of the coarse ADC.
+    sigma_read_lsb: f64,
+}
+
+impl CurrentColumn {
+    pub fn new(rows: usize, sigma_cell: f64, seed: u64, index: usize) -> Self {
+        let root = Rng::new(seed);
+        let mut rng = root.substream(0xC44E_17, index as u64);
+        let cell_factor = (0..rows)
+            .map(|_| (1.0 + sigma_cell * rng.gauss()).max(0.05))
+            .collect();
+        CurrentColumn { cell_factor, knee: 0.7, bits: 4, sigma_read_lsb: 0.3 }
+    }
+
+    pub fn rows(&self) -> usize {
+        self.cell_factor.len()
+    }
+
+    /// Saturating bitline transfer: linear up to the knee, then
+    /// soft-compressing (models IR droop / transistor triode entry).
+    fn compress(&self, x: f64) -> f64 {
+        if x <= self.knee {
+            x
+        } else {
+            self.knee + (1.0 - self.knee) * (1.0 - (-(x - self.knee) / (1.0 - self.knee)).exp())
+        }
+    }
+
+    /// Read a MAC of `count` active cells (prefix pattern), returning the
+    /// coarse ADC code.
+    pub fn read_count(&self, count: usize, rng: &mut Rng) -> u32 {
+        let i_sum: f64 = self.cell_factor[..count.min(self.rows())].iter().sum();
+        let level = self.compress(i_sum / self.rows() as f64);
+        let n = (1u32 << self.bits) as f64;
+        let noisy = level * n + self.sigma_read_lsb * rng.gauss();
+        (noisy.round().max(0.0) as u32).min((1u32 << self.bits) - 1)
+    }
+
+    /// Ideal code for comparison.
+    pub fn ideal_code(&self, count: usize) -> u32 {
+        let n = (1u32 << self.bits) as f64;
+        (((count as f64 / self.rows() as f64) * n).round() as u32).min((1u32 << self.bits) - 1)
+    }
+}
+
+/// Fig. 6 row for the [2]-like current-domain chip.
+pub fn summary() -> ChipSummary {
+    ChipSummary {
+        name: "[2] ISSCC 2020 (current, 7nm)",
+        cim_type: "Current",
+        process_nm: 7,
+        array_kb: 0.5,
+        act_bits: 4,
+        weight_bits: 4,
+        adc_bits: 4,
+        tops: 5.9,
+        tops_per_mm2: 112.0,
+        // Advanced node + coarse readout: very high raw efficiency.
+        tops_per_watt: 5616.0,
+        sqnr_db: Some(21.0),
+        csnr_db: None, // N.A. in the paper's table
+        supports_transformer: false,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::stats::rms;
+
+    #[test]
+    fn linear_region_tracks_ideal() {
+        let col = CurrentColumn::new(256, 0.0, 1, 0);
+        let mut rng = Rng::new(2);
+        // No mismatch, low counts: codes match ideal.
+        let mut col0 = col;
+        col0.sigma_read_lsb = 0.0;
+        for count in [0usize, 16, 64, 128] {
+            assert_eq!(col0.read_count(count, &mut rng), col0.ideal_code(count));
+        }
+    }
+
+    #[test]
+    fn compression_bends_high_end() {
+        let mut col = CurrentColumn::new(256, 0.0, 1, 0);
+        col.sigma_read_lsb = 0.0;
+        let mut rng = Rng::new(3);
+        // Near full scale the code falls below ideal.
+        let got = col.read_count(250, &mut rng);
+        let ideal = col.ideal_code(250);
+        assert!(got < ideal, "compressed {got} vs ideal {ideal}");
+    }
+
+    #[test]
+    fn mismatch_limits_linearity_vs_charge_domain() {
+        // Current-domain INL (in its own LSB) grows quickly with cell σ.
+        let err_at = |sigma: f64| {
+            let col = CurrentColumn::new(256, sigma, 7, 0);
+            let mut errs = Vec::new();
+            for count in (0..=180).step_by(4) {
+                // stay in linear region
+                let i_sum: f64 = col.cell_factor[..count].iter().sum();
+                let ideal = count as f64 / 256.0;
+                errs.push((i_sum / 256.0 - ideal) * 16.0); // in 4b LSB
+            }
+            rms(&errs)
+        };
+        assert!(err_at(0.08) > 4.0 * err_at(0.01));
+    }
+
+    #[test]
+    fn summary_matches_paper_table_values() {
+        let s = summary();
+        assert_eq!(s.adc_bits, 4);
+        assert!(s.csnr_fom().is_none());
+        // SQNR-FoM from the table: 51466.
+        let fom = s.sqnr_fom().unwrap();
+        assert!((fom - 51466.0).abs() / 51466.0 < 0.05, "fom={fom}");
+    }
+}

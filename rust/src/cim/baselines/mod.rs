@@ -1,0 +1,100 @@
+//! Behavioral models of the comparison chips in Fig. 6 and the
+//! architectures Fig. 1(B) argues against.
+//!
+//! These are *mechanism-level* models, not datasheet copies: each baseline
+//! reproduces the error/energy structure that its architecture implies
+//! (charge-redistribution attenuation, current-mirror mismatch
+//! nonlinearity, digital exactness), so the comparison table's *shape* —
+//! who wins which column and why — regenerates from first principles.
+
+pub mod conventional;
+pub mod current;
+pub mod digital;
+pub mod published;
+pub mod timedomain;
+
+use crate::cim::params::MacroParams;
+
+/// A row of the Fig. 6 comparison table, produced by each baseline.
+#[derive(Clone, Debug)]
+pub struct ChipSummary {
+    pub name: &'static str,
+    pub cim_type: &'static str,
+    pub process_nm: u32,
+    pub array_kb: f64,
+    pub act_bits: u32,
+    pub weight_bits: u32,
+    pub adc_bits: u32,
+    /// 1b-normalized peak throughput [TOPS].
+    pub tops: f64,
+    /// 1b-normalized areal efficiency [TOPS/mm²].
+    pub tops_per_mm2: f64,
+    /// 1b-normalized energy efficiency [TOPS/W].
+    pub tops_per_watt: f64,
+    pub sqnr_db: Option<f64>,
+    pub csnr_db: Option<f64>,
+    pub supports_transformer: bool,
+}
+
+impl ChipSummary {
+    /// SQNR-FoM = TOPS/W · 2^((SQNR-1.76)/6.02)  (Fig. 6 footnote).
+    pub fn sqnr_fom(&self) -> Option<f64> {
+        self.sqnr_db.map(|s| self.tops_per_watt * 2f64.powf((s - 1.76) / 6.02))
+    }
+
+    /// CSNR-FoM = TOPS/W · 2^((CSNR-1.76)/6.02).
+    pub fn csnr_fom(&self) -> Option<f64> {
+        self.csnr_db.map(|s| self.tops_per_watt * 2f64.powf((s - 1.76) / 6.02))
+    }
+}
+
+/// Shared scaling helper: rough digital/analog energy scaling between
+/// process nodes (gate energy ∝ node²·V² to first order; used only to put
+/// the 28 nm / 7 nm baselines on the same table, not for our own chip).
+pub fn node_energy_scale(from_nm: u32, to_nm: u32) -> f64 {
+    let f = from_nm as f64;
+    let t = to_nm as f64;
+    (t / f).powi(2)
+}
+
+/// Default parameter set a baseline derives its own variant from.
+pub fn base_params() -> MacroParams {
+    MacroParams::default()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fom_footnote_formula() {
+        let chip = ChipSummary {
+            name: "x",
+            cim_type: "Charge",
+            process_nm: 65,
+            array_kb: 10.0,
+            act_bits: 6,
+            weight_bits: 6,
+            adc_bits: 10,
+            tops: 1.2,
+            tops_per_mm2: 2.5,
+            tops_per_watt: 818.0,
+            sqnr_db: Some(45.3),
+            csnr_db: Some(31.3),
+            supports_transformer: true,
+        };
+        // Paper: SQNR-FoM ≈ 118841, CSNR-FoM ≈ 24541 (the table rounds
+        // its inputs, so allow a few percent).
+        let sf = chip.sqnr_fom().unwrap();
+        let cf = chip.csnr_fom().unwrap();
+        assert!((sf - 118841.0).abs() / 118841.0 < 0.05, "sqnr fom {sf}");
+        assert!((cf - 24541.0).abs() / 24541.0 < 0.05, "csnr fom {cf}");
+    }
+
+    #[test]
+    fn node_scaling_is_quadratic() {
+        assert!((node_energy_scale(65, 65) - 1.0).abs() < 1e-12);
+        assert!(node_energy_scale(65, 28) < 0.25);
+        assert!(node_energy_scale(28, 65) > 4.0);
+    }
+}

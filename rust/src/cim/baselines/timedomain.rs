@@ -1,0 +1,136 @@
+//! Time-domain CIM baseline, modeled after [3] (Wu et al., ISSCC 2022,
+//! 28 nm): each cell contributes a weight-dependent *delay*; the MAC is
+//! the accumulated edge time, digitized by a time-to-digital converter
+//! (TDC).
+//!
+//! Mechanisms captured:
+//! - **Delay-cell mismatch**: per-cell delay varies (Vth/RC mismatch) and
+//!   is *supply- and slope-dependent*, so linearity drifts with operating
+//!   point — the intro's claim that time-domain CIMs "have difficulty
+//!   achieving >8bit linearity".
+//! - **Accumulative jitter**: delay noise accumulates along the chain as
+//!   √N (unlike charge summation where kT/C is fixed by total C).
+//! - **TDC quantization**: resolution set by the reference delay step.
+
+use crate::util::rng::Rng;
+
+use super::ChipSummary;
+
+/// One time-domain column (a delay chain + TDC).
+pub struct TimeDomainColumn {
+    /// Per-cell nominal-1.0 delay factors (mismatch).
+    cell_delay: Vec<f64>,
+    /// Per-cell jitter σ relative to one cell delay.
+    jitter_rel: f64,
+    /// TDC bits.
+    bits: u32,
+    /// Second-order supply-pushout nonlinearity amplitude (fraction of
+    /// full scale at full input).
+    nonlin_quadratic: f64,
+}
+
+impl TimeDomainColumn {
+    pub fn new(rows: usize, sigma_delay: f64, seed: u64, index: usize) -> Self {
+        let root = Rng::new(seed);
+        let mut rng = root.substream(0x7D_C0DE, index as u64);
+        let cell_delay = (0..rows)
+            .map(|_| (1.0 + sigma_delay * rng.gauss()).max(0.05))
+            .collect();
+        TimeDomainColumn { cell_delay, jitter_rel: 0.05, bits: 6, nonlin_quadratic: 0.03 }
+    }
+
+    pub fn rows(&self) -> usize {
+        self.cell_delay.len()
+    }
+
+    /// Read a MAC of `count` active cells: accumulate their delays (with
+    /// per-cell jitter), apply the supply-pushout compression, quantize
+    /// with the TDC.
+    pub fn read_count(&self, count: usize, rng: &mut Rng) -> u32 {
+        let count = count.min(self.rows());
+        let mut t = 0.0;
+        for d in &self.cell_delay[..count] {
+            t += d + self.jitter_rel * rng.gauss();
+        }
+        let x = t / self.rows() as f64;
+        // Quadratic pushout: later edges arrive through a drooped supply.
+        let x = x - self.nonlin_quadratic * x * x;
+        let n = (1u32 << self.bits) as f64;
+        ((x * n).round().max(0.0) as u32).min((1u32 << self.bits) - 1)
+    }
+
+    pub fn ideal_code(&self, count: usize) -> u32 {
+        let n = (1u32 << self.bits) as f64;
+        (((count as f64 / self.rows() as f64) * n).round() as u32).min((1u32 << self.bits) - 1)
+    }
+}
+
+/// Fig. 6-adjacent row for the [3]-like chip (from its paper: 28 nm,
+/// 37 TOPS/W at 8b-MAC ⇒ ~2368 1b-normalized).
+pub fn summary() -> ChipSummary {
+    ChipSummary {
+        name: "[3] ISSCC 2022 (time-domain, 28nm)",
+        cim_type: "Time",
+        process_nm: 28,
+        array_kb: 128.0,
+        act_bits: 8,
+        weight_bits: 8,
+        adc_bits: 6,
+        tops: 1.24,
+        tops_per_mm2: 8.0,
+        tops_per_watt: 37.01 * 64.0,
+        sqnr_db: Some(19.0),
+        csnr_db: None,
+        supports_transformer: false,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::stats::Moments;
+
+    #[test]
+    fn noiseless_mismatch_free_chain_is_linear() {
+        let mut col = TimeDomainColumn::new(256, 0.0, 1, 0);
+        col.jitter_rel = 0.0;
+        col.nonlin_quadratic = 0.0;
+        let mut rng = Rng::new(2);
+        for count in [0usize, 32, 128, 255] {
+            assert_eq!(col.read_count(count, &mut rng), col.ideal_code(count));
+        }
+    }
+
+    #[test]
+    fn jitter_accumulates_with_count() {
+        let col = TimeDomainColumn::new(256, 0.0, 1, 0);
+        let mut rng = Rng::new(3);
+        let spread = |count: usize, rng: &mut Rng| {
+            let mut m = Moments::new();
+            for _ in 0..400 {
+                // Measure pre-quantization: use many reads of the code.
+                m.push(col.read_count(count, rng) as f64);
+            }
+            m.std()
+        };
+        let lo = spread(16, &mut rng);
+        let hi = spread(240, &mut rng);
+        assert!(hi > lo, "accumulative jitter: {lo} -> {hi}");
+    }
+
+    #[test]
+    fn pushout_compresses_high_codes() {
+        let mut col = TimeDomainColumn::new(256, 0.0, 1, 0);
+        col.jitter_rel = 0.0;
+        let mut rng = Rng::new(4);
+        let got = col.read_count(250, &mut rng);
+        assert!(got < col.ideal_code(250));
+    }
+
+    #[test]
+    fn summary_is_non_transformer_grade() {
+        let s = summary();
+        assert!(!s.supports_transformer);
+        assert!(s.sqnr_fom().unwrap() < 118841.0 * 0.5, "below this work's FoM");
+    }
+}

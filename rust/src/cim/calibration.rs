@@ -1,0 +1,144 @@
+//! Per-column digital calibration — the "software" half of the co-design
+//! that absorbs *static* transfer error (offset, gain, INL), leaving only
+//! dynamic read noise on the error budget. This is why CSNR (which the
+//! SAC policy consumes) excludes static INL: a real deployment measures
+//! each die once at bring-up and corrects codes digitally, exactly as
+//! this module does.
+//!
+//! Pipeline: `CalibrationTable::measure` sweeps the static transfer curve
+//! (foreground calibration, no noise averaging needed beyond `trials`),
+//! builds an inverse lookup, and `correct()` maps raw codes to corrected
+//! counts. Gain/offset are endpoint-fit; the residual is a per-code LUT.
+
+use crate::util::pool::parallel_map;
+use crate::util::rng::Rng;
+
+use super::column::Column;
+use super::params::CbMode;
+
+/// A measured per-column correction table.
+#[derive(Clone, Debug)]
+pub struct CalibrationTable {
+    /// corrected_count[code] — inverse transfer lookup.
+    inverse: Vec<u16>,
+    /// Endpoint-fit gain (codes per count).
+    pub gain: f64,
+    /// Endpoint-fit offset (codes at count 0).
+    pub offset: f64,
+}
+
+impl CalibrationTable {
+    /// Foreground-calibrate a column: drive every count, average a few
+    /// reads, build the inverse map. `trials` ≥ 8 suppresses read noise
+    /// enough for the static curve to dominate.
+    pub fn measure(column: &Column, mode: CbMode, trials: usize, threads: usize) -> Self {
+        let levels = column.params.levels();
+        let root = Rng::new(column.params.seed ^ 0xCA11_B4A7);
+        // Mean measured code for each driven count.
+        let mean_code = parallel_map(levels, threads, |count| {
+            let mut rng = root.substream(3, count as u64);
+            let mut sum = 0.0;
+            for _ in 0..trials {
+                sum += column.read_count(count, mode, &mut rng).code as f64;
+            }
+            sum / trials as f64
+        });
+        let offset = mean_code[0];
+        let gain = (mean_code[levels - 1] - mean_code[0]) / (levels - 1) as f64;
+        // Inverse: for each possible raw code, the count whose mean code
+        // is nearest. mean_code is monotone (up to noise), so a merge
+        // scan suffices.
+        let mut inverse = vec![0u16; levels];
+        let mut count = 0usize;
+        for (code, inv) in inverse.iter_mut().enumerate() {
+            while count + 1 < levels && mean_code[count + 1] <= code as f64 {
+                count += 1;
+            }
+            // Pick the nearer of count / count+1.
+            let best = if count + 1 < levels
+                && (mean_code[count + 1] - code as f64).abs()
+                    < (mean_code[count] - code as f64).abs()
+            {
+                count + 1
+            } else {
+                count
+            };
+            *inv = best as u16;
+        }
+        CalibrationTable { inverse, gain, offset }
+    }
+
+    /// Correct one raw code to a calibrated count.
+    #[inline]
+    pub fn correct(&self, code: u32) -> u32 {
+        self.inverse[(code as usize).min(self.inverse.len() - 1)] as u32
+    }
+
+    /// Residual static error after correction, over the full sweep [LSB].
+    pub fn residual_inl(&self, column: &Column) -> Vec<f64> {
+        (0..column.params.levels())
+            .map(|count| {
+                let raw = column.static_code(count);
+                self.correct(raw) as f64 - count as f64
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cim::params::MacroParams;
+    use crate::util::stats::rms;
+
+    fn col() -> Column {
+        Column::new(&MacroParams::default(), 0).unwrap()
+    }
+
+    #[test]
+    fn calibration_reduces_static_error() {
+        let column = col();
+        let table = CalibrationTable::measure(&column, CbMode::On, 16, 4);
+        // Raw static error (the 2-LSB INL)...
+        let raw_err: Vec<f64> = (0..1024)
+            .map(|c| column.static_code(c) as f64 - c as f64)
+            .collect();
+        // ...vs corrected.
+        let res = table.residual_inl(&column);
+        assert!(
+            rms(&res) < rms(&raw_err) * 0.6,
+            "calibration must cut static error: raw rms {} -> {}",
+            rms(&raw_err),
+            rms(&res)
+        );
+        assert!(rms(&res) < 0.8, "residual {} LSB", rms(&res));
+    }
+
+    #[test]
+    fn ideal_column_calibration_is_identity() {
+        let column = Column::ideal(&MacroParams::default()).unwrap();
+        let table = CalibrationTable::measure(&column, CbMode::Off, 4, 2);
+        for code in [0u32, 1, 100, 512, 1023] {
+            assert_eq!(table.correct(code), code);
+        }
+        assert!((table.gain - 1.0).abs() < 1e-9);
+        assert!(table.offset.abs() < 1e-9);
+    }
+
+    #[test]
+    fn correct_clamps_out_of_range() {
+        let column = col();
+        let table = CalibrationTable::measure(&column, CbMode::On, 8, 2);
+        // No panic at the top code.
+        let _ = table.correct(1023);
+        let _ = table.correct(4096);
+    }
+
+    #[test]
+    fn gain_and_offset_are_near_nominal() {
+        let column = col();
+        let table = CalibrationTable::measure(&column, CbMode::On, 8, 4);
+        assert!((table.gain - 1.0).abs() < 0.05, "gain {}", table.gain);
+        assert!(table.offset.abs() < 4.0, "offset {}", table.offset);
+    }
+}

@@ -1,0 +1,299 @@
+//! Mismatch-sampled capacitor bank: the heart of CR-CIM.
+//!
+//! One physical bank of `active_rows` unit capacitors serves two roles:
+//!
+//! 1. **Compute phase** — every cell's bottom plate is driven by its local
+//!    1b product (IN AND W); the floating top plate settles to
+//!    `V_FS · Σ cᵢ·dᵢ / ΣC` — a charge-domain MAC with *no* attenuation,
+//!    because the charge never leaves the bank.
+//! 2. **ADC phase** — the same cells are regrouped into a binary-weighted
+//!    C-DAC (bit b drives 2^b cells) for successive approximation.
+//!
+//! Mismatch is sampled once per instance (per die) from N(1, σ_u²) per
+//! unit cap, with substream-stable RNG so every (seed, column) pair gives
+//! the same die, independent of evaluation order or thread count.
+
+use crate::util::rng::Rng;
+
+use super::params::MacroParams;
+
+/// A column's capacitor bank with per-unit mismatch.
+#[derive(Clone, Debug)]
+pub struct CapacitorBank {
+    /// Normalized per-cell capacitance (mean 1.0).
+    cells: Vec<f64>,
+    /// Sum of all normalized cells.
+    total: f64,
+    /// Per-binary-group capacitance sums: `group[b] = Σ cells in bit b`,
+    /// group b has 2^b cells. Cell 0 is the LSB dummy terminating the bank.
+    groups: Vec<f64>,
+    /// Prefix sums: `prefix[i] = Σ cells[..i]` — makes the transfer-curve
+    /// sweep's `mac_level_prefix` O(1) instead of O(cells) (§Perf).
+    prefix: Vec<f64>,
+    bits: u32,
+}
+
+impl CapacitorBank {
+    /// Sample a bank for `column` of the die identified by `params.seed`.
+    pub fn sample(params: &MacroParams, column: usize) -> Self {
+        let root = Rng::new(params.seed);
+        let mut rng = root.substream(0x00C4_B44C, column as u64);
+        let n = params.active_rows;
+        let mut cells = Vec::with_capacity(n);
+        for _ in 0..n {
+            // Truncate at ±6σ: a real cap cannot go negative.
+            let c = 1.0 + params.sigma_cu_rel * rng.gauss().clamp(-6.0, 6.0);
+            cells.push(c.max(1e-3));
+        }
+        Self::from_cells(cells, params.adc_bits)
+    }
+
+    /// Build from explicit normalized cell values (testing / what-if).
+    pub fn from_cells(cells: Vec<f64>, bits: u32) -> Self {
+        assert_eq!(cells.len(), 1usize << bits, "bank must have 2^bits cells");
+        let total: f64 = cells.iter().sum();
+        // Binary grouping: cells[1..2] -> bit0, cells[2..4] -> bit1, ...
+        // cells[2^b .. 2^(b+1)] -> bit b. cells[0] is the terminating dummy.
+        let mut groups = Vec::with_capacity(bits as usize);
+        for b in 0..bits {
+            let lo = 1usize << b;
+            let hi = 1usize << (b + 1);
+            groups.push(cells[lo..hi].iter().sum());
+        }
+        let mut prefix = Vec::with_capacity(cells.len() + 1);
+        let mut acc = 0.0;
+        prefix.push(0.0);
+        for &c in &cells {
+            acc += c;
+            prefix.push(acc);
+        }
+        CapacitorBank { cells, total, groups, prefix, bits }
+    }
+
+    /// An ideal (mismatch-free) bank.
+    pub fn ideal(bits: u32) -> Self {
+        Self::from_cells(vec![1.0; 1usize << bits], bits)
+    }
+
+    pub fn num_cells(&self) -> usize {
+        self.cells.len()
+    }
+
+    pub fn total(&self) -> f64 {
+        self.total
+    }
+
+    /// Compute-phase MAC: normalized top-plate level in [0,1] for the given
+    /// per-cell product bits. `products.len()` must equal the cell count.
+    /// This is where CR-CIM differs from conventional CIM — the level is
+    /// referenced to the *full* bank, no redistribution loss.
+    pub fn mac_level(&self, products: &[bool]) -> f64 {
+        debug_assert_eq!(products.len(), self.cells.len());
+        let mut q = 0.0;
+        for (c, &p) in self.cells.iter().zip(products) {
+            if p {
+                q += c;
+            }
+        }
+        q / self.total
+    }
+
+    /// Compute-phase MAC for an (input, weight) bit pair without
+    /// materializing the product vector (§Perf: saves an allocation and a
+    /// pass on the macro matvec hot loop).
+    pub fn mac_level_and(&self, inputs: &[bool], weights: &[bool]) -> f64 {
+        debug_assert_eq!(inputs.len(), self.cells.len());
+        debug_assert_eq!(weights.len(), self.cells.len());
+        let mut q = 0.0;
+        for ((c, &i), &w) in self.cells.iter().zip(inputs).zip(weights) {
+            if i & w {
+                q += c;
+            }
+        }
+        q / self.total
+    }
+
+    /// MAC level when the driven pattern is given as a *count* with a
+    /// deterministic fill order (cells 0..count driven). Used by the fast
+    /// transfer-curve sweeps where the specific pattern is irrelevant.
+    pub fn mac_level_prefix(&self, count: usize) -> f64 {
+        debug_assert!(count <= self.cells.len());
+        self.prefix[count] / self.total
+    }
+
+    /// DAC level (normalized, in [0,1)) produced when the bank is
+    /// reconfigured as a binary C-DAC and driven with `code`.
+    pub fn dac_level(&self, code: u32) -> f64 {
+        debug_assert!(code < (1u32 << self.bits) as u32);
+        let mut q = 0.0;
+        for b in 0..self.bits {
+            if code & (1 << b) != 0 {
+                q += self.groups[b as usize];
+            }
+        }
+        q / self.total
+    }
+
+    /// The bit-b group weight normalized by total (ideal: 2^b / 2^bits).
+    pub fn group_weight(&self, bit: u32) -> f64 {
+        self.groups[bit as usize] / self.total
+    }
+
+    /// Static INL of the reconfigured C-DAC in LSB: deviation of each code's
+    /// level from the endpoint-fit line. This is the mismatch component of
+    /// the readout INL (the full transfer INL also includes the residual
+    /// cubic nonlinearity, applied in `column.rs`).
+    pub fn dac_inl_lsb(&self) -> Vec<f64> {
+        let n = 1usize << self.bits;
+        let lsb = 1.0 / n as f64;
+        let l0 = self.dac_level(0);
+        let l_max = self.dac_level((n - 1) as u32);
+        let span = l_max - l0;
+        (0..n)
+            .map(|code| {
+                let ideal = l0 + span * code as f64 / (n - 1) as f64;
+                (self.dac_level(code as u32) - ideal) / lsb
+            })
+            .collect()
+    }
+
+    /// DNL in LSB for each code transition (length 2^bits - 1).
+    pub fn dac_dnl_lsb(&self) -> Vec<f64> {
+        let n = 1usize << self.bits;
+        let lsb_actual = (self.dac_level((n - 1) as u32) - self.dac_level(0)) / (n - 1) as f64;
+        (1..n)
+            .map(|code| {
+                let step = self.dac_level(code as u32) - self.dac_level(code as u32 - 1);
+                step / lsb_actual - 1.0
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::assert_prop;
+
+    fn small_params(sigma: f64) -> MacroParams {
+        let mut p = MacroParams::default();
+        p.adc_bits = 6;
+        p.active_rows = 64;
+        p.rows = 64;
+        p.sigma_cu_rel = sigma;
+        p
+    }
+
+    #[test]
+    fn ideal_bank_is_perfectly_linear() {
+        let bank = CapacitorBank::ideal(10);
+        for code in [0u32, 1, 511, 512, 1023] {
+            let lvl = bank.dac_level(code);
+            assert!((lvl - code as f64 / 1024.0).abs() < 1e-12, "code {code}");
+        }
+        let inl = bank.dac_inl_lsb();
+        assert!(inl.iter().all(|x| x.abs() < 1e-9));
+        let dnl = bank.dac_dnl_lsb();
+        assert!(dnl.iter().all(|x| x.abs() < 1e-9));
+    }
+
+    #[test]
+    fn mac_level_counts_driven_cells() {
+        let bank = CapacitorBank::ideal(8);
+        let mut products = vec![false; 256];
+        for p in products.iter_mut().take(100) {
+            *p = true;
+        }
+        assert!((bank.mac_level(&products) - 100.0 / 256.0).abs() < 1e-12);
+        assert!((bank.mac_level_prefix(100) - 100.0 / 256.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn sampling_is_deterministic_per_column() {
+        let p = small_params(0.01);
+        let a = CapacitorBank::sample(&p, 5);
+        let b = CapacitorBank::sample(&p, 5);
+        assert_eq!(a.cells, b.cells);
+        let c = CapacitorBank::sample(&p, 6);
+        assert_ne!(a.cells, c.cells);
+    }
+
+    #[test]
+    fn mismatch_inl_grows_with_sigma() {
+        let max_inl = |sigma: f64| {
+            let p = small_params(sigma);
+            let bank = CapacitorBank::sample(&p, 0);
+            bank.dac_inl_lsb().iter().fold(0.0f64, |m, x| m.max(x.abs()))
+        };
+        let small = max_inl(0.001);
+        let large = max_inl(0.05);
+        assert!(large > small * 3.0, "small={small} large={large}");
+    }
+
+    #[test]
+    fn midcode_transition_is_worst_dnl_hotspot() {
+        // The MSB transition (011..1 -> 100..0) swaps the whole bank; with
+        // mismatch it should on average be among the largest DNL entries.
+        let p = small_params(0.02);
+        let mut worst_at_mid = 0;
+        for col in 0..20 {
+            let bank = CapacitorBank::sample(&p, col);
+            let dnl = bank.dac_dnl_lsb();
+            let mid = 1usize << (p.adc_bits - 1);
+            let mid_val = dnl[mid - 1].abs();
+            let max_val = dnl.iter().fold(0.0f64, |m, x| m.max(x.abs()));
+            if (mid_val - max_val).abs() < 1e-12 {
+                worst_at_mid += 1;
+            }
+        }
+        assert!(worst_at_mid >= 10, "mid-code worst in {worst_at_mid}/20 dies");
+    }
+
+    #[test]
+    fn prop_dac_levels_monotone_enough_and_bounded() {
+        assert_prop("dac-level-bounds", 64, |g| {
+            let bits = g.usize(4, 8) as u32;
+            let sigma = g.f64(0.0, 0.03);
+            let mut p = MacroParams::default();
+            p.adc_bits = bits;
+            p.active_rows = 1 << bits;
+            p.rows = p.active_rows;
+            p.sigma_cu_rel = sigma;
+            let bank = CapacitorBank::sample(&p, g.usize(0, 30));
+            let n = 1usize << bits;
+            for code in 0..n {
+                let lvl = bank.dac_level(code as u32);
+                if !(0.0..=1.0).contains(&lvl) {
+                    return Err(format!("level {lvl} out of [0,1] at code {code}"));
+                }
+            }
+            // Endpoint-referenced INL must vanish at the endpoints.
+            let inl = bank.dac_inl_lsb();
+            if inl[0].abs() > 1e-9 || inl[n - 1].abs() > 1e-9 {
+                return Err("endpoint INL nonzero".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_mac_plus_complement_sums_to_one() {
+        assert_prop("mac-complement", 48, |g| {
+            let bits = 6u32;
+            let mut p = MacroParams::default();
+            p.adc_bits = bits;
+            p.active_rows = 1 << bits;
+            p.rows = p.active_rows;
+            p.sigma_cu_rel = g.f64(0.0, 0.05);
+            let bank = CapacitorBank::sample(&p, 0);
+            let n = 1usize << bits;
+            let pattern: Vec<bool> = (0..n).map(|_| g.bool()).collect();
+            let complement: Vec<bool> = pattern.iter().map(|&b| !b).collect();
+            let sum = bank.mac_level(&pattern) + bank.mac_level(&complement);
+            if (sum - 1.0).abs() > 1e-9 {
+                return Err(format!("levels sum to {sum}, not 1"));
+            }
+            Ok(())
+        });
+    }
+}

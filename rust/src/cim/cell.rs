@@ -1,0 +1,191 @@
+//! Behavioral model of the 10T CR-CIM bit cell (Fig. 3).
+//!
+//! The cell is a 6T SRAM (weight storage) plus a 4T compute/reconfigure
+//! port driving the bottom plate of the cell's 1.5 fF fringe cap. The
+//! bottom plate has exactly three drivers, selected by phase:
+//!
+//! - `Reset`   — the shared D_DAC/Reset node carries V_reset (the D_DAC
+//!               path is *reused* as the reset path: no in-cell reset
+//!               switch, which is what keeps the cell at 10T / 2.3 µm²).
+//! - `Compute` — the local product IN·W (1b AND) drives the plate.
+//! - `Adc`     — the shared node carries the SAR feedback bit for the
+//!               cell's binary group.
+//!
+//! The phase sequencing constraint (Reset → Compute → Adc → Reset) is
+//! enforced here so the column model can't silently skip the reset that
+//! the shared-node design makes mandatory.
+
+/// Operating phase of a cell / column.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Phase {
+    Reset,
+    Compute,
+    Adc,
+}
+
+/// Error for illegal phase transitions.
+#[derive(Debug, thiserror::Error, PartialEq, Eq)]
+#[error("illegal phase transition {from:?} -> {to:?}")]
+pub struct PhaseError {
+    pub from: Phase,
+    pub to: Phase,
+}
+
+/// The legal cycle: Reset → Compute → Adc → Reset (Reset is also allowed
+/// from itself, e.g. on power-up, and Compute may return to Reset if a
+/// conversion is aborted).
+pub fn check_transition(from: Phase, to: Phase) -> Result<(), PhaseError> {
+    use Phase::*;
+    let ok = matches!(
+        (from, to),
+        (Reset, Compute) | (Compute, Adc) | (Adc, Reset) | (Reset, Reset) | (Compute, Reset)
+    );
+    if ok {
+        Ok(())
+    } else {
+        Err(PhaseError { from, to })
+    }
+}
+
+/// One 10T cell: stored weight bit + bottom-plate state.
+#[derive(Clone, Copy, Debug)]
+pub struct Cell {
+    /// 6T SRAM content.
+    pub weight: bool,
+    /// Current bottom-plate logic level.
+    pub plate: bool,
+    /// Which binary C-DAC group this cell belongs to (bit index 0..bits),
+    /// or None for the LSB-terminating dummy / offset cells.
+    pub dac_group: Option<u8>,
+}
+
+impl Cell {
+    pub fn new(dac_group: Option<u8>) -> Self {
+        Cell { weight: false, plate: false, dac_group }
+    }
+
+    /// Write the weight bit (SRAM write; allowed in any phase — the 6T
+    /// port is independent of the compute port).
+    pub fn write_weight(&mut self, w: bool) {
+        self.weight = w;
+    }
+
+    /// The 1b×1b product this cell contributes during compute.
+    #[inline]
+    pub fn product(&self, input: bool) -> bool {
+        input & self.weight
+    }
+
+    /// Drive the plate for the given phase.
+    ///
+    /// - Reset: plate <- false (V_reset) via the shared node.
+    /// - Compute: plate <- IN·W.
+    /// - Adc: plate <- D_DAC bit of this cell's group (dummy cells stay
+    ///   at reset level — they terminate the bank).
+    pub fn drive(&mut self, phase: Phase, input: bool, dac_code: u32) {
+        self.plate = match phase {
+            Phase::Reset => false,
+            Phase::Compute => self.product(input),
+            Phase::Adc => match self.dac_group {
+                Some(b) => dac_code & (1 << b) != 0,
+                None => false,
+            },
+        };
+    }
+}
+
+/// Phase sequencer shared by a column's cells; single source of truth for
+/// the Reset→Compute→Adc cycle.
+#[derive(Clone, Copy, Debug)]
+pub struct PhaseSequencer {
+    pub phase: Phase,
+}
+
+impl Default for PhaseSequencer {
+    fn default() -> Self {
+        PhaseSequencer { phase: Phase::Reset }
+    }
+}
+
+impl PhaseSequencer {
+    pub fn advance(&mut self, to: Phase) -> Result<(), PhaseError> {
+        check_transition(self.phase, to)?;
+        self.phase = to;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn product_truth_table() {
+        let mut c = Cell::new(Some(0));
+        for (w, i, expect) in [(false, false, false), (false, true, false), (true, false, false), (true, true, true)] {
+            c.write_weight(w);
+            assert_eq!(c.product(i), expect, "w={w} in={i}");
+        }
+    }
+
+    #[test]
+    fn compute_drives_product_onto_plate() {
+        let mut c = Cell::new(Some(3));
+        c.write_weight(true);
+        c.drive(Phase::Compute, true, 0);
+        assert!(c.plate);
+        c.drive(Phase::Compute, false, 0);
+        assert!(!c.plate);
+    }
+
+    #[test]
+    fn adc_phase_follows_group_bit() {
+        let mut c = Cell::new(Some(4));
+        c.drive(Phase::Adc, true, 1 << 4);
+        assert!(c.plate);
+        c.drive(Phase::Adc, true, !(1u32 << 4));
+        assert!(!c.plate);
+        // Dummy cells never follow the DAC.
+        let mut d = Cell::new(None);
+        d.drive(Phase::Adc, true, u32::MAX);
+        assert!(!d.plate);
+    }
+
+    #[test]
+    fn reset_clears_plate_regardless_of_state() {
+        let mut c = Cell::new(Some(0));
+        c.write_weight(true);
+        c.drive(Phase::Compute, true, 0);
+        assert!(c.plate);
+        c.drive(Phase::Reset, true, u32::MAX);
+        assert!(!c.plate);
+        // Weight survives reset (SRAM is independent).
+        assert!(c.weight);
+    }
+
+    #[test]
+    fn sequencer_enforces_cycle() {
+        let mut s = PhaseSequencer::default();
+        assert_eq!(s.phase, Phase::Reset);
+        s.advance(Phase::Compute).unwrap();
+        s.advance(Phase::Adc).unwrap();
+        s.advance(Phase::Reset).unwrap();
+        // Skipping compute is illegal: Reset -> Adc.
+        let err = s.advance(Phase::Adc).unwrap_err();
+        assert_eq!(err, PhaseError { from: Phase::Reset, to: Phase::Adc });
+        // Abort from compute back to reset is allowed.
+        s.advance(Phase::Compute).unwrap();
+        s.advance(Phase::Reset).unwrap();
+    }
+
+    #[test]
+    fn adc_without_reset_after_adc_is_illegal() {
+        let mut s = PhaseSequencer::default();
+        s.advance(Phase::Compute).unwrap();
+        s.advance(Phase::Adc).unwrap();
+        // The shared D_DAC/reset node means a new conversion cannot start
+        // until the bank is reset.
+        assert!(s.advance(Phase::Compute).is_err());
+        assert!(s.advance(Phase::Adc).is_err());
+    }
+}

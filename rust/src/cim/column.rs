@@ -1,0 +1,249 @@
+//! Full CR-CIM column: capacitor bank + comparator + SAR + noise sources,
+//! sequenced through the Reset → Compute → Adc cycle.
+//!
+//! This is the object the characterization benches (Fig. 5) run Monte-Carlo
+//! over, and the golden model the behavioral L1 kernel's noise parameters
+//! are calibrated from.
+
+use crate::util::rng::Rng;
+
+use super::capacitor::CapacitorBank;
+use super::cell::{Phase, PhaseSequencer};
+use super::comparator::Comparator;
+use super::params::{CbMode, MacroParams};
+use super::sar::{Conversion, SarAdc};
+
+/// One column of the macro with its sampled (per-die) nonidealities.
+#[derive(Clone, Debug)]
+pub struct Column {
+    pub params: MacroParams,
+    pub bank: CapacitorBank,
+    pub cmp: Comparator,
+    pub index: usize,
+    weights: Vec<bool>,
+    seq: PhaseSequencer,
+}
+
+impl Column {
+    /// Instantiate column `index` of the die identified by `params.seed`.
+    pub fn new(params: &MacroParams, index: usize) -> Result<Self, String> {
+        params.validate()?;
+        let bank = CapacitorBank::sample(params, index);
+        let root = Rng::new(params.seed);
+        let mut crng = root.substream(0x00C0_33A4, index as u64);
+        let cmp = Comparator::sample(
+            params.sigma_cmp_lsb_at_supply(),
+            params.sigma_cmp_offset_lsb,
+            &mut crng,
+        );
+        Ok(Column {
+            params: params.clone(),
+            bank,
+            cmp,
+            index,
+            weights: vec![false; params.active_rows],
+            seq: PhaseSequencer::default(),
+        })
+    }
+
+    /// An idealized column (no mismatch, no noise, no nonlinearity):
+    /// useful as the "digital reference" in accuracy comparisons.
+    pub fn ideal(params: &MacroParams) -> Result<Self, String> {
+        params.validate()?;
+        let mut p = params.clone();
+        p.sigma_cu_rel = 0.0;
+        p.nonlin_cubic_lsb = 0.0;
+        p.temperature_k = 0.0; // no kT/C in the digital-reference column
+        Ok(Column {
+            bank: CapacitorBank::ideal(p.adc_bits),
+            cmp: Comparator::new(0.0, 0.0),
+            index: usize::MAX,
+            weights: vec![false; p.active_rows],
+            seq: PhaseSequencer::default(),
+            params: p,
+        })
+    }
+
+    /// Load the column's weight bits (6T SRAM write).
+    pub fn load_weights(&mut self, bits: &[bool]) {
+        assert_eq!(bits.len(), self.params.active_rows, "weight vector length");
+        self.weights.copy_from_slice(bits);
+    }
+
+    pub fn weights(&self) -> &[bool] {
+        &self.weights
+    }
+
+    fn static_level_prefix(&self, count: usize) -> f64 {
+        self.apply_nonlin(self.bank.mac_level_prefix(count))
+    }
+
+    /// Residual cubic nonlinearity from switch parasitics / signal-dependent
+    /// charge injection, calibrated by `nonlin_cubic_lsb` (peak, in LSB).
+    fn apply_nonlin(&self, level: f64) -> f64 {
+        let peak = self.params.nonlin_cubic_lsb / self.params.levels() as f64;
+        // x(x-1/2)(x-1) has extrema ±1/(12√3) ≈ ±0.0481 on [0,1].
+        let shape = level * (level - 0.5) * (level - 1.0) / 0.048_112_522_4;
+        level + peak * shape
+    }
+
+    /// Sample the kT/C + any residual sampled noise onto the level.
+    fn sample_noise(&self, rng: &mut Rng) -> f64 {
+        self.params.ktc_noise_lsb() / self.params.levels() as f64 * rng.gauss()
+    }
+
+    /// One full MAC + conversion for a binary input vector, enforcing the
+    /// phase cycle that the shared D_DAC/reset node requires.
+    pub fn mac_convert(&mut self, inputs: &[bool], mode: CbMode, rng: &mut Rng) -> Conversion {
+        assert_eq!(inputs.len(), self.params.active_rows, "input vector length");
+        self.seq.advance(Phase::Compute).expect("phase: reset -> compute");
+        let level = self.apply_nonlin(self.bank.mac_level_and(inputs, &self.weights))
+            + self.sample_noise(rng);
+        self.seq.advance(Phase::Adc).expect("phase: compute -> adc");
+        let adc = SarAdc::new(&self.params, &self.bank, &self.cmp);
+        let conv = adc.convert(level, mode, rng);
+        self.seq.advance(Phase::Reset).expect("phase: adc -> reset");
+        conv
+    }
+
+    /// Characterization read: drive exactly `count` cells (prefix pattern)
+    /// and convert. This sweeps the transfer curve without constructing
+    /// input vectors.
+    pub fn read_count(&self, count: usize, mode: CbMode, rng: &mut Rng) -> Conversion {
+        let level = self.static_level_prefix(count) + self.sample_noise(rng);
+        let adc = SarAdc::new(&self.params, &self.bank, &self.cmp);
+        adc.convert(level, mode, rng)
+    }
+
+    /// Static (noise-free, ideal-comparator) transfer point. Isolates the
+    /// INL contribution of mismatch + residual nonlinearity.
+    pub fn static_code(&self, count: usize) -> u32 {
+        let level = self.static_level_prefix(count);
+        let adc = SarAdc::new(&self.params, &self.bank, &self.cmp);
+        adc.convert_ideal_comparator(level)
+    }
+
+    /// The ideal (error-free) expected code for `count` driven cells.
+    pub fn ideal_code(&self, count: usize) -> u32 {
+        (count as u32).min((self.params.levels() - 1) as u32)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::stats::Moments;
+
+    fn fast_params() -> MacroParams {
+        let mut p = MacroParams::default();
+        p.adc_bits = 8;
+        p.active_rows = 256;
+        p.rows = 256;
+        p
+    }
+
+    #[test]
+    fn ideal_column_is_exact() {
+        let p = fast_params();
+        let col = Column::ideal(&p).unwrap();
+        let mut rng = Rng::new(1);
+        for count in [0usize, 1, 50, 128, 255] {
+            let conv = col.read_count(count, CbMode::Off, &mut rng);
+            assert_eq!(conv.code, count as u32, "count={count}");
+        }
+        // count = levels saturates at the top code.
+        assert_eq!(col.read_count(256, CbMode::Off, &mut rng).code, 255);
+    }
+
+    #[test]
+    fn mac_convert_computes_dot_product() {
+        let p = fast_params();
+        let mut col = Column::ideal(&p).unwrap();
+        let mut rng = Rng::new(2);
+        let weights: Vec<bool> = (0..256).map(|i| i % 2 == 0).collect();
+        let inputs: Vec<bool> = (0..256).map(|i| i % 3 == 0).collect();
+        col.load_weights(&weights);
+        let expect: u32 = inputs
+            .iter()
+            .zip(&weights)
+            .filter(|(&i, &w)| i & w)
+            .count() as u32;
+        let got = col.mac_convert(&inputs, CbMode::Off, &mut rng).code;
+        assert_eq!(got, expect);
+    }
+
+    #[test]
+    fn phase_cycle_allows_repeated_conversions() {
+        let p = fast_params();
+        let mut col = Column::ideal(&p).unwrap();
+        let mut rng = Rng::new(3);
+        let inputs = vec![true; 256];
+        for _ in 0..3 {
+            let _ = col.mac_convert(&inputs, CbMode::Off, &mut rng);
+        }
+    }
+
+    #[test]
+    fn real_column_noise_matches_spec_scale() {
+        let p = MacroParams::default();
+        let col = Column::new(&p, 0).unwrap();
+        let mut rng = Rng::new(4);
+        // Repeated reads of a fixed mid-scale pattern: code std should be
+        // on the order of sigma_cmp (w/o CB) and visibly lower with CB.
+        let mut m_off = Moments::new();
+        let mut m_on = Moments::new();
+        for _ in 0..1200 {
+            m_off.push(col.read_count(512, CbMode::Off, &mut rng).code as f64);
+            m_on.push(col.read_count(512, CbMode::On, &mut rng).code as f64);
+        }
+        assert!(m_off.std() > 0.4, "off-mode noise too small: {}", m_off.std());
+        assert!(
+            m_on.std() < m_off.std(),
+            "CB should reduce noise: on={} off={}",
+            m_on.std(),
+            m_off.std()
+        );
+    }
+
+    #[test]
+    fn static_inl_is_bounded_by_spec() {
+        let p = MacroParams::default();
+        // Check a few columns of the default die: |INL| < ~2.5 LSB
+        // (paper: < 2 LSB measured; our calibration allows a small margin).
+        for colidx in 0..4 {
+            let col = Column::new(&p, colidx).unwrap();
+            let mut worst = 0.0f64;
+            for count in (0..=1024).step_by(16) {
+                let code = col.static_code(count) as f64;
+                let ideal = col.ideal_code(count) as f64;
+                worst = worst.max((code - ideal).abs());
+            }
+            assert!(worst < 3.0, "col {colidx}: worst static error {worst} LSB");
+            assert!(worst > 0.1, "col {colidx}: suspiciously perfect ({worst})");
+        }
+    }
+
+    #[test]
+    fn deterministic_per_die_seed() {
+        let p = MacroParams::default();
+        let a = Column::new(&p, 3).unwrap();
+        let b = Column::new(&p, 3).unwrap();
+        let mut r1 = Rng::new(7);
+        let mut r2 = Rng::new(7);
+        for count in [10usize, 200, 700] {
+            assert_eq!(
+                a.read_count(count, CbMode::On, &mut r1).code,
+                b.read_count(count, CbMode::On, &mut r2).code
+            );
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "input vector length")]
+    fn wrong_input_length_panics() {
+        let p = fast_params();
+        let mut col = Column::ideal(&p).unwrap();
+        let mut rng = Rng::new(8);
+        let _ = col.mac_convert(&[true; 10], CbMode::Off, &mut rng);
+    }
+}

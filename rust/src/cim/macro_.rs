@@ -1,0 +1,375 @@
+//! The full 1088×78 CR-CIM macro: multi-bit matrix-vector products built
+//! from binary column conversions.
+//!
+//! Multi-bit scheme (as in Fig. 6's "configurable" precisions):
+//! - **weights** are bit-sliced across adjacent physical columns
+//!   (two's complement: the MSB plane carries weight −2^(w_bits−1));
+//! - **activations** are applied bit-serially over a_bits conversion
+//!   cycles (two's complement MSB cycle subtracted);
+//! - the periphery reconstructs y = Σ_{a,b} ±2^{a+b}·code[a,b] with a
+//!   digital shift-add, exactly like the chip's registered output path.
+//!
+//! Every binary cycle of every used column goes through the full analog
+//! column model (mismatch, nonlinearity, kT/C, comparator noise, optional
+//! majority voting), so layer-level accuracy experiments see the true
+//! hardware error statistics.
+
+use crate::util::rng::Rng;
+
+use super::column::Column;
+use super::energy::EnergyModel;
+use super::params::{CbMode, MacroParams};
+
+/// Outcome of a macro-level matvec: values plus the hardware cost.
+#[derive(Clone, Debug)]
+pub struct MacrunResult {
+    /// Reconstructed outputs (one per logical output channel).
+    pub y: Vec<i64>,
+    /// Total column conversions performed.
+    pub conversions: u64,
+    /// Total energy [pJ] (conversion energy × conversions).
+    pub energy_pj: f64,
+    /// Wall latency [ns] (bit-serial cycles × conversion latency).
+    pub latency_ns: f64,
+}
+
+/// The macro: a bank of columns plus the digital reconstruction periphery.
+pub struct CimMacro {
+    pub params: MacroParams,
+    columns: Vec<Column>,
+    energy: EnergyModel,
+    /// Loaded weight configuration.
+    loaded: Option<LoadedWeights>,
+    rng: Rng,
+}
+
+#[derive(Clone, Debug)]
+struct LoadedWeights {
+    rows: usize,
+    n_out: usize,
+    w_bits: u32,
+}
+
+impl CimMacro {
+    pub fn new(params: &MacroParams) -> Result<Self, String> {
+        params.validate()?;
+        let columns = (0..params.cols)
+            .map(|c| Column::new(params, c))
+            .collect::<Result<Vec<_>, _>>()?;
+        Ok(CimMacro {
+            params: params.clone(),
+            columns,
+            energy: EnergyModel::cr_cim(params),
+            loaded: None,
+            rng: Rng::new(params.seed ^ 0xACC0_57A7E),
+        })
+    }
+
+    /// An ideal macro (no analog error): digital reference datapath.
+    pub fn ideal(params: &MacroParams) -> Result<Self, String> {
+        params.validate()?;
+        let columns = (0..params.cols)
+            .map(|_| Column::ideal(params))
+            .collect::<Result<Vec<_>, _>>()?;
+        Ok(CimMacro {
+            params: params.clone(),
+            columns,
+            energy: EnergyModel::cr_cim(params),
+            loaded: None,
+            rng: Rng::new(params.seed ^ 0xACC0_57A7E),
+        })
+    }
+
+    /// Physical columns needed for `n_out` logical outputs at `w_bits`.
+    pub fn columns_needed(n_out: usize, w_bits: u32) -> usize {
+        n_out * w_bits as usize
+    }
+
+    /// Maximum logical outputs a tile can hold at `w_bits`.
+    pub fn max_outputs(&self, w_bits: u32) -> usize {
+        self.params.cols / w_bits as usize
+    }
+
+    /// Load a signed weight tile `w[row][out]` (two's complement range
+    /// checked against w_bits). Rows beyond `w.len()` are zero-padded.
+    pub fn load_weights(
+        &mut self,
+        w: &[Vec<i32>],
+        w_bits: u32,
+    ) -> Result<(), String> {
+        let rows = w.len();
+        if rows == 0 || rows > self.params.active_rows {
+            return Err(format!(
+                "weight tile rows {rows} out of range 1..={}",
+                self.params.active_rows
+            ));
+        }
+        let n_out = w[0].len();
+        if Self::columns_needed(n_out, w_bits) > self.params.cols {
+            return Err(format!(
+                "{n_out} outputs at {w_bits}b need {} columns, macro has {}",
+                Self::columns_needed(n_out, w_bits),
+                self.params.cols
+            ));
+        }
+        let lo = -(1i32 << (w_bits - 1));
+        let hi = (1i32 << (w_bits - 1)) - 1;
+        let n = self.params.active_rows;
+        for (j, out) in (0..n_out).map(|j| (j, j * w_bits as usize)) {
+            for b in 0..w_bits {
+                let mut bits = vec![false; n];
+                for (r, wrow) in w.iter().enumerate() {
+                    let v = wrow[j];
+                    if v < lo || v > hi {
+                        return Err(format!("weight {v} exceeds {w_bits}-bit range"));
+                    }
+                    // Two's complement bit b of v.
+                    let u = (v as i64 & ((1i64 << w_bits) - 1)) as u64;
+                    bits[r] = (u >> b) & 1 == 1;
+                }
+                self.columns[out + b as usize].load_weights(&bits);
+            }
+        }
+        self.loaded = Some(LoadedWeights { rows, n_out, w_bits });
+        Ok(())
+    }
+
+    /// Run a signed activation vector through the loaded tile.
+    /// `x[r]` must fit in `a_bits` two's complement.
+    pub fn matvec(&mut self, x: &[i32], a_bits: u32, mode: CbMode) -> Result<MacrunResult, String> {
+        let loaded = self
+            .loaded
+            .clone()
+            .ok_or_else(|| "no weights loaded".to_string())?;
+        if x.len() != loaded.rows {
+            return Err(format!(
+                "activation length {} != loaded rows {}",
+                x.len(),
+                loaded.rows
+            ));
+        }
+        let lo = -(1i32 << (a_bits - 1));
+        let hi = (1i32 << (a_bits - 1)) - 1;
+        for &v in x {
+            if v < lo || v > hi {
+                return Err(format!("activation {v} exceeds {a_bits}-bit range"));
+            }
+        }
+        let n = self.params.active_rows;
+        let used_cols = Self::columns_needed(loaded.n_out, loaded.w_bits);
+        let mut y = vec![0i64; loaded.n_out];
+        let mut conversions = 0u64;
+
+        // Bit-serial input cycles.
+        for a in 0..a_bits {
+            let a_weight: i64 = if a == a_bits - 1 {
+                -(1i64 << a)
+            } else {
+                1i64 << a
+            };
+            // Input bit plane for this cycle.
+            let mut in_bits = vec![false; n];
+            for (r, &v) in x.iter().enumerate() {
+                let u = (v as i64 & ((1i64 << a_bits) - 1)) as u64;
+                in_bits[r] = (u >> a) & 1 == 1;
+            }
+            // All used columns convert in parallel (same cycle).
+            for j in 0..loaded.n_out {
+                for b in 0..loaded.w_bits {
+                    let col = j * loaded.w_bits as usize + b as usize;
+                    let w_weight: i64 = if b == loaded.w_bits - 1 {
+                        -(1i64 << b)
+                    } else {
+                        1i64 << b
+                    };
+                    let conv = self.columns[col].mac_convert(&in_bits, mode, &mut self.rng);
+                    conversions += 1;
+                    y[j] += a_weight * w_weight * conv.code as i64;
+                }
+            }
+        }
+        let _ = used_cols; // columns convert in parallel; latency is per cycle
+        let e_conv = self.energy.conversion_energy_pj(mode);
+        let latency = a_bits as f64 * self.params.conversion_latency_ns(mode);
+        Ok(MacrunResult { y, conversions, energy_pj: e_conv * conversions as f64, latency_ns: latency })
+    }
+
+    /// Exact integer reference for the loaded tile (periphery bypass).
+    pub fn matvec_exact(&self, w: &[Vec<i32>], x: &[i32]) -> Vec<i64> {
+        let n_out = w[0].len();
+        let mut y = vec![0i64; n_out];
+        for (r, wrow) in w.iter().enumerate() {
+            for (j, &wv) in wrow.iter().enumerate() {
+                y[j] += wv as i64 * x[r] as i64;
+            }
+        }
+        y
+    }
+
+    /// 1b-normalized op count of one matvec on the loaded tile.
+    pub fn ops_matvec(&self, a_bits: u32) -> Option<f64> {
+        let l = self.loaded.as_ref()?;
+        Some(2.0 * l.rows as f64 * l.n_out as f64 * a_bits as f64 * l.w_bits as f64)
+    }
+
+    /// Monte-Carlo estimate of output-referred noise (std of y around the
+    /// exact value) for the loaded tile at the given precision and mode.
+    /// This is what calibrates the L1 behavioral kernel's σ.
+    pub fn calibrate_output_noise(
+        &mut self,
+        w: &[Vec<i32>],
+        x: &[i32],
+        a_bits: u32,
+        mode: CbMode,
+        trials: usize,
+    ) -> Result<f64, String> {
+        let exact = self.matvec_exact(w, x);
+        let mut sq = 0.0;
+        let mut count = 0usize;
+        for _ in 0..trials {
+            let r = self.matvec(x, a_bits, mode)?;
+            for (got, want) in r.y.iter().zip(&exact) {
+                let d = (*got - *want) as f64;
+                sq += d * d;
+                count += 1;
+            }
+        }
+        Ok((sq / count.max(1) as f64).sqrt())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_params() -> MacroParams {
+        let mut p = MacroParams::default();
+        p.adc_bits = 8;
+        p.active_rows = 256;
+        p.rows = 256;
+        p.cols = 12;
+        p
+    }
+
+    fn tile(rows: usize, n_out: usize, w_bits: u32, seed: u64) -> (Vec<Vec<i32>>, Vec<i32>) {
+        let mut rng = Rng::new(seed);
+        let lo = -(1i32 << (w_bits - 1));
+        let hi = (1i32 << (w_bits - 1)) - 1;
+        let w: Vec<Vec<i32>> = (0..rows)
+            .map(|_| {
+                (0..n_out)
+                    .map(|_| lo + rng.below((hi - lo + 1) as u64) as i32)
+                    .collect()
+            })
+            .collect();
+        let x: Vec<i32> = (0..rows).map(|_| lo + rng.below((hi - lo + 1) as u64) as i32).collect();
+        (w, x)
+    }
+
+    #[test]
+    fn ideal_macro_matches_exact_integer_matvec() {
+        let p = tiny_params();
+        let mut m = CimMacro::ideal(&p).unwrap();
+        for seed in 0..3 {
+            let (w, x) = tile(200, 3, 4, seed);
+            m.load_weights(&w, 4).unwrap();
+            let got = m.matvec(&x, 4, CbMode::Off).unwrap();
+            let want = m.matvec_exact(&w, &x);
+            assert_eq!(got.y, want, "seed {seed}");
+        }
+    }
+
+    #[test]
+    fn ideal_macro_exact_at_mixed_precisions() {
+        let p = tiny_params();
+        let mut m = CimMacro::ideal(&p).unwrap();
+        for (a_bits, w_bits) in [(1u32, 1u32), (2, 3), (6, 2), (4, 4)] {
+            let (w, x) = tile(128, (12 / w_bits) as usize, w_bits, 7);
+            let mut xq = x;
+            // Clamp activations into a_bits range.
+            let lo = -(1i32 << (a_bits - 1));
+            let hi = (1i32 << (a_bits - 1)) - 1;
+            for v in xq.iter_mut() {
+                *v = (*v).clamp(lo, hi);
+            }
+            m.load_weights(&w, w_bits).unwrap();
+            let got = m.matvec(&xq, a_bits, CbMode::Off).unwrap();
+            let want = m.matvec_exact(&w, &xq);
+            assert_eq!(got.y, want, "a={a_bits} w={w_bits}");
+        }
+    }
+
+    #[test]
+    fn conversions_and_energy_accounting() {
+        let p = tiny_params();
+        let mut m = CimMacro::ideal(&p).unwrap();
+        let (w, x) = tile(100, 2, 3, 1);
+        m.load_weights(&w, 3).unwrap();
+        let r = m.matvec(&x, 4, CbMode::Off).unwrap();
+        // 4 input cycles × (2 outputs × 3 planes) conversions.
+        assert_eq!(r.conversions, 4 * 6);
+        assert!(r.energy_pj > 0.0);
+        assert!(r.latency_ns > 0.0);
+        // CB costs more energy and time for the same tile.
+        let r_cb = m.matvec(&x, 4, CbMode::On).unwrap();
+        assert!(r_cb.energy_pj > r.energy_pj * 1.5);
+        assert!(r_cb.latency_ns > r.latency_ns * 1.5);
+    }
+
+    #[test]
+    fn rejects_out_of_range_operands() {
+        let p = tiny_params();
+        let mut m = CimMacro::ideal(&p).unwrap();
+        let w = vec![vec![7i32, -8], vec![3, 2]];
+        assert!(m.load_weights(&w, 4).is_ok());
+        let w_bad = vec![vec![8i32, 0]];
+        assert!(m.load_weights(&w_bad, 4).is_err());
+        m.load_weights(&w, 4).unwrap();
+        assert!(m.matvec(&[8, 0], 4, CbMode::Off).is_err()); // activation range
+        assert!(m.matvec(&[1], 4, CbMode::Off).is_err()); // length mismatch
+    }
+
+    #[test]
+    fn rejects_oversized_tiles() {
+        let p = tiny_params();
+        let mut m = CimMacro::ideal(&p).unwrap();
+        // 5 outputs × 3 bits = 15 columns > 12.
+        let w = vec![vec![1i32; 5]; 10];
+        assert!(m.load_weights(&w, 3).is_err());
+        assert_eq!(m.max_outputs(3), 4);
+        // Too many rows.
+        let w = vec![vec![1i32; 2]; 1000];
+        assert!(m.load_weights(&w, 3).is_err());
+    }
+
+    #[test]
+    fn real_macro_close_to_exact_but_noisy() {
+        let mut p = tiny_params();
+        p.sigma_cmp_lsb = 1.1;
+        let mut m = CimMacro::new(&p).unwrap();
+        let (w, x) = tile(256, 2, 4, 3);
+        m.load_weights(&w, 4).unwrap();
+        let want = m.matvec_exact(&w, &x);
+        let got = m.matvec(&x, 4, CbMode::Off).unwrap();
+        for (g, e) in got.y.iter().zip(&want) {
+            let err = (*g - *e).abs() as f64;
+            // Error should be small vs the output magnitude scale
+            // (~N·2^(a+w)/4) but generally nonzero.
+            assert!(err < 2000.0, "err={err} got={g} want={e}");
+        }
+    }
+
+    #[test]
+    fn calibrated_noise_cb_beats_no_cb() {
+        let mut p = tiny_params();
+        p.sigma_cmp_lsb = 1.1;
+        p.sigma_cu_rel = 0.0; // isolate comparator noise
+        p.nonlin_cubic_lsb = 0.0;
+        let mut m = CimMacro::new(&p).unwrap();
+        let (w, x) = tile(256, 2, 2, 9);
+        m.load_weights(&w, 2).unwrap();
+        let s_off = m.calibrate_output_noise(&w, &x, 2, CbMode::Off, 60).unwrap();
+        let s_on = m.calibrate_output_noise(&w, &x, 2, CbMode::On, 60).unwrap();
+        assert!(s_on < s_off, "CB should reduce noise: on={s_on} off={s_off}");
+    }
+}

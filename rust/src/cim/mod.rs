@@ -1,0 +1,34 @@
+//! CR-CIM macro simulator: the substrate the paper's silicon evaluation
+//! ran on, rebuilt as a Monte-Carlo circuit model.
+//!
+//! Layering (bottom-up):
+//! - [`params`]     — every physical constant + calibration rationale
+//! - [`cell`]       — 10T cell & the Reset→Compute→Adc phase contract
+//! - [`capacitor`]  — mismatch-sampled dual-role capacitor bank
+//! - [`comparator`] — noise / offset / majority voting / energy law
+//! - [`sar`]        — successive approximation over the reconfigured bank
+//! - [`column`]     — one full column (the Fig. 5 unit of measurement)
+//! - [`macro_`]     — 1088×78 macro: bit-serial, bit-sliced multi-bit MACs
+//! - [`energy`]     — conversion energy/latency, TOPS/W, supply sweeps
+//! - [`area`]       — 65 nm area model & the Fig. 1(B) scaling argument
+//! - [`baselines`]  — [2]/[4]/[6]-like comparison architectures
+//! - [`netstats`]   — accuracy-vs-CSNR layer tolerance models (Fig. 1A/4)
+
+pub mod area;
+pub mod baselines;
+pub mod calibration;
+pub mod capacitor;
+pub mod cell;
+pub mod column;
+pub mod comparator;
+pub mod energy;
+pub mod macro_;
+pub mod montecarlo;
+pub mod netstats;
+pub mod params;
+pub mod sar;
+
+pub use column::Column;
+pub use energy::EnergyModel;
+pub use macro_::CimMacro;
+pub use params::{CbMode, MacroParams};

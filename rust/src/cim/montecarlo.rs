@@ -1,0 +1,182 @@
+//! Multi-die Monte-Carlo: yield and environmental analysis.
+//!
+//! A fab lot is a set of dies = a set of mismatch seeds. This module
+//! sweeps dies (and operating temperature) through the Fig. 5
+//! characterization to answer the questions a chip paper's shmoo plots
+//! answer: what fraction of dies meets the INL/SQNR/CSNR spec, and how
+//! the accuracy metrics move with temperature and supply.
+
+use crate::metrics::csnr::{measure_csnr, CsnrEnsemble};
+use crate::metrics::sqnr::sqnr_db;
+use crate::metrics::transfer::{characterize, CharacterizeOpts};
+use crate::util::pool::parallel_map;
+use crate::util::stats::Moments;
+
+use super::column::Column;
+use super::params::{CbMode, MacroParams};
+
+/// Per-die measurement summary.
+#[derive(Clone, Copy, Debug)]
+pub struct DieResult {
+    pub seed: u64,
+    pub max_inl_lsb: f64,
+    pub mean_noise_lsb: f64,
+    pub sqnr_db: f64,
+    pub csnr_db: f64,
+}
+
+/// Acceptance spec (the paper's published numbers as limits).
+#[derive(Clone, Copy, Debug)]
+pub struct YieldSpec {
+    pub max_inl_lsb: f64,
+    pub min_sqnr_db: f64,
+    pub min_csnr_db: f64,
+}
+
+impl Default for YieldSpec {
+    fn default() -> Self {
+        // Modest guard-bands below the headline numbers.
+        YieldSpec { max_inl_lsb: 3.0, min_sqnr_db: 43.0, min_csnr_db: 29.0 }
+    }
+}
+
+impl YieldSpec {
+    pub fn passes(&self, die: &DieResult) -> bool {
+        die.max_inl_lsb <= self.max_inl_lsb
+            && die.sqnr_db >= self.min_sqnr_db
+            && die.csnr_db >= self.min_csnr_db
+    }
+}
+
+/// Characterize `dies` independent mismatch samples of column 0.
+pub fn sweep_dies(
+    base: &MacroParams,
+    mode: CbMode,
+    dies: usize,
+    opts: &CharacterizeOpts,
+    threads: usize,
+) -> Vec<DieResult> {
+    parallel_map(dies, threads, |i| {
+        let params = base.clone().with_seed(base.seed.wrapping_add(1 + i as u64 * 7919));
+        let col = Column::new(&params, 0).expect("valid params");
+        // Inner sweeps single-threaded; parallelism is across dies.
+        let inner = CharacterizeOpts { threads: 1, ..*opts };
+        let curve = characterize(&col, mode, &inner);
+        let ens = CsnrEnsemble { vectors: 48, reads_per_vector: 10, ..Default::default() };
+        let csnr = measure_csnr(&col, mode, &ens, 1);
+        DieResult {
+            seed: params.seed,
+            max_inl_lsb: curve.max_abs_inl(),
+            mean_noise_lsb: curve.mean_noise_lsb(),
+            sqnr_db: sqnr_db(&curve),
+            csnr_db: csnr.csnr_db,
+        }
+    })
+}
+
+/// Lot summary: yield plus metric distributions.
+#[derive(Clone, Debug)]
+pub struct LotSummary {
+    pub dies: usize,
+    pub yield_fraction: f64,
+    pub sqnr: Moments,
+    pub csnr: Moments,
+    pub inl: Moments,
+}
+
+pub fn summarize(results: &[DieResult], spec: &YieldSpec) -> LotSummary {
+    let mut sqnr = Moments::new();
+    let mut csnr = Moments::new();
+    let mut inl = Moments::new();
+    let mut pass = 0usize;
+    for r in results {
+        sqnr.push(r.sqnr_db);
+        csnr.push(r.csnr_db);
+        inl.push(r.max_inl_lsb);
+        if spec.passes(r) {
+            pass += 1;
+        }
+    }
+    LotSummary {
+        dies: results.len(),
+        yield_fraction: pass as f64 / results.len().max(1) as f64,
+        sqnr,
+        csnr,
+        inl,
+    }
+}
+
+/// Temperature sweep of one die's accuracy metrics (kT/C and comparator
+/// noise scale as √T around the 300 K calibration point).
+pub fn temperature_sweep(
+    base: &MacroParams,
+    mode: CbMode,
+    temps_k: &[f64],
+    opts: &CharacterizeOpts,
+) -> Vec<(f64, f64, f64)> {
+    temps_k
+        .iter()
+        .map(|&t| {
+            let mut p = base.clone();
+            p.temperature_k = t;
+            // Comparator thermal noise power ∝ T.
+            p.sigma_cmp_lsb = base.sigma_cmp_lsb * (t / base.temperature_k).sqrt();
+            let col = Column::new(&p, 0).expect("valid params");
+            let curve = characterize(&col, mode, opts);
+            (t, curve.mean_noise_lsb(), sqnr_db(&curve))
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quick_opts() -> CharacterizeOpts {
+        CharacterizeOpts { step: 32, trials: 16, threads: 1, stream: 5 }
+    }
+
+    #[test]
+    fn lot_yield_is_high_at_default_corner() {
+        let results = sweep_dies(&MacroParams::default(), CbMode::On, 8, &quick_opts(), 8);
+        let lot = summarize(&results, &YieldSpec::default());
+        assert_eq!(lot.dies, 8);
+        assert!(lot.yield_fraction >= 0.75, "yield {}", lot.yield_fraction);
+        // Die-to-die variation exists but is bounded.
+        assert!(lot.sqnr.std() < 3.0);
+    }
+
+    #[test]
+    fn dies_actually_differ() {
+        // Max-INL can tie across dies (the deterministic cubic dominates
+        // and static codes are integers), so discriminate on the
+        // noise/SQNR measurements, which carry the per-die streams.
+        let results = sweep_dies(&MacroParams::default(), CbMode::On, 4, &quick_opts(), 4);
+        let sqnrs: Vec<f64> = results.iter().map(|r| r.sqnr_db).collect();
+        assert!(sqnrs.windows(2).any(|w| (w[0] - w[1]).abs() > 1e-9), "{sqnrs:?}");
+        let seeds: Vec<u64> = results.iter().map(|r| r.seed).collect();
+        assert!(seeds.windows(2).all(|w| w[0] != w[1]));
+    }
+
+    #[test]
+    fn tight_spec_fails_loose_spec_passes() {
+        let results = sweep_dies(&MacroParams::default(), CbMode::On, 6, &quick_opts(), 6);
+        let tight = YieldSpec { max_inl_lsb: 0.1, min_sqnr_db: 60.0, min_csnr_db: 40.0 };
+        let loose = YieldSpec { max_inl_lsb: 10.0, min_sqnr_db: 0.0, min_csnr_db: 0.0 };
+        assert_eq!(summarize(&results, &tight).yield_fraction, 0.0);
+        assert_eq!(summarize(&results, &loose).yield_fraction, 1.0);
+    }
+
+    #[test]
+    fn hotter_is_noisier() {
+        let pts = temperature_sweep(
+            &MacroParams::default(),
+            CbMode::On,
+            &[250.0, 300.0, 400.0],
+            &quick_opts(),
+        );
+        assert_eq!(pts.len(), 3);
+        assert!(pts[2].1 > pts[0].1, "noise at 400K {} vs 250K {}", pts[2].1, pts[0].1);
+        assert!(pts[2].2 < pts[0].2 + 0.5, "SQNR should not improve when hot");
+    }
+}

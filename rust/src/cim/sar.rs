@@ -1,0 +1,255 @@
+//! Successive-approximation logic over the reconfigured capacitor bank.
+//!
+//! After the compute phase the top plate holds the MAC level; the SAR
+//! controller then drives D_DAC[b] for b = MSB..LSB through the *same*
+//! capacitor bank (reconfiguration) and asks the comparator whether the
+//! residual is positive. In CB mode the last `mv_last_bits` decisions are
+//! each repeated `mv_votes` times and majority-voted.
+//!
+//! The D_DAC/reset sharing of the 10T cell (Fig. 3) is modeled by
+//! `reset()` driving the same node: behaviorally, a conversion always
+//! starts from a cleanly reset bank, and the shared node imposes *no*
+//! extra cell switches — which is why the cell stays at 10T. The cost
+//! shows up only in the energy model (shared driver), not in the transfer
+//! function.
+
+use crate::util::rng::Rng;
+
+use super::capacitor::CapacitorBank;
+use super::comparator::Comparator;
+use super::params::{CbMode, MacroParams};
+
+/// Result of one A/D conversion.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Conversion {
+    /// Output code in [0, 2^bits).
+    pub code: u32,
+    /// Comparator decisions actually performed (energy/latency driver).
+    pub comparisons: u32,
+}
+
+/// SAR controller bound to a column's bank and comparator.
+pub struct SarAdc<'a> {
+    pub bank: &'a CapacitorBank,
+    pub cmp: &'a Comparator,
+    pub bits: u32,
+    pub mv_votes: usize,
+    pub mv_last_bits: usize,
+    /// Noise scale of the early (MSB-side) comparisons (see
+    /// `MacroParams::sigma_cmp_early_factor`).
+    pub early_factor: f64,
+}
+
+impl<'a> SarAdc<'a> {
+    pub fn new(params: &MacroParams, bank: &'a CapacitorBank, cmp: &'a Comparator) -> Self {
+        SarAdc {
+            bank,
+            cmp,
+            bits: params.adc_bits,
+            mv_votes: params.mv_votes,
+            mv_last_bits: params.mv_last_bits,
+            early_factor: params.sigma_cmp_early_factor,
+        }
+    }
+
+    /// Convert a sampled (normalized, [0,1]) top-plate level to a code.
+    ///
+    /// `level` already contains the signal plus any sampled noise (kT/C);
+    /// comparator noise is drawn fresh inside each decision. The
+    /// comparator sees the residual in *LSB* units — CR-CIM's key property
+    /// is that one LSB here is the full V_FS/2^bits, with no attenuation.
+    pub fn convert(&self, level: f64, mode: CbMode, rng: &mut Rng) -> Conversion {
+        let n_levels = 1u32 << self.bits;
+        let lsb = 1.0 / n_levels as f64;
+        let mut code: u32 = 0;
+        let mut comparisons = 0u32;
+        // Incremental DAC level (§Perf): ℓ(code | bit) = ℓ(code) + w_bit,
+        // so each SAR step is O(1) instead of re-summing all set bits.
+        let mut level_code = self.bank.dac_level(0);
+        for step in 0..self.bits {
+            let bit = self.bits - 1 - step; // MSB first
+            let trial_level = level_code + self.bank.group_weight(bit);
+            // Residual at the comparator input, in LSB, including the
+            // converter's half-LSB offset (standard SAR practice): code k
+            // covers [k−½, k+½) LSB, so a MAC count of k lands mid-bin —
+            // maximally far from both transitions. Without this offset a
+            // count would sit exactly on a code transition, where the
+            // final comparison is a coin flip that no amount of majority
+            // voting can fix.
+            let delta_lsb = (level - trial_level) / lsb + 0.5;
+            let late = (bit as usize) < self.mv_last_bits;
+            let boosted = mode == CbMode::On && late;
+            let up = if boosted {
+                comparisons += self.mv_votes as u32;
+                self.cmp.decide_mv(delta_lsb, self.mv_votes, rng)
+            } else {
+                comparisons += 1;
+                let scale = if late { 1.0 } else { self.early_factor };
+                self.cmp.decide_scaled(delta_lsb, scale, rng)
+            };
+            if up {
+                code |= 1 << bit;
+                level_code = trial_level;
+            }
+        }
+        Conversion { code, comparisons }
+    }
+
+    /// Noise-free, comparator-ideal conversion (quantization + bank
+    /// mismatch only). Used to separate static nonlinearity from noise in
+    /// the characterization benches.
+    pub fn convert_ideal_comparator(&self, level: f64) -> u32 {
+        let lsb = 1.0 / (1u64 << self.bits) as f64;
+        let mut code: u32 = 0;
+        for step in 0..self.bits {
+            let bit = self.bits - 1 - step;
+            let trial = code | (1 << bit);
+            if level - self.bank.dac_level(trial) + 0.5 * lsb >= 0.0 {
+                code = trial;
+            }
+        }
+        code
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::assert_prop;
+    use crate::util::stats::Moments;
+
+    fn ideal_setup(bits: u32) -> (CapacitorBank, Comparator) {
+        (CapacitorBank::ideal(bits), Comparator::new(0.0, 0.0))
+    }
+
+    fn params_for(bits: u32) -> MacroParams {
+        let mut p = MacroParams::default();
+        p.adc_bits = bits;
+        p.active_rows = 1 << bits;
+        p.rows = p.active_rows;
+        p
+    }
+
+    #[test]
+    fn ideal_conversion_recovers_exact_codes() {
+        let p = params_for(10);
+        let (bank, cmp) = ideal_setup(10);
+        let adc = SarAdc::new(&p, &bank, &cmp);
+        let mut rng = Rng::new(1);
+        for &code in &[0u32, 1, 2, 3, 511, 512, 513, 1000, 1023] {
+            // A level exactly at code/1024 quantizes to code (truncating
+            // converter, ≥ comparator semantics).
+            let level = code as f64 / 1024.0;
+            let conv = adc.convert(level, CbMode::Off, &mut rng);
+            assert_eq!(conv.code, code, "level for code {code}");
+            assert_eq!(conv.comparisons, 10);
+        }
+    }
+
+    #[test]
+    fn cb_mode_counts_25_comparisons_at_10_bits() {
+        let p = params_for(10);
+        let (bank, cmp) = ideal_setup(10);
+        let adc = SarAdc::new(&p, &bank, &cmp);
+        let mut rng = Rng::new(2);
+        let conv = adc.convert(0.5, CbMode::On, &mut rng);
+        assert_eq!(conv.comparisons, 7 + 3 * 6);
+    }
+
+    #[test]
+    fn converter_rounds_to_nearest_code() {
+        let p = params_for(8);
+        let (bank, cmp) = ideal_setup(8);
+        let adc = SarAdc::new(&p, &bank, &cmp);
+        let mut rng = Rng::new(3);
+        // Code k covers [k−½, k+½) LSB: anywhere inside the bin reads k.
+        let lsb = 1.0 / 256.0;
+        for frac in [-0.49, -0.25, 0.0, 0.25, 0.49] {
+            let code = adc.convert((100.0 + frac) * lsb, CbMode::Off, &mut rng).code;
+            assert_eq!(code, 100, "frac={frac}");
+        }
+        assert_eq!(adc.convert(100.51 * lsb, CbMode::Off, &mut rng).code, 101);
+        assert_eq!(adc.convert(99.49 * lsb, CbMode::Off, &mut rng).code, 99);
+    }
+
+    #[test]
+    fn noise_spreads_codes_and_cb_tightens_them() {
+        let p = params_for(10);
+        let bank = CapacitorBank::ideal(10);
+        let cmp = Comparator::new(1.1, 0.0);
+        let adc = SarAdc::new(&p, &bank, &cmp);
+        let mut rng = Rng::new(4);
+        let level = 0.5 + 0.3 / 1024.0; // mid-scale, off-center
+        let spread = |mode: CbMode, rng: &mut Rng| {
+            let mut m = Moments::new();
+            for _ in 0..3000 {
+                m.push(adc.convert(level, mode, rng).code as f64);
+            }
+            m.std()
+        };
+        let s_off = spread(CbMode::Off, &mut rng);
+        let s_on = spread(CbMode::On, &mut rng);
+        assert!(s_off > 0.5, "noise should spread codes: {s_off}");
+        assert!(
+            s_on < s_off * 0.85,
+            "CB must tighten read noise: off={s_off} on={s_on}"
+        );
+    }
+
+    #[test]
+    fn ideal_comparator_path_matches_noiseless_convert() {
+        let p = params_for(9);
+        let (bank, cmp) = ideal_setup(9);
+        let adc = SarAdc::new(&p, &bank, &cmp);
+        let mut rng = Rng::new(5);
+        for i in 0..200 {
+            let level = i as f64 / 200.0;
+            assert_eq!(
+                adc.convert(level, CbMode::Off, &mut rng).code,
+                adc.convert_ideal_comparator(level)
+            );
+        }
+    }
+
+    #[test]
+    fn prop_conversion_error_bounded_without_noise() {
+        assert_prop("sar-quantization-error", 60, |g| {
+            let bits = g.usize(4, 10) as u32;
+            let p = params_for(bits);
+            let bank = CapacitorBank::ideal(bits);
+            let cmp = Comparator::new(0.0, 0.0);
+            let adc = SarAdc::new(&p, &bank, &cmp);
+            let mut rng = Rng::new(g.rng.next_u64());
+            let level = g.f64(0.0, 0.999);
+            let code = adc.convert(level, CbMode::Off, &mut rng).code as f64;
+            let n = (1u32 << bits) as f64;
+            // Rounding converter: code = round(level·n), so the residual
+            // level·n − code lies in [−½, ½].
+            let resid = level * n - code;
+            if !(-0.5 - 1e-9..=0.5 + 1e-9).contains(&resid) {
+                return Err(format!("bits={bits} level={level} code={code} resid={resid}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_codes_monotone_in_level_without_noise() {
+        assert_prop("sar-monotone", 40, |g| {
+            let bits = 8u32;
+            let p = params_for(bits);
+            let bank = CapacitorBank::ideal(bits);
+            let cmp = Comparator::new(0.0, 0.0);
+            let adc = SarAdc::new(&p, &bank, &cmp);
+            let a = g.f64(0.0, 1.0);
+            let b = g.f64(0.0, 1.0);
+            let (lo, hi) = if a <= b { (a, b) } else { (b, a) };
+            let c_lo = adc.convert_ideal_comparator(lo);
+            let c_hi = adc.convert_ideal_comparator(hi);
+            if c_lo > c_hi {
+                return Err(format!("monotonicity violated: {lo}->{c_lo}, {hi}->{c_hi}"));
+            }
+            Ok(())
+        });
+    }
+}

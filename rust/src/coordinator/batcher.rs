@@ -1,0 +1,159 @@
+//! Dynamic batcher: groups incoming inference requests into macro-friendly
+//! batches (the AOT artifacts are compiled at fixed batch sizes, so the
+//! batcher packs to the largest compiled size, padding the tail).
+//!
+//! Policy: close a batch when (a) it reaches `max_batch`, or (b) the
+//! oldest request has waited `max_wait`, mirroring a vLLM-style
+//! time/size-bounded batching window.
+
+use std::time::{Duration, Instant};
+
+/// One queued request.
+#[derive(Clone, Debug)]
+pub struct Request<T> {
+    pub id: u64,
+    pub payload: T,
+    pub arrived: Instant,
+}
+
+/// A closed batch ready for execution.
+#[derive(Debug)]
+pub struct Batch<T> {
+    pub requests: Vec<Request<T>>,
+    /// Padded execution size (one of the compiled batch sizes).
+    pub exec_size: usize,
+}
+
+impl<T> Batch<T> {
+    pub fn occupancy(&self) -> f64 {
+        self.requests.len() as f64 / self.exec_size as f64
+    }
+}
+
+/// Batch-forming policy over compiled batch sizes.
+#[derive(Clone, Debug)]
+pub struct Batcher {
+    /// Compiled batch sizes, ascending (e.g. [1, 16]).
+    pub sizes: Vec<usize>,
+    pub max_wait: Duration,
+    queue: Vec<u64>, // placeholder to keep the struct Send-friendly
+}
+
+impl Batcher {
+    pub fn new(mut sizes: Vec<usize>, max_wait: Duration) -> Self {
+        assert!(!sizes.is_empty(), "need at least one compiled batch size");
+        sizes.sort_unstable();
+        Batcher { sizes, max_wait, queue: Vec::new() }
+    }
+
+    pub fn max_batch(&self) -> usize {
+        *self.sizes.last().unwrap()
+    }
+
+    /// Smallest compiled size that fits `n` requests (or the max size).
+    pub fn exec_size_for(&self, n: usize) -> usize {
+        for &s in &self.sizes {
+            if s >= n {
+                return s;
+            }
+        }
+        self.max_batch()
+    }
+
+    /// Decide whether to close a batch now given the queue state.
+    /// Returns how many requests to take (0 = keep waiting).
+    pub fn decide(&self, queued: usize, oldest_wait: Option<Duration>) -> usize {
+        if queued == 0 {
+            return 0;
+        }
+        if queued >= self.max_batch() {
+            return self.max_batch();
+        }
+        match oldest_wait {
+            Some(w) if w >= self.max_wait => queued,
+            _ => 0,
+        }
+    }
+
+    /// Form a batch from `pending` (drains up to the decision count).
+    pub fn form_batch<T>(&self, pending: &mut Vec<Request<T>>, now: Instant) -> Option<Batch<T>> {
+        let oldest_wait = pending.first().map(|r| now.duration_since(r.arrived));
+        let take = self.decide(pending.len(), oldest_wait);
+        if take == 0 {
+            return None;
+        }
+        let requests: Vec<Request<T>> = pending.drain(..take).collect();
+        let exec_size = self.exec_size_for(requests.len());
+        Some(Batch { requests, exec_size })
+    }
+
+    #[allow(dead_code)]
+    fn _unused(&self) -> usize {
+        self.queue.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn reqs(n: usize, age: Duration) -> Vec<Request<u32>> {
+        let now = Instant::now();
+        (0..n)
+            .map(|i| Request { id: i as u64, payload: i as u32, arrived: now - age })
+            .collect()
+    }
+
+    #[test]
+    fn full_batch_closes_immediately() {
+        let b = Batcher::new(vec![1, 16], Duration::from_millis(5));
+        assert_eq!(b.decide(16, Some(Duration::ZERO)), 16);
+        assert_eq!(b.decide(20, Some(Duration::ZERO)), 16);
+    }
+
+    #[test]
+    fn partial_batch_waits_until_deadline() {
+        let b = Batcher::new(vec![1, 16], Duration::from_millis(5));
+        assert_eq!(b.decide(3, Some(Duration::from_millis(1))), 0);
+        assert_eq!(b.decide(3, Some(Duration::from_millis(6))), 3);
+        assert_eq!(b.decide(0, None), 0);
+    }
+
+    #[test]
+    fn exec_size_picks_smallest_fitting() {
+        let b = Batcher::new(vec![1, 4, 16], Duration::from_millis(5));
+        assert_eq!(b.exec_size_for(1), 1);
+        assert_eq!(b.exec_size_for(2), 4);
+        assert_eq!(b.exec_size_for(5), 16);
+        assert_eq!(b.exec_size_for(40), 16);
+    }
+
+    #[test]
+    fn form_batch_drains_and_pads() {
+        let b = Batcher::new(vec![1, 16], Duration::from_millis(5));
+        let mut pending = reqs(3, Duration::from_millis(10));
+        let batch = b.form_batch(&mut pending, Instant::now()).unwrap();
+        assert_eq!(batch.requests.len(), 3);
+        assert_eq!(batch.exec_size, 16);
+        assert!((batch.occupancy() - 3.0 / 16.0).abs() < 1e-12);
+        assert!(pending.is_empty());
+    }
+
+    #[test]
+    fn form_batch_returns_none_when_waiting() {
+        let b = Batcher::new(vec![16], Duration::from_secs(10));
+        let mut pending = reqs(2, Duration::ZERO);
+        assert!(b.form_batch(&mut pending, Instant::now()).is_none());
+        assert_eq!(pending.len(), 2);
+    }
+
+    #[test]
+    fn fifo_order_preserved() {
+        let b = Batcher::new(vec![2], Duration::ZERO);
+        let mut pending = reqs(5, Duration::from_millis(1));
+        let batch = b.form_batch(&mut pending, Instant::now()).unwrap();
+        assert_eq!(batch.requests[0].id, 0);
+        assert_eq!(batch.requests[1].id, 1);
+        assert_eq!(pending[0].id, 2);
+    }
+}

@@ -1,0 +1,152 @@
+//! Power/latency/energy ledger: the coordinator's accounting of what the
+//! macro spent, per inference and cumulatively. Drives the serving
+//! metrics report (J/inference, inferences/s, effective TOPS/W) of the
+//! end-to-end example and the Fig. 4/6 ablation benches.
+
+use std::time::Duration;
+
+use crate::coordinator::sac::PlanCost;
+use crate::util::json::Json;
+use crate::util::stats::Moments;
+
+/// Running serving statistics.
+#[derive(Clone, Debug, Default)]
+pub struct Ledger {
+    inferences: u64,
+    requests: u64,
+    batches: u64,
+    macro_energy_pj: f64,
+    macro_latency_ns: f64,
+    host_latency: Moments,
+    occupancy: Moments,
+    conversions: u64,
+    ops_1b: f64,
+}
+
+impl Ledger {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record one executed batch: the modeled macro cost (from the SAC
+    /// plan evaluation) plus the measured host-side wall time.
+    pub fn record_batch(
+        &mut self,
+        requests: usize,
+        exec_size: usize,
+        cost_per_inference: &PlanCost,
+        host_wall: Duration,
+    ) {
+        self.batches += 1;
+        self.requests += requests as u64;
+        self.inferences += exec_size as u64;
+        self.macro_energy_pj += cost_per_inference.total.energy_pj * exec_size as f64;
+        self.macro_latency_ns += cost_per_inference.total.latency_ns;
+        self.conversions += cost_per_inference.total.conversions * exec_size as u64;
+        self.ops_1b += cost_per_inference.total.ops_1b * exec_size as f64;
+        self.host_latency.push(host_wall.as_secs_f64() * 1e6); // µs
+        self.occupancy.push(requests as f64 / exec_size.max(1) as f64);
+    }
+
+    pub fn inferences(&self) -> u64 {
+        self.inferences
+    }
+
+    pub fn requests(&self) -> u64 {
+        self.requests
+    }
+
+    /// Modeled macro energy per useful request [µJ].
+    pub fn energy_per_request_uj(&self) -> f64 {
+        if self.requests == 0 {
+            return 0.0;
+        }
+        self.macro_energy_pj * 1e-6 / self.requests as f64
+    }
+
+    /// Effective 1b-normalized TOPS/W of the macro over the session.
+    pub fn effective_tops_per_watt(&self) -> f64 {
+        if self.macro_energy_pj <= 0.0 {
+            return 0.0;
+        }
+        self.ops_1b / (self.macro_energy_pj * 1e-12) / 1e12
+    }
+
+    pub fn mean_occupancy(&self) -> f64 {
+        self.occupancy.mean()
+    }
+
+    pub fn mean_host_latency_us(&self) -> f64 {
+        self.host_latency.mean()
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("requests", Json::num(self.requests as f64));
+        o.set("inferences", Json::num(self.inferences as f64));
+        o.set("batches", Json::num(self.batches as f64));
+        o.set("conversions", Json::num(self.conversions as f64));
+        o.set("macro_energy_uj", Json::num(self.macro_energy_pj * 1e-6));
+        o.set("energy_per_request_uj", Json::num(self.energy_per_request_uj()));
+        o.set("effective_tops_per_watt", Json::num(self.effective_tops_per_watt()));
+        o.set("mean_host_latency_us", Json::num(self.mean_host_latency_us()));
+        o.set("mean_occupancy", Json::num(self.mean_occupancy()));
+        Json::Obj(o)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cim::params::MacroParams;
+    use crate::coordinator::sac::evaluate_plan;
+    use crate::coordinator::scheduler::Scheduler;
+    use crate::vit::plan::PrecisionPlan;
+    use crate::vit::VitConfig;
+
+    fn one_cost() -> PlanCost {
+        let sched = Scheduler::new(&MacroParams::default());
+        evaluate_plan(&sched, &VitConfig::default(), 1, &PrecisionPlan::paper_sac())
+    }
+
+    #[test]
+    fn accounting_adds_up() {
+        let cost = one_cost();
+        let mut l = Ledger::new();
+        l.record_batch(3, 4, &cost, Duration::from_micros(500));
+        l.record_batch(4, 4, &cost, Duration::from_micros(700));
+        assert_eq!(l.requests(), 7);
+        assert_eq!(l.inferences(), 8);
+        // Energy per *request* exceeds per-inference cost because padding
+        // is wasted work.
+        let per_req = l.energy_per_request_uj();
+        assert!(per_req > cost.energy_uj, "{per_req} vs {}", cost.energy_uj);
+        assert!((l.mean_occupancy() - (0.75 + 1.0) / 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn effective_tops_per_watt_matches_plan() {
+        let cost = one_cost();
+        let mut l = Ledger::new();
+        l.record_batch(4, 4, &cost, Duration::from_micros(100));
+        let got = l.effective_tops_per_watt();
+        assert!((got - cost.tops_per_watt_effective).abs() / got < 1e-9);
+    }
+
+    #[test]
+    fn empty_ledger_is_zeroes() {
+        let l = Ledger::new();
+        assert_eq!(l.energy_per_request_uj(), 0.0);
+        assert_eq!(l.effective_tops_per_watt(), 0.0);
+    }
+
+    #[test]
+    fn json_report_has_fields() {
+        let mut l = Ledger::new();
+        l.record_batch(1, 1, &one_cost(), Duration::from_micros(10));
+        let j = l.to_json();
+        for key in ["requests", "energy_per_request_uj", "effective_tops_per_watt"] {
+            assert!(j.get_path(key).is_some(), "{key}");
+        }
+    }
+}

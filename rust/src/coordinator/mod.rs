@@ -1,0 +1,20 @@
+//! L3 coordinator: the paper's system layer.
+//!
+//! - [`scheduler`] — tiles linear layers onto the 1088×78 macro
+//! - [`sac`]       — the software-analog co-design policy engine: per-layer
+//!                   CB/bit-width selection, circuit↔graph noise bridge,
+//!                   plan cost evaluation (Fig. 4's 2.1×, Fig. 6 ablation)
+//! - [`batcher`]   — time/size-bounded dynamic batching over the compiled
+//!                   batch sizes
+//! - [`ledger`]    — energy/latency/occupancy accounting
+//! - [`server`]    — std-TCP line-JSON inference service (request path)
+
+pub mod batcher;
+pub mod ledger;
+pub mod router;
+pub mod sac;
+pub mod scheduler;
+pub mod server;
+
+pub use sac::{NoiseCalibration, PlanCost};
+pub use scheduler::{Scheduler, TilePlan};

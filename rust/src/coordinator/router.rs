@@ -1,0 +1,195 @@
+//! Multi-macro router: a deployment packages several CR-CIM macros
+//! behind one coordinator (the chip photo's macro is the unit cell of a
+//! bigger accelerator). The router places each layer's column tiles on
+//! macros, balancing load so the bit-serial pipelines of all macros
+//! finish together, and models weight residency so repeated inferences
+//! don't pay reload cost.
+//!
+//! Placement policy: longest-processing-time (LPT) greedy over per-tile
+//! latency — optimal within 4/3 for makespan, fine for this tile
+//! granularity.
+
+use crate::cim::params::MacroParams;
+use crate::vit::plan::PrecisionPlan;
+use crate::vit::{linear_workload, VitConfig};
+
+use super::scheduler::Scheduler;
+
+/// One placed tile.
+#[derive(Clone, Debug)]
+pub struct Placement {
+    pub layer_index: usize,
+    pub col_tile: u64,
+    pub macro_id: usize,
+    pub latency_ns: f64,
+    pub energy_pj: f64,
+}
+
+/// Routing result for one inference pass.
+#[derive(Clone, Debug)]
+pub struct RoutePlan {
+    pub placements: Vec<Placement>,
+    /// Per-macro busy time [ns].
+    pub macro_busy_ns: Vec<f64>,
+    /// Critical-path (makespan) latency [ns].
+    pub makespan_ns: f64,
+    /// Total energy [pJ].
+    pub energy_pj: f64,
+    /// Weight SRAM bits resident per macro (capacity check).
+    pub resident_bits: Vec<u64>,
+}
+
+impl RoutePlan {
+    /// Load imbalance: max/mean busy time (1.0 = perfect).
+    pub fn imbalance(&self) -> f64 {
+        let max = self.macro_busy_ns.iter().cloned().fold(0.0f64, f64::max);
+        let mean =
+            self.macro_busy_ns.iter().sum::<f64>() / self.macro_busy_ns.len().max(1) as f64;
+        if mean == 0.0 {
+            1.0
+        } else {
+            max / mean
+        }
+    }
+}
+
+/// The router.
+pub struct Router {
+    pub sched: Scheduler,
+    pub num_macros: usize,
+    /// Weight SRAM capacity per macro [bits].
+    pub sram_bits_per_macro: u64,
+}
+
+impl Router {
+    pub fn new(params: &MacroParams, num_macros: usize) -> Self {
+        let sram_bits = (params.rows * params.cols) as u64;
+        Router { sched: Scheduler::new(params), num_macros, sram_bits_per_macro: sram_bits }
+    }
+
+    /// Route one full ViT inference under a precision plan.
+    pub fn route(&self, cfg: &VitConfig, batch: usize, plan: &PrecisionPlan) -> RoutePlan {
+        // Decompose every layer into column tiles (the unit of placement:
+        // a column tile keeps its weights loaded while the m vectors
+        // stream through bit-serially).
+        struct TileJob {
+            layer_index: usize,
+            col_tile: u64,
+            latency_ns: f64,
+            energy_pj: f64,
+            weight_bits: u64,
+        }
+        let mut jobs: Vec<TileJob> = Vec::new();
+        for (layer_index, shape) in linear_workload(cfg, batch).iter().enumerate() {
+            let op = plan.point(shape.class);
+            let tiles = self.sched.col_tiles(shape.n, op.w_bits).max(1);
+            let full = self.sched.plan_linear(shape, op);
+            for col_tile in 0..tiles {
+                jobs.push(TileJob {
+                    layer_index,
+                    col_tile,
+                    latency_ns: full.latency_ns / tiles as f64,
+                    energy_pj: full.energy_pj / tiles as f64,
+                    weight_bits: (shape.k as u64)
+                        * (self.sched.params.cols as u64).min(shape.n as u64 * op.w_bits as u64),
+                });
+            }
+        }
+        // LPT greedy: longest job to the least-loaded macro.
+        jobs.sort_by(|a, b| b.latency_ns.partial_cmp(&a.latency_ns).unwrap());
+        let mut busy = vec![0.0f64; self.num_macros];
+        let mut resident = vec![0u64; self.num_macros];
+        let mut placements = Vec::with_capacity(jobs.len());
+        let mut energy = 0.0;
+        for job in jobs {
+            let (mid, _) = busy
+                .iter()
+                .enumerate()
+                .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .unwrap();
+            busy[mid] += job.latency_ns;
+            resident[mid] += job.weight_bits;
+            energy += job.energy_pj;
+            placements.push(Placement {
+                layer_index: job.layer_index,
+                col_tile: job.col_tile,
+                macro_id: mid,
+                latency_ns: job.latency_ns,
+                energy_pj: job.energy_pj,
+            });
+        }
+        let makespan = busy.iter().cloned().fold(0.0f64, f64::max);
+        RoutePlan {
+            placements,
+            macro_busy_ns: busy,
+            makespan_ns: makespan,
+            energy_pj: energy,
+            resident_bits: resident,
+        }
+    }
+
+    /// Does the routing fit in weight SRAM without per-inference reloads?
+    pub fn fits_resident(&self, plan: &RoutePlan) -> bool {
+        plan.resident_bits.iter().all(|&b| b <= self.sram_bits_per_macro)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cim::params::MacroParams;
+
+    fn router(n: usize) -> Router {
+        Router::new(&MacroParams::default(), n)
+    }
+
+    #[test]
+    fn all_tiles_get_placed_once() {
+        let r = router(4);
+        let cfg = VitConfig::default();
+        let plan = r.route(&cfg, 1, &PrecisionPlan::paper_sac());
+        assert!(!plan.placements.is_empty());
+        // Energy equals the single-macro scheduler total (work conserved).
+        let sched_total: f64 = linear_workload(&cfg, 1)
+            .iter()
+            .map(|s| r.sched.plan_linear(s, PrecisionPlan::paper_sac().point(s.class)).energy_pj)
+            .sum();
+        assert!((plan.energy_pj - sched_total).abs() / sched_total < 1e-9);
+    }
+
+    #[test]
+    fn more_macros_shrink_makespan() {
+        let cfg = VitConfig::vit_small();
+        let m1 = router(1).route(&cfg, 1, &PrecisionPlan::paper_sac()).makespan_ns;
+        let m4 = router(4).route(&cfg, 1, &PrecisionPlan::paper_sac()).makespan_ns;
+        let m8 = router(8).route(&cfg, 1, &PrecisionPlan::paper_sac()).makespan_ns;
+        assert!(m4 < m1 * 0.5, "4 macros: {m4} vs {m1}");
+        assert!(m8 <= m4);
+    }
+
+    #[test]
+    fn load_is_balanced() {
+        let r = router(6);
+        let plan = r.route(&VitConfig::vit_small(), 1, &PrecisionPlan::paper_sac());
+        assert!(plan.imbalance() < 1.35, "imbalance {}", plan.imbalance());
+    }
+
+    #[test]
+    fn residency_accounting_scales_with_macros() {
+        let cfg = VitConfig::vit_small();
+        let p2 = router(2).route(&cfg, 1, &PrecisionPlan::paper_sac());
+        let p8 = router(8).route(&cfg, 1, &PrecisionPlan::paper_sac());
+        let max2 = p2.resident_bits.iter().max().unwrap();
+        let max8 = p8.resident_bits.iter().max().unwrap();
+        assert!(max8 < max2, "residency per macro should drop: {max2} -> {max8}");
+    }
+
+    #[test]
+    fn single_macro_route_matches_scheduler_latency_scale() {
+        let r = router(1);
+        let cfg = VitConfig::default();
+        let plan = r.route(&cfg, 1, &PrecisionPlan::paper_sac());
+        assert!((plan.makespan_ns - plan.macro_busy_ns[0]).abs() < 1e-9);
+        assert_eq!(plan.macro_busy_ns.len(), 1);
+    }
+}

@@ -1,0 +1,180 @@
+//! Tile scheduler: maps linear-layer workloads onto the 1088×78 macro.
+//!
+//! A linear layer (m × k) · (k × n) at (a_bits, w_bits) decomposes into
+//! hardware tiles:
+//!   - row tiles: ⌈k / 1024⌉ compute phases per output,
+//!   - column tiles: n·w_bits physical columns, ⌈n·w_bits / 78⌉ loads,
+//!   - m activation vectors, each a_bits bit-serial cycles.
+//!
+//! Weight reloads are SRAM writes (cheap, amortized over m); conversions
+//! dominate energy/latency. The scheduler produces a [`TilePlan`] with the
+//! exact conversion count, energy and latency the macro would spend,
+//! using the same `EnergyModel` the characterization benches use.
+
+use crate::cim::energy::EnergyModel;
+use crate::cim::params::MacroParams;
+#[cfg(test)]
+use crate::cim::params::CbMode;
+use crate::vit::plan::OperatingPoint;
+use crate::vit::LinearShape;
+
+/// Cost of running one linear layer on the macro.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct TilePlan {
+    /// Column-tile loads (weight reprogramming events).
+    pub weight_loads: u64,
+    /// Total ADC conversions.
+    pub conversions: u64,
+    /// Conversion energy [pJ].
+    pub energy_pj: f64,
+    /// Serial latency [ns] assuming all 78 columns convert in parallel
+    /// and column tiles are processed sequentially per vector.
+    pub latency_ns: f64,
+    /// 1b-normalized op count (for TOPS-effective reporting).
+    pub ops_1b: f64,
+}
+
+impl TilePlan {
+    pub fn add(&mut self, other: &TilePlan) {
+        self.weight_loads += other.weight_loads;
+        self.conversions += other.conversions;
+        self.energy_pj += other.energy_pj;
+        self.latency_ns += other.latency_ns;
+        self.ops_1b += other.ops_1b;
+    }
+}
+
+/// The scheduler: stateless; all methods derive from macro parameters.
+#[derive(Clone, Debug)]
+pub struct Scheduler {
+    pub params: MacroParams,
+    energy: EnergyModel,
+}
+
+impl Scheduler {
+    pub fn new(params: &MacroParams) -> Self {
+        Scheduler { params: params.clone(), energy: EnergyModel::cr_cim(params) }
+    }
+
+    /// Row tiles needed for a reduction dimension `k`.
+    pub fn row_tiles(&self, k: usize) -> u64 {
+        (k as u64).div_ceil(self.params.active_rows as u64)
+    }
+
+    /// Column tiles for `n` outputs at `w_bits` weight planes.
+    pub fn col_tiles(&self, n: usize, w_bits: u32) -> u64 {
+        (n as u64 * w_bits as u64).div_ceil(self.params.cols as u64)
+    }
+
+    /// Plan one linear layer at an operating point.
+    pub fn plan_linear(&self, shape: &LinearShape, op: OperatingPoint) -> TilePlan {
+        let rt = self.row_tiles(shape.k);
+        let ct = self.col_tiles(shape.n, op.w_bits);
+        // Conversions: every (row tile, column, activation bit, vector).
+        // All 78 columns of a column tile convert in parallel but each is
+        // one ADC conversion for energy purposes.
+        let cols_used = (shape.n as u64 * op.w_bits as u64).min(ct * self.params.cols as u64);
+        let conversions = rt * cols_used * op.a_bits as u64 * shape.m as u64;
+        // Latency: serial over (row tiles × column tiles × a_bits) cycles
+        // per vector; vectors stream (one conversion cycle each, weights
+        // stay loaded while m streams).
+        let cycles = rt * ct * op.a_bits as u64 * shape.m as u64;
+        let t_cycle = self.params.conversion_latency_ns(op.cb);
+        let e_conv = self.energy.conversion_energy_pj(op.cb);
+        TilePlan {
+            weight_loads: rt * ct,
+            conversions,
+            energy_pj: e_conv * conversions as f64,
+            latency_ns: t_cycle * cycles as f64,
+            ops_1b: 2.0
+                * shape.k as f64
+                * shape.n as f64
+                * shape.m as f64
+                * op.a_bits as f64
+                * op.w_bits as f64,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cim::netstats::LayerClass;
+    use crate::util::prop::assert_prop;
+    use crate::vit::plan::PrecisionPlan;
+
+    fn shape(k: usize, n: usize, m: usize) -> LinearShape {
+        LinearShape { class: LayerClass::TransformerMlp, k, n, m }
+    }
+
+    #[test]
+    fn tile_counts() {
+        let s = Scheduler::new(&MacroParams::default());
+        assert_eq!(s.row_tiles(96), 1);
+        assert_eq!(s.row_tiles(1024), 1);
+        assert_eq!(s.row_tiles(1025), 2);
+        assert_eq!(s.col_tiles(13, 6), 1); // 78 planes exactly
+        assert_eq!(s.col_tiles(14, 6), 2);
+        assert_eq!(s.col_tiles(10, 4), 1);
+    }
+
+    #[test]
+    fn conversions_scale_with_everything() {
+        let s = Scheduler::new(&MacroParams::default());
+        let op = PrecisionPlan::paper_sac().mlp;
+        let base = s.plan_linear(&shape(96, 13, 10), op);
+        // 1 row tile × 78 cols × 6 abits × 10 vectors.
+        assert_eq!(base.conversions, 78 * 6 * 10);
+        let more_m = s.plan_linear(&shape(96, 13, 20), op);
+        assert_eq!(more_m.conversions, 2 * base.conversions);
+        let more_k = s.plan_linear(&shape(2048, 13, 10), op);
+        assert_eq!(more_k.conversions, 2 * base.conversions);
+    }
+
+    #[test]
+    fn cb_on_costs_more_energy_and_time_per_conversion() {
+        let s = Scheduler::new(&MacroParams::default());
+        let sh = shape(96, 13, 10);
+        let on = s.plan_linear(&sh, OperatingPoint { a_bits: 6, w_bits: 6, cb: CbMode::On });
+        let off = s.plan_linear(&sh, OperatingPoint { a_bits: 6, w_bits: 6, cb: CbMode::Off });
+        assert_eq!(on.conversions, off.conversions);
+        let e_ratio = on.energy_pj / off.energy_pj;
+        assert!((e_ratio - 1.9).abs() < 0.2, "CB energy ratio {e_ratio}");
+        assert!(on.latency_ns > off.latency_ns * 1.5);
+    }
+
+    #[test]
+    fn lower_bits_cost_less() {
+        let s = Scheduler::new(&MacroParams::default());
+        let sh = shape(96, 13, 10);
+        let b6 = s.plan_linear(&sh, OperatingPoint { a_bits: 6, w_bits: 6, cb: CbMode::Off });
+        let b4 = s.plan_linear(&sh, OperatingPoint { a_bits: 4, w_bits: 4, cb: CbMode::Off });
+        // 4b: fewer bit-serial cycles AND fewer weight planes.
+        assert!(b4.energy_pj < b6.energy_pj * 0.6);
+        assert!(b4.latency_ns < b6.latency_ns);
+    }
+
+    #[test]
+    fn prop_energy_positive_and_monotone_in_m() {
+        assert_prop("scheduler-monotone", 48, |g| {
+            let s = Scheduler::new(&MacroParams::default());
+            let k = g.usize(1, 4096);
+            let n = g.usize(1, 512);
+            let m = g.usize(1, 64);
+            let op = OperatingPoint {
+                a_bits: g.usize(1, 8) as u32,
+                w_bits: g.usize(1, 8) as u32,
+                cb: if g.bool() { CbMode::On } else { CbMode::Off },
+            };
+            let a = s.plan_linear(&shape(k, n, m), op);
+            let b = s.plan_linear(&shape(k, n, m + 1), op);
+            if a.energy_pj <= 0.0 || a.latency_ns <= 0.0 {
+                return Err(format!("non-positive cost {a:?}"));
+            }
+            if b.conversions <= a.conversions {
+                return Err("conversions must grow with m".into());
+            }
+            Ok(())
+        });
+    }
+}

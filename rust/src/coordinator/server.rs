@@ -1,0 +1,418 @@
+//! Request server: a std-TCP, line-delimited-JSON inference service
+//! (tokio is not in the vendored crate set; blocking I/O + threads).
+//!
+//! Protocol (one JSON object per line):
+//!   → {"id": 1, "image": [3072 floats]}
+//!   ← {"id": 1, "pred": 7, "logits": [...], "queue_us": ..., "batch": 16}
+//!   → {"cmd": "stats"}   ← the ledger report
+//!   → {"cmd": "shutdown"}
+//!
+//! Architecture: acceptor threads push requests into a shared queue; a
+//! single executor thread forms batches (Batcher policy), runs the PJRT
+//! executable, accounts costs in the Ledger, and writes responses back
+//! through per-connection response channels.
+
+use std::collections::HashMap;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::coordinator::batcher::{Batcher, Request};
+use crate::coordinator::ledger::Ledger;
+use crate::coordinator::sac::PlanCost;
+use crate::util::json::{self, Json};
+
+/// A parsed inference request payload.
+#[derive(Clone, Debug)]
+pub struct InferencePayload {
+    pub image: Vec<f32>,
+    pub conn_id: u64,
+    pub client_req_id: f64,
+}
+
+/// Response sender side: per-connection outbox.
+type Outbox = Arc<Mutex<HashMap<u64, Vec<String>>>>;
+
+/// The batch executor abstraction (so tests can run without PJRT).
+/// Deliberately NOT `Send`: PJRT executables are single-threaded, so the
+/// executor loop runs on the thread that calls `serve` while the acceptor
+/// and connection handlers run on spawned threads.
+pub trait BatchExecutor {
+    /// Execute `images` (n × image_floats) and return per-request logits.
+    fn execute(&mut self, images: &[Vec<f32>]) -> Result<Vec<Vec<f32>>, String>;
+    /// Modeled per-inference macro cost for accounting.
+    fn cost(&self) -> &PlanCost;
+    fn num_classes(&self) -> usize;
+}
+
+/// Server configuration.
+pub struct ServerConfig {
+    pub addr: String,
+    pub batch_sizes: Vec<usize>,
+    pub max_wait: Duration,
+}
+
+/// Shared server state.
+pub struct Server {
+    pending: Arc<Mutex<Vec<Request<InferencePayload>>>>,
+    outbox: Outbox,
+    ledger: Arc<Mutex<Ledger>>,
+    shutdown: Arc<AtomicBool>,
+    next_conn: AtomicU64,
+    batcher: Batcher,
+}
+
+impl Server {
+    pub fn new(cfg: &ServerConfig) -> Self {
+        Server {
+            pending: Arc::new(Mutex::new(Vec::new())),
+            outbox: Arc::new(Mutex::new(HashMap::new())),
+            ledger: Arc::new(Mutex::new(Ledger::new())),
+            shutdown: Arc::new(AtomicBool::new(false)),
+            next_conn: AtomicU64::new(1),
+            batcher: Batcher::new(cfg.batch_sizes.clone(), cfg.max_wait),
+        }
+    }
+
+    pub fn ledger_json(&self) -> Json {
+        self.ledger.lock().unwrap().to_json()
+    }
+
+    pub fn is_shutdown(&self) -> bool {
+        self.shutdown.load(Ordering::SeqCst)
+    }
+
+    /// Enqueue a request (used by the connection handler and by tests).
+    pub fn enqueue(&self, payload: InferencePayload) {
+        let id = self.next_conn.fetch_add(1, Ordering::Relaxed);
+        self.pending.lock().unwrap().push(Request {
+            id,
+            payload,
+            arrived: Instant::now(),
+        });
+    }
+
+    /// One executor step: form a batch if policy allows, execute, account,
+    /// and stage responses. Returns the number of requests served.
+    pub fn executor_step(&self, exec: &mut dyn BatchExecutor) -> usize {
+        let batch = {
+            let mut pending = self.pending.lock().unwrap();
+            self.batcher.form_batch(&mut pending, Instant::now())
+        };
+        let Some(batch) = batch else { return 0 };
+        let t0 = Instant::now();
+        let images: Vec<Vec<f32>> = batch.requests.iter().map(|r| r.payload.image.clone()).collect();
+        let served = batch.requests.len();
+        match exec.execute(&images) {
+            Ok(logits) => {
+                let wall = t0.elapsed();
+                self.ledger.lock().unwrap().record_batch(
+                    served,
+                    batch.exec_size,
+                    exec.cost(),
+                    wall,
+                );
+                let nc = exec.num_classes();
+                let mut outbox = self.outbox.lock().unwrap();
+                for (req, lg) in batch.requests.iter().zip(&logits) {
+                    let pred = crate::runtime::client::argmax_rows(lg, nc)[0];
+                    let mut o = Json::obj();
+                    o.set("id", Json::num(req.payload.client_req_id));
+                    o.set("pred", Json::num(pred as f64));
+                    o.set("logits", Json::arr_f64(&lg.iter().map(|&x| x as f64).collect::<Vec<_>>()));
+                    o.set(
+                        "queue_us",
+                        Json::num(t0.duration_since(req.arrived).as_secs_f64() * 1e6),
+                    );
+                    o.set("batch", Json::num(batch.exec_size as f64));
+                    outbox
+                        .entry(req.payload.conn_id)
+                        .or_default()
+                        .push(Json::Obj(o).to_string());
+                }
+            }
+            Err(e) => {
+                let mut outbox = self.outbox.lock().unwrap();
+                for req in &batch.requests {
+                    let mut o = Json::obj();
+                    o.set("id", Json::num(req.payload.client_req_id));
+                    o.set("error", Json::str(&e));
+                    outbox
+                        .entry(req.payload.conn_id)
+                        .or_default()
+                        .push(Json::Obj(o).to_string());
+                }
+            }
+        }
+        served
+    }
+
+    /// Drain staged responses for a connection.
+    pub fn take_responses(&self, conn_id: u64) -> Vec<String> {
+        self.outbox
+            .lock()
+            .unwrap()
+            .get_mut(&conn_id)
+            .map(std::mem::take)
+            .unwrap_or_default()
+    }
+
+    /// Parse one request line. Returns Ok(None) for control commands that
+    /// were handled inline (stats/shutdown get an immediate response).
+    pub fn handle_line(&self, line: &str, conn_id: u64) -> Result<Option<String>, String> {
+        let j = json::parse(line).map_err(|e| format!("bad json: {e}"))?;
+        if let Some(cmd) = j.get_path("cmd").and_then(|c| c.as_str()) {
+            return match cmd {
+                "stats" => Ok(Some(self.ledger_json().to_string())),
+                "shutdown" => {
+                    self.shutdown.store(true, Ordering::SeqCst);
+                    Ok(Some(r#"{"ok": true}"#.to_string()))
+                }
+                other => Err(format!("unknown cmd '{other}'")),
+            };
+        }
+        let image: Vec<f32> = j
+            .get_path("image")
+            .and_then(|x| x.as_arr())
+            .ok_or("missing 'image'")?
+            .iter()
+            .map(|v| v.as_f64().unwrap_or(0.0) as f32)
+            .collect();
+        let client_req_id = j.get_path("id").and_then(|x| x.as_f64()).unwrap_or(0.0);
+        self.enqueue(InferencePayload { image, conn_id, client_req_id });
+        Ok(None)
+    }
+
+    /// Serve until shutdown. The executor loop runs on *this* thread
+    /// (PJRT executables are not Send); the acceptor and per-connection
+    /// handlers run on spawned threads.
+    pub fn serve(
+        self: Arc<Self>,
+        cfg: &ServerConfig,
+        mut exec: Box<dyn BatchExecutor>,
+    ) -> std::io::Result<()> {
+        let listener = TcpListener::bind(&cfg.addr)?;
+        listener.set_nonblocking(true)?;
+        let srv = self.clone();
+        let accept_handle = std::thread::spawn(move || {
+            let mut handles = Vec::new();
+            while !srv.is_shutdown() {
+                match listener.accept() {
+                    Ok((stream, _)) => {
+                        let srv2 = srv.clone();
+                        handles.push(std::thread::spawn(move || srv2.handle_conn(stream)));
+                    }
+                    Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                        std::thread::sleep(Duration::from_millis(2));
+                    }
+                    Err(_) => break,
+                }
+            }
+            for h in handles {
+                h.join().ok();
+            }
+        });
+        // Executor loop on the current thread.
+        while !self.is_shutdown() {
+            if self.executor_step(exec.as_mut()) == 0 {
+                std::thread::sleep(Duration::from_micros(200));
+            }
+        }
+        accept_handle.join().ok();
+        Ok(())
+    }
+
+    fn handle_conn(self: Arc<Self>, stream: TcpStream) {
+        let conn_id = self.next_conn.fetch_add(1_000_000, Ordering::Relaxed);
+        stream.set_read_timeout(Some(Duration::from_millis(5))).ok();
+        let mut writer = match stream.try_clone() {
+            Ok(w) => w,
+            Err(_) => return,
+        };
+        let mut reader = BufReader::new(stream);
+        let mut line = String::new();
+        loop {
+            if self.is_shutdown() {
+                break;
+            }
+            // Flush any staged responses.
+            for resp in self.take_responses(conn_id) {
+                if writeln!(writer, "{resp}").is_err() {
+                    return;
+                }
+            }
+            line.clear();
+            match reader.read_line(&mut line) {
+                Ok(0) => break, // EOF
+                Ok(_) => {
+                    let trimmed = line.trim();
+                    if trimmed.is_empty() {
+                        continue;
+                    }
+                    match self.handle_line(trimmed, conn_id) {
+                        Ok(Some(imm)) => {
+                            if writeln!(writer, "{imm}").is_err() {
+                                return;
+                            }
+                        }
+                        Ok(None) => {}
+                        Err(e) => {
+                            let _ = writeln!(writer, "{{\"error\": \"{e}\"}}");
+                        }
+                    }
+                }
+                Err(ref e)
+                    if e.kind() == std::io::ErrorKind::WouldBlock
+                        || e.kind() == std::io::ErrorKind::TimedOut => {}
+                Err(_) => break,
+            }
+        }
+        // Final flush.
+        for resp in self.take_responses(conn_id) {
+            let _ = writeln!(writer, "{resp}");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cim::params::MacroParams;
+    use crate::coordinator::sac::evaluate_plan;
+    use crate::coordinator::scheduler::Scheduler;
+    use crate::vit::plan::PrecisionPlan;
+    use crate::vit::VitConfig;
+
+    /// Deterministic fake executor: logits[c] = mean(image) + c.
+    struct FakeExec {
+        cost: PlanCost,
+    }
+
+    impl FakeExec {
+        fn new() -> Self {
+            let sched = Scheduler::new(&MacroParams::default());
+            FakeExec {
+                cost: evaluate_plan(&sched, &VitConfig::default(), 1, &PrecisionPlan::paper_sac()),
+            }
+        }
+    }
+
+    impl BatchExecutor for FakeExec {
+        fn execute(&mut self, images: &[Vec<f32>]) -> Result<Vec<Vec<f32>>, String> {
+            Ok(images
+                .iter()
+                .map(|img| {
+                    let m: f32 = img.iter().sum::<f32>() / img.len().max(1) as f32;
+                    (0..10).map(|c| m + c as f32).collect()
+                })
+                .collect())
+        }
+        fn cost(&self) -> &PlanCost {
+            &self.cost
+        }
+        fn num_classes(&self) -> usize {
+            10
+        }
+    }
+
+    fn test_server() -> Server {
+        Server::new(&ServerConfig {
+            addr: "unused".into(),
+            batch_sizes: vec![1, 4],
+            max_wait: Duration::from_millis(1),
+        })
+    }
+
+    #[test]
+    fn enqueue_and_execute_roundtrip() {
+        let srv = test_server();
+        let mut exec = FakeExec::new();
+        srv.handle_line(r#"{"id": 42, "image": [1.0, 2.0, 3.0]}"#, 7).unwrap();
+        std::thread::sleep(Duration::from_millis(3));
+        let served = srv.executor_step(&mut exec);
+        assert_eq!(served, 1);
+        let resps = srv.take_responses(7);
+        assert_eq!(resps.len(), 1);
+        let j = json::parse(&resps[0]).unwrap();
+        assert_eq!(j.get_path("id").unwrap().as_f64().unwrap(), 42.0);
+        // logits[c] = 2 + c → argmax = 9.
+        assert_eq!(j.get_path("pred").unwrap().as_f64().unwrap(), 9.0);
+    }
+
+    #[test]
+    fn batches_multiple_requests() {
+        let srv = test_server();
+        let mut exec = FakeExec::new();
+        for i in 0..4 {
+            srv.handle_line(&format!(r#"{{"id": {i}, "image": [0.5]}}"#), 1).unwrap();
+        }
+        let served = srv.executor_step(&mut exec);
+        assert_eq!(served, 4);
+        assert_eq!(srv.take_responses(1).len(), 4);
+        let stats = srv.ledger_json();
+        assert_eq!(stats.get_path("requests").unwrap().as_f64().unwrap(), 4.0);
+    }
+
+    #[test]
+    fn control_commands() {
+        let srv = test_server();
+        let stats = srv.handle_line(r#"{"cmd": "stats"}"#, 1).unwrap().unwrap();
+        assert!(stats.contains("requests"));
+        assert!(!srv.is_shutdown());
+        srv.handle_line(r#"{"cmd": "shutdown"}"#, 1).unwrap();
+        assert!(srv.is_shutdown());
+    }
+
+    #[test]
+    fn malformed_requests_error() {
+        let srv = test_server();
+        assert!(srv.handle_line("not json", 1).is_err());
+        assert!(srv.handle_line(r#"{"nothing": 1}"#, 1).is_err());
+        assert!(srv.handle_line(r#"{"cmd": "nope"}"#, 1).is_err());
+    }
+
+    #[test]
+    fn executor_idles_on_empty_queue() {
+        let srv = test_server();
+        let mut exec = FakeExec::new();
+        assert_eq!(srv.executor_step(&mut exec), 0);
+    }
+
+    #[test]
+    fn end_to_end_over_tcp() {
+        let cfg = ServerConfig {
+            addr: "127.0.0.1:0".into(),
+            batch_sizes: vec![1, 4],
+            max_wait: Duration::from_millis(1),
+        };
+        // Bind manually to learn the port, then serve on it.
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        drop(listener);
+        let cfg = ServerConfig { addr: addr.to_string(), ..cfg };
+        let srv = Arc::new(Server::new(&cfg));
+        let srv2 = srv.clone();
+        let handle = std::thread::spawn(move || {
+            srv2.serve(&cfg, Box::new(FakeExec::new())).unwrap();
+        });
+        std::thread::sleep(Duration::from_millis(50));
+
+        let mut sock = TcpStream::connect(addr).unwrap();
+        writeln!(sock, r#"{{"id": 5, "image": [1.0, 1.0]}}"#).unwrap();
+        sock.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+        let mut reader = BufReader::new(sock.try_clone().unwrap());
+        let mut resp = String::new();
+        reader.read_line(&mut resp).unwrap();
+        let j = json::parse(resp.trim()).unwrap();
+        assert_eq!(j.get_path("id").unwrap().as_f64().unwrap(), 5.0);
+        assert_eq!(j.get_path("pred").unwrap().as_f64().unwrap(), 9.0);
+
+        writeln!(sock, r#"{{"cmd": "shutdown"}}"#).unwrap();
+        let mut ack = String::new();
+        reader.read_line(&mut ack).unwrap();
+        assert!(ack.contains("ok"));
+        handle.join().unwrap();
+    }
+}

@@ -1,0 +1,32 @@
+//! # CR-CIM: Capacitor-Reconfiguring Computing-in-Memory for Transformers
+//!
+//! Reproduction of "An 818-TOPS/W CSNR-31dB SQNR-45dB 10-bit
+//! Capacitor-Reconfiguring Computing-in-Memory Macro with Software-Analog
+//! Co-Design for Transformers" (K. Yoshioka, 2023) as a three-layer
+//! Rust + JAX + Pallas stack:
+//!
+//! - **L3 (this crate)** — the coordinator: tile scheduler, SAC (CSNR
+//!   boost) policy engine, batcher, power/latency ledger, request server —
+//!   plus the circuit-level macro simulator that stands in for the 65 nm
+//!   silicon, the metric definitions (CSNR/SQNR/INL/FoM), and a PJRT
+//!   runtime that executes the AOT-compiled ViT.
+//! - **L2 (python/compile/model.py)** — the ViT forward pass in JAX,
+//!   calling the L1 kernel; lowered once to HLO text at build time.
+//! - **L1 (python/compile/kernels/)** — the behavioral-CIM matmul as a
+//!   Pallas kernel, validated against a pure-jnp oracle.
+//!
+//! See DESIGN.md for the system inventory and EXPERIMENTS.md for
+//! paper-vs-measured numbers.
+
+pub mod cim;
+pub mod coordinator;
+pub mod metrics;
+pub mod runtime;
+pub mod util;
+pub mod vit;
+pub mod workload;
+
+/// Crate version (from Cargo).
+pub fn version() -> &'static str {
+    env!("CARGO_PKG_VERSION")
+}

@@ -1,0 +1,13 @@
+//! Metric definitions used across the evaluation: transfer-curve
+//! characterization (INL/DNL/read-noise), SQNR/ENOB, CSNR, and the Fig. 6
+//! FoMs. Exact conventions are documented per module; EXPERIMENTS.md
+//! records paper-vs-measured for each.
+
+pub mod csnr;
+pub mod fom;
+pub mod sqnr;
+pub mod transfer;
+
+pub use csnr::{measure_csnr, CsnrEnsemble, CsnrResult};
+pub use sqnr::{enob, sqnr_db};
+pub use transfer::{characterize, CharacterizeOpts, TransferCurve};

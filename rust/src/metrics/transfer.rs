@@ -1,0 +1,196 @@
+//! Column transfer-curve characterization (the Fig. 5 measurement).
+//!
+//! Sweeps the MAC input count over the full range, Monte-Carlo-reads each
+//! point, and extracts the static curve (INL/DNL) and the per-code read
+//! noise. Runs the sweep in parallel with per-point RNG substreams so the
+//! result is independent of thread count.
+
+use crate::cim::column::Column;
+use crate::cim::params::CbMode;
+use crate::util::pool::parallel_map;
+use crate::util::rng::Rng;
+use crate::util::stats::{self, Moments};
+
+/// Characterized transfer curve of one column.
+#[derive(Clone, Debug)]
+pub struct TransferCurve {
+    /// Input MAC counts swept (ascending).
+    pub counts: Vec<usize>,
+    /// Mean read code per count (Monte-Carlo).
+    pub mean_code: Vec<f64>,
+    /// Read-noise std per count [LSB].
+    pub noise_lsb: Vec<f64>,
+    /// Static (noise-free) code per count.
+    pub static_code: Vec<u32>,
+    /// ADC resolution (codes = 2^bits).
+    pub bits: u32,
+}
+
+impl TransferCurve {
+    /// Static INL per swept point [LSB]: deviation of the static curve
+    /// from the straight line through its endpoints.
+    pub fn inl_lsb(&self) -> Vec<f64> {
+        let n = self.counts.len();
+        assert!(n >= 2);
+        let x0 = self.counts[0] as f64;
+        let x1 = self.counts[n - 1] as f64;
+        let y0 = self.static_code[0] as f64;
+        let y1 = self.static_code[n - 1] as f64;
+        let slope = (y1 - y0) / (x1 - x0);
+        self.counts
+            .iter()
+            .zip(&self.static_code)
+            .map(|(&c, &code)| code as f64 - (y0 + slope * (c as f64 - x0)))
+            .collect()
+    }
+
+    /// DNL per adjacent swept pair [LSB] (meaningful when the sweep step
+    /// is one count).
+    pub fn dnl_lsb(&self) -> Vec<f64> {
+        let ideal_step = (self.static_code[self.counts.len() - 1] as f64
+            - self.static_code[0] as f64)
+            / (self.counts[self.counts.len() - 1] - self.counts[0]) as f64;
+        self.static_code
+            .windows(2)
+            .zip(self.counts.windows(2))
+            .map(|(codes, counts)| {
+                let step = (codes[1] as f64 - codes[0] as f64) / (counts[1] - counts[0]) as f64;
+                step / ideal_step - 1.0
+            })
+            .collect()
+    }
+
+    pub fn max_abs_inl(&self) -> f64 {
+        self.inl_lsb().iter().fold(0.0f64, |m, x| m.max(x.abs()))
+    }
+
+    pub fn inl_rms(&self) -> f64 {
+        stats::rms(&self.inl_lsb())
+    }
+
+    /// Mean read noise across the curve [LSB] (Fig. 5 quotes this).
+    pub fn mean_noise_lsb(&self) -> f64 {
+        stats::mean(&self.noise_lsb)
+    }
+
+    pub fn rms_noise_lsb(&self) -> f64 {
+        stats::rms(&self.noise_lsb)
+    }
+}
+
+/// Characterization settings.
+#[derive(Clone, Copy, Debug)]
+pub struct CharacterizeOpts {
+    /// Sweep step in counts (1 = every code; Fig. 5-grade).
+    pub step: usize,
+    /// Monte-Carlo reads per point.
+    pub trials: usize,
+    /// Worker threads (1 = serial).
+    pub threads: usize,
+    /// RNG stream id (vary to get independent characterization runs).
+    pub stream: u64,
+}
+
+impl Default for CharacterizeOpts {
+    fn default() -> Self {
+        CharacterizeOpts { step: 8, trials: 64, threads: crate::util::pool::default_threads(), stream: 0 }
+    }
+}
+
+/// Run the Fig. 5 measurement on `column` in `mode`.
+pub fn characterize(column: &Column, mode: CbMode, opts: &CharacterizeOpts) -> TransferCurve {
+    // Sweep to levels−1 (1023): the count==levels point saturates at the
+    // top code and would contaminate the endpoint fit.
+    let max_count = column.params.levels() - 1;
+    let counts: Vec<usize> = (0..=max_count).step_by(opts.step.max(1)).collect();
+    let root = Rng::new(column.params.seed ^ 0x74A4_5FE4 ^ opts.stream);
+    let points = parallel_map(counts.len(), opts.threads, |i| {
+        let count = counts[i];
+        let mut rng = root.substream(mode as u64 + 1, count as u64);
+        let mut m = Moments::new();
+        for _ in 0..opts.trials {
+            m.push(column.read_count(count, mode, &mut rng).code as f64);
+        }
+        (m.mean(), m.std(), column.static_code(count))
+    });
+    TransferCurve {
+        counts,
+        mean_code: points.iter().map(|p| p.0).collect(),
+        noise_lsb: points.iter().map(|p| p.1).collect(),
+        static_code: points.iter().map(|p| p.2).collect(),
+        bits: column.params.adc_bits,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cim::params::MacroParams;
+
+    fn quick_opts() -> CharacterizeOpts {
+        CharacterizeOpts { step: 32, trials: 24, threads: 2, stream: 7 }
+    }
+
+    #[test]
+    fn ideal_column_curve_is_perfect() {
+        let p = MacroParams::default();
+        let col = Column::ideal(&p).unwrap();
+        let curve = characterize(&col, CbMode::Off, &quick_opts());
+        assert!(curve.max_abs_inl() < 1e-9);
+        assert!(curve.mean_noise_lsb() < 1e-9);
+        // Static curve equals counts exactly over the sweep.
+        for (c, s) in curve.counts.iter().zip(&curve.static_code) {
+            assert_eq!(*s as usize, *c);
+        }
+    }
+
+    #[test]
+    fn real_column_inl_in_spec_and_noise_positive() {
+        let p = MacroParams::default();
+        let col = Column::new(&p, 0).unwrap();
+        let curve = characterize(&col, CbMode::On, &quick_opts());
+        let inl = curve.max_abs_inl();
+        assert!(inl > 0.2 && inl < 3.5, "max INL = {inl}");
+        assert!(curve.mean_noise_lsb() > 0.2, "noise = {}", curve.mean_noise_lsb());
+    }
+
+    #[test]
+    fn cb_reduces_mean_noise_roughly_2x() {
+        let p = MacroParams::default();
+        let col = Column::new(&p, 1).unwrap();
+        let mut opts = quick_opts();
+        opts.trials = 48;
+        let off = characterize(&col, CbMode::Off, &opts).mean_noise_lsb();
+        let on = characterize(&col, CbMode::On, &opts).mean_noise_lsb();
+        let ratio = off / on;
+        // Paper quotes "2x"; majority-of-6 caps the code-noise ratio at
+        // ~1.9 and quantization floors it further — we measure ~1.55
+        // (EXPERIMENTS.md §Deviations).
+        assert!(ratio > 1.35 && ratio < 2.1, "noise ratio off/on = {ratio}");
+        assert!((on - 0.58).abs() < 0.12, "w/CB noise {on} LSB (paper 0.58)");
+    }
+
+    #[test]
+    fn characterization_deterministic_across_threads() {
+        let p = MacroParams::default();
+        let col = Column::new(&p, 2).unwrap();
+        let mut o1 = quick_opts();
+        o1.threads = 1;
+        let mut o8 = quick_opts();
+        o8.threads = 8;
+        let a = characterize(&col, CbMode::Off, &o1);
+        let b = characterize(&col, CbMode::Off, &o8);
+        assert_eq!(a.mean_code, b.mean_code);
+        assert_eq!(a.noise_lsb, b.noise_lsb);
+    }
+
+    #[test]
+    fn inl_endpoints_are_zero() {
+        let p = MacroParams::default();
+        let col = Column::new(&p, 3).unwrap();
+        let curve = characterize(&col, CbMode::Off, &quick_opts());
+        let inl = curve.inl_lsb();
+        assert!(inl[0].abs() < 1e-9);
+        assert!(inl[inl.len() - 1].abs() < 1e-9);
+    }
+}

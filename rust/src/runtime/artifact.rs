@@ -1,0 +1,160 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` and
+//! the rust runtime. The manifest records every artifact's input/output
+//! shapes and dtypes; the loader validates against it so a stale or
+//! mismatched artifact fails loudly at startup, not at execute time.
+
+use std::path::{Path, PathBuf};
+
+use crate::util::json::{self, Json};
+
+/// Input/output tensor signature.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TensorSig {
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl TensorSig {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product::<usize>().max(1)
+    }
+
+    fn from_json(j: &Json) -> Result<Self, String> {
+        let shape = j
+            .get_path("shape")
+            .and_then(|s| s.as_arr())
+            .ok_or("missing shape")?
+            .iter()
+            .map(|v| v.as_f64().map(|x| x as usize).ok_or("bad dim"))
+            .collect::<Result<Vec<_>, _>>()?;
+        let dtype = j
+            .get_path("dtype")
+            .and_then(|d| d.as_str())
+            .ok_or("missing dtype")?
+            .to_string();
+        Ok(TensorSig { shape, dtype })
+    }
+}
+
+/// One artifact entry.
+#[derive(Clone, Debug)]
+pub struct Artifact {
+    pub name: String,
+    pub path: PathBuf,
+    pub inputs: Vec<TensorSig>,
+    pub outputs: Vec<TensorSig>,
+}
+
+/// The parsed manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub artifacts: Vec<Artifact>,
+    /// Training metadata passed through from python.
+    pub acc_fp: Option<f64>,
+    pub config: Json,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest, String> {
+        let text = std::fs::read_to_string(dir.join("manifest.json"))
+            .map_err(|e| format!("read manifest: {e}"))?;
+        Self::parse(&text, dir)
+    }
+
+    pub fn parse(text: &str, dir: &Path) -> Result<Manifest, String> {
+        let j = json::parse(text).map_err(|e| format!("manifest json: {e}"))?;
+        let arts = j
+            .get_path("artifacts")
+            .and_then(|a| a.as_obj())
+            .ok_or("manifest missing 'artifacts'")?;
+        let mut artifacts = Vec::new();
+        for (name, entry) in arts.iter() {
+            let sigs = |key: &str| -> Result<Vec<TensorSig>, String> {
+                entry
+                    .get_path(key)
+                    .and_then(|x| x.as_arr())
+                    .ok_or_else(|| format!("artifact {name} missing {key}"))?
+                    .iter()
+                    .map(TensorSig::from_json)
+                    .collect()
+            };
+            artifacts.push(Artifact {
+                name: name.clone(),
+                path: dir.join(format!("{name}.hlo.txt")),
+                inputs: sigs("inputs")?,
+                outputs: sigs("outputs")?,
+            });
+        }
+        Ok(Manifest {
+            artifacts,
+            acc_fp: j.get_path("acc_fp").and_then(|x| x.as_f64()),
+            config: j.get_path("config").cloned().unwrap_or(Json::Null),
+        })
+    }
+
+    pub fn get(&self, name: &str) -> Option<&Artifact> {
+        self.artifacts.iter().find(|a| a.name == name)
+    }
+
+    /// Verify every artifact file exists.
+    pub fn check_files(&self) -> Result<(), String> {
+        for a in &self.artifacts {
+            if !a.path.exists() {
+                return Err(format!("artifact file missing: {}", a.path.display()));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "config": {"dim": 96},
+      "acc_fp": 0.97,
+      "artifacts": {
+        "vit_cim_b1": {
+          "inputs": [
+            {"shape": [1, 32, 32, 3], "dtype": "f32"},
+            {"shape": [], "dtype": "i32"},
+            {"shape": [], "dtype": "f32"},
+            {"shape": [], "dtype": "f32"}
+          ],
+          "outputs": [{"shape": [1, 10], "dtype": "f32"}]
+        }
+      }
+    }"#;
+
+    #[test]
+    fn parses_manifest() {
+        let m = Manifest::parse(SAMPLE, Path::new("/tmp/a")).unwrap();
+        assert_eq!(m.artifacts.len(), 1);
+        let a = m.get("vit_cim_b1").unwrap();
+        assert_eq!(a.inputs.len(), 4);
+        assert_eq!(a.inputs[0].shape, vec![1, 32, 32, 3]);
+        assert_eq!(a.inputs[1].dtype, "i32");
+        assert_eq!(a.outputs[0].elements(), 10);
+        assert_eq!(m.acc_fp, Some(0.97));
+        assert_eq!(a.path, Path::new("/tmp/a/vit_cim_b1.hlo.txt"));
+    }
+
+    #[test]
+    fn scalar_sig_has_one_element() {
+        let m = Manifest::parse(SAMPLE, Path::new("/tmp")).unwrap();
+        assert_eq!(m.get("vit_cim_b1").unwrap().inputs[1].elements(), 1);
+    }
+
+    #[test]
+    fn missing_fields_error() {
+        assert!(Manifest::parse("{}", Path::new("/tmp")).is_err());
+        assert!(Manifest::parse(r#"{"artifacts": {"x": {}}}"#, Path::new("/tmp")).is_err());
+    }
+
+    #[test]
+    fn check_files_fails_on_missing() {
+        let m = Manifest::parse(SAMPLE, Path::new("/nonexistent-dir-xyz")).unwrap();
+        assert!(m.check_files().is_err());
+    }
+}

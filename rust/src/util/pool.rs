@@ -1,0 +1,191 @@
+//! Scoped worker pool over std threads (rayon/tokio are not vendored).
+//!
+//! Two primitives cover everything the simulator and coordinator need:
+//! - [`parallel_map`]: evenly-chunked data parallelism over an index range,
+//!   used by Monte-Carlo sweeps (each worker gets an independent RNG
+//!   substream keyed by index, so results are identical at any thread count).
+//! - [`WorkQueue`]: an MPMC queue built on Mutex+Condvar for the request
+//!   router's worker threads.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+
+/// Number of worker threads to use by default: physical parallelism capped
+/// to keep the box responsive.
+pub fn default_threads() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4).min(16)
+}
+
+/// Run `f(i)` for every `i in 0..n` on `threads` workers and collect results
+/// in index order. `f` must be `Sync` (shared read-only state); per-index
+/// determinism is up to the caller (use RNG substreams keyed by `i`).
+pub fn parallel_map<T, F>(n: usize, threads: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    let threads = threads.max(1).min(n.max(1));
+    if threads == 1 || n <= 1 {
+        return (0..n).map(f).collect();
+    }
+    let mut out: Vec<Option<T>> = (0..n).map(|_| None).collect();
+    let next = AtomicUsize::new(0);
+    let out_ptr = SendPtr(out.as_mut_ptr());
+    std::thread::scope(|scope| {
+        for _ in 0..threads {
+            let f = &f;
+            let next = &next;
+            let out_ptr = &out_ptr;
+            scope.spawn(move || loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let val = f(i);
+                // SAFETY: each index i is claimed exactly once via the atomic
+                // counter, so no two threads write the same slot; the vec
+                // outlives the scope.
+                unsafe {
+                    *out_ptr.0.add(i) = Some(val);
+                }
+            });
+        }
+    });
+    out.into_iter().map(|v| v.expect("worker filled every slot")).collect()
+}
+
+/// Wrapper to move a raw pointer into threads. Safe usage is guaranteed by
+/// the disjoint-index argument in `parallel_map`.
+struct SendPtr<T>(*mut T);
+unsafe impl<T> Sync for SendPtr<T> {}
+unsafe impl<T> Send for SendPtr<T> {}
+
+/// Blocking MPMC queue. `pop` blocks until an item arrives or the queue is
+/// closed (returns None after close once drained).
+pub struct WorkQueue<T> {
+    inner: Mutex<QueueState<T>>,
+    cond: Condvar,
+}
+
+struct QueueState<T> {
+    items: VecDeque<T>,
+    closed: bool,
+}
+
+impl<T> WorkQueue<T> {
+    pub fn new() -> Arc<Self> {
+        Arc::new(WorkQueue {
+            inner: Mutex::new(QueueState { items: VecDeque::new(), closed: false }),
+            cond: Condvar::new(),
+        })
+    }
+
+    /// Push an item; returns false if the queue is already closed.
+    pub fn push(&self, item: T) -> bool {
+        let mut st = self.inner.lock().unwrap();
+        if st.closed {
+            return false;
+        }
+        st.items.push_back(item);
+        self.cond.notify_one();
+        true
+    }
+
+    /// Blocking pop. None = closed and drained.
+    pub fn pop(&self) -> Option<T> {
+        let mut st = self.inner.lock().unwrap();
+        loop {
+            if let Some(item) = st.items.pop_front() {
+                return Some(item);
+            }
+            if st.closed {
+                return None;
+            }
+            st = self.cond.wait(st).unwrap();
+        }
+    }
+
+    /// Non-blocking pop.
+    pub fn try_pop(&self) -> Option<T> {
+        self.inner.lock().unwrap().items.pop_front()
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Close the queue: pops drain remaining items then return None.
+    pub fn close(&self) {
+        self.inner.lock().unwrap().closed = true;
+        self.cond.notify_all();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parallel_map_matches_serial() {
+        let serial: Vec<u64> = (0..1000).map(|i| (i as u64) * (i as u64)).collect();
+        let par = parallel_map(1000, 8, |i| (i as u64) * (i as u64));
+        assert_eq!(par, serial);
+    }
+
+    #[test]
+    fn parallel_map_handles_edge_sizes() {
+        assert_eq!(parallel_map(0, 4, |i| i), Vec::<usize>::new());
+        assert_eq!(parallel_map(1, 4, |i| i + 10), vec![10]);
+        assert_eq!(parallel_map(3, 64, |i| i), vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn parallel_map_deterministic_across_thread_counts() {
+        use crate::util::rng::Rng;
+        let root = Rng::new(99);
+        let run = |threads| {
+            parallel_map(64, threads, |i| {
+                let mut r = root.substream(1, i as u64);
+                r.gauss()
+            })
+        };
+        assert_eq!(run(1), run(8));
+    }
+
+    #[test]
+    fn work_queue_fifo_and_close() {
+        let q = WorkQueue::new();
+        assert!(q.push(1));
+        assert!(q.push(2));
+        assert_eq!(q.pop(), Some(1));
+        assert_eq!(q.pop(), Some(2));
+        q.close();
+        assert!(!q.push(3));
+        assert_eq!(q.pop(), None);
+    }
+
+    #[test]
+    fn work_queue_cross_thread() {
+        let q: Arc<WorkQueue<usize>> = WorkQueue::new();
+        let producer = {
+            let q = q.clone();
+            std::thread::spawn(move || {
+                for i in 0..100 {
+                    q.push(i);
+                }
+                q.close();
+            })
+        };
+        let mut got = Vec::new();
+        while let Some(v) = q.pop() {
+            got.push(v);
+        }
+        producer.join().unwrap();
+        assert_eq!(got, (0..100).collect::<Vec<_>>());
+    }
+}

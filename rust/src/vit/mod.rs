@@ -1,0 +1,147 @@
+//! ViT model catalog: shapes, per-layer precision plans, and the linear-
+//! layer workload the scheduler maps onto the macro.
+//!
+//! Mirrors `python/compile/model.py` (`VitConfig`, `count_linear_workload`)
+//! — the two sides are kept in sync by the manifest check in
+//! `runtime::artifact` and the bridge tests in `rust/tests/`.
+
+pub mod plan;
+
+use crate::cim::netstats::LayerClass;
+
+/// Model hyperparameters (mirror of python VitConfig).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct VitConfig {
+    pub image: usize,
+    pub patch: usize,
+    pub dim: usize,
+    pub depth: usize,
+    pub heads: usize,
+    pub mlp_ratio: usize,
+    pub num_classes: usize,
+}
+
+impl Default for VitConfig {
+    fn default() -> Self {
+        VitConfig { image: 32, patch: 4, dim: 96, depth: 4, heads: 4, mlp_ratio: 2, num_classes: 10 }
+    }
+}
+
+impl VitConfig {
+    /// ViT-small-like configuration (the paper's network: 12 blocks).
+    pub fn vit_small() -> Self {
+        VitConfig { image: 32, patch: 4, dim: 384, depth: 12, heads: 6, mlp_ratio: 4, num_classes: 10 }
+    }
+
+    pub fn tokens(&self) -> usize {
+        (self.image / self.patch).pow(2) + 1
+    }
+
+    pub fn patch_dim(&self) -> usize {
+        self.patch * self.patch * 3
+    }
+
+    pub fn mlp_dim(&self) -> usize {
+        self.dim * self.mlp_ratio
+    }
+
+    /// Total parameters of the linear layers (weights only).
+    pub fn linear_params(&self) -> usize {
+        let d = self.dim;
+        self.patch_dim() * d
+            + self.depth * (d * 3 * d + d * d + 2 * d * self.mlp_dim())
+            + d * self.num_classes
+    }
+}
+
+/// One linear-layer invocation: `m` activation vectors of length `k`
+/// against a (k × n) weight matrix, of a given SAC class.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct LinearShape {
+    pub class: LayerClass,
+    /// Input (reduction) dimension = macro rows used.
+    pub k: usize,
+    /// Output channels.
+    pub n: usize,
+    /// Activation vectors per inference (batch × tokens).
+    pub m: usize,
+}
+
+impl LinearShape {
+    /// Multiply-accumulates (not 1b-normalized).
+    pub fn macs(&self) -> u64 {
+        (self.k * self.n * self.m) as u64
+    }
+}
+
+/// The per-inference linear workload (mirror of count_linear_workload).
+pub fn linear_workload(cfg: &VitConfig, batch: usize) -> Vec<LinearShape> {
+    let t = cfg.tokens();
+    let d = cfg.dim;
+    let mut v = Vec::new();
+    let att = LayerClass::TransformerAttention;
+    let mlp = LayerClass::TransformerMlp;
+    v.push(LinearShape { class: mlp, k: cfg.patch_dim(), n: d, m: batch * (t - 1) });
+    for _ in 0..cfg.depth {
+        v.push(LinearShape { class: att, k: d, n: 3 * d, m: batch * t });
+        v.push(LinearShape { class: att, k: d, n: d, m: batch * t });
+        v.push(LinearShape { class: mlp, k: d, n: cfg.mlp_dim(), m: batch * t });
+        v.push(LinearShape { class: mlp, k: cfg.mlp_dim(), n: d, m: batch * t });
+    }
+    v.push(LinearShape { class: mlp, k: d, n: cfg.num_classes, m: batch });
+    v
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn token_count_includes_cls() {
+        assert_eq!(VitConfig::default().tokens(), 65);
+        assert_eq!(VitConfig::vit_small().tokens(), 65);
+    }
+
+    #[test]
+    fn workload_mirrors_python_catalog() {
+        let cfg = VitConfig::default();
+        let wl = linear_workload(&cfg, 1);
+        // patch embed + depth×4 + head.
+        assert_eq!(wl.len(), 2 + 4 * cfg.depth);
+        let att: Vec<_> =
+            wl.iter().filter(|s| s.class == LayerClass::TransformerAttention).collect();
+        assert_eq!(att.len(), 2 * cfg.depth);
+        // qkv shape.
+        assert_eq!(att[0].k, cfg.dim);
+        assert_eq!(att[0].n, 3 * cfg.dim);
+        assert_eq!(att[0].m, cfg.tokens());
+        // head shape.
+        let head = wl.last().unwrap();
+        assert_eq!((head.k, head.n, head.m), (cfg.dim, cfg.num_classes, 1));
+    }
+
+    #[test]
+    fn batch_scales_m_only() {
+        let cfg = VitConfig::default();
+        let w1 = linear_workload(&cfg, 1);
+        let w4 = linear_workload(&cfg, 4);
+        for (a, b) in w1.iter().zip(&w4) {
+            assert_eq!(a.k, b.k);
+            assert_eq!(a.n, b.n);
+            assert_eq!(b.m, 4 * a.m);
+        }
+    }
+
+    #[test]
+    fn vit_small_param_count_plausible() {
+        // ViT-small @ dim 384 / depth 12 / mlp 4x ≈ 21M linear params.
+        let p = VitConfig::vit_small().linear_params();
+        assert!(p > 15_000_000 && p < 30_000_000, "{p}");
+    }
+
+    #[test]
+    fn macs_count() {
+        let s = LinearShape { class: LayerClass::TransformerMlp, k: 10, n: 20, m: 3 };
+        assert_eq!(s.macs(), 600);
+    }
+}

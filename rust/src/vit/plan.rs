@@ -1,0 +1,106 @@
+//! SAC precision plans: which (bit-width, CB mode) each layer class runs
+//! at. The paper's plan (Fig. 6): MLP-class linears w/CB at 6b/6b,
+//! attention-class linears wo/CB at 4b/4b.
+
+use crate::cim::netstats::LayerClass;
+use crate::cim::params::CbMode;
+
+/// Per-class operating point.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct OperatingPoint {
+    pub a_bits: u32,
+    pub w_bits: u32,
+    pub cb: CbMode,
+}
+
+/// A full precision/CB plan.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct PrecisionPlan {
+    pub name: &'static str,
+    pub attention: OperatingPoint,
+    pub mlp: OperatingPoint,
+}
+
+impl PrecisionPlan {
+    /// The paper's SAC plan: attention 4b wo/CB, MLP 6b w/CB.
+    pub fn paper_sac() -> Self {
+        PrecisionPlan {
+            name: "SAC (paper): attn 4b wo/CB, MLP 6b w/CB",
+            attention: OperatingPoint { a_bits: 4, w_bits: 4, cb: CbMode::Off },
+            mlp: OperatingPoint { a_bits: 6, w_bits: 6, cb: CbMode::On },
+        }
+    }
+
+    /// Baseline "None": no co-design at all — everything at the blanket
+    /// accuracy-safe point an 8b-operand CIM would use ([4]'s precision),
+    /// CB always on. This is the Fig. 6 ablation's leftmost bar.
+    pub fn uniform_safe() -> Self {
+        PrecisionPlan {
+            name: "None: all 8b w/CB (no co-design)",
+            attention: OperatingPoint { a_bits: 8, w_bits: 8, cb: CbMode::On },
+            mlp: OperatingPoint { a_bits: 8, w_bits: 8, cb: CbMode::On },
+        }
+    }
+
+    /// Intermediate ablation: CB adapted per layer class, bit-width not
+    /// yet optimized (Fig. 6's middle bar, "w/CB").
+    pub fn cb_only() -> Self {
+        PrecisionPlan {
+            name: "w/CB: attn 8b wo/CB, MLP 8b w/CB",
+            attention: OperatingPoint { a_bits: 8, w_bits: 8, cb: CbMode::Off },
+            mlp: OperatingPoint { a_bits: 8, w_bits: 8, cb: CbMode::On },
+        }
+    }
+
+    /// Aggressive (accuracy-unsafe) corner used in Fig. 1(A)-style sweeps.
+    pub fn uniform_fast() -> Self {
+        PrecisionPlan {
+            name: "all 4b wo/CB",
+            attention: OperatingPoint { a_bits: 4, w_bits: 4, cb: CbMode::Off },
+            mlp: OperatingPoint { a_bits: 4, w_bits: 4, cb: CbMode::Off },
+        }
+    }
+
+    /// The Fig. 6 SAC ablation series, in presentation order.
+    pub fn ablation_series() -> Vec<PrecisionPlan> {
+        vec![Self::uniform_safe(), Self::cb_only(), Self::paper_sac()]
+    }
+
+    pub fn point(&self, class: LayerClass) -> OperatingPoint {
+        match class {
+            LayerClass::TransformerAttention => self.attention,
+            // CNN conv layers (Fig. 1A comparisons) take the MLP point.
+            LayerClass::TransformerMlp | LayerClass::CnnConv => self.mlp,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_plan_matches_fig6() {
+        let p = PrecisionPlan::paper_sac();
+        assert_eq!(p.attention.a_bits, 4);
+        assert_eq!(p.attention.cb, CbMode::Off);
+        assert_eq!(p.mlp.a_bits, 6);
+        assert_eq!(p.mlp.cb, CbMode::On);
+    }
+
+    #[test]
+    fn ablation_series_ordering() {
+        let s = PrecisionPlan::ablation_series();
+        assert_eq!(s.len(), 3);
+        assert_eq!(s[0], PrecisionPlan::uniform_safe());
+        assert_eq!(s[2], PrecisionPlan::paper_sac());
+    }
+
+    #[test]
+    fn class_dispatch() {
+        let p = PrecisionPlan::paper_sac();
+        assert_eq!(p.point(LayerClass::TransformerAttention), p.attention);
+        assert_eq!(p.point(LayerClass::TransformerMlp), p.mlp);
+        assert_eq!(p.point(LayerClass::CnnConv), p.mlp);
+    }
+}

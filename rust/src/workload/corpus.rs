@@ -1,0 +1,158 @@
+//! Evaluation corpus loading (the held-out slice the python trainer wrote
+//! to `artifacts/eval_set.json` + `eval_images.bin`) and a pure-rust
+//! CIFAR-like generator for benches that run before artifacts exist.
+
+use std::path::Path;
+
+use crate::util::json;
+use crate::util::rng::Rng;
+
+/// The held-out evaluation set shared with python.
+#[derive(Clone, Debug)]
+pub struct EvalSet {
+    /// NHWC f32 pixels, flattened.
+    pub images: Vec<f32>,
+    pub labels: Vec<u8>,
+    pub n: usize,
+    pub image: usize,
+    pub channels: usize,
+}
+
+impl EvalSet {
+    /// Load from the artifacts directory (written by train.py).
+    pub fn load(dir: &Path) -> Result<EvalSet, String> {
+        let meta_text = std::fs::read_to_string(dir.join("eval_set.json"))
+            .map_err(|e| format!("read eval_set.json: {e}"))?;
+        let meta = json::parse(&meta_text).map_err(|e| format!("eval_set.json: {e}"))?;
+        let shape: Vec<usize> = meta
+            .get_path("shape")
+            .and_then(|s| s.as_arr())
+            .ok_or("missing shape")?
+            .iter()
+            .map(|v| v.as_f64().unwrap_or(0.0) as usize)
+            .collect();
+        if shape.len() != 4 {
+            return Err(format!("expected NHWC shape, got {shape:?}"));
+        }
+        let labels: Vec<u8> = meta
+            .get_path("labels")
+            .and_then(|l| l.as_arr())
+            .ok_or("missing labels")?
+            .iter()
+            .map(|v| v.as_f64().unwrap_or(0.0) as u8)
+            .collect();
+        let bin_name = meta
+            .get_path("images_bin")
+            .and_then(|b| b.as_str())
+            .ok_or("missing images_bin")?;
+        let bytes = std::fs::read(dir.join(bin_name)).map_err(|e| format!("read bin: {e}"))?;
+        let expect = shape.iter().product::<usize>();
+        if bytes.len() != expect * 4 {
+            return Err(format!(
+                "eval bin size {} != {} floats",
+                bytes.len(),
+                expect
+            ));
+        }
+        let images: Vec<f32> = bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        if labels.len() != shape[0] {
+            return Err("labels/images count mismatch".into());
+        }
+        Ok(EvalSet { images, labels, n: shape[0], image: shape[1], channels: shape[3] })
+    }
+
+    pub fn image_floats(&self) -> usize {
+        self.image * self.image * self.channels
+    }
+
+    /// Borrow image `i` as a flat slice.
+    pub fn image_slice(&self, i: usize) -> &[f32] {
+        let w = self.image_floats();
+        &self.images[i * w..(i + 1) * w]
+    }
+
+    /// Pure-rust synthetic stand-in (structure-bearing, deterministic):
+    /// used by benches that must run without `make artifacts`. NOT the
+    /// same distribution as the python corpus — accuracy experiments use
+    /// the shared artifact set.
+    pub fn synthetic(n: usize, image: usize, seed: u64) -> EvalSet {
+        let mut rng = Rng::new(seed);
+        let channels = 3;
+        let w = image * image * channels;
+        let mut images = Vec::with_capacity(n * w);
+        let mut labels = Vec::with_capacity(n);
+        for i in 0..n {
+            let class = (i % 10) as u8;
+            labels.push(class);
+            let theta = std::f64::consts::PI * class as f64 / 10.0;
+            let freq = 2.0 + (class % 5) as f64;
+            let phase = rng.range(0.0, std::f64::consts::TAU);
+            for y in 0..image {
+                for x in 0..image {
+                    let u = x as f64 / image as f64 - 0.5;
+                    let v = y as f64 / image as f64 - 0.5;
+                    let t = u * theta.cos() + v * theta.sin();
+                    let base = (std::f64::consts::TAU * freq * t + phase).sin();
+                    for _ in 0..channels {
+                        images.push((base + 0.2 * rng.gauss()) as f32);
+                    }
+                }
+            }
+        }
+        EvalSet { images, labels, n, image, channels }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn synthetic_shapes_and_determinism() {
+        let a = EvalSet::synthetic(20, 32, 7);
+        let b = EvalSet::synthetic(20, 32, 7);
+        assert_eq!(a.images, b.images);
+        assert_eq!(a.n, 20);
+        assert_eq!(a.image_floats(), 32 * 32 * 3);
+        assert_eq!(a.image_slice(3).len(), a.image_floats());
+        assert_eq!(a.labels[3], 3);
+    }
+
+    #[test]
+    fn load_round_trip_via_tempdir() {
+        // Write a tiny eval set in the python format and read it back.
+        let dir = std::env::temp_dir().join(format!("crcim-test-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let images: Vec<f32> = (0..2 * 2 * 2 * 3).map(|i| i as f32 * 0.5).collect();
+        let bytes: Vec<u8> = images.iter().flat_map(|f| f.to_le_bytes()).collect();
+        std::fs::write(dir.join("eval_images.bin"), &bytes).unwrap();
+        std::fs::write(
+            dir.join("eval_set.json"),
+            r#"{"images_bin": "eval_images.bin", "shape": [2, 2, 2, 3], "labels": [4, 9]}"#,
+        )
+        .unwrap();
+        let set = EvalSet::load(&dir).unwrap();
+        assert_eq!(set.n, 2);
+        assert_eq!(set.labels, vec![4, 9]);
+        assert_eq!(set.images, images);
+        assert_eq!(set.image_slice(1)[0], 6.0);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn load_rejects_bad_sizes() {
+        let dir = std::env::temp_dir().join(format!("crcim-test-bad-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("eval_images.bin"), [0u8; 8]).unwrap();
+        std::fs::write(
+            dir.join("eval_set.json"),
+            r#"{"images_bin": "eval_images.bin", "shape": [1, 2, 2, 3], "labels": [0]}"#,
+        )
+        .unwrap();
+        assert!(EvalSet::load(&dir).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

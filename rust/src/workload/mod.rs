@@ -1,0 +1,11 @@
+//! Workload generators: the synthetic evaluation corpus (mirroring
+//! `python/compile/data.py` via the shared `artifacts/eval_set.npz` is the
+//! authoritative path; this module additionally provides pure-rust
+//! generators for benches that must run without artifacts) and request
+//! traces for the serving experiments.
+
+pub mod corpus;
+pub mod trace;
+
+pub use corpus::EvalSet;
+pub use trace::{ArrivalProcess, TraceEvent};

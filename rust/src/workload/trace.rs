@@ -1,0 +1,113 @@
+//! Request-arrival traces for the serving experiments: Poisson and bursty
+//! (Markov-modulated) processes, deterministic in the seed.
+
+use crate::util::rng::Rng;
+
+/// One request arrival.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct TraceEvent {
+    /// Arrival time [µs since trace start].
+    pub t_us: f64,
+    /// Which eval-set image this request asks for.
+    pub image_index: usize,
+}
+
+/// Arrival process shapes.
+#[derive(Clone, Copy, Debug)]
+pub enum ArrivalProcess {
+    /// Poisson with the given mean rate [requests/s].
+    Poisson { rate: f64 },
+    /// Two-state burst process: high/low rates with mean dwell times.
+    Bursty {
+        rate_low: f64,
+        rate_high: f64,
+        dwell_ms: f64,
+    },
+}
+
+/// Generate `n` arrivals over the process, cycling image indices over
+/// `num_images`.
+pub fn generate(process: ArrivalProcess, n: usize, num_images: usize, seed: u64) -> Vec<TraceEvent> {
+    let mut rng = Rng::new(seed);
+    let mut t = 0.0f64;
+    let mut events = Vec::with_capacity(n);
+    let mut high = false;
+    let mut state_left_us = 0.0f64;
+    for i in 0..n {
+        let rate = match process {
+            ArrivalProcess::Poisson { rate } => rate,
+            ArrivalProcess::Bursty { rate_low, rate_high, dwell_ms } => {
+                if state_left_us <= 0.0 {
+                    high = !high;
+                    // Exponential dwell.
+                    state_left_us = -dwell_ms * 1e3 * (1.0 - rng.f64()).ln();
+                }
+                if high {
+                    rate_high
+                } else {
+                    rate_low
+                }
+            }
+        };
+        // Exponential inter-arrival at `rate` req/s → mean 1e6/rate µs.
+        let dt = -(1.0 - rng.f64()).ln() * 1e6 / rate;
+        t += dt;
+        if let ArrivalProcess::Bursty { .. } = process {
+            state_left_us -= dt;
+        }
+        events.push(TraceEvent { t_us: t, image_index: rng.index(num_images.max(1)) });
+        let _ = i;
+    }
+    events
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn poisson_rate_is_respected() {
+        let rate = 5000.0;
+        let ev = generate(ArrivalProcess::Poisson { rate }, 20_000, 100, 1);
+        let span_s = ev.last().unwrap().t_us * 1e-6;
+        let emp_rate = ev.len() as f64 / span_s;
+        assert!((emp_rate - rate).abs() / rate < 0.05, "emp {emp_rate}");
+    }
+
+    #[test]
+    fn arrivals_are_sorted_and_deterministic() {
+        let a = generate(ArrivalProcess::Poisson { rate: 100.0 }, 500, 10, 3);
+        let b = generate(ArrivalProcess::Poisson { rate: 100.0 }, 500, 10, 3);
+        assert_eq!(a, b);
+        for w in a.windows(2) {
+            assert!(w[1].t_us >= w[0].t_us);
+        }
+        assert!(a.iter().all(|e| e.image_index < 10));
+    }
+
+    #[test]
+    fn bursty_has_higher_variance_than_poisson() {
+        let n = 30_000;
+        let pois = generate(ArrivalProcess::Poisson { rate: 1000.0 }, n, 10, 5);
+        let burst = generate(
+            ArrivalProcess::Bursty { rate_low: 200.0, rate_high: 5000.0, dwell_ms: 20.0 },
+            n,
+            10,
+            5,
+        );
+        // Compare coefficient of variation of arrivals-per-window.
+        let cv = |ev: &[TraceEvent]| {
+            let end = ev.last().unwrap().t_us;
+            let win = end / 200.0;
+            let mut counts = vec![0f64; 200];
+            for e in ev {
+                let k = ((e.t_us / win) as usize).min(199);
+                counts[k] += 1.0;
+            }
+            let m = counts.iter().sum::<f64>() / counts.len() as f64;
+            let v = counts.iter().map(|c| (c - m) * (c - m)).sum::<f64>() / counts.len() as f64;
+            v.sqrt() / m
+        };
+        assert!(cv(&burst) > 2.0 * cv(&pois), "burst {} pois {}", cv(&burst), cv(&pois));
+    }
+}

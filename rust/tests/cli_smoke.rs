@@ -1,0 +1,74 @@
+//! CLI smoke tests: every `crcim` subcommand runs and prints the shape
+//! of output its docs promise. Artifact-dependent commands are skipped
+//! when `make artifacts` hasn't run.
+
+use std::process::Command;
+
+fn crcim(args: &[&str]) -> (bool, String) {
+    let out = Command::new(env!("CARGO_BIN_EXE_crcim"))
+        .args(args)
+        .current_dir(env!("CARGO_MANIFEST_DIR"))
+        .output()
+        .expect("spawn crcim");
+    let text = format!(
+        "{}{}",
+        String::from_utf8_lossy(&out.stdout),
+        String::from_utf8_lossy(&out.stderr)
+    );
+    (out.status.success(), text)
+}
+
+#[test]
+fn no_args_prints_usage() {
+    let (ok, text) = crcim(&[]);
+    assert!(!ok);
+    assert!(text.contains("usage"), "{text}");
+}
+
+#[test]
+fn unknown_command_fails() {
+    let (ok, text) = crcim(&["frobnicate"]);
+    assert!(!ok);
+    assert!(text.contains("unknown command"), "{text}");
+}
+
+#[test]
+fn help_flags_work() {
+    for cmd in ["characterize", "plan", "serve", "infer"] {
+        let (ok, text) = crcim(&[cmd, "--help"]);
+        assert!(ok, "{cmd} --help failed: {text}");
+        assert!(text.contains("Options"), "{cmd}: {text}");
+    }
+}
+
+#[test]
+fn characterize_reports_both_modes() {
+    let (ok, text) = crcim(&["characterize", "--step", "32", "--trials", "16"]);
+    assert!(ok, "{text}");
+    assert!(text.contains("w/CB"), "{text}");
+    assert!(text.contains("wo/CB"), "{text}");
+    assert!(text.contains("SQNR"), "{text}");
+}
+
+#[test]
+fn summary_prints_headlines() {
+    let (ok, text) = crcim(&["summary"]);
+    assert!(ok, "{text}");
+    assert!(text.contains("TOPS/W"), "{text}");
+    assert!(text.contains("CB power overhead"), "{text}");
+}
+
+#[test]
+fn plan_prints_ablation_rows() {
+    let (ok, text) = crcim(&["plan", "--vit-small"]);
+    assert!(ok, "{text}");
+    assert!(text.contains("SAC (paper)"), "{text}");
+    assert!(text.contains("µJ/inf"), "{text}");
+}
+
+#[test]
+fn bad_option_reports_usage() {
+    let (ok, text) = crcim(&["plan", "--nonsense"]);
+    assert!(!ok);
+    assert!(text.contains("unknown option"), "{text}");
+}

@@ -1,0 +1,167 @@
+//! Integration tests across the python→rust AOT boundary.
+//!
+//! These need `make artifacts` to have run; they skip (with a note)
+//! otherwise so `cargo test` stays green on a fresh checkout.
+
+use std::path::{Path, PathBuf};
+
+use cr_cim::runtime::{Manifest, Runtime, VitExecutable};
+use cr_cim::workload::EvalSet;
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("skipping: artifacts not built (run `make artifacts`)");
+        None
+    }
+}
+
+#[test]
+fn manifest_lists_expected_artifacts() {
+    let Some(dir) = artifacts_dir() else { return };
+    let m = Manifest::load(&dir).unwrap();
+    m.check_files().unwrap();
+    for name in ["vit_cim_b1", "vit_cim_b16", "vit_fp_b16", "cim_linear_micro"] {
+        assert!(m.get(name).is_some(), "missing artifact {name}");
+    }
+    // CIM artifacts take (images, seed, sigma_attn, sigma_mlp).
+    assert_eq!(m.get("vit_cim_b16").unwrap().inputs.len(), 4);
+    assert_eq!(m.get("vit_fp_b16").unwrap().inputs.len(), 1);
+}
+
+/// The core cross-language numerics check: execute the standalone L1
+/// kernel artifact via PJRT and compare against the same quantized-matmul
+/// math computed independently in rust.
+#[test]
+fn cim_linear_micro_matches_rust_reference() {
+    let Some(dir) = artifacts_dir() else { return };
+    let m = Manifest::load(&dir).unwrap();
+    let art = m.get("cim_linear_micro").unwrap();
+    let (mm, kk) = (art.inputs[0].shape[0], art.inputs[0].shape[1]);
+    let nn = art.inputs[1].shape[1];
+
+    let rt = Runtime::cpu().unwrap();
+    let exe = rt.load(art).unwrap();
+
+    // Deterministic pseudo-random inputs.
+    let mut rng = cr_cim::util::rng::Rng::new(0xA07);
+    let x: Vec<f32> = (0..mm * kk).map(|_| rng.gauss() as f32).collect();
+    let w: Vec<f32> = (0..kk * nn).map(|_| rng.gauss() as f32).collect();
+
+    let lx = xla::Literal::vec1(&x).reshape(&[mm as i64, kk as i64]).unwrap();
+    let lw = xla::Literal::vec1(&w).reshape(&[kk as i64, nn as i64]).unwrap();
+    let got = exe.run_f32(&[lx, lw]).unwrap();
+    assert_eq!(got.len(), mm * nn);
+
+    // Rust mirror of kernels/cim_matmul.py::cim_linear at 6b/6b.
+    let bits = 6u32;
+    let qmax = (1i64 << (bits - 1)) - 1;
+    let maxabs = |v: &[f32]| v.iter().fold(0f32, |m, &x| m.max(x.abs())).max(1e-6);
+    let sx = maxabs(&x) / qmax as f32;
+    let sw = maxabs(&w) / qmax as f32;
+    let q = |v: f32, s: f32| ((v / s).round() as i64).clamp(-qmax - 1, qmax) as f64;
+    let mut want = vec![0f64; mm * nn];
+    for i in 0..mm {
+        for j in 0..nn {
+            let mut acc = 0f64;
+            for t in 0..kk {
+                acc += q(x[i * kk + t], sx) * q(w[t * nn + j], sw);
+            }
+            want[i * nn + j] = acc * (sx as f64) * (sw as f64);
+        }
+    }
+    for (idx, (g, e)) in got.iter().zip(&want).enumerate() {
+        assert!(
+            ((*g as f64) - e).abs() < 1e-3,
+            "mismatch at {idx}: pjrt {g} vs rust {e}"
+        );
+    }
+}
+
+#[test]
+fn vit_fp_artifact_predicts_eval_set_well() {
+    let Some(dir) = artifacts_dir() else { return };
+    let m = Manifest::load(&dir).unwrap();
+    let eval = EvalSet::load(&dir).unwrap();
+    let rt = Runtime::cpu().unwrap();
+    let exe = VitExecutable::new(&rt, m.get("vit_fp_b16").unwrap()).unwrap();
+    assert!(!exe.is_cim);
+
+    let count = 32.min(eval.n);
+    let w = eval.image_floats();
+    let mut correct = 0usize;
+    let mut done = 0;
+    while done < count {
+        let b = exe.batch.min(count - done);
+        let mut flat = vec![0f32; exe.batch * w];
+        for i in 0..b {
+            flat[i * w..(i + 1) * w].copy_from_slice(eval.image_slice(done + i));
+        }
+        let logits = exe.infer(&flat, 0, 0.0, 0.0).unwrap();
+        let preds = exe.predict(&logits);
+        for i in 0..b {
+            if preds[i] == eval.labels[done + i] as usize {
+                correct += 1;
+            }
+        }
+        done += b;
+    }
+    let acc = correct as f64 / count as f64;
+    // Trainer reported ~99%; through the AOT round-trip it must stay high.
+    assert!(acc > 0.85, "fp artifact accuracy {acc} over {count} images");
+}
+
+/// Cross-language contract: rust's kernel_noise_sigma must equal python's
+/// output_noise_sigma on the vector grid the manifest carries.
+#[test]
+fn noise_bridge_vectors_match() {
+    let Some(dir) = artifacts_dir() else { return };
+    let text = std::fs::read_to_string(dir.join("manifest.json")).unwrap();
+    let j = cr_cim::util::json::parse(&text).unwrap();
+    let Some(bridge) = j.get_path("noise_bridge").and_then(|b| b.as_arr()) else {
+        eprintln!("skipping: manifest has no noise_bridge (old artifacts)");
+        return;
+    };
+    assert!(!bridge.is_empty());
+    for entry in bridge {
+        let g = |k: &str| entry.get_path(k).and_then(|v| v.as_f64()).unwrap();
+        let k = g("k") as usize;
+        let (a, w) = (g("a_bits") as u32, g("w_bits") as u32);
+        let py_rep = g("replication") as usize;
+        let py_sigma = g("sigma_factor");
+        assert_eq!(
+            cr_cim::coordinator::sac::row_replication(k),
+            py_rep,
+            "replication mismatch at k={k}"
+        );
+        let rs_sigma = cr_cim::coordinator::sac::kernel_noise_sigma(k, a, w, 1.0);
+        assert!(
+            (rs_sigma - py_sigma).abs() / py_sigma < 1e-9,
+            "sigma mismatch at k={k} a={a} w={w}: rust {rs_sigma} python {py_sigma}"
+        );
+    }
+}
+
+#[test]
+fn cim_artifact_noise_inputs_behave() {
+    let Some(dir) = artifacts_dir() else { return };
+    let m = Manifest::load(&dir).unwrap();
+    let eval = EvalSet::load(&dir).unwrap();
+    let rt = Runtime::cpu().unwrap();
+    let exe = VitExecutable::new(&rt, m.get("vit_cim_b1").unwrap()).unwrap();
+    assert!(exe.is_cim);
+
+    let img = eval.image_slice(0);
+    // Same seed, same sigma → identical logits.
+    let a = exe.infer(img, 7, 0.5, 0.5).unwrap();
+    let b = exe.infer(img, 7, 0.5, 0.5).unwrap();
+    assert_eq!(a, b, "same-seed inference must be deterministic");
+    // Different seed → different noise.
+    let c = exe.infer(img, 8, 0.5, 0.5).unwrap();
+    assert_ne!(a, c, "seed must drive the injected read noise");
+    // Zero noise is argmax-stable vs small noise on most images.
+    let z = exe.infer(img, 1, 0.0, 0.0).unwrap();
+    assert_eq!(z.len(), exe.num_classes);
+}
