@@ -56,6 +56,7 @@ fn main() {
     tiny.active_rows = 256;
     tiny.rows = 256;
     tiny.cols = 24;
+    tiny.threads = 1;
     let mut m = CimMacro::new(&tiny).unwrap();
     let mut wrng = Rng::new(2);
     let w: Vec<Vec<i32>> = (0..256)
@@ -66,6 +67,53 @@ fn main() {
     suite.bench_throughput("macro matvec 256x6 @4b (ops)", (2 * 256 * 6) as f64, || {
         black_box(m.matvec(black_box(&x), 4, CbMode::Off).unwrap());
     });
+
+    // Column-parallel engine: serial vs parallel matvec on a full-scale
+    // tile (1088×78 die, 13 outputs × 6b planes, 1024 active rows) — the
+    // §Perf headline for this pass. Determinism contract: the parallel
+    // run produces bit-identical outputs to the serial one.
+    let full = MacroParams::default();
+    let w_full: Vec<Vec<i32>> = (0..1024)
+        .map(|_| (0..13).map(|_| wrng.below(63) as i32 - 31).collect())
+        .collect();
+    let x_full: Vec<i32> = (0..1024).map(|_| wrng.below(63) as i32 - 31).collect();
+    let ops_full = (2 * 1024 * 13 * 6 * 6) as f64; // 1b-normalized
+    let mut m_ser = CimMacro::new(&full.clone().with_threads(1)).unwrap();
+    m_ser.load_weights(&w_full, 6).unwrap();
+    let serial_ns = suite
+        .bench_throughput("macro matvec 1024x13 @6b serial (1b ops)", ops_full, || {
+            black_box(m_ser.matvec(black_box(&x_full), 6, CbMode::Off).unwrap());
+        })
+        .median_ns();
+    let mut m_par = CimMacro::new(&full.clone().with_threads(threads)).unwrap();
+    m_par.load_weights(&w_full, 6).unwrap();
+    let par_ns = suite
+        .bench_throughput(
+            &format!("macro matvec 1024x13 @6b {threads}T (1b ops)"),
+            ops_full,
+            || {
+                black_box(m_par.matvec(black_box(&x_full), 6, CbMode::Off).unwrap());
+            },
+        )
+        .median_ns();
+    let xs_batch: Vec<Vec<i32>> = (0..16)
+        .map(|_| (0..1024).map(|_| wrng.below(63) as i32 - 31).collect())
+        .collect();
+    suite.bench_throughput(
+        &format!("macro matvec_batch 16 vecs {threads}T (1b ops)"),
+        ops_full * 16.0,
+        || {
+            black_box(m_par.matvec_batch(black_box(&xs_batch), 6, CbMode::Off).unwrap());
+        },
+    );
+    suite.note(
+        "matvec_parallel_speedup",
+        cr_cim::util::json::Json::num(serial_ns / par_ns.max(1e-9)),
+    );
+    println!(
+        "matvec parallel speedup at {threads} threads: {:.2}x",
+        serial_ns / par_ns.max(1e-9)
+    );
 
     // Coordinator: plan evaluation over ViT-small.
     let sched = Scheduler::new(&params);

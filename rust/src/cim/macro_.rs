@@ -13,7 +13,19 @@
 //! column model (mismatch, nonlinearity, kT/C, comparator noise, optional
 //! majority voting), so layer-level accuracy experiments see the true
 //! hardware error statistics.
+//!
+//! **Execution model (column-parallel engine).** The chip converts all
+//! used columns in the same cycle, so the simulator fans the
+//! `n_out × w_bits` column conversions across a worker pool
+//! ([`parallel_map_mut`]). Every column draws noise from its *owned*
+//! substream keyed by (die seed, column index, conversion counter), so
+//! the output is bit-identical at any `MacroParams::threads` setting —
+//! the determinism contract the Monte-Carlo sweeps rely on. Within a
+//! column, conversions run in activation-bit order per vector, exactly
+//! the per-column sequence the serial engine produced.
 
+use crate::util::pool::parallel_map_mut;
+#[cfg(test)]
 use crate::util::rng::Rng;
 
 use super::column::Column;
@@ -40,7 +52,6 @@ pub struct CimMacro {
     energy: EnergyModel,
     /// Loaded weight configuration.
     loaded: Option<LoadedWeights>,
-    rng: Rng,
 }
 
 #[derive(Clone, Debug)]
@@ -49,6 +60,12 @@ struct LoadedWeights {
     n_out: usize,
     w_bits: u32,
 }
+
+/// Below this many conversions per call the scoped-thread spawn/join cost
+/// outweighs the conversion work, so the engine runs serially. Outputs
+/// are identical either way (the determinism contract), only wall time
+/// changes.
+const PARALLEL_MIN_CONVERSIONS: u64 = 256;
 
 impl CimMacro {
     pub fn new(params: &MacroParams) -> Result<Self, String> {
@@ -61,7 +78,6 @@ impl CimMacro {
             columns,
             energy: EnergyModel::cr_cim(params),
             loaded: None,
-            rng: Rng::new(params.seed ^ 0xACC0_57A7E),
         })
     }
 
@@ -76,7 +92,6 @@ impl CimMacro {
             columns,
             energy: EnergyModel::cr_cim(params),
             loaded: None,
-            rng: Rng::new(params.seed ^ 0xACC0_57A7E),
         })
     }
 
@@ -97,6 +112,9 @@ impl CimMacro {
         w: &[Vec<i32>],
         w_bits: u32,
     ) -> Result<(), String> {
+        if w_bits == 0 || w_bits > 31 {
+            return Err(format!("w_bits {w_bits} out of range 1..=31"));
+        }
         let rows = w.len();
         if rows == 0 || rows > self.params.active_rows {
             return Err(format!(
@@ -137,66 +155,124 @@ impl CimMacro {
     /// Run a signed activation vector through the loaded tile.
     /// `x[r]` must fit in `a_bits` two's complement.
     pub fn matvec(&mut self, x: &[i32], a_bits: u32, mode: CbMode) -> Result<MacrunResult, String> {
+        let mut results = self.matvec_batch(std::slice::from_ref(&x), a_bits, mode)?;
+        Ok(results.pop().expect("batch of one yields one result"))
+    }
+
+    /// Run a batch of activation vectors through the loaded tile,
+    /// amortizing bit-plane construction and worker fan-out over the whole
+    /// batch. Column conversions fan out across
+    /// `self.params.effective_threads()` workers; because each column owns
+    /// its noise substream, the results are bit-identical to calling
+    /// [`matvec`](Self::matvec) once per vector, at any thread count.
+    pub fn matvec_batch<V: AsRef<[i32]>>(
+        &mut self,
+        xs: &[V],
+        a_bits: u32,
+        mode: CbMode,
+    ) -> Result<Vec<MacrunResult>, String> {
         let loaded = self
             .loaded
             .clone()
             .ok_or_else(|| "no weights loaded".to_string())?;
-        if x.len() != loaded.rows {
-            return Err(format!(
-                "activation length {} != loaded rows {}",
-                x.len(),
-                loaded.rows
-            ));
+        if a_bits == 0 || a_bits > 31 {
+            return Err(format!("a_bits {a_bits} out of range 1..=31"));
         }
         let lo = -(1i32 << (a_bits - 1));
         let hi = (1i32 << (a_bits - 1)) - 1;
-        for &v in x {
-            if v < lo || v > hi {
-                return Err(format!("activation {v} exceeds {a_bits}-bit range"));
+        for (v, x) in xs.iter().enumerate() {
+            let x = x.as_ref();
+            if x.len() != loaded.rows {
+                return Err(format!(
+                    "activation {v} length {} != loaded rows {}",
+                    x.len(),
+                    loaded.rows
+                ));
             }
-        }
-        let n = self.params.active_rows;
-        let used_cols = Self::columns_needed(loaded.n_out, loaded.w_bits);
-        let mut y = vec![0i64; loaded.n_out];
-        let mut conversions = 0u64;
-
-        // Bit-serial input cycles.
-        for a in 0..a_bits {
-            let a_weight: i64 = if a == a_bits - 1 {
-                -(1i64 << a)
-            } else {
-                1i64 << a
-            };
-            // Input bit plane for this cycle.
-            let mut in_bits = vec![false; n];
-            for (r, &v) in x.iter().enumerate() {
-                let u = (v as i64 & ((1i64 << a_bits) - 1)) as u64;
-                in_bits[r] = (u >> a) & 1 == 1;
-            }
-            // All used columns convert in parallel (same cycle).
-            for j in 0..loaded.n_out {
-                for b in 0..loaded.w_bits {
-                    let col = j * loaded.w_bits as usize + b as usize;
-                    let w_weight: i64 = if b == loaded.w_bits - 1 {
-                        -(1i64 << b)
-                    } else {
-                        1i64 << b
-                    };
-                    let conv = self.columns[col].mac_convert(&in_bits, mode, &mut self.rng);
-                    conversions += 1;
-                    y[j] += a_weight * w_weight * conv.code as i64;
+            for &val in x {
+                if val < lo || val > hi {
+                    return Err(format!("activation {val} exceeds {a_bits}-bit range"));
                 }
             }
         }
-        let _ = used_cols; // columns convert in parallel; latency is per cycle
+        let n = self.params.active_rows;
+        let w_bits = loaded.w_bits;
+        let used_cols = Self::columns_needed(loaded.n_out, w_bits);
+        // Bit planes for every (vector, activation bit), built once for
+        // the whole batch and shared read-only by all workers.
+        let planes: Vec<Vec<Vec<bool>>> = xs
+            .iter()
+            .map(|x| {
+                let x = x.as_ref();
+                (0..a_bits)
+                    .map(|a| {
+                        let mut plane = vec![false; n];
+                        for (r, &v) in x.iter().enumerate() {
+                            let u = (v as i64 & ((1i64 << a_bits) - 1)) as u64;
+                            plane[r] = (u >> a) & 1 == 1;
+                        }
+                        plane
+                    })
+                    .collect()
+            })
+            .collect();
+        let planes = &planes;
+        let total_conversions = used_cols as u64 * a_bits as u64 * xs.len() as u64;
+        let threads = if total_conversions < PARALLEL_MIN_CONVERSIONS {
+            1
+        } else {
+            self.params.effective_threads()
+        };
+        // Fan the column conversions across the worker pool: each physical
+        // column runs its full bit-serial schedule for the whole batch.
+        let partials: Vec<Vec<i64>> =
+            parallel_map_mut(&mut self.columns[..used_cols], threads, |c, col| {
+                let b = (c % w_bits as usize) as u32;
+                let w_weight: i64 = if b == w_bits - 1 { -(1i64 << b) } else { 1i64 << b };
+                planes
+                    .iter()
+                    .map(|vec_planes| {
+                        let mut acc = 0i64;
+                        for (a, plane) in vec_planes.iter().enumerate() {
+                            let a_weight: i64 = if a as u32 == a_bits - 1 {
+                                -(1i64 << a)
+                            } else {
+                                1i64 << a
+                            };
+                            let conv = col.mac_convert_owned(plane, mode);
+                            acc += a_weight * conv.code as i64;
+                        }
+                        w_weight * acc
+                    })
+                    .collect()
+            });
+        let conversions_per_vec = used_cols as u64 * a_bits as u64;
         let e_conv = self.energy.conversion_energy_pj(mode);
         let latency = a_bits as f64 * self.params.conversion_latency_ns(mode);
-        Ok(MacrunResult { y, conversions, energy_pj: e_conv * conversions as f64, latency_ns: latency })
+        let results = (0..xs.len())
+            .map(|v| {
+                let mut y = vec![0i64; loaded.n_out];
+                for (c, per_vec) in partials.iter().enumerate() {
+                    y[c / w_bits as usize] += per_vec[v];
+                }
+                MacrunResult {
+                    y,
+                    conversions: conversions_per_vec,
+                    energy_pj: e_conv * conversions_per_vec as f64,
+                    latency_ns: latency,
+                }
+            })
+            .collect();
+        Ok(results)
     }
 
     /// Exact integer reference for the loaded tile (periphery bypass).
+    /// An empty weight matrix has no outputs.
     pub fn matvec_exact(&self, w: &[Vec<i32>], x: &[i32]) -> Vec<i64> {
-        let n_out = w[0].len();
+        let n_out = match w.first() {
+            Some(row) => row.len(),
+            None => return Vec::new(),
+        };
         let mut y = vec![0i64; n_out];
         for (r, wrow) in w.iter().enumerate() {
             for (j, &wv) in wrow.iter().enumerate() {
@@ -223,7 +299,13 @@ impl CimMacro {
         mode: CbMode,
         trials: usize,
     ) -> Result<f64, String> {
+        if trials == 0 {
+            return Err("calibrate_output_noise: trials must be > 0".to_string());
+        }
         let exact = self.matvec_exact(w, x);
+        if exact.is_empty() {
+            return Err("calibrate_output_noise: empty weight matrix".to_string());
+        }
         let mut sq = 0.0;
         let mut count = 0usize;
         for _ in 0..trials {
@@ -234,7 +316,7 @@ impl CimMacro {
                 count += 1;
             }
         }
-        Ok((sq / count.max(1) as f64).sqrt())
+        Ok((sq / count as f64).sqrt())
     }
 }
 
@@ -357,6 +439,78 @@ mod tests {
             // (~N·2^(a+w)/4) but generally nonzero.
             assert!(err < 2000.0, "err={err} got={g} want={e}");
         }
+    }
+
+    #[test]
+    fn matvec_bit_identical_across_thread_counts() {
+        let mut base = tiny_params();
+        base.sigma_cmp_lsb = 1.1; // real noise, so determinism is nontrivial
+        let (w, _) = tile(256, 3, 4, 11);
+        // Batch of 8: 12 cols × 4 bits × 8 = 384 conversions, above the
+        // serial-fallback threshold, so the worker pool actually engages.
+        let xs: Vec<Vec<i32>> = (0..8).map(|s| tile(256, 3, 4, 50 + s).1).collect();
+        let run = |threads: usize| {
+            let p = base.clone().with_threads(threads);
+            let mut m = CimMacro::new(&p).unwrap();
+            m.load_weights(&w, 4).unwrap();
+            m.matvec_batch(&xs, 4, CbMode::On)
+                .unwrap()
+                .into_iter()
+                .map(|r| r.y)
+                .collect::<Vec<_>>()
+        };
+        let serial = run(1);
+        for threads in [2usize, 4, 8] {
+            assert_eq!(run(threads), serial, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn matvec_batch_matches_serial_matvec_calls() {
+        let mut p = tiny_params();
+        p.sigma_cmp_lsb = 1.1;
+        p.threads = 4;
+        let (w, _) = tile(200, 3, 4, 21);
+        let xs: Vec<Vec<i32>> = (0..5).map(|s| tile(200, 3, 4, 100 + s).1).collect();
+        let mut m1 = CimMacro::new(&p).unwrap();
+        m1.load_weights(&w, 4).unwrap();
+        let batch = m1.matvec_batch(&xs, 4, CbMode::Off).unwrap();
+        let mut m2 = CimMacro::new(&p).unwrap();
+        m2.load_weights(&w, 4).unwrap();
+        for (v, x) in xs.iter().enumerate() {
+            let one = m2.matvec(x, 4, CbMode::Off).unwrap();
+            assert_eq!(batch[v].y, one.y, "vector {v}");
+            assert_eq!(batch[v].conversions, one.conversions);
+        }
+    }
+
+    #[test]
+    fn matvec_exact_handles_empty_weight_matrix() {
+        let p = tiny_params();
+        let m = CimMacro::ideal(&p).unwrap();
+        assert_eq!(m.matvec_exact(&[], &[]), Vec::<i64>::new());
+    }
+
+    #[test]
+    fn rejects_oversized_bit_widths() {
+        let p = tiny_params();
+        let mut m = CimMacro::ideal(&p).unwrap();
+        let (w, x) = tile(100, 2, 3, 1);
+        assert!(m.load_weights(&w, 0).is_err());
+        assert!(m.load_weights(&[vec![]], 40).is_err());
+        m.load_weights(&w, 3).unwrap();
+        assert!(m.matvec(&x, 0, CbMode::Off).is_err());
+        assert!(m.matvec(&x, 32, CbMode::Off).is_err());
+    }
+
+    #[test]
+    fn calibrate_rejects_zero_trials_and_empty_weights() {
+        let p = tiny_params();
+        let mut m = CimMacro::ideal(&p).unwrap();
+        let (w, x) = tile(100, 2, 3, 1);
+        m.load_weights(&w, 3).unwrap();
+        assert!(m.calibrate_output_noise(&w, &x, 3, CbMode::Off, 0).is_err());
+        assert!(m.calibrate_output_noise(&[], &x, 3, CbMode::Off, 4).is_err());
     }
 
     #[test]

@@ -10,9 +10,11 @@ use crate::metrics::csnr::{measure_csnr, CsnrEnsemble};
 use crate::metrics::sqnr::sqnr_db;
 use crate::metrics::transfer::{characterize, CharacterizeOpts};
 use crate::util::pool::parallel_map;
+use crate::util::rng::Rng;
 use crate::util::stats::Moments;
 
 use super::column::Column;
+use super::macro_::CimMacro;
 use super::params::{CbMode, MacroParams};
 
 /// Per-die measurement summary.
@@ -72,6 +74,54 @@ pub fn sweep_dies(
             csnr_db: csnr.csnr_db,
         }
     })
+}
+
+/// Macro-level output-noise Monte-Carlo: for `dies` mismatch seeds, load
+/// a shared multi-bit tile and measure output-referred noise through the
+/// column-parallel matvec engine. Parallelism is across dies (the inner
+/// engine runs single-threaded per die so the two pools don't multiply),
+/// and results are deterministic at any `threads` because every die gets
+/// its own seed and every column its own substream.
+pub fn sweep_macro_noise(
+    base: &MacroParams,
+    mode: CbMode,
+    dies: usize,
+    a_bits: u32,
+    w_bits: u32,
+    trials: usize,
+    threads: usize,
+) -> Result<Vec<f64>, String> {
+    if a_bits == 0 || a_bits > 31 {
+        return Err(format!("a_bits {a_bits} out of range 1..=31"));
+    }
+    if w_bits == 0 || w_bits > 31 {
+        return Err(format!("w_bits {w_bits} out of range 1..=31"));
+    }
+    let n_out = base.cols / w_bits as usize;
+    if n_out == 0 {
+        return Err(format!("w_bits {w_bits} exceeds macro columns {}", base.cols));
+    }
+    let rows = base.active_rows;
+    let mut trng = Rng::new(base.seed ^ 0x711E_5EED);
+    let lo = -(1i32 << (w_bits - 1));
+    let hi = (1i32 << (w_bits - 1)) - 1;
+    let span = (hi - lo + 1) as u64;
+    let w: Vec<Vec<i32>> = (0..rows)
+        .map(|_| (0..n_out).map(|_| lo + trng.below(span) as i32).collect())
+        .collect();
+    let a_lo = -(1i32 << (a_bits - 1));
+    let a_span = (1u64 << a_bits).max(1);
+    let x: Vec<i32> = (0..rows).map(|_| a_lo + trng.below(a_span) as i32).collect();
+    let results = parallel_map(dies, threads, |i| {
+        let params = base
+            .clone()
+            .with_seed(base.seed.wrapping_add(1 + i as u64 * 7919))
+            .with_threads(1);
+        let mut mac = CimMacro::new(&params)?;
+        mac.load_weights(&w, w_bits)?;
+        mac.calibrate_output_noise(&w, &x, a_bits, mode, trials)
+    });
+    results.into_iter().collect()
 }
 
 /// Lot summary: yield plus metric distributions.
@@ -165,6 +215,25 @@ mod tests {
         let loose = YieldSpec { max_inl_lsb: 10.0, min_sqnr_db: 0.0, min_csnr_db: 0.0 };
         assert_eq!(summarize(&results, &tight).yield_fraction, 0.0);
         assert_eq!(summarize(&results, &loose).yield_fraction, 1.0);
+    }
+
+    #[test]
+    fn macro_noise_sweep_runs_and_is_deterministic() {
+        let mut p = MacroParams::default();
+        p.adc_bits = 6;
+        p.active_rows = 64;
+        p.rows = 64;
+        p.cols = 8;
+        let a = sweep_macro_noise(&p, CbMode::Off, 3, 2, 2, 4, 1).unwrap();
+        let b = sweep_macro_noise(&p, CbMode::Off, 3, 2, 2, 4, 4).unwrap();
+        assert_eq!(a.len(), 3);
+        assert_eq!(a, b, "die sweep must not depend on thread count");
+        assert!(a.iter().all(|s| s.is_finite() && *s >= 0.0), "{a:?}");
+        // Bad geometry is rejected, not panicked on.
+        assert!(sweep_macro_noise(&p, CbMode::Off, 1, 2, 9, 2, 1).is_err());
+        assert!(sweep_macro_noise(&p, CbMode::Off, 1, 0, 2, 2, 1).is_err());
+        assert!(sweep_macro_noise(&p, CbMode::Off, 1, 2, 0, 2, 1).is_err());
+        assert!(sweep_macro_noise(&p, CbMode::Off, 1, 40, 2, 2, 1).is_err());
     }
 
     #[test]

@@ -107,6 +107,13 @@ pub struct MacroParams {
     pub temperature_k: f64,
     /// Mismatch / noise Monte-Carlo master seed.
     pub seed: u64,
+
+    // ---- simulation execution (not a circuit property) ----
+    /// Worker threads for the column-parallel matvec engine. 0 = auto
+    /// (one per available core, capped). Results are bit-identical at any
+    /// thread count: every column owns its noise substream, keyed by
+    /// (die seed, column index, conversion counter).
+    pub threads: usize,
 }
 
 impl Default for MacroParams {
@@ -144,6 +151,7 @@ impl Default for MacroParams {
             e_logic_pj: 0.60,
             temperature_k: 300.0,
             seed: 0x5EED_C100,
+            threads: 0,
         }
     }
 }
@@ -239,6 +247,21 @@ impl MacroParams {
         self.seed = seed;
         self
     }
+
+    /// Set the matvec worker-thread count (0 = auto).
+    pub fn with_threads(mut self, threads: usize) -> Self {
+        self.threads = threads;
+        self
+    }
+
+    /// Resolved worker-thread count for the matvec engine.
+    pub fn effective_threads(&self) -> usize {
+        if self.threads == 0 {
+            crate::util::pool::default_threads()
+        } else {
+            self.threads
+        }
+    }
 }
 
 #[cfg(test)]
@@ -289,6 +312,16 @@ mod tests {
         let mut p = MacroParams::default();
         p.mv_last_bits = 11;
         assert!(p.validate().is_err());
+    }
+
+    #[test]
+    fn thread_knob_resolves() {
+        let p = MacroParams::default();
+        assert_eq!(p.threads, 0);
+        assert!(p.effective_threads() >= 1);
+        assert_eq!(p.clone().with_threads(3).effective_threads(), 3);
+        // The knob is an execution parameter, not a circuit property.
+        assert!(p.with_threads(7).validate().is_ok());
     }
 
     #[test]

@@ -8,6 +8,8 @@
 //!                   batch sizes
 //! - [`ledger`]    — energy/latency/occupancy accounting
 //! - [`server`]    — std-TCP line-JSON inference service (request path)
+//! - [`shard`]     — column-sharded parallel macro execution + the
+//!                   macro-simulator batch executor for the serving path
 
 pub mod batcher;
 pub mod ledger;
@@ -15,6 +17,8 @@ pub mod router;
 pub mod sac;
 pub mod scheduler;
 pub mod server;
+pub mod shard;
 
 pub use sac::{NoiseCalibration, PlanCost};
 pub use scheduler::{Scheduler, TilePlan};
+pub use shard::{MacroShards, SimExecutor};

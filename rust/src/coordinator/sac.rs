@@ -30,8 +30,12 @@ pub struct NoiseCalibration {
 }
 
 impl NoiseCalibration {
-    /// Run the calibration measurement on column 0 of the die.
+    /// Run the calibration measurement on column 0 of the die. `threads`
+    /// follows the engine convention: 0 = use `params.effective_threads()`
+    /// (the same worker pool the column-parallel matvec engine uses);
+    /// either way the measurement is deterministic in the die seed.
     pub fn measure(params: &MacroParams, threads: usize) -> Result<Self, String> {
+        let threads = if threads == 0 { params.effective_threads() } else { threads };
         let col = crate::cim::Column::new(params, 0)?;
         let ens = CsnrEnsemble::default();
         let on = measure_csnr(&col, CbMode::On, &ens, threads);
@@ -196,6 +200,15 @@ mod tests {
         assert!((c.sigma_cb_on - 0.58).abs() < 0.15, "σ_on = {}", c.sigma_cb_on);
         assert!(c.sigma_cb_off > c.sigma_cb_on * 1.3, "off {} on {}", c.sigma_cb_off, c.sigma_cb_on);
         assert!(c.csnr_on.csnr_db > c.csnr_off.csnr_db + 2.0);
+    }
+
+    #[test]
+    fn measure_auto_threads_matches_explicit() {
+        let p = MacroParams::default();
+        let a = NoiseCalibration::measure(&p, 0).unwrap();
+        let b = NoiseCalibration::measure(&p, 2).unwrap();
+        assert_eq!(a.sigma_cb_on.to_bits(), b.sigma_cb_on.to_bits());
+        assert_eq!(a.sigma_cb_off.to_bits(), b.sigma_cb_off.to_bits());
     }
 
     #[test]

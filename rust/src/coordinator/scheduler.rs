@@ -44,16 +44,27 @@ impl TilePlan {
     }
 }
 
-/// The scheduler: stateless; all methods derive from macro parameters.
+/// The scheduler: stateless; all methods derive from macro parameters
+/// plus the shard count (how many physical macros convert in parallel).
 #[derive(Clone, Debug)]
 pub struct Scheduler {
     pub params: MacroParams,
+    /// Parallel macro shards serving column tiles. Energy and conversion
+    /// counts are shard-independent (the same work happens somewhere);
+    /// latency divides across shards because column tiles of the same
+    /// layer convert concurrently.
+    pub shards: usize,
     energy: EnergyModel,
 }
 
 impl Scheduler {
     pub fn new(params: &MacroParams) -> Self {
-        Scheduler { params: params.clone(), energy: EnergyModel::cr_cim(params) }
+        Scheduler { params: params.clone(), shards: 1, energy: EnergyModel::cr_cim(params) }
+    }
+
+    /// A scheduler that maps column tiles across `shards` parallel macros.
+    pub fn with_shards(params: &MacroParams, shards: usize) -> Self {
+        Scheduler { params: params.clone(), shards: shards.max(1), energy: EnergyModel::cr_cim(params) }
     }
 
     /// Row tiles needed for a reduction dimension `k`.
@@ -77,8 +88,10 @@ impl Scheduler {
         let conversions = rt * cols_used * op.a_bits as u64 * shape.m as u64;
         // Latency: serial over (row tiles × column tiles × a_bits) cycles
         // per vector; vectors stream (one conversion cycle each, weights
-        // stay loaded while m streams).
-        let cycles = rt * ct * op.a_bits as u64 * shape.m as u64;
+        // stay loaded while m streams). Column tiles spread across macro
+        // shards, so only ⌈ct / shards⌉ of them serialize.
+        let ct_serial = ct.div_ceil(self.shards.max(1) as u64);
+        let cycles = rt * ct_serial * op.a_bits as u64 * shape.m as u64;
         let t_cycle = self.params.conversion_latency_ns(op.cb);
         let e_conv = self.energy.conversion_energy_pj(op.cb);
         TilePlan {
@@ -129,6 +142,22 @@ mod tests {
         assert_eq!(more_m.conversions, 2 * base.conversions);
         let more_k = s.plan_linear(&shape(2048, 13, 10), op);
         assert_eq!(more_k.conversions, 2 * base.conversions);
+    }
+
+    #[test]
+    fn shards_divide_latency_but_not_energy() {
+        let p = MacroParams::default();
+        let op = PrecisionPlan::paper_sac().mlp; // 6b: 13 outs/tile
+        let sh = shape(96, 52, 10); // 52·6 = 312 planes = 4 column tiles
+        let s1 = Scheduler::new(&p).plan_linear(&sh, op);
+        let s4 = Scheduler::with_shards(&p, 4).plan_linear(&sh, op);
+        assert_eq!(s1.conversions, s4.conversions);
+        assert!((s1.energy_pj - s4.energy_pj).abs() < 1e-9);
+        assert!((s1.latency_ns / s4.latency_ns - 4.0).abs() < 1e-9, "4 shards must 4x the tiles");
+        // More shards than tiles saturates at one serial tile.
+        let s9 = Scheduler::with_shards(&p, 9).plan_linear(&sh, op);
+        assert!((s9.latency_ns - s4.latency_ns).abs() < 1e-9);
+        assert_eq!(Scheduler::with_shards(&p, 0).shards, 1);
     }
 
     #[test]

@@ -12,7 +12,7 @@
 //! executable, accounts costs in the Ledger, and writes responses back
 //! through per-connection response channels.
 
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet};
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
@@ -60,7 +60,15 @@ pub struct Server {
     outbox: Outbox,
     ledger: Arc<Mutex<Ledger>>,
     shutdown: Arc<AtomicBool>,
+    /// Connection ids (outbox keys). Separate from `next_req`: sharing one
+    /// counter let request ids collide with another connection's id range.
     next_conn: AtomicU64,
+    /// Internal queue-order request ids.
+    next_req: AtomicU64,
+    /// Open connections. The executor only stages responses for live
+    /// connections, so a client that disconnects with requests in flight
+    /// cannot leak outbox entries (the old leak's remaining race).
+    live_conns: Mutex<HashSet<u64>>,
     batcher: Batcher,
 }
 
@@ -72,8 +80,32 @@ impl Server {
             ledger: Arc::new(Mutex::new(Ledger::new())),
             shutdown: Arc::new(AtomicBool::new(false)),
             next_conn: AtomicU64::new(1),
+            next_req: AtomicU64::new(1),
+            live_conns: Mutex::new(HashSet::new()),
             batcher: Batcher::new(cfg.batch_sizes.clone(), cfg.max_wait),
         }
+    }
+
+    /// Register a new connection and return its id. Responses are only
+    /// staged for open connections; close with [`close_conn`](Self::close_conn).
+    pub fn open_conn(&self) -> u64 {
+        let id = self.next_conn.fetch_add(1, Ordering::Relaxed);
+        self.live_conns.lock().unwrap().insert(id);
+        id
+    }
+
+    /// Close a connection: stop staging its responses, drop anything
+    /// already staged, and purge its queued (unserved) requests. Lock
+    /// order matches `executor_step` (live before outbox) so the two
+    /// cannot interleave into a leaked entry.
+    pub fn close_conn(&self, conn_id: u64) {
+        {
+            let mut live = self.live_conns.lock().unwrap();
+            live.remove(&conn_id);
+            let mut outbox = self.outbox.lock().unwrap();
+            outbox.remove(&conn_id);
+        }
+        self.pending.lock().unwrap().retain(|r| r.payload.conn_id != conn_id);
     }
 
     pub fn ledger_json(&self) -> Json {
@@ -85,8 +117,10 @@ impl Server {
     }
 
     /// Enqueue a request (used by the connection handler and by tests).
+    /// Responses are staged only while `payload.conn_id` is a live
+    /// connection (see [`open_conn`](Self::open_conn)).
     pub fn enqueue(&self, payload: InferencePayload) {
-        let id = self.next_conn.fetch_add(1, Ordering::Relaxed);
+        let id = self.next_req.fetch_add(1, Ordering::Relaxed);
         self.pending.lock().unwrap().push(Request {
             id,
             payload,
@@ -115,9 +149,10 @@ impl Server {
                     wall,
                 );
                 let nc = exec.num_classes();
-                let mut outbox = self.outbox.lock().unwrap();
-                for (req, lg) in batch.requests.iter().zip(&logits) {
-                    let pred = crate::runtime::client::argmax_rows(lg, nc)[0];
+                self.stage_responses(batch.requests.iter().zip(&logits).map(|(req, lg)| {
+                    // Built eagerly (collected before locking) so JSON
+                    // serialization never runs under the outbox lock.
+                    let pred = crate::util::stats::argmax_rows(lg, nc)[0];
                     let mut o = Json::obj();
                     o.set("id", Json::num(req.payload.client_req_id));
                     o.set("pred", Json::num(pred as f64));
@@ -127,36 +162,55 @@ impl Server {
                         Json::num(t0.duration_since(req.arrived).as_secs_f64() * 1e6),
                     );
                     o.set("batch", Json::num(batch.exec_size as f64));
-                    outbox
-                        .entry(req.payload.conn_id)
-                        .or_default()
-                        .push(Json::Obj(o).to_string());
-                }
+                    (req.payload.conn_id, Json::Obj(o).to_string())
+                }));
             }
             Err(e) => {
-                let mut outbox = self.outbox.lock().unwrap();
-                for req in &batch.requests {
+                self.stage_responses(batch.requests.iter().map(|req| {
                     let mut o = Json::obj();
                     o.set("id", Json::num(req.payload.client_req_id));
                     o.set("error", Json::str(&e));
-                    outbox
-                        .entry(req.payload.conn_id)
-                        .or_default()
-                        .push(Json::Obj(o).to_string());
-                }
+                    (req.payload.conn_id, Json::Obj(o).to_string())
+                }));
             }
         }
         served
     }
 
-    /// Drain staged responses for a connection.
+    /// Stage response lines, dropping any whose connection is no longer
+    /// live (client hung up while the batch ran). Lock order (live before
+    /// outbox) matches `close_conn`, so a connection closed concurrently
+    /// can never gain an outbox entry after its removal. Responses are
+    /// collected up front so the locks only guard HashMap pushes, not
+    /// response construction.
+    fn stage_responses(&self, responses: impl Iterator<Item = (u64, String)>) {
+        let responses: Vec<(u64, String)> = responses.collect();
+        let live = self.live_conns.lock().unwrap();
+        let mut outbox = self.outbox.lock().unwrap();
+        for (conn_id, line) in responses {
+            if live.contains(&conn_id) {
+                outbox.entry(conn_id).or_default().push(line);
+            }
+        }
+    }
+
+    /// Drain staged responses for a connection. Removes the map entry so
+    /// finished connections don't leave an empty `Vec` behind forever.
     pub fn take_responses(&self, conn_id: u64) -> Vec<String> {
-        self.outbox
-            .lock()
-            .unwrap()
-            .get_mut(&conn_id)
-            .map(std::mem::take)
-            .unwrap_or_default()
+        self.outbox.lock().unwrap().remove(&conn_id).unwrap_or_default()
+    }
+
+    /// Connections with staged (undrained) responses — leak observability.
+    pub fn staged_connections(&self) -> usize {
+        self.outbox.lock().unwrap().len()
+    }
+
+    /// One line of error JSON with the message properly escaped (raw
+    /// interpolation let a quote in the error break the wire protocol).
+    fn error_line(e: &str) -> String {
+        let mut o = Json::obj();
+        o.set("error", Json::str(e));
+        Json::Obj(o).to_string()
     }
 
     /// Parse one request line. Returns Ok(None) for control commands that
@@ -225,7 +279,15 @@ impl Server {
     }
 
     fn handle_conn(self: Arc<Self>, stream: TcpStream) {
-        let conn_id = self.next_conn.fetch_add(1_000_000, Ordering::Relaxed);
+        let conn_id = self.open_conn();
+        self.conn_loop(conn_id, stream);
+        // Whatever path exited the loop (EOF, write error, shutdown):
+        // unregister so the executor stops staging for this connection and
+        // no outbox entry can outlive it.
+        self.close_conn(conn_id);
+    }
+
+    fn conn_loop(&self, conn_id: u64, stream: TcpStream) {
         stream.set_read_timeout(Some(Duration::from_millis(5))).ok();
         let mut writer = match stream.try_clone() {
             Ok(w) => w,
@@ -259,7 +321,7 @@ impl Server {
                         }
                         Ok(None) => {}
                         Err(e) => {
-                            let _ = writeln!(writer, "{{\"error\": \"{e}\"}}");
+                            let _ = writeln!(writer, "{}", Self::error_line(&e));
                         }
                     }
                 }
@@ -269,7 +331,7 @@ impl Server {
                 Err(_) => break,
             }
         }
-        // Final flush.
+        // Final flush; the caller closes the connection afterwards.
         for resp in self.take_responses(conn_id) {
             let _ = writeln!(writer, "{resp}");
         }
@@ -329,11 +391,12 @@ mod tests {
     fn enqueue_and_execute_roundtrip() {
         let srv = test_server();
         let mut exec = FakeExec::new();
-        srv.handle_line(r#"{"id": 42, "image": [1.0, 2.0, 3.0]}"#, 7).unwrap();
+        let conn = srv.open_conn();
+        srv.handle_line(r#"{"id": 42, "image": [1.0, 2.0, 3.0]}"#, conn).unwrap();
         std::thread::sleep(Duration::from_millis(3));
         let served = srv.executor_step(&mut exec);
         assert_eq!(served, 1);
-        let resps = srv.take_responses(7);
+        let resps = srv.take_responses(conn);
         assert_eq!(resps.len(), 1);
         let j = json::parse(&resps[0]).unwrap();
         assert_eq!(j.get_path("id").unwrap().as_f64().unwrap(), 42.0);
@@ -345,12 +408,13 @@ mod tests {
     fn batches_multiple_requests() {
         let srv = test_server();
         let mut exec = FakeExec::new();
+        let conn = srv.open_conn();
         for i in 0..4 {
-            srv.handle_line(&format!(r#"{{"id": {i}, "image": [0.5]}}"#), 1).unwrap();
+            srv.handle_line(&format!(r#"{{"id": {i}, "image": [0.5]}}"#), conn).unwrap();
         }
         let served = srv.executor_step(&mut exec);
         assert_eq!(served, 4);
-        assert_eq!(srv.take_responses(1).len(), 4);
+        assert_eq!(srv.take_responses(conn).len(), 4);
         let stats = srv.ledger_json();
         assert_eq!(stats.get_path("requests").unwrap().as_f64().unwrap(), 4.0);
     }
@@ -378,6 +442,105 @@ mod tests {
         let srv = test_server();
         let mut exec = FakeExec::new();
         assert_eq!(srv.executor_step(&mut exec), 0);
+    }
+
+    #[test]
+    fn take_responses_leaves_no_empty_outbox_entries() {
+        let srv = test_server();
+        let mut exec = FakeExec::new();
+        let conns: Vec<u64> = (0..3).map(|_| srv.open_conn()).collect();
+        for &conn in &conns {
+            srv.handle_line(&format!(r#"{{"id": {conn}, "image": [1.0]}}"#), conn).unwrap();
+        }
+        std::thread::sleep(Duration::from_millis(3));
+        while srv.executor_step(&mut exec) > 0 {}
+        assert_eq!(srv.staged_connections(), 3);
+        for &conn in &conns {
+            assert_eq!(srv.take_responses(conn).len(), 1);
+        }
+        assert_eq!(srv.staged_connections(), 0, "drained connections must not leak map slots");
+        // Draining an unknown connection is a no-op, not an insertion.
+        assert!(srv.take_responses(999).is_empty());
+        assert_eq!(srv.staged_connections(), 0);
+    }
+
+    #[test]
+    fn closed_connections_never_leak_outbox_entries() {
+        let srv = test_server();
+        let mut exec = FakeExec::new();
+        // Disconnect with a request still queued: the request is purged.
+        let conn = srv.open_conn();
+        srv.handle_line(r#"{"id": 1, "image": [1.0]}"#, conn).unwrap();
+        srv.close_conn(conn);
+        std::thread::sleep(Duration::from_millis(3));
+        assert_eq!(srv.executor_step(&mut exec), 0, "queued request must be purged");
+        assert_eq!(srv.staged_connections(), 0);
+        // Disconnect racing an in-flight batch: the request executes but
+        // nothing is staged for the dead connection (the residual leak).
+        let conn2 = srv.open_conn();
+        srv.handle_line(r#"{"id": 2, "image": [1.0]}"#, conn2).unwrap();
+        srv.live_conns.lock().unwrap().remove(&conn2); // batch already formed upstream
+        std::thread::sleep(Duration::from_millis(3));
+        assert_eq!(srv.executor_step(&mut exec), 1);
+        assert_eq!(srv.staged_connections(), 0, "dead connections must not gain entries");
+    }
+
+    #[test]
+    fn error_lines_escape_hostile_messages() {
+        let e = "bad json: unexpected `\"` at line 1\nnext\t\\";
+        let line = Server::error_line(e);
+        let parsed = json::parse(&line).expect("error line must stay valid JSON");
+        assert_eq!(parsed.get_path("error").unwrap().as_str().unwrap(), e);
+        assert!(!line.contains('\n'), "wire protocol is line-delimited");
+    }
+
+    #[test]
+    fn request_ids_and_conn_ids_use_separate_counters() {
+        let srv = test_server();
+        for i in 0..5 {
+            srv.handle_line(&format!(r#"{{"id": {i}, "image": [0.1]}}"#), 1).unwrap();
+        }
+        let ids: Vec<u64> = srv.pending.lock().unwrap().iter().map(|r| r.id).collect();
+        assert_eq!(ids, vec![1, 2, 3, 4, 5]);
+        // Connection ids draw from their own sequence: enqueueing must not
+        // advance it (the seed bug let request ids land in conn id ranges).
+        assert_eq!(srv.next_conn.load(Ordering::Relaxed), 1);
+        assert_eq!(srv.next_req.load(Ordering::Relaxed), 6);
+    }
+
+    #[test]
+    fn sim_executor_serves_through_the_batch_path() {
+        use crate::coordinator::shard::SimExecutor;
+        use crate::vit::plan::OperatingPoint;
+        let mut p = MacroParams::default();
+        p.adc_bits = 6;
+        p.active_rows = 64;
+        p.rows = 64;
+        p.cols = 12;
+        let op = OperatingPoint { a_bits: 2, w_bits: 2, cb: crate::cim::params::CbMode::Off };
+        let mut exec = SimExecutor::new(&p, 64, 10, op, 2).unwrap();
+        let srv = test_server();
+        let conn = srv.open_conn();
+        for i in 0..4 {
+            let img: Vec<f32> = (0..8).map(|j| ((i + j) % 5) as f32 / 5.0).collect();
+            let body: Vec<String> = img.iter().map(|v| format!("{v}")).collect();
+            srv.handle_line(
+                &format!(r#"{{"id": {i}, "image": [{}]}}"#, body.join(", ")),
+                conn,
+            )
+            .unwrap();
+        }
+        let served = srv.executor_step(&mut exec);
+        assert_eq!(served, 4);
+        let resps = srv.take_responses(conn);
+        assert_eq!(resps.len(), 4);
+        for r in resps {
+            let j = json::parse(&r).unwrap();
+            assert!(j.get_path("pred").unwrap().as_f64().unwrap() >= 0.0);
+            assert_eq!(j.get_path("logits").unwrap().as_arr().unwrap().len(), 10);
+        }
+        let stats = srv.ledger_json();
+        assert_eq!(stats.get_path("requests").unwrap().as_f64().unwrap(), 4.0);
     }
 
     #[test]

@@ -1,0 +1,324 @@
+//! Column-sharded macro execution for the serving path.
+//!
+//! One macro holds `cols / w_bits` logical outputs per tile; a layer with
+//! more outputs (or a deployment with idle macros) splits column-wise
+//! across independent [`CimMacro`] shards that convert concurrently —
+//! exactly the parallelism the chip's floorplan offers. [`MacroShards`]
+//! owns the shard bank and stitches per-shard outputs back into full
+//! output vectors; [`SimExecutor`] wraps it in the server's
+//! [`BatchExecutor`] interface so a served batch runs tiles across
+//! parallel macro shards instead of one serial loop.
+//!
+//! Determinism: each shard derives its die seed from (base seed, shard
+//! index) and each column inside a shard owns its conversion substream,
+//! so a given (params, weights, shard count) is reproducible regardless
+//! of worker-thread counts.
+
+use crate::cim::netstats::LayerClass;
+use crate::cim::{CimMacro, MacroParams};
+use crate::util::pool::parallel_map_mut;
+use crate::util::rng::Rng;
+use crate::vit::plan::OperatingPoint;
+use crate::vit::LinearShape;
+
+use super::sac::PlanCost;
+use super::scheduler::Scheduler;
+use super::server::BatchExecutor;
+
+/// One shard: a macro plus the logical output range it owns.
+struct Shard {
+    mac: CimMacro,
+    out_lo: usize,
+    out_hi: usize,
+}
+
+/// A logical (k × n) integer linear layer split column-wise across
+/// parallel macro shards.
+pub struct MacroShards {
+    shards: Vec<Shard>,
+    pub op: OperatingPoint,
+    /// Reduction dimension (rows of the weight matrix).
+    pub k: usize,
+    /// Logical outputs across all shards.
+    pub n: usize,
+    /// Worker threads for the cross-shard fan-out.
+    threads: usize,
+    /// Cumulative conversions across all `matvec_batch` calls.
+    pub total_conversions: u64,
+    /// Cumulative conversion energy [pJ] across all calls.
+    pub total_energy_pj: f64,
+}
+
+impl MacroShards {
+    /// Build a shard bank for the signed weight matrix `w[row][out]` at
+    /// the given operating point. `shards` is a request: it is raised to
+    /// the minimum number of macros the outputs need, and capped at one
+    /// output per shard.
+    pub fn new(
+        params: &MacroParams,
+        w: &[Vec<i32>],
+        op: OperatingPoint,
+        shards: usize,
+    ) -> Result<Self, String> {
+        if op.a_bits == 0 || op.a_bits > 31 || op.w_bits == 0 || op.w_bits > 31 {
+            return Err(format!(
+                "operating point bits out of range 1..=31 (a_bits {}, w_bits {})",
+                op.a_bits, op.w_bits
+            ));
+        }
+        let k = w.len();
+        if k == 0 {
+            return Err("empty weight matrix".to_string());
+        }
+        if k > params.active_rows {
+            return Err(format!("k {k} exceeds macro rows {}", params.active_rows));
+        }
+        let n = w[0].len();
+        if n == 0 {
+            return Err("weight matrix has no outputs".to_string());
+        }
+        if w.iter().any(|row| row.len() != n) {
+            return Err("ragged weight matrix".to_string());
+        }
+        let cap_out = params.cols / op.w_bits as usize;
+        if cap_out == 0 {
+            return Err(format!("w_bits {} exceeds macro columns {}", op.w_bits, params.cols));
+        }
+        let s = shards.max(1).max(n.div_ceil(cap_out)).min(n);
+        // Shards convert concurrently AND each shard keeps a slice of the
+        // worker budget for its own column fan-out, so total parallelism
+        // stays at the caller's thread count rather than the shard count.
+        // Determinism is unaffected: noise is per-column owned.
+        let inner_threads = params.effective_threads().div_ceil(s).max(1);
+        let base = n / s;
+        let extra = n % s;
+        let mut bank = Vec::with_capacity(s);
+        let mut out_lo = 0usize;
+        for i in 0..s {
+            let take = base + usize::from(i < extra);
+            let out_hi = out_lo + take;
+            let p = params
+                .clone()
+                .with_seed(params.seed ^ (i as u64).wrapping_mul(0xD1B5_4A32_D192_ED03))
+                .with_threads(inner_threads);
+            let mut mac = CimMacro::new(&p)?;
+            let slice: Vec<Vec<i32>> =
+                w.iter().map(|row| row[out_lo..out_hi].to_vec()).collect();
+            mac.load_weights(&slice, op.w_bits)?;
+            bank.push(Shard { mac, out_lo, out_hi });
+            out_lo = out_hi;
+        }
+        Ok(MacroShards {
+            shards: bank,
+            op,
+            k,
+            n,
+            threads: params.effective_threads(),
+            total_conversions: 0,
+            total_energy_pj: 0.0,
+        })
+    }
+
+    pub fn shard_count(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Run a batch of activation vectors through all shards concurrently
+    /// and stitch the per-shard outputs into full `n`-wide vectors.
+    pub fn matvec_batch(&mut self, xs: &[Vec<i32>]) -> Result<Vec<Vec<i64>>, String> {
+        let (a_bits, mode) = (self.op.a_bits, self.op.cb);
+        let per_shard = parallel_map_mut(&mut self.shards, self.threads, |_, shard| {
+            shard.mac.matvec_batch(xs, a_bits, mode)
+        });
+        let mut outputs = vec![vec![0i64; self.n]; xs.len()];
+        for (shard, result) in self.shards.iter().zip(per_shard) {
+            let runs = result?;
+            for (v, run) in runs.into_iter().enumerate() {
+                outputs[v][shard.out_lo..shard.out_hi].copy_from_slice(&run.y);
+                self.total_conversions += run.conversions;
+                self.total_energy_pj += run.energy_pj;
+            }
+        }
+        Ok(outputs)
+    }
+}
+
+/// Macro-simulator-backed batch executor: a single integer linear
+/// classifier head served straight off the sharded circuit model. Stands
+/// in for the PJRT executor in tests, demos and load experiments — every
+/// served batch exercises the true column-parallel conversion path.
+pub struct SimExecutor {
+    shards: MacroShards,
+    cost: PlanCost,
+    classes: usize,
+}
+
+impl SimExecutor {
+    /// Build with a deterministic pseudo-random weight tile derived from
+    /// `params.seed` (a stand-in classifier head).
+    pub fn new(
+        params: &MacroParams,
+        k: usize,
+        classes: usize,
+        op: OperatingPoint,
+        shards: usize,
+    ) -> Result<Self, String> {
+        if op.w_bits == 0 || op.w_bits > 16 {
+            return Err(format!("w_bits {} out of range 1..=16", op.w_bits));
+        }
+        let mut rng = Rng::new(params.seed ^ 0x51AC_0E5E);
+        let lo = -(1i32 << (op.w_bits - 1));
+        let span = 1u64 << op.w_bits;
+        let w: Vec<Vec<i32>> = (0..k)
+            .map(|_| (0..classes).map(|_| lo + rng.below(span) as i32).collect())
+            .collect();
+        let shards = MacroShards::new(params, &w, op, shards)?;
+        let sched = Scheduler::with_shards(params, shards.shard_count());
+        let shape = LinearShape { class: LayerClass::TransformerMlp, k, n: classes, m: 1 };
+        let total = sched.plan_linear(&shape, op);
+        let cost = PlanCost {
+            plan_name: "sim-linear (sharded macro)",
+            total,
+            energy_uj: total.energy_pj * 1e-6,
+            latency_us: total.latency_ns * 1e-3,
+            tops_per_watt_effective: total.ops_1b / (total.energy_pj * 1e-12) / 1e12,
+        };
+        Ok(SimExecutor { shards, cost, classes })
+    }
+
+    /// Quantize one image into a k-long activation vector in a_bits range.
+    fn featurize(&self, img: &[f32]) -> Vec<i32> {
+        let a_hi = (1i32 << (self.shards.op.a_bits - 1)) - 1;
+        let a_lo = -(1i32 << (self.shards.op.a_bits - 1));
+        (0..self.shards.k)
+            .map(|r| {
+                if img.is_empty() {
+                    return 0;
+                }
+                let v = img[r * img.len() / self.shards.k];
+                let q = (v.clamp(-1.0, 1.0) * a_hi as f32).round() as i32;
+                q.clamp(a_lo, a_hi)
+            })
+            .collect()
+    }
+}
+
+impl BatchExecutor for SimExecutor {
+    fn execute(&mut self, images: &[Vec<f32>]) -> Result<Vec<Vec<f32>>, String> {
+        let xs: Vec<Vec<i32>> = images.iter().map(|img| self.featurize(img)).collect();
+        let ys = self.shards.matvec_batch(&xs)?;
+        // Normalize so logits stay O(1); argmax is scale-invariant.
+        let w_hi = ((1i64 << (self.shards.op.w_bits - 1)) - 1).max(1);
+        let a_hi = ((1i64 << (self.shards.op.a_bits - 1)) - 1).max(1);
+        let scale = (self.shards.k as f64 * (w_hi * a_hi) as f64).recip();
+        Ok(ys
+            .into_iter()
+            .map(|y| y.into_iter().map(|v| (v as f64 * scale) as f32).collect())
+            .collect())
+    }
+
+    fn cost(&self) -> &PlanCost {
+        &self.cost
+    }
+
+    fn num_classes(&self) -> usize {
+        self.classes
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cim::CbMode;
+
+    fn quiet_params() -> MacroParams {
+        let mut p = MacroParams::default();
+        p.adc_bits = 6;
+        p.active_rows = 64;
+        p.rows = 64;
+        p.cols = 12;
+        // Noise-free: sharded output must equal the exact integer matvec.
+        p.sigma_cu_rel = 0.0;
+        p.nonlin_cubic_lsb = 0.0;
+        p.sigma_cmp_lsb = 0.0;
+        p.sigma_cmp_offset_lsb = 0.0;
+        p.temperature_k = 0.0;
+        p
+    }
+
+    fn op_2b() -> OperatingPoint {
+        OperatingPoint { a_bits: 2, w_bits: 2, cb: CbMode::Off }
+    }
+
+    fn tile(k: usize, n: usize, bits: u32, seed: u64) -> (Vec<Vec<i32>>, Vec<Vec<i32>>) {
+        let mut rng = Rng::new(seed);
+        let lo = -(1i32 << (bits - 1));
+        let span = 1u64 << bits;
+        let w = (0..k).map(|_| (0..n).map(|_| lo + rng.below(span) as i32).collect()).collect();
+        let xs = (0..3).map(|_| (0..k).map(|_| lo + rng.below(span) as i32).collect()).collect();
+        (w, xs)
+    }
+
+    #[test]
+    fn sharded_matvec_matches_exact_reference() {
+        let p = quiet_params();
+        // 10 outputs at 2b = 20 planes > 12 cols: needs ≥ 2 shards.
+        let (w, xs) = tile(64, 10, 2, 3);
+        let mut bank = MacroShards::new(&p, &w, op_2b(), 3).unwrap();
+        assert_eq!(bank.shard_count(), 3);
+        let got = bank.matvec_batch(&xs).unwrap();
+        let reference = CimMacro::ideal(&p).unwrap();
+        for (v, x) in xs.iter().enumerate() {
+            assert_eq!(got[v], reference.matvec_exact(&w, x), "vector {v}");
+        }
+        assert!(bank.total_conversions > 0);
+        assert!(bank.total_energy_pj > 0.0);
+    }
+
+    #[test]
+    fn shard_request_is_raised_to_capacity_and_reproducible() {
+        let mut p = quiet_params();
+        p.sigma_cmp_lsb = 1.1; // real noise: reproducibility is nontrivial
+        let (w, xs) = tile(64, 10, 2, 5);
+        // Request 1 shard, but 10 outputs × 2b = 20 planes need 2 macros.
+        let run = || {
+            let mut bank = MacroShards::new(&p, &w, op_2b(), 1).unwrap();
+            assert_eq!(bank.shard_count(), 2);
+            bank.matvec_batch(&xs).unwrap()
+        };
+        assert_eq!(run(), run());
+    }
+
+    #[test]
+    fn rejects_bad_geometry() {
+        let p = quiet_params();
+        assert!(MacroShards::new(&p, &[], op_2b(), 1).is_err());
+        assert!(MacroShards::new(&p, &[vec![]], op_2b(), 1).is_err());
+        let ragged = vec![vec![1, 0], vec![1]];
+        assert!(MacroShards::new(&p, &ragged, op_2b(), 1).is_err());
+        let too_deep = vec![vec![1i32]; 100];
+        assert!(MacroShards::new(&p, &too_deep, op_2b(), 1).is_err());
+        let wide_op = OperatingPoint { a_bits: 2, w_bits: 13, cb: CbMode::Off };
+        assert!(MacroShards::new(&p, &[vec![1i32]], wide_op, 1).is_err());
+        // Oversized bit widths return Err (no shift-overflow panics), and
+        // SimExecutor inherits the same guard.
+        let huge_a = OperatingPoint { a_bits: 33, w_bits: 2, cb: CbMode::Off };
+        assert!(MacroShards::new(&p, &[vec![1i32]], huge_a, 1).is_err());
+        assert!(SimExecutor::new(&p, 4, 2, huge_a, 1).is_err());
+    }
+
+    #[test]
+    fn sim_executor_serves_batches() {
+        let p = quiet_params();
+        let mut exec = SimExecutor::new(&p, 64, 10, op_2b(), 2).unwrap();
+        assert_eq!(exec.num_classes(), 10);
+        assert!(exec.cost().energy_uj > 0.0);
+        let images: Vec<Vec<f32>> = (0..4)
+            .map(|i| (0..64).map(|j| ((i * 31 + j * 7) % 13) as f32 / 13.0 - 0.5).collect())
+            .collect();
+        let logits = exec.execute(&images).unwrap();
+        assert_eq!(logits.len(), 4);
+        assert!(logits.iter().all(|l| l.len() == 10));
+        assert!(logits.iter().flatten().all(|v| v.is_finite()));
+    }
+}

@@ -17,10 +17,30 @@
 //!
 //! See DESIGN.md for the system inventory and EXPERIMENTS.md for
 //! paper-vs-measured numbers.
+//!
+//! ## Parallel execution model
+//!
+//! The macro simulator is **column-parallel and deterministic**: the chip
+//! converts every used column in the same cycle, and the simulator mirrors
+//! that by fanning the `n_out × w_bits` column conversions of a matvec
+//! across a worker pool (`MacroParams::threads`, 0 = auto). The
+//! determinism contract: every RNG consumer owns a splittable substream —
+//! per-die mismatch by `(seed, column)`, per-conversion noise by
+//! `(seed, column, conversion counter)` — so **results are bit-identical
+//! at any thread count** and across shard fan-outs
+//! (`coordinator::MacroShards`). Monte-Carlo sweeps (`cim::montecarlo`),
+//! CSNR calibration (`coordinator::NoiseCalibration`) and the serving
+//! path (`coordinator::SimExecutor`) all ride the same engine.
+//!
+//! The PJRT runtime (`runtime`) is gated behind the `pjrt` cargo feature
+//! because the `xla` / `anyhow` crates are only present in images that
+//! vendor them; the simulator, coordinator and metrics layers are
+//! dependency-free.
 
 pub mod cim;
 pub mod coordinator;
 pub mod metrics;
+#[cfg(feature = "pjrt")]
 pub mod runtime;
 pub mod util;
 pub mod vit;

@@ -148,19 +148,9 @@ impl VitExecutable {
     }
 }
 
-/// Argmax of each `width`-sized row of a flattened logits buffer.
-pub fn argmax_rows(logits: &[f32], width: usize) -> Vec<usize> {
-    logits
-        .chunks(width)
-        .map(|row| {
-            row.iter()
-                .enumerate()
-                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-                .map(|(i, _)| i)
-                .unwrap_or(0)
-        })
-        .collect()
-}
+/// Argmax of each `width`-sized row of a flattened logits buffer
+/// (re-exported from the dependency-free stats module).
+pub use crate::util::stats::argmax_rows;
 
 #[cfg(test)]
 mod tests {

@@ -1,9 +1,13 @@
 //! Scoped worker pool over std threads (rayon/tokio are not vendored).
 //!
-//! Two primitives cover everything the simulator and coordinator need:
+//! Three primitives cover everything the simulator and coordinator need:
 //! - [`parallel_map`]: evenly-chunked data parallelism over an index range,
 //!   used by Monte-Carlo sweeps (each worker gets an independent RNG
 //!   substream keyed by index, so results are identical at any thread count).
+//! - [`parallel_map_mut`]: the same work-stealing loop over *disjoint
+//!   mutable slice elements* — the macro's column-parallel matvec engine
+//!   runs each column's conversions through this, which is safe because
+//!   every index is claimed exactly once.
 //! - [`WorkQueue`]: an MPMC queue built on Mutex+Condvar for the request
 //!   router's worker threads.
 
@@ -46,6 +50,51 @@ where
                 // SAFETY: each index i is claimed exactly once via the atomic
                 // counter, so no two threads write the same slot; the vec
                 // outlives the scope.
+                unsafe {
+                    *out_ptr.0.add(i) = Some(val);
+                }
+            });
+        }
+    });
+    out.into_iter().map(|v| v.expect("worker filled every slot")).collect()
+}
+
+/// Run `f(i, &mut items[i])` for every element on `threads` workers and
+/// collect the results in index order. Each index is claimed exactly once
+/// via an atomic counter, so the `&mut` borrows handed to `f` are disjoint.
+/// Determinism is the caller's job: give each element its own state (e.g.
+/// an owned RNG substream) and results are identical at any thread count.
+pub fn parallel_map_mut<T, R, F>(items: &mut [T], threads: usize, f: F) -> Vec<R>
+where
+    T: Send,
+    R: Send,
+    F: Fn(usize, &mut T) -> R + Sync,
+{
+    let n = items.len();
+    let threads = threads.max(1).min(n.max(1));
+    if threads == 1 || n <= 1 {
+        return items.iter_mut().enumerate().map(|(i, t)| f(i, t)).collect();
+    }
+    let mut out: Vec<Option<R>> = (0..n).map(|_| None).collect();
+    let next = AtomicUsize::new(0);
+    let out_ptr = SendPtr(out.as_mut_ptr());
+    let item_ptr = SendPtr(items.as_mut_ptr());
+    std::thread::scope(|scope| {
+        for _ in 0..threads {
+            let f = &f;
+            let next = &next;
+            let out_ptr = &out_ptr;
+            let item_ptr = &item_ptr;
+            scope.spawn(move || loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                // SAFETY: each index i is claimed exactly once via the
+                // atomic counter, so the element and output borrows are
+                // disjoint across workers; both slices outlive the scope.
+                let item = unsafe { &mut *item_ptr.0.add(i) };
+                let val = f(i, item);
                 unsafe {
                     *out_ptr.0.add(i) = Some(val);
                 }
@@ -153,6 +202,36 @@ mod tests {
                 let mut r = root.substream(1, i as u64);
                 r.gauss()
             })
+        };
+        assert_eq!(run(1), run(8));
+    }
+
+    #[test]
+    fn parallel_map_mut_mutates_disjoint_elements() {
+        let mut items: Vec<u64> = (0..500).collect();
+        let got = parallel_map_mut(&mut items, 8, |i, v| {
+            *v += 1;
+            *v * i as u64
+        });
+        assert_eq!(items, (1..=500).collect::<Vec<u64>>());
+        let want: Vec<u64> = (0..500u64).map(|i| (i + 1) * i).collect();
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn parallel_map_mut_handles_edge_sizes() {
+        let mut empty: Vec<u32> = Vec::new();
+        assert_eq!(parallel_map_mut(&mut empty, 4, |_, v| *v), Vec::<u32>::new());
+        let mut one = vec![5u32];
+        assert_eq!(parallel_map_mut(&mut one, 4, |i, v| *v + i as u32), vec![5]);
+    }
+
+    #[test]
+    fn parallel_map_mut_deterministic_with_owned_state() {
+        use crate::util::rng::Rng;
+        let run = |threads| {
+            let mut rngs: Vec<Rng> = (0..64).map(|i| Rng::new(99).substream(1, i)).collect();
+            parallel_map_mut(&mut rngs, threads, |_, r| r.gauss())
         };
         assert_eq!(run(1), run(8));
     }

@@ -172,6 +172,22 @@ impl Histogram {
     }
 }
 
+/// Argmax of each `width`-sized row of a flattened logits buffer. Lives
+/// here (not in `runtime`) so the serving path works without the PJRT
+/// feature.
+pub fn argmax_rows(logits: &[f32], width: usize) -> Vec<usize> {
+    logits
+        .chunks(width)
+        .map(|row| {
+            row.iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .map(|(i, _)| i)
+                .unwrap_or(0)
+        })
+        .collect()
+}
+
 /// dB helpers used throughout the metrics layer.
 #[inline]
 pub fn db_from_power_ratio(r: f64) -> f64 {
@@ -259,6 +275,13 @@ mod tests {
         assert_eq!(h.under, 1);
         assert_eq!(h.over, 1);
         assert_eq!(h.total(), 12);
+    }
+
+    #[test]
+    fn argmax_rows_picks_per_row_winners() {
+        let logits = vec![0.1, 0.9, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0, 2.0];
+        assert_eq!(argmax_rows(&logits, 5), vec![1, 4]);
+        assert_eq!(argmax_rows(&[], 5), Vec::<usize>::new());
     }
 
     #[test]

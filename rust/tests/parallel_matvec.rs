@@ -1,0 +1,94 @@
+//! Integration tests for the column-parallel matvec engine: the
+//! determinism contract (bit-identical results at any thread count) and a
+//! guarded throughput smoke check on a full-scale 1088×78 tile.
+
+use cr_cim::cim::params::{CbMode, MacroParams};
+use cr_cim::cim::CimMacro;
+use cr_cim::util::rng::Rng;
+
+fn full_tile(seed: u64) -> (Vec<Vec<i32>>, Vec<i32>, Vec<Vec<i32>>) {
+    let mut rng = Rng::new(seed);
+    let w: Vec<Vec<i32>> = (0..1024)
+        .map(|_| (0..13).map(|_| rng.below(63) as i32 - 31).collect())
+        .collect();
+    let x: Vec<i32> = (0..1024).map(|_| rng.below(63) as i32 - 31).collect();
+    let xs: Vec<Vec<i32>> = (0..4)
+        .map(|_| (0..1024).map(|_| rng.below(63) as i32 - 31).collect())
+        .collect();
+    (w, x, xs)
+}
+
+fn run_at(threads: usize, w: &[Vec<i32>], x: &[i32], mode: CbMode) -> Vec<i64> {
+    let p = MacroParams::default().with_threads(threads);
+    let mut m = CimMacro::new(&p).unwrap();
+    m.load_weights(w, 6).unwrap();
+    m.matvec(x, 6, mode).unwrap().y
+}
+
+#[test]
+fn matvec_is_bit_identical_for_threads_1_4_8() {
+    let (w, x, _) = full_tile(17);
+    for mode in [CbMode::Off, CbMode::On] {
+        let y1 = run_at(1, &w, &x, mode);
+        let y4 = run_at(4, &w, &x, mode);
+        let y8 = run_at(8, &w, &x, mode);
+        assert_eq!(y1, y4, "threads 1 vs 4, {mode:?}");
+        assert_eq!(y1, y8, "threads 1 vs 8, {mode:?}");
+    }
+}
+
+#[test]
+fn batch_is_bit_identical_across_thread_counts() {
+    let (w, _, xs) = full_tile(23);
+    let run = |threads: usize| {
+        let p = MacroParams::default().with_threads(threads);
+        let mut m = CimMacro::new(&p).unwrap();
+        m.load_weights(&w, 6).unwrap();
+        m.matvec_batch(&xs, 6, CbMode::On)
+            .unwrap()
+            .into_iter()
+            .map(|r| r.y)
+            .collect::<Vec<_>>()
+    };
+    assert_eq!(run(1), run(8));
+}
+
+/// Throughput smoke check for the §Perf claim: on a full 1088×78-scale
+/// tile, 8 worker threads must beat the serial engine. Guarded: shared CI
+/// runners (ubuntu-latest is 4 noisy vCPUs) make wall-clock assertions
+/// flaky, so the speedup bound is only enforced on ≥ 8-core boxes; the
+/// timing still runs and is printed everywhere.
+#[test]
+fn parallel_matvec_speedup_smoke() {
+    use std::time::Instant;
+    let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let (w, x, _) = full_tile(31);
+    let time_at = |threads: usize| {
+        let p = MacroParams::default().with_threads(threads);
+        let mut m = CimMacro::new(&p).unwrap();
+        m.load_weights(&w, 6).unwrap();
+        let reps = 6;
+        // Warm-up conversion so allocator/page effects don't skew rep 1.
+        let first = m.matvec(&x, 6, CbMode::Off).unwrap().y;
+        let t0 = Instant::now();
+        for _ in 0..reps {
+            let y = m.matvec(&x, 6, CbMode::Off).unwrap().y;
+            assert_eq!(y.len(), first.len());
+        }
+        t0.elapsed().as_secs_f64() / reps as f64
+    };
+    let serial = time_at(1);
+    let parallel = time_at(8);
+    let speedup = serial / parallel.max(1e-12);
+    eprintln!("matvec speedup at 8 threads over serial: {speedup:.2}x ({cores} cores)");
+    // CRCIM_PERF_ASSERT=0 opts out on loaded shared boxes where any
+    // wall-clock bound is noise; the measurement still prints above.
+    let assert_enabled = std::env::var("CRCIM_PERF_ASSERT").as_deref() != Ok("0");
+    if cores >= 8 && assert_enabled {
+        assert!(
+            speedup >= 1.3,
+            "expected parallel speedup on a {cores}-core box, measured {speedup:.2}x \
+             (set CRCIM_PERF_ASSERT=0 to skip on loaded machines)"
+        );
+    }
+}
