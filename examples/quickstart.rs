@@ -8,13 +8,15 @@
 //!    any thread count.
 //! 4. Ask the SAC policy engine what the ViT workload costs.
 //! 5. Batch vectors through column-sharded parallel macros.
+//! 6. Row-tile a k = 3072 MLP `fc2` layer across 2 dies — the 2-D tiled
+//!    multi-die serving path (see docs/ARCHITECTURE.md).
 //!
 //! Run: `cargo run --release --example quickstart`
 
 use cr_cim::cim::params::{CbMode, MacroParams};
 use cr_cim::cim::{CimMacro, Column};
 use cr_cim::coordinator::sac::{self, NoiseCalibration};
-use cr_cim::coordinator::{MacroShards, Scheduler};
+use cr_cim::coordinator::{DieBank, MacroShards, Scheduler};
 use cr_cim::metrics::{characterize, measure_csnr, sqnr_db, CharacterizeOpts, CsnrEnsemble};
 use cr_cim::util::pool::default_threads;
 use cr_cim::util::rng::Rng;
@@ -107,6 +109,39 @@ fn main() -> Result<(), String> {
         bank.shard_count(),
         bank.total_conversions,
         bank.total_energy_pj * 1e-3
+    );
+
+    println!("\n== 6. row-tiled multi-die serving (k = 3072 MLP fc2) ==");
+    // d_ff = 3072 exceeds the 1024-row tile, so the layer splits into 3
+    // row tiles whose partial sums accumulate digitally; two dies share
+    // the batch. Noise of accumulated tiles composes in quadrature —
+    // kernel_sigma reports the tiled σ the SAC planner must use.
+    let deep_k = 3072;
+    let deep_n = 8;
+    let w_deep: Vec<Vec<i32>> = (0..deep_k)
+        .map(|_| (0..deep_n).map(|_| rng.below(15) as i32 - 7).collect())
+        .collect();
+    let op4 = cr_cim::vit::plan::OperatingPoint { a_bits: 4, w_bits: 4, cb: CbMode::On };
+    let mut dies = DieBank::new(&params, &w_deep, op4, 1, 2)?;
+    let xs_deep: Vec<Vec<i32>> = (0..2)
+        .map(|_| (0..deep_k).map(|_| rng.below(15) as i32 - 7).collect())
+        .collect();
+    let ys_deep = dies.matvec_batch(&xs_deep)?;
+    println!(
+        "  {} dies x {} row tiles x {} shard(s): {} vectors served, {} conversions, {:.1} nJ",
+        dies.die_count(),
+        dies.row_tile_count(),
+        dies.shard_count(),
+        ys_deep.len(),
+        dies.total_conversions(),
+        dies.total_energy_pj() * 1e-3
+    );
+    let calib_sigma = calib.sigma(op4.cb);
+    println!(
+        "  tiled output noise: {:.1} LSB ({} tiles in quadrature; single tile {:.1} LSB)",
+        sac::kernel_noise_sigma_for_row_tiles(dies.row_tile_count(), 4, 4, calib_sigma),
+        dies.row_tile_count(),
+        sac::kernel_noise_sigma_for_row_tiles(1, 4, 4, calib_sigma)
     );
     Ok(())
 }

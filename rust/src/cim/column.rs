@@ -27,26 +27,34 @@ pub struct Column {
     weights: Vec<bool>,
     seq: PhaseSequencer,
     /// Root of this column's owned noise substreams, derived from
-    /// (die seed, column index) at construction.
+    /// (die seed, global column index `col_base + index`) at construction.
     noise_root: Rng,
     /// Conversions performed through the owned stream — the third key of
-    /// the (die seed, column index, conversion counter) substream triple.
+    /// the (die seed, global column, conversion counter) substream triple.
     conversions: u64,
 }
 
 impl Column {
     /// Instantiate column `index` of the die identified by `params.seed`.
+    ///
+    /// All per-column substreams (capacitor mismatch, comparator sample,
+    /// conversion noise) key on the **global** column index
+    /// `params.col_base + index`, so a macro that models a slice of a
+    /// wider logical column array (a column shard) draws exactly the
+    /// noise the unsharded wide macro would — the decomposition is
+    /// invisible to the noise model.
     pub fn new(params: &MacroParams, index: usize) -> Result<Self, String> {
         params.validate()?;
-        let bank = CapacitorBank::sample(params, index);
+        let global = params.col_base + index;
+        let bank = CapacitorBank::sample(params, global);
         let root = Rng::new(params.seed);
-        let mut crng = root.substream(0x00C0_33A4, index as u64);
+        let mut crng = root.substream(0x00C0_33A4, global as u64);
         let cmp = Comparator::sample(
             params.sigma_cmp_lsb_at_supply(),
             params.sigma_cmp_offset_lsb,
             &mut crng,
         );
-        let noise_root = root.substream(CONVERSION_STREAM, index as u64);
+        let noise_root = root.substream(CONVERSION_STREAM, global as u64);
         Ok(Column {
             params: params.clone(),
             bank,
@@ -293,6 +301,35 @@ mod tests {
             c
         };
         assert_eq!(col.conversion_count(), 1);
+    }
+
+    #[test]
+    fn col_base_shifts_the_global_noise_key() {
+        let p = MacroParams::default();
+        // Column 3 of a standalone die == column 0 of a shard macro whose
+        // col_base is 3: same mismatch, same conversion noise stream.
+        let mut direct = Column::new(&p, 3).unwrap();
+        let mut sharded = Column::new(&p.clone().with_col_base(3), 0).unwrap();
+        let weights: Vec<bool> = (0..p.active_rows).map(|i| i % 2 == 0).collect();
+        let inputs: Vec<bool> = (0..p.active_rows).map(|i| i % 3 == 0).collect();
+        direct.load_weights(&weights);
+        sharded.load_weights(&weights);
+        for _ in 0..4 {
+            assert_eq!(
+                direct.mac_convert_owned(&inputs, CbMode::Off).code,
+                sharded.mac_convert_owned(&inputs, CbMode::Off).code,
+            );
+        }
+        // A different global column is a different stream.
+        let mut other = Column::new(&p, 4).unwrap();
+        other.load_weights(&weights);
+        let a: Vec<u32> =
+            (0..8).map(|_| other.mac_convert_owned(&inputs, CbMode::Off).code).collect();
+        let mut replay = Column::new(&p, 3).unwrap();
+        replay.load_weights(&weights);
+        let b: Vec<u32> =
+            (0..8).map(|_| replay.mac_convert_owned(&inputs, CbMode::Off).code).collect();
+        assert_ne!(a, b, "distinct global columns must not share noise");
     }
 
     #[test]

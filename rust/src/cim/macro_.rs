@@ -46,7 +46,18 @@ pub struct MacrunResult {
 }
 
 /// The macro: a bank of columns plus the digital reconstruction periphery.
+///
+/// One macro converts a fixed tile: at most `active_rows` rows of the
+/// reduction dimension and `cols / w_bits` logical outputs. Layers that
+/// exceed either bound split across macros — column shards over the
+/// outputs and row tiles over the reduction dimension, with row-tile
+/// partial sums accumulated digitally — by
+/// [`MacroShards`](crate::coordinator::MacroShards) (see
+/// `docs/ARCHITECTURE.md` for the 2-D tiling model).
 pub struct CimMacro {
+    /// Die parameters this macro was instantiated with (seed identifies
+    /// the die; `col_base` keys this macro's columns into a wider
+    /// logical column array when it serves as a shard).
     pub params: MacroParams,
     columns: Vec<Column>,
     energy: EnergyModel,
@@ -68,6 +79,8 @@ struct LoadedWeights {
 const PARALLEL_MIN_CONVERSIONS: u64 = 256;
 
 impl CimMacro {
+    /// Instantiate the die's macro: every column samples its mismatch and
+    /// noise substreams from (`params.seed`, global column index).
     pub fn new(params: &MacroParams) -> Result<Self, String> {
         params.validate()?;
         let columns = (0..params.cols)

@@ -102,18 +102,35 @@ pub struct MacroParams {
     /// digital: scales as V².
     pub e_logic_pj: f64,
 
+    // ---- digital periphery ----
+    /// Latency of one digital partial-sum accumulation step [ns]: the
+    /// adder that folds a row tile's output register into the layer
+    /// accumulator when a reduction dimension spans multiple tiles
+    /// (k > `active_rows`). Per extra row tile, per streamed vector.
+    pub t_accum_ns: f64,
+
     // ---- environment ----
     /// Junction temperature [K].
     pub temperature_k: f64,
-    /// Mismatch / noise Monte-Carlo master seed.
+    /// Mismatch / noise Monte-Carlo master seed (identifies the die; see
+    /// [`for_die`](Self::for_die) / [`for_row_tile`](Self::for_row_tile)
+    /// for the seed-derivation hierarchy).
     pub seed: u64,
 
     // ---- simulation execution (not a circuit property) ----
     /// Worker threads for the column-parallel matvec engine. 0 = auto
     /// (one per available core, capped). Results are bit-identical at any
     /// thread count: every column owns its noise substream, keyed by
-    /// (die seed, column index, conversion counter).
+    /// (die seed, **global** column index, conversion counter).
     pub threads: usize,
+    /// Global index of this macro's column 0 within a wider logical
+    /// column array. A column-sharded layer gives each shard macro the
+    /// `col_base` of the first weight-bit plane it owns, so mismatch and
+    /// conversion-noise substreams key on the *logical* column — the
+    /// shard decomposition is then invisible to the noise model and
+    /// results are bit-identical at any shard count. Not a circuit
+    /// property; 0 for a standalone macro.
+    pub col_base: usize,
 }
 
 impl Default for MacroParams {
@@ -149,12 +166,21 @@ impl Default for MacroParams {
             alpha_sample: 0.50,
             alpha_dac: 0.45,
             e_logic_pj: 0.60,
+            // One registered add in the output periphery (65 nm digital).
+            t_accum_ns: 2.0,
             temperature_k: 300.0,
             seed: 0x5EED_C100,
             threads: 0,
+            col_base: 0,
         }
     }
 }
+
+/// Seed salt separating independent dies (multi-die serving tier).
+const DIE_SEED_SALT: u64 = 0xD1E5_EED5_A17E_D1E5;
+/// Seed salt separating the physical macros that hold different row tiles
+/// of one layer (the k > `active_rows` accumulation path).
+const TILE_SEED_SALT: u64 = 0x7113_5EED_5A17_7113;
 
 impl MacroParams {
     /// Number of ADC codes (2^adc_bits).
@@ -248,6 +274,38 @@ impl MacroParams {
         self
     }
 
+    /// Parameters of independent die `die` in a multi-die deployment: the
+    /// master seed is mixed with the die index, so every die samples its
+    /// own mismatch and noise. Die 0 keeps the master seed unchanged (a
+    /// one-die deployment is byte-for-byte the single-macro simulator).
+    pub fn for_die(mut self, die: usize) -> Self {
+        self.seed ^= (die as u64).wrapping_mul(DIE_SEED_SALT);
+        self
+    }
+
+    /// Parameters of the physical macro holding row tile `tile` of a
+    /// layer whose reduction dimension spans several tiles. Each tile is
+    /// a distinct physical macro, so it gets its own mismatch/noise seed
+    /// (tile 0 keeps the die seed: a single-tile layer is unchanged).
+    /// Per-tile output noise is therefore independent and the digitally
+    /// accumulated total composes in quadrature — the contract
+    /// `coordinator::sac::kernel_noise_sigma_for_row_tiles` encodes.
+    pub fn for_row_tile(mut self, tile: usize) -> Self {
+        self.seed ^= (tile as u64).wrapping_mul(TILE_SEED_SALT);
+        self
+    }
+
+    /// Set the noise-keying base for logical column 0 (see `col_base`).
+    pub fn with_col_base(mut self, col_base: usize) -> Self {
+        self.col_base = col_base;
+        self
+    }
+
+    /// Row tiles needed to hold a reduction dimension of `k` rows.
+    pub fn row_tiles_needed(&self, k: usize) -> usize {
+        k.div_ceil(self.active_rows).max(1)
+    }
+
     /// Set the matvec worker-thread count (0 = auto).
     pub fn with_threads(mut self, threads: usize) -> Self {
         self.threads = threads;
@@ -322,6 +380,46 @@ mod tests {
         assert_eq!(p.clone().with_threads(3).effective_threads(), 3);
         // The knob is an execution parameter, not a circuit property.
         assert!(p.with_threads(7).validate().is_ok());
+    }
+
+    #[test]
+    fn seed_hierarchy_is_stable_and_identity_at_zero() {
+        let p = MacroParams::default();
+        // Die 0 / tile 0 keep the master seed: single-die single-tile
+        // deployments replay the bare macro exactly.
+        assert_eq!(p.clone().for_die(0).seed, p.seed);
+        assert_eq!(p.clone().for_row_tile(0).seed, p.seed);
+        // Distinct dies and tiles get distinct seeds, deterministically.
+        let d1 = p.clone().for_die(1).seed;
+        let d2 = p.clone().for_die(2).seed;
+        assert_ne!(d1, p.seed);
+        assert_ne!(d1, d2);
+        assert_eq!(p.clone().for_die(1).seed, d1);
+        let t1 = p.clone().for_row_tile(1).seed;
+        assert_ne!(t1, p.seed);
+        assert_ne!(t1, d1, "die and tile salts must not collide");
+        // The two axes compose: (die, tile) pairs are all distinct.
+        let dt = p.clone().for_die(1).for_row_tile(1).seed;
+        assert_ne!(dt, d1);
+        assert_ne!(dt, t1);
+    }
+
+    #[test]
+    fn row_tiles_needed_matches_geometry() {
+        let p = MacroParams::default(); // 1024 active rows
+        assert_eq!(p.row_tiles_needed(1), 1);
+        assert_eq!(p.row_tiles_needed(1024), 1);
+        assert_eq!(p.row_tiles_needed(1025), 2);
+        assert_eq!(p.row_tiles_needed(3072), 3);
+        assert_eq!(p.row_tiles_needed(0), 1, "degenerate k still maps to one tile");
+    }
+
+    #[test]
+    fn col_base_is_an_execution_parameter() {
+        let p = MacroParams::default().with_col_base(78);
+        assert_eq!(p.col_base, 78);
+        assert!(p.validate().is_ok());
+        assert_eq!(MacroParams::default().col_base, 0);
     }
 
     #[test]

@@ -8,17 +8,25 @@
 //!                   batch sizes
 //! - [`ledger`]    — energy/latency/occupancy accounting
 //! - [`server`]    — std-TCP line-JSON inference service (request path)
-//! - [`shard`]     — column-sharded parallel macro execution + the
-//!                   macro-simulator batch executor for the serving path
+//! - [`shard`]     — 2-D tiled macro execution (row tiles × column
+//!                   shards) + the macro-simulator batch executor for
+//!                   the serving path
+//! - [`multidie`]  — the multi-die tier: one layer replicated across
+//!                   independent dies, batches routed across them
+//!
+//! See `docs/ARCHITECTURE.md` for the layer map, the 2-D tiling model
+//! and the determinism contract.
 
 pub mod batcher;
 pub mod ledger;
+pub mod multidie;
 pub mod router;
 pub mod sac;
 pub mod scheduler;
 pub mod server;
 pub mod shard;
 
+pub use multidie::DieBank;
 pub use sac::{NoiseCalibration, PlanCost};
 pub use scheduler::{Scheduler, TilePlan};
 pub use shard::{MacroShards, SimExecutor};

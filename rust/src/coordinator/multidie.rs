@@ -1,0 +1,215 @@
+//! Multi-die serving tier: one logical layer replicated across several
+//! independent dies, with batches routed across them.
+//!
+//! The chip-level scaling story: a single CR-CIM die converts one
+//! (row tile × column tile) per cycle, so a server that must sustain
+//! heavy traffic provisions several dies and splits every served batch
+//! across them. Each die is a full copy of the layer — its own
+//! [`MacroShards`] bank under its own die seed
+//! ([`MacroParams::for_die`]), so dies have independent mismatch and
+//! noise exactly like distinct physical chips.
+//!
+//! Routing is deterministic: vector `v` of a batch of `b` goes to die
+//! `v·d / b` (contiguous chunks, front-loaded remainders), so a given
+//! (params, weights, die count, batch) is reproducible at any worker
+//! thread count. Changing the die count re-routes vectors onto different
+//! silicon, which legitimately changes noisy outputs — at zero noise
+//! every die computes the same exact integer result.
+
+use crate::cim::MacroParams;
+use crate::util::pool::parallel_map_mut;
+use crate::vit::plan::OperatingPoint;
+
+use super::shard::MacroShards;
+
+/// A bank of independent dies, each holding a full copy of one logical
+/// (k × n) layer as a 2-D tiled [`MacroShards`] grid.
+pub struct DieBank {
+    dies: Vec<MacroShards>,
+    /// Operating point (bit widths + CB mode) the layer runs at.
+    pub op: OperatingPoint,
+    /// Reduction dimension (rows of the weight matrix).
+    pub k: usize,
+    /// Logical outputs.
+    pub n: usize,
+    /// Worker threads for the cross-die fan-out.
+    threads: usize,
+}
+
+impl DieBank {
+    /// Build `dies` independent copies of the layer. Die `i` runs under
+    /// `params.for_die(i)` (die 0 keeps the master seed, so a one-die
+    /// bank is byte-for-byte a plain [`MacroShards`]). `shards` is the
+    /// per-die column-shard request; row tiles are added automatically
+    /// for k > `active_rows`.
+    pub fn new(
+        params: &MacroParams,
+        w: &[Vec<i32>],
+        op: OperatingPoint,
+        shards: usize,
+        dies: usize,
+    ) -> Result<Self, String> {
+        let d = dies.max(1);
+        // Each die keeps a slice of the worker budget; its shard bank
+        // subdivides further. Total parallelism stays at the caller's
+        // thread count.
+        let inner = params.effective_threads().div_ceil(d).max(1);
+        let banks = (0..d)
+            .map(|i| {
+                let p = params.clone().for_die(i).with_threads(inner);
+                MacroShards::new(&p, w, op, shards)
+            })
+            .collect::<Result<Vec<_>, _>>()?;
+        let (k, n) = (banks[0].k, banks[0].n);
+        Ok(DieBank { dies: banks, op, k, n, threads: params.effective_threads() })
+    }
+
+    /// Independent dies in the bank.
+    pub fn die_count(&self) -> usize {
+        self.dies.len()
+    }
+
+    /// Column shards per die.
+    pub fn shard_count(&self) -> usize {
+        self.dies[0].shard_count()
+    }
+
+    /// Row tiles per die.
+    pub fn row_tile_count(&self) -> usize {
+        self.dies[0].row_tile_count()
+    }
+
+    /// Cumulative conversions across all dies and calls.
+    pub fn total_conversions(&self) -> u64 {
+        self.dies.iter().map(|d| d.total_conversions).sum()
+    }
+
+    /// Cumulative conversion energy [pJ] across all dies and calls.
+    pub fn total_energy_pj(&self) -> f64 {
+        self.dies.iter().map(|d| d.total_energy_pj).sum()
+    }
+
+    /// Run a batch across the die bank: contiguous vector chunks per die,
+    /// dies converting concurrently, outputs stitched back in batch
+    /// order. Batches smaller than the die count leave trailing dies
+    /// idle (their chunk is empty).
+    pub fn matvec_batch(&mut self, xs: &[Vec<i32>]) -> Result<Vec<Vec<i64>>, String> {
+        let d = self.dies.len();
+        let b = xs.len();
+        let (base, extra) = (b / d, b % d);
+        // chunk_lo[i] = start of die i's contiguous slice of the batch.
+        let mut chunks = Vec::with_capacity(d + 1);
+        let mut lo = 0usize;
+        chunks.push(0);
+        for i in 0..d {
+            lo += base + usize::from(i < extra);
+            chunks.push(lo);
+        }
+        let chunks = &chunks;
+        let per_die = parallel_map_mut(&mut self.dies, self.threads, |i, die| {
+            die.matvec_batch(&xs[chunks[i]..chunks[i + 1]])
+        });
+        let mut outputs = Vec::with_capacity(b);
+        for result in per_die {
+            outputs.extend(result?);
+        }
+        Ok(outputs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cim::{CbMode, CimMacro};
+    use crate::util::rng::Rng;
+
+    fn quiet_params() -> MacroParams {
+        let mut p = MacroParams::default();
+        p.adc_bits = 6;
+        p.active_rows = 64;
+        p.rows = 64;
+        p.cols = 12;
+        p.sigma_cu_rel = 0.0;
+        p.nonlin_cubic_lsb = 0.0;
+        p.sigma_cmp_lsb = 0.0;
+        p.sigma_cmp_offset_lsb = 0.0;
+        p.temperature_k = 0.0;
+        p
+    }
+
+    fn op_2b() -> OperatingPoint {
+        OperatingPoint { a_bits: 2, w_bits: 2, cb: CbMode::Off }
+    }
+
+    fn tile(k: usize, n: usize, nvec: usize, seed: u64) -> (Vec<Vec<i32>>, Vec<Vec<i32>>) {
+        let mut rng = Rng::new(seed);
+        let w = (0..k).map(|_| (0..n).map(|_| rng.below(4) as i32 - 2).collect()).collect();
+        let xs =
+            (0..nvec).map(|_| (0..k).map(|_| rng.below(4) as i32 - 2).collect()).collect();
+        (w, xs)
+    }
+
+    #[test]
+    fn die_bank_matches_exact_at_zero_noise_for_any_die_count() {
+        let p = quiet_params();
+        // k = 150: 3 row tiles per die; 5 outputs at 2b fit one shard.
+        let (w, xs) = tile(150, 5, 7, 42);
+        let reference = CimMacro::ideal(&p).unwrap();
+        let want: Vec<Vec<i64>> = xs.iter().map(|x| reference.matvec_exact(&w, x)).collect();
+        for dies in [1usize, 2, 3, 5] {
+            let mut bank = DieBank::new(&p, &w, op_2b(), 1, dies).unwrap();
+            assert_eq!(bank.die_count(), dies);
+            assert_eq!(bank.matvec_batch(&xs).unwrap(), want, "dies={dies}");
+        }
+    }
+
+    #[test]
+    fn one_die_bank_replays_plain_macro_shards() {
+        let mut p = quiet_params();
+        p.sigma_cmp_lsb = 1.1; // real noise: the claim is nontrivial
+        let (w, xs) = tile(64, 4, 3, 7);
+        let mut plain = MacroShards::new(&p.clone().with_threads(1), &w, op_2b(), 1).unwrap();
+        let mut bank = DieBank::new(&p, &w, op_2b(), 1, 1).unwrap();
+        assert_eq!(bank.matvec_batch(&xs).unwrap(), plain.matvec_batch(&xs).unwrap());
+    }
+
+    #[test]
+    fn dies_have_independent_noise() {
+        let mut p = quiet_params();
+        p.sigma_cmp_lsb = 1.4;
+        let (w, _) = tile(64, 4, 0, 19);
+        let x: Vec<i32> = (0..64).map(|i| (i % 4) as i32 - 2).collect();
+        // The same vector replicated: each copy routes to a different die.
+        let xs = vec![x; 2];
+        let mut bank = DieBank::new(&p, &w, op_2b(), 1, 2).unwrap();
+        let ys = bank.matvec_batch(&xs).unwrap();
+        assert_ne!(ys[0], ys[1], "distinct dies must draw distinct noise");
+    }
+
+    #[test]
+    fn batch_smaller_than_die_count_is_served() {
+        let p = quiet_params();
+        let (w, xs) = tile(64, 3, 2, 23);
+        let mut bank = DieBank::new(&p, &w, op_2b(), 1, 4).unwrap();
+        let reference = CimMacro::ideal(&p).unwrap();
+        let got = bank.matvec_batch(&xs).unwrap();
+        assert_eq!(got.len(), 2);
+        for (v, x) in xs.iter().enumerate() {
+            assert_eq!(got[v], reference.matvec_exact(&w, x), "vector {v}");
+        }
+        // Empty batches are a no-op.
+        assert_eq!(bank.matvec_batch(&[]).unwrap(), Vec::<Vec<i64>>::new());
+    }
+
+    #[test]
+    fn accounting_sums_across_dies() {
+        let p = quiet_params();
+        let (w, xs) = tile(64, 3, 4, 29);
+        let mut bank = DieBank::new(&p, &w, op_2b(), 1, 2).unwrap();
+        assert_eq!(bank.total_conversions(), 0);
+        bank.matvec_batch(&xs).unwrap();
+        // 4 vectors × 6 used cols × 2 a_bits, wherever they ran.
+        assert_eq!(bank.total_conversions(), 4 * 6 * 2);
+        assert!(bank.total_energy_pj() > 0.0);
+    }
+}

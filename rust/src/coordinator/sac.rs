@@ -61,25 +61,63 @@ impl NoiseCalibration {
     }
 }
 
-/// Row replication factor for small-K layers (mirror of python
-/// `row_replication`): idle rows integrate extra copies of the dot
-/// product, recovering dynamic range at constant read noise.
-pub fn row_replication(k: usize) -> usize {
-    if k >= 1024 {
+/// Row replication factor for small-K layers on `rows_per_tile`-row
+/// macros: idle rows integrate extra copies of the dot product,
+/// recovering dynamic range at constant read noise.
+pub fn row_replication_for(k: usize, rows_per_tile: usize) -> usize {
+    if k == 0 || k >= rows_per_tile {
         1
     } else {
-        (1024 / k).max(1)
+        (rows_per_tile / k).max(1)
     }
 }
 
-/// Mirror of python `output_noise_sigma`: integer-domain output noise of
-/// one linear output given per-conversion read noise — the L3↔L2 bridge.
-pub fn kernel_noise_sigma(k: usize, a_bits: u32, w_bits: u32, sigma_read_lsb: f64) -> f64 {
-    let k_tiles = k.div_ceil(1024) as f64;
-    let r = row_replication(k) as f64;
+/// Row replication on the paper's 1024-row macro (mirror of python
+/// `row_replication`).
+pub fn row_replication(k: usize) -> usize {
+    row_replication_for(k, 1024)
+}
+
+/// Integer-domain output noise σ of one logical output accumulated from
+/// `row_tiles` independently-seeded macro tiles: each tile contributes
+/// an independent per-conversion read error, so per-tile σ adds **in
+/// quadrature** through the digital accumulator (×√row_tiles). The
+/// weighted sums over activation/weight bit planes (Σ 4^b) account for
+/// the shift-add reconstruction. This is the tiled form the 2-D
+/// executor reports through
+/// [`MacroShards::kernel_sigma`](super::shard::MacroShards::kernel_sigma),
+/// keeping SAC plans honest for k > 1024 layers.
+pub fn kernel_noise_sigma_for_row_tiles(
+    row_tiles: usize,
+    a_bits: u32,
+    w_bits: u32,
+    sigma_read_lsb: f64,
+) -> f64 {
     let sa: f64 = (0..a_bits).map(|a| 4f64.powi(a as i32)).sum();
     let sb: f64 = (0..w_bits).map(|b| 4f64.powi(b as i32)).sum();
-    sigma_read_lsb / r * (k_tiles * sa * sb).sqrt()
+    sigma_read_lsb * (row_tiles.max(1) as f64 * sa * sb).sqrt()
+}
+
+/// [`kernel_noise_sigma_for_row_tiles`] with the tile count derived from
+/// the layer depth and an explicit tile geometry, plus the small-K row
+/// replication gain.
+pub fn kernel_noise_sigma_tiled(
+    k: usize,
+    rows_per_tile: usize,
+    a_bits: u32,
+    w_bits: u32,
+    sigma_read_lsb: f64,
+) -> f64 {
+    let tiles = k.div_ceil(rows_per_tile.max(1)).max(1);
+    let r = row_replication_for(k, rows_per_tile) as f64;
+    kernel_noise_sigma_for_row_tiles(tiles, a_bits, w_bits, sigma_read_lsb) / r
+}
+
+/// Mirror of python `output_noise_sigma`: integer-domain output noise of
+/// one linear output given per-conversion read noise — the L3↔L2 bridge,
+/// on the paper's 1024-row tile geometry.
+pub fn kernel_noise_sigma(k: usize, a_bits: u32, w_bits: u32, sigma_read_lsb: f64) -> f64 {
+    kernel_noise_sigma_tiled(k, 1024, a_bits, w_bits, sigma_read_lsb)
 }
 
 /// Layer-class CSNR requirement (Fig. 4) at a target accuracy drop.
@@ -224,6 +262,28 @@ mod tests {
         // Exact value: sqrt(1 · 85 · 85) · σ for 4b/4b single tile.
         let sa: f64 = 1.0 + 4.0 + 16.0 + 64.0;
         assert!((d - (sa * sa).sqrt()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn tiled_sigma_composes_in_quadrature() {
+        // Per-tile σ adds in quadrature: 4 tiles double the output σ.
+        let one = kernel_noise_sigma_for_row_tiles(1, 4, 4, 0.5);
+        let four = kernel_noise_sigma_for_row_tiles(4, 4, 4, 0.5);
+        assert!((four / one - 2.0).abs() < 1e-12);
+        // The 1024-row convenience wrapper is the tiled form.
+        for k in [96usize, 1024, 1025, 3072] {
+            let a = kernel_noise_sigma(k, 6, 6, 0.58);
+            let b = kernel_noise_sigma_tiled(k, 1024, 6, 6, 0.58);
+            assert_eq!(a.to_bits(), b.to_bits(), "k={k}");
+        }
+        // d_ff = 3072 on 1024-row tiles: 3 tiles, √3 over a single tile.
+        let d3 = kernel_noise_sigma(3072, 6, 6, 1.0);
+        let d1 = kernel_noise_sigma(1024, 6, 6, 1.0);
+        assert!((d3 / d1 - 3f64.sqrt()).abs() < 1e-12);
+        // Small-k replication still applies in the tiled form.
+        assert_eq!(row_replication_for(512, 1024), 2);
+        assert_eq!(row_replication_for(512, 512), 1);
+        assert_eq!(row_replication_for(0, 1024), 1);
     }
 
     #[test]

@@ -45,7 +45,7 @@ impl TilePlan {
 }
 
 /// The scheduler: stateless; all methods derive from macro parameters
-/// plus the shard count (how many physical macros convert in parallel).
+/// plus the serving topology (how many macros and dies run in parallel).
 #[derive(Clone, Debug)]
 pub struct Scheduler {
     pub params: MacroParams,
@@ -54,17 +54,32 @@ pub struct Scheduler {
     /// latency divides across shards because column tiles of the same
     /// layer convert concurrently.
     pub shards: usize,
+    /// Independent dies serving the same layer. A served batch's vectors
+    /// split across dies, so only `⌈m / dies⌉` of the activation stream
+    /// serializes on any one die. Energy is die-independent.
+    pub dies: usize,
     energy: EnergyModel,
 }
 
 impl Scheduler {
     pub fn new(params: &MacroParams) -> Self {
-        Scheduler { params: params.clone(), shards: 1, energy: EnergyModel::cr_cim(params) }
+        Self::with_topology(params, 1, 1)
     }
 
     /// A scheduler that maps column tiles across `shards` parallel macros.
     pub fn with_shards(params: &MacroParams, shards: usize) -> Self {
-        Scheduler { params: params.clone(), shards: shards.max(1), energy: EnergyModel::cr_cim(params) }
+        Self::with_topology(params, shards, 1)
+    }
+
+    /// Full serving topology: `shards` parallel macros per die, `dies`
+    /// independent dies sharing the batch stream.
+    pub fn with_topology(params: &MacroParams, shards: usize, dies: usize) -> Self {
+        Scheduler {
+            params: params.clone(),
+            shards: shards.max(1),
+            dies: dies.max(1),
+            energy: EnergyModel::cr_cim(params),
+        }
     }
 
     /// Row tiles needed for a reduction dimension `k`.
@@ -89,16 +104,23 @@ impl Scheduler {
         // Latency: serial over (row tiles × column tiles × a_bits) cycles
         // per vector; vectors stream (one conversion cycle each, weights
         // stay loaded while m streams). Column tiles spread across macro
-        // shards, so only ⌈ct / shards⌉ of them serialize.
+        // shards, so only ⌈ct / shards⌉ of them serialize; the batch's
+        // vectors spread across dies, so only ⌈m / dies⌉ of the stream
+        // serializes on any one die.
         let ct_serial = ct.div_ceil(self.shards.max(1) as u64);
-        let cycles = rt * ct_serial * op.a_bits as u64 * shape.m as u64;
+        let m_per_die = (shape.m as u64).div_ceil(self.dies.max(1) as u64);
+        let cycles = rt * ct_serial * op.a_bits as u64 * m_per_die;
         let t_cycle = self.params.conversion_latency_ns(op.cb);
+        // Row-tile accumulation reduce step: each extra row tile's
+        // partial sum folds into the layer accumulator with one digital
+        // add per streamed vector (pipelined across columns).
+        let reduce_ns = self.params.t_accum_ns * (rt.saturating_sub(1) * m_per_die) as f64;
         let e_conv = self.energy.conversion_energy_pj(op.cb);
         TilePlan {
             weight_loads: rt * ct,
             conversions,
             energy_pj: e_conv * conversions as f64,
-            latency_ns: t_cycle * cycles as f64,
+            latency_ns: t_cycle * cycles as f64 + reduce_ns,
             ops_1b: 2.0
                 * shape.k as f64
                 * shape.n as f64
@@ -158,6 +180,44 @@ mod tests {
         let s9 = Scheduler::with_shards(&p, 9).plan_linear(&sh, op);
         assert!((s9.latency_ns - s4.latency_ns).abs() < 1e-9);
         assert_eq!(Scheduler::with_shards(&p, 0).shards, 1);
+    }
+
+    #[test]
+    fn dies_divide_stream_latency_but_not_energy() {
+        let p = MacroParams::default();
+        let op = PrecisionPlan::paper_sac().mlp;
+        let sh = shape(96, 13, 40);
+        let d1 = Scheduler::new(&p).plan_linear(&sh, op);
+        let d4 = Scheduler::with_topology(&p, 1, 4).plan_linear(&sh, op);
+        assert_eq!(d1.conversions, d4.conversions);
+        assert!((d1.energy_pj - d4.energy_pj).abs() < 1e-9);
+        assert!((d1.latency_ns / d4.latency_ns - 4.0).abs() < 1e-9, "4 dies must 4x the stream");
+        // More dies than vectors saturates at one vector per die.
+        let d99 = Scheduler::with_topology(&p, 1, 99).plan_linear(&shape(96, 13, 4), op);
+        let d4b = Scheduler::with_topology(&p, 1, 4).plan_linear(&shape(96, 13, 4), op);
+        assert!((d99.latency_ns - d4b.latency_ns).abs() < 1e-9);
+        assert_eq!(Scheduler::with_topology(&p, 0, 0).dies, 1);
+    }
+
+    #[test]
+    fn row_tiled_layers_pay_the_accumulation_reduce_step() {
+        let p = MacroParams::default();
+        let op = PrecisionPlan::paper_sac().mlp;
+        let m = 10u64;
+        let one = Scheduler::new(&p).plan_linear(&shape(1024, 13, m as usize), op);
+        let three = Scheduler::new(&p).plan_linear(&shape(3072, 13, m as usize), op);
+        // 3 row tiles: 3x the conversion cycles plus 2 digital adds per
+        // streamed vector.
+        let want = 3.0 * one.latency_ns + p.t_accum_ns * (2 * m) as f64;
+        assert!(
+            (three.latency_ns - want).abs() < 1e-9,
+            "got {} want {want}",
+            three.latency_ns
+        );
+        // The reduce step scales down with the die count like the stream.
+        let three_d2 = Scheduler::with_topology(&p, 1, 2).plan_linear(&shape(3072, 13, 10), op);
+        let want_d2 = 3.0 * one.latency_ns / 2.0 + p.t_accum_ns * (2 * m / 2) as f64;
+        assert!((three_d2.latency_ns - want_d2).abs() < 1e-9);
     }
 
     #[test]

@@ -544,6 +544,48 @@ mod tests {
     }
 
     #[test]
+    fn mlp_fc2_k3072_serves_across_two_dies() {
+        // The paper's macro converts a fixed 1024-row tile, so a ViT MLP
+        // fc2 (k = d_ff = 3072) must row-tile; the server path must route
+        // such a layer across multiple dies without truncation.
+        use crate::coordinator::shard::SimExecutor;
+        use crate::vit::plan::OperatingPoint;
+        let mut p = MacroParams::default(); // true 1024-row geometry
+        p.sigma_cu_rel = 0.0;
+        p.nonlin_cubic_lsb = 0.0;
+        p.sigma_cmp_lsb = 0.0;
+        p.sigma_cmp_offset_lsb = 0.0;
+        p.temperature_k = 0.0;
+        let op = OperatingPoint { a_bits: 2, w_bits: 2, cb: crate::cim::params::CbMode::Off };
+        let mut exec = SimExecutor::with_dies(&p, 3072, 10, op, 2, 2).unwrap();
+        assert_eq!(exec.die_count(), 2);
+        let srv = test_server();
+        let conn = srv.open_conn();
+        for i in 0..4 {
+            let img: Vec<f32> = (0..16).map(|j| ((i + j) % 7) as f32 / 7.0 - 0.4).collect();
+            let body: Vec<String> = img.iter().map(|v| format!("{v}")).collect();
+            srv.handle_line(
+                &format!(r#"{{"id": {i}, "image": [{}]}}"#, body.join(", ")),
+                conn,
+            )
+            .unwrap();
+        }
+        let served = srv.executor_step(&mut exec);
+        assert_eq!(served, 4);
+        let resps = srv.take_responses(conn);
+        assert_eq!(resps.len(), 4);
+        for r in resps {
+            let j = json::parse(&r).unwrap();
+            assert!(j.get_path("pred").unwrap().as_f64().unwrap() >= 0.0);
+            let logits = j.get_path("logits").unwrap().as_arr().unwrap();
+            assert_eq!(logits.len(), 10);
+            assert!(logits.iter().all(|v| v.as_f64().unwrap().is_finite()));
+        }
+        let stats = srv.ledger_json();
+        assert_eq!(stats.get_path("requests").unwrap().as_f64().unwrap(), 4.0);
+    }
+
+    #[test]
     fn end_to_end_over_tcp() {
         let cfg = ServerConfig {
             addr: "127.0.0.1:0".into(),

@@ -1,47 +1,90 @@
-//! Column-sharded macro execution for the serving path.
+//! 2-D tiled macro execution for the serving path: row tiles × column
+//! shards.
 //!
-//! One macro holds `cols / w_bits` logical outputs per tile; a layer with
-//! more outputs (or a deployment with idle macros) splits column-wise
-//! across independent [`CimMacro`] shards that convert concurrently —
-//! exactly the parallelism the chip's floorplan offers. [`MacroShards`]
-//! owns the shard bank and stitches per-shard outputs back into full
-//! output vectors; [`SimExecutor`] wraps it in the server's
-//! [`BatchExecutor`] interface so a served batch runs tiles across
-//! parallel macro shards instead of one serial loop.
+//! One macro converts a fixed tile per conversion: at most
+//! `MacroParams::active_rows` rows of the reduction dimension and
+//! `cols / w_bits` logical outputs. A layer of arbitrary shape therefore
+//! splits two ways:
 //!
-//! Determinism: each shard derives its die seed from (base seed, shard
-//! index) and each column inside a shard owns its conversion substream,
-//! so a given (params, weights, shard count) is reproducible regardless
-//! of worker-thread counts.
+//! - **column shards** (n-dimension): independent [`CimMacro`]s each own a
+//!   contiguous slice of the outputs and convert concurrently — the
+//!   parallelism the chip's floorplan offers;
+//! - **row tiles** (k-dimension): when `k > active_rows` (every ViT MLP
+//!   `fc2`, d_ff = 3072, on the 1024-row macro), the reduction splits into
+//!   row tiles whose partial sums accumulate **digitally** in the output
+//!   periphery. Each row tile is a distinct physical macro with its own
+//!   mismatch/noise seed, so per-tile output noise is independent and the
+//!   accumulated total composes in quadrature
+//!   (see [`kernel_noise_sigma_for_row_tiles`]).
+//!
+//! [`MacroShards`] owns the (row tile × column shard) unit grid and
+//! stitches per-unit outputs into full vectors; [`SimExecutor`] (built on
+//! the multi-die [`DieBank`](super::multidie::DieBank)) wraps it in the
+//! server's [`BatchExecutor`] interface so a served batch runs an
+//! arbitrary-shape layer across parallel macros instead of one serial
+//! loop.
+//!
+//! # Determinism contract
+//!
+//! The substream hierarchy is `seed → die → row tile → global column →
+//! conversion counter`:
+//!
+//! - each row tile derives its macro seed from the die seed and the tile
+//!   index ([`MacroParams::for_row_tile`]);
+//! - each column keys its mismatch and conversion noise on its **global**
+//!   column index (`MacroParams::col_base` + physical index), not its
+//!   index within a shard.
+//!
+//! Consequences, test-enforced in `rust/tests/tiled_shards.rs`:
+//! results are **bit-identical at any worker-thread count and at any
+//! column-shard count** (even with noise — the shard decomposition is
+//! invisible to the noise model), bit-identical across row-tile counts at
+//! zero noise, and run-to-run reproducible always. Changing the row-tile
+//! count redistributes rows across *different physical macros*, so noisy
+//! outputs legitimately differ — exactly as re-mapping a layer onto other
+//! dies would on silicon.
 
 use crate::cim::netstats::LayerClass;
 use crate::cim::{CimMacro, MacroParams};
 use crate::util::pool::parallel_map_mut;
-use crate::util::rng::Rng;
 use crate::vit::plan::OperatingPoint;
 use crate::vit::LinearShape;
 
-use super::sac::PlanCost;
+use super::multidie::DieBank;
+use super::sac::{kernel_noise_sigma_for_row_tiles, PlanCost};
 use super::scheduler::Scheduler;
 use super::server::BatchExecutor;
 
-/// One shard: a macro plus the logical output range it owns.
-struct Shard {
+/// One execution unit: a macro plus the (row, output) ranges it owns.
+struct Unit {
     mac: CimMacro,
+    /// First logical output this unit computes.
     out_lo: usize,
+    /// One past the last logical output.
     out_hi: usize,
+    /// First row of the reduction dimension this unit integrates.
+    row_lo: usize,
+    /// One past the last row.
+    row_hi: usize,
 }
 
-/// A logical (k × n) integer linear layer split column-wise across
-/// parallel macro shards.
+/// A logical (k × n) integer linear layer split across a 2-D grid of
+/// macros: row tiles over the reduction dimension × column shards over
+/// the outputs. Partial sums from the row tiles of each output accumulate
+/// digitally; see the module docs for the tiling and determinism model.
 pub struct MacroShards {
-    shards: Vec<Shard>,
+    units: Vec<Unit>,
+    /// Operating point (bit widths + CB mode) the layer runs at.
     pub op: OperatingPoint,
     /// Reduction dimension (rows of the weight matrix).
     pub k: usize,
     /// Logical outputs across all shards.
     pub n: usize,
-    /// Worker threads for the cross-shard fan-out.
+    /// Row tiles the reduction dimension is split into.
+    row_tiles: usize,
+    /// Column shards the outputs are split into.
+    col_shards: usize,
+    /// Worker threads for the cross-unit fan-out.
     threads: usize,
     /// Cumulative conversions across all `matvec_batch` calls.
     pub total_conversions: u64,
@@ -51,27 +94,39 @@ pub struct MacroShards {
 
 impl MacroShards {
     /// Build a shard bank for the signed weight matrix `w[row][out]` at
-    /// the given operating point. `shards` is a request: it is raised to
-    /// the minimum number of macros the outputs need, and capped at one
-    /// output per shard.
+    /// the given operating point, with the minimum number of row tiles
+    /// (`⌈k / active_rows⌉` — one for k ≤ 1024 on the default geometry).
+    /// `shards` is a request: it is raised to the minimum number of
+    /// macros the outputs need and capped at one output per shard.
+    ///
+    /// Any `k ≥ 1` is accepted: a reduction dimension deeper than one
+    /// tile (k > `active_rows`, e.g. the d_ff = 3072 MLP `fc2`) row-tiles
+    /// automatically instead of erroring.
     pub fn new(
         params: &MacroParams,
         w: &[Vec<i32>],
         op: OperatingPoint,
         shards: usize,
     ) -> Result<Self, String> {
-        if op.a_bits == 0 || op.a_bits > 31 || op.w_bits == 0 || op.w_bits > 31 {
-            return Err(format!(
-                "operating point bits out of range 1..=31 (a_bits {}, w_bits {})",
-                op.a_bits, op.w_bits
-            ));
-        }
+        Self::with_tiling(params, w, op, shards, 1)
+    }
+
+    /// Like [`new`](Self::new), but with an explicit row-tile request.
+    /// `row_tiles` is raised to the minimum the geometry needs
+    /// (`⌈k / active_rows⌉`) and capped at one row per tile; requesting
+    /// more tiles than needed splits the reduction across more, smaller
+    /// physical macros (useful to spread a hot layer over idle silicon).
+    pub fn with_tiling(
+        params: &MacroParams,
+        w: &[Vec<i32>],
+        op: OperatingPoint,
+        shards: usize,
+        row_tiles: usize,
+    ) -> Result<Self, String> {
+        op.validate()?;
         let k = w.len();
         if k == 0 {
             return Err("empty weight matrix".to_string());
-        }
-        if k > params.active_rows {
-            return Err(format!("k {k} exceeds macro rows {}", params.active_rows));
         }
         let n = w[0].len();
         if n == 0 {
@@ -85,56 +140,100 @@ impl MacroShards {
             return Err(format!("w_bits {} exceeds macro columns {}", op.w_bits, params.cols));
         }
         let s = shards.max(1).max(n.div_ceil(cap_out)).min(n);
-        // Shards convert concurrently AND each shard keeps a slice of the
+        let t = row_tiles.max(1).max(params.row_tiles_needed(k)).min(k);
+        // Units convert concurrently AND each unit keeps a slice of the
         // worker budget for its own column fan-out, so total parallelism
-        // stays at the caller's thread count rather than the shard count.
+        // stays at the caller's thread count rather than the unit count.
         // Determinism is unaffected: noise is per-column owned.
-        let inner_threads = params.effective_threads().div_ceil(s).max(1);
-        let base = n / s;
-        let extra = n % s;
-        let mut bank = Vec::with_capacity(s);
-        let mut out_lo = 0usize;
-        for i in 0..s {
-            let take = base + usize::from(i < extra);
-            let out_hi = out_lo + take;
-            let p = params
-                .clone()
-                .with_seed(params.seed ^ (i as u64).wrapping_mul(0xD1B5_4A32_D192_ED03))
-                .with_threads(inner_threads);
-            let mut mac = CimMacro::new(&p)?;
-            let slice: Vec<Vec<i32>> =
-                w.iter().map(|row| row[out_lo..out_hi].to_vec()).collect();
-            mac.load_weights(&slice, op.w_bits)?;
-            bank.push(Shard { mac, out_lo, out_hi });
-            out_lo = out_hi;
+        let inner_threads = params.effective_threads().div_ceil(t * s).max(1);
+        let col_base = |out_lo: usize| out_lo * op.w_bits as usize;
+        let mut units = Vec::with_capacity(t * s);
+        let (row_base, row_extra) = (k / t, k % t);
+        let mut row_lo = 0usize;
+        for ti in 0..t {
+            let row_hi = row_lo + row_base + usize::from(ti < row_extra);
+            // All column shards of one row tile live on the same physical
+            // macro seed; columns key globally, so the shard split is
+            // noise-invisible (see module docs).
+            let tile_params = params.clone().for_row_tile(ti).with_threads(inner_threads);
+            let (out_base, out_extra) = (n / s, n % s);
+            let mut out_lo = 0usize;
+            for si in 0..s {
+                let out_hi = out_lo + out_base + usize::from(si < out_extra);
+                let p = tile_params.clone().with_col_base(col_base(out_lo));
+                let mut mac = CimMacro::new(&p)?;
+                let slice: Vec<Vec<i32>> = w[row_lo..row_hi]
+                    .iter()
+                    .map(|row| row[out_lo..out_hi].to_vec())
+                    .collect();
+                mac.load_weights(&slice, op.w_bits)?;
+                units.push(Unit { mac, out_lo, out_hi, row_lo, row_hi });
+                out_lo = out_hi;
+            }
+            row_lo = row_hi;
         }
         Ok(MacroShards {
-            shards: bank,
+            units,
             op,
             k,
             n,
+            row_tiles: t,
+            col_shards: s,
             threads: params.effective_threads(),
             total_conversions: 0,
             total_energy_pj: 0.0,
         })
     }
 
+    /// Column shards the outputs are split into.
     pub fn shard_count(&self) -> usize {
-        self.shards.len()
+        self.col_shards
     }
 
-    /// Run a batch of activation vectors through all shards concurrently
-    /// and stitch the per-shard outputs into full `n`-wide vectors.
+    /// Row tiles the reduction dimension is split into.
+    pub fn row_tile_count(&self) -> usize {
+        self.row_tiles
+    }
+
+    /// Total (row tile × column shard) macros in the bank.
+    pub fn unit_count(&self) -> usize {
+        self.units.len()
+    }
+
+    /// Integer-domain output noise σ of one logical output of this bank,
+    /// given the calibrated per-conversion read noise (LSB): the per-tile
+    /// σ of the `row_tiles` independently-seeded macros adds in
+    /// quadrature through the digital accumulator. This is the bridge
+    /// that keeps SAC plans honest for tiled layers.
+    pub fn kernel_sigma(&self, sigma_read_lsb: f64) -> f64 {
+        let (a, w) = (self.op.a_bits, self.op.w_bits);
+        kernel_noise_sigma_for_row_tiles(self.row_tiles, a, w, sigma_read_lsb)
+    }
+
+    /// Run a batch of activation vectors through all units concurrently,
+    /// accumulate row-tile partial sums digitally, and stitch the
+    /// per-shard outputs into full `n`-wide vectors.
     pub fn matvec_batch(&mut self, xs: &[Vec<i32>]) -> Result<Vec<Vec<i64>>, String> {
         let (a_bits, mode) = (self.op.a_bits, self.op.cb);
-        let per_shard = parallel_map_mut(&mut self.shards, self.threads, |_, shard| {
-            shard.mac.matvec_batch(xs, a_bits, mode)
+        let k = self.k;
+        for (v, x) in xs.iter().enumerate() {
+            if x.len() != k {
+                return Err(format!("activation {v} length {} != layer k {k}", x.len()));
+            }
+        }
+        let per_unit = parallel_map_mut(&mut self.units, self.threads, |_, unit| {
+            let slices: Vec<&[i32]> =
+                xs.iter().map(|x| &x[unit.row_lo..unit.row_hi]).collect();
+            unit.mac.matvec_batch(&slices, a_bits, mode)
         });
         let mut outputs = vec![vec![0i64; self.n]; xs.len()];
-        for (shard, result) in self.shards.iter().zip(per_shard) {
+        for (unit, result) in self.units.iter().zip(per_unit) {
             let runs = result?;
             for (v, run) in runs.into_iter().enumerate() {
-                outputs[v][shard.out_lo..shard.out_hi].copy_from_slice(&run.y);
+                // Digital accumulation: row tiles of the same output add.
+                for (j, y) in run.y.into_iter().enumerate() {
+                    outputs[v][unit.out_lo + j] += y;
+                }
                 self.total_conversions += run.conversions;
                 self.total_energy_pj += run.energy_pj;
             }
@@ -144,18 +243,19 @@ impl MacroShards {
 }
 
 /// Macro-simulator-backed batch executor: a single integer linear
-/// classifier head served straight off the sharded circuit model. Stands
-/// in for the PJRT executor in tests, demos and load experiments — every
-/// served batch exercises the true column-parallel conversion path.
+/// classifier head served straight off the tiled multi-die circuit model.
+/// Stands in for the PJRT executor in tests, demos and load experiments —
+/// every served batch exercises the true column-parallel conversion path,
+/// including the row-tile accumulation and cross-die routing.
 pub struct SimExecutor {
-    shards: MacroShards,
+    bank: DieBank,
     cost: PlanCost,
     classes: usize,
 }
 
 impl SimExecutor {
-    /// Build with a deterministic pseudo-random weight tile derived from
-    /// `params.seed` (a stand-in classifier head).
+    /// Single-die executor with a deterministic pseudo-random weight tile
+    /// derived from `params.seed` (a stand-in classifier head).
     pub fn new(
         params: &MacroParams,
         k: usize,
@@ -163,39 +263,59 @@ impl SimExecutor {
         op: OperatingPoint,
         shards: usize,
     ) -> Result<Self, String> {
+        Self::with_dies(params, k, classes, op, shards, 1)
+    }
+
+    /// Executor serving across `dies` independent dies: each die holds a
+    /// full copy of the layer under its own seed
+    /// ([`MacroParams::for_die`]) and batches split across dies by vector
+    /// index. Any `k` is accepted — deep reductions row-tile per die.
+    pub fn with_dies(
+        params: &MacroParams,
+        k: usize,
+        classes: usize,
+        op: OperatingPoint,
+        shards: usize,
+        dies: usize,
+    ) -> Result<Self, String> {
         if op.w_bits == 0 || op.w_bits > 16 {
             return Err(format!("w_bits {} out of range 1..=16", op.w_bits));
         }
-        let mut rng = Rng::new(params.seed ^ 0x51AC_0E5E);
+        let mut rng = crate::util::rng::Rng::new(params.seed ^ 0x51AC_0E5E);
         let lo = -(1i32 << (op.w_bits - 1));
         let span = 1u64 << op.w_bits;
         let w: Vec<Vec<i32>> = (0..k)
             .map(|_| (0..classes).map(|_| lo + rng.below(span) as i32).collect())
             .collect();
-        let shards = MacroShards::new(params, &w, op, shards)?;
-        let sched = Scheduler::with_shards(params, shards.shard_count());
+        let bank = DieBank::new(params, &w, op, shards, dies)?;
+        let sched = Scheduler::with_topology(params, bank.shard_count(), bank.die_count());
         let shape = LinearShape { class: LayerClass::TransformerMlp, k, n: classes, m: 1 };
         let total = sched.plan_linear(&shape, op);
         let cost = PlanCost {
-            plan_name: "sim-linear (sharded macro)",
+            plan_name: "sim-linear (tiled multi-die macro)",
             total,
             energy_uj: total.energy_pj * 1e-6,
             latency_us: total.latency_ns * 1e-3,
             tops_per_watt_effective: total.ops_1b / (total.energy_pj * 1e-12) / 1e12,
         };
-        Ok(SimExecutor { shards, cost, classes })
+        Ok(SimExecutor { bank, cost, classes })
+    }
+
+    /// Independent dies the executor routes batches across.
+    pub fn die_count(&self) -> usize {
+        self.bank.die_count()
     }
 
     /// Quantize one image into a k-long activation vector in a_bits range.
     fn featurize(&self, img: &[f32]) -> Vec<i32> {
-        let a_hi = (1i32 << (self.shards.op.a_bits - 1)) - 1;
-        let a_lo = -(1i32 << (self.shards.op.a_bits - 1));
-        (0..self.shards.k)
+        let a_hi = (1i32 << (self.bank.op.a_bits - 1)) - 1;
+        let a_lo = -(1i32 << (self.bank.op.a_bits - 1));
+        (0..self.bank.k)
             .map(|r| {
                 if img.is_empty() {
                     return 0;
                 }
-                let v = img[r * img.len() / self.shards.k];
+                let v = img[r * img.len() / self.bank.k];
                 let q = (v.clamp(-1.0, 1.0) * a_hi as f32).round() as i32;
                 q.clamp(a_lo, a_hi)
             })
@@ -206,11 +326,11 @@ impl SimExecutor {
 impl BatchExecutor for SimExecutor {
     fn execute(&mut self, images: &[Vec<f32>]) -> Result<Vec<Vec<f32>>, String> {
         let xs: Vec<Vec<i32>> = images.iter().map(|img| self.featurize(img)).collect();
-        let ys = self.shards.matvec_batch(&xs)?;
+        let ys = self.bank.matvec_batch(&xs)?;
         // Normalize so logits stay O(1); argmax is scale-invariant.
-        let w_hi = ((1i64 << (self.shards.op.w_bits - 1)) - 1).max(1);
-        let a_hi = ((1i64 << (self.shards.op.a_bits - 1)) - 1).max(1);
-        let scale = (self.shards.k as f64 * (w_hi * a_hi) as f64).recip();
+        let w_hi = ((1i64 << (self.bank.op.w_bits - 1)) - 1).max(1);
+        let a_hi = ((1i64 << (self.bank.op.a_bits - 1)) - 1).max(1);
+        let scale = (self.bank.k as f64 * (w_hi * a_hi) as f64).recip();
         Ok(ys
             .into_iter()
             .map(|y| y.into_iter().map(|v| (v as f64 * scale) as f32).collect())
@@ -230,6 +350,7 @@ impl BatchExecutor for SimExecutor {
 mod tests {
     use super::*;
     use crate::cim::CbMode;
+    use crate::util::rng::Rng;
 
     fn quiet_params() -> MacroParams {
         let mut p = MacroParams::default();
@@ -266,6 +387,7 @@ mod tests {
         let (w, xs) = tile(64, 10, 2, 3);
         let mut bank = MacroShards::new(&p, &w, op_2b(), 3).unwrap();
         assert_eq!(bank.shard_count(), 3);
+        assert_eq!(bank.row_tile_count(), 1);
         let got = bank.matvec_batch(&xs).unwrap();
         let reference = CimMacro::ideal(&p).unwrap();
         for (v, x) in xs.iter().enumerate() {
@@ -273,6 +395,42 @@ mod tests {
         }
         assert!(bank.total_conversions > 0);
         assert!(bank.total_energy_pj > 0.0);
+    }
+
+    #[test]
+    fn deep_k_row_tiles_and_matches_exact() {
+        let p = quiet_params();
+        // k = 150 over 64-row macros: 3 row tiles, accumulated digitally.
+        let (w, xs) = tile(150, 4, 2, 9);
+        let mut bank = MacroShards::new(&p, &w, op_2b(), 1).unwrap();
+        assert_eq!(bank.row_tile_count(), 3);
+        assert_eq!(bank.unit_count(), 3);
+        let got = bank.matvec_batch(&xs).unwrap();
+        let reference = CimMacro::ideal(&p).unwrap();
+        for (v, x) in xs.iter().enumerate() {
+            assert_eq!(got[v], reference.matvec_exact(&w, x), "vector {v}");
+        }
+        // Conversions scale with the tile count: 3 tiles × 8 used cols ×
+        // 2 a_bits × 3 vectors.
+        assert_eq!(bank.total_conversions, 3 * 8 * 2 * 3);
+    }
+
+    #[test]
+    fn over_requested_row_tiles_split_further() {
+        let p = quiet_params();
+        let (w, xs) = tile(64, 4, 2, 11);
+        // One tile would do; ask for 5 smaller ones.
+        let mut bank = MacroShards::with_tiling(&p, &w, op_2b(), 1, 5).unwrap();
+        assert_eq!(bank.row_tile_count(), 5);
+        let got = bank.matvec_batch(&xs).unwrap();
+        let reference = CimMacro::ideal(&p).unwrap();
+        for (v, x) in xs.iter().enumerate() {
+            assert_eq!(got[v], reference.matvec_exact(&w, x), "vector {v}");
+        }
+        // A tile request beyond k caps at one row per tile.
+        let (w1, _) = tile(3, 2, 2, 12);
+        let bank = MacroShards::with_tiling(&p, &w1, op_2b(), 1, 99).unwrap();
+        assert_eq!(bank.row_tile_count(), 3);
     }
 
     #[test]
@@ -290,14 +448,31 @@ mod tests {
     }
 
     #[test]
+    fn noisy_results_are_shard_count_invariant() {
+        // The strong half of the determinism contract: columns key on
+        // their global index, so the column-shard split is invisible to
+        // the noise model even with real noise.
+        let mut p = quiet_params();
+        p.sigma_cmp_lsb = 1.1;
+        p.sigma_cu_rel = 0.01;
+        let (w, xs) = tile(64, 6, 2, 6);
+        let run = |shards: usize| {
+            let mut bank = MacroShards::new(&p, &w, op_2b(), shards).unwrap();
+            bank.matvec_batch(&xs).unwrap()
+        };
+        let one = run(1);
+        for shards in [2usize, 3, 6] {
+            assert_eq!(run(shards), one, "shards={shards}");
+        }
+    }
+
+    #[test]
     fn rejects_bad_geometry() {
         let p = quiet_params();
         assert!(MacroShards::new(&p, &[], op_2b(), 1).is_err());
         assert!(MacroShards::new(&p, &[vec![]], op_2b(), 1).is_err());
         let ragged = vec![vec![1, 0], vec![1]];
         assert!(MacroShards::new(&p, &ragged, op_2b(), 1).is_err());
-        let too_deep = vec![vec![1i32]; 100];
-        assert!(MacroShards::new(&p, &too_deep, op_2b(), 1).is_err());
         let wide_op = OperatingPoint { a_bits: 2, w_bits: 13, cb: CbMode::Off };
         assert!(MacroShards::new(&p, &[vec![1i32]], wide_op, 1).is_err());
         // Oversized bit widths return Err (no shift-overflow panics), and
@@ -305,6 +480,10 @@ mod tests {
         let huge_a = OperatingPoint { a_bits: 33, w_bits: 2, cb: CbMode::Off };
         assert!(MacroShards::new(&p, &[vec![1i32]], huge_a, 1).is_err());
         assert!(SimExecutor::new(&p, 4, 2, huge_a, 1).is_err());
+        // Activation length must match the layer's k.
+        let (w, _) = tile(64, 2, 2, 8);
+        let mut bank = MacroShards::new(&p, &w, op_2b(), 1).unwrap();
+        assert!(bank.matvec_batch(&[vec![0i32; 63]]).is_err());
     }
 
     #[test]
@@ -312,6 +491,7 @@ mod tests {
         let p = quiet_params();
         let mut exec = SimExecutor::new(&p, 64, 10, op_2b(), 2).unwrap();
         assert_eq!(exec.num_classes(), 10);
+        assert_eq!(exec.die_count(), 1);
         assert!(exec.cost().energy_uj > 0.0);
         let images: Vec<Vec<f32>> = (0..4)
             .map(|i| (0..64).map(|j| ((i * 31 + j * 7) % 13) as f32 / 13.0 - 0.5).collect())
@@ -320,5 +500,17 @@ mod tests {
         assert_eq!(logits.len(), 4);
         assert!(logits.iter().all(|l| l.len() == 10));
         assert!(logits.iter().flatten().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn kernel_sigma_composes_in_quadrature_with_tiles() {
+        let p = quiet_params();
+        let (w1, _) = tile(64, 2, 2, 14);
+        let (w4, _) = tile(256, 2, 2, 14);
+        let one = MacroShards::new(&p, &w1, op_2b(), 1).unwrap();
+        let four = MacroShards::new(&p, &w4, op_2b(), 1).unwrap();
+        assert_eq!(four.row_tile_count(), 4);
+        let (s1, s4) = (one.kernel_sigma(0.5), four.kernel_sigma(0.5));
+        assert!((s4 / s1 - 2.0).abs() < 1e-12, "4 tiles must double σ: {s1} {s4}");
     }
 }

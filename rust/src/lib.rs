@@ -23,14 +23,25 @@
 //! The macro simulator is **column-parallel and deterministic**: the chip
 //! converts every used column in the same cycle, and the simulator mirrors
 //! that by fanning the `n_out × w_bits` column conversions of a matvec
-//! across a worker pool (`MacroParams::threads`, 0 = auto). The
-//! determinism contract: every RNG consumer owns a splittable substream —
-//! per-die mismatch by `(seed, column)`, per-conversion noise by
-//! `(seed, column, conversion counter)` — so **results are bit-identical
-//! at any thread count** and across shard fan-outs
-//! (`coordinator::MacroShards`). Monte-Carlo sweeps (`cim::montecarlo`),
-//! CSNR calibration (`coordinator::NoiseCalibration`) and the serving
-//! path (`coordinator::SimExecutor`) all ride the same engine.
+//! across a worker pool (`MacroParams::threads`, 0 = auto). Layers larger
+//! than one tile run through the **2-D tiling executor**
+//! (`coordinator::MacroShards`): outputs split into column shards,
+//! reduction dimensions deeper than `active_rows` (every ViT MLP `fc2`,
+//! d_ff = 3072) split into row tiles whose partial sums accumulate
+//! digitally with quadrature noise composition; a multi-die tier
+//! (`coordinator::DieBank`) routes served batches across independent
+//! dies.
+//!
+//! The determinism contract is the substream hierarchy
+//! `seed → die → row tile → global column → conversion counter`: every
+//! RNG consumer owns a splittable substream, so **results are
+//! bit-identical at any worker-thread count and at any column-shard
+//! count** (the shard split is invisible to the noise model), and equal
+//! to the exact integer matvec at zero noise for any decomposition.
+//! Monte-Carlo sweeps (`cim::montecarlo`), CSNR calibration
+//! (`coordinator::NoiseCalibration`) and the serving path
+//! (`coordinator::SimExecutor`) all ride the same engine. See
+//! `docs/ARCHITECTURE.md` for the full layer map and tiling model.
 //!
 //! The PJRT runtime (`runtime`) is gated behind the `pjrt` cargo feature
 //! because the `xla` / `anyhow` crates are only present in images that

@@ -8,9 +8,29 @@ use crate::cim::params::CbMode;
 /// Per-class operating point.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct OperatingPoint {
+    /// Activation precision (bit-serial conversion cycles).
     pub a_bits: u32,
+    /// Weight precision (bit-sliced physical column planes).
     pub w_bits: u32,
+    /// Whether the CSNR boost (majority voting) is active.
     pub cb: CbMode,
+}
+
+impl OperatingPoint {
+    /// Check the bit widths fit the integer datapath (two's complement
+    /// operands in `i32`, shift-safe reconstruction in `i64`). Every
+    /// executor that accepts a caller-supplied operating point routes
+    /// through this guard so oversized widths return `Err` instead of
+    /// panicking on a shift overflow.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.a_bits == 0 || self.a_bits > 31 || self.w_bits == 0 || self.w_bits > 31 {
+            return Err(format!(
+                "operating point bits out of range 1..=31 (a_bits {}, w_bits {})",
+                self.a_bits, self.w_bits
+            ));
+        }
+        Ok(())
+    }
 }
 
 /// A full precision/CB plan.
@@ -94,6 +114,20 @@ mod tests {
         assert_eq!(s.len(), 3);
         assert_eq!(s[0], PrecisionPlan::uniform_safe());
         assert_eq!(s[2], PrecisionPlan::paper_sac());
+    }
+
+    #[test]
+    fn operating_point_bit_guard() {
+        assert!(OperatingPoint { a_bits: 4, w_bits: 4, cb: CbMode::Off }.validate().is_ok());
+        assert!(OperatingPoint { a_bits: 31, w_bits: 1, cb: CbMode::On }.validate().is_ok());
+        for bad in [
+            OperatingPoint { a_bits: 0, w_bits: 4, cb: CbMode::Off },
+            OperatingPoint { a_bits: 4, w_bits: 0, cb: CbMode::Off },
+            OperatingPoint { a_bits: 32, w_bits: 4, cb: CbMode::Off },
+            OperatingPoint { a_bits: 4, w_bits: 33, cb: CbMode::Off },
+        ] {
+            assert!(bad.validate().is_err(), "{bad:?}");
+        }
     }
 
     #[test]

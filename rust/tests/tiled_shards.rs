@@ -1,0 +1,200 @@
+//! Integration tests for the 2-D tiled (row tiles × column shards) and
+//! multi-die execution paths — the determinism/equivalence contract of
+//! `docs/ARCHITECTURE.md`:
+//!
+//! 1. at zero noise, the tiled result equals the exact integer matvec at
+//!    **any** (thread count × shard count × row-tile count × die count);
+//! 2. with real noise, results are bit-identical at any thread count and
+//!    at any column-shard count (global-column noise keying), and
+//!    run-to-run reproducible;
+//! 3. the output noise of digitally accumulated row tiles composes in
+//!    quadrature against a single-tile calibration;
+//! 4. the paper-geometry acceptance case: a ViT MLP fc2 layer
+//!    (k = d_ff = 3072) runs on 1024-row macros across 3 row tiles and
+//!    2 dies, exactly.
+
+use cr_cim::cim::params::{CbMode, MacroParams};
+use cr_cim::cim::CimMacro;
+use cr_cim::coordinator::multidie::DieBank;
+use cr_cim::coordinator::MacroShards;
+use cr_cim::util::rng::Rng;
+use cr_cim::vit::plan::OperatingPoint;
+
+/// Small quiet (noise-free) geometry: 32-row tiles so row tiling kicks in
+/// at tiny k.
+fn quiet32() -> MacroParams {
+    let mut p = MacroParams::default();
+    p.adc_bits = 5;
+    p.active_rows = 32;
+    p.rows = 32;
+    p.cols = 12;
+    p.sigma_cu_rel = 0.0;
+    p.nonlin_cubic_lsb = 0.0;
+    p.sigma_cmp_lsb = 0.0;
+    p.sigma_cmp_offset_lsb = 0.0;
+    p.temperature_k = 0.0;
+    p
+}
+
+/// 64-row variant used by the noise tests.
+fn quiet64() -> MacroParams {
+    let mut p = quiet32();
+    p.adc_bits = 6;
+    p.active_rows = 64;
+    p.rows = 64;
+    p
+}
+
+fn op_2b() -> OperatingPoint {
+    OperatingPoint { a_bits: 2, w_bits: 2, cb: CbMode::Off }
+}
+
+fn tile(k: usize, n: usize, nvec: usize, seed: u64) -> (Vec<Vec<i32>>, Vec<Vec<i32>>) {
+    let mut rng = Rng::new(seed);
+    let w = (0..k).map(|_| (0..n).map(|_| rng.below(4) as i32 - 2).collect()).collect();
+    let xs = (0..nvec).map(|_| (0..k).map(|_| rng.below(4) as i32 - 2).collect()).collect();
+    (w, xs)
+}
+
+#[test]
+fn zero_noise_tiled_equals_exact_on_the_full_grid() {
+    let base = quiet32();
+    // k = 80 on 32-row tiles (≥ 3 row tiles), 10 outputs at 2b (≥ 2
+    // column shards on 12-column macros).
+    let (w, xs) = tile(80, 10, 3, 101);
+    let reference = CimMacro::ideal(&base).unwrap();
+    let want: Vec<Vec<i64>> = xs.iter().map(|x| reference.matvec_exact(&w, x)).collect();
+    for threads in [1usize, 4] {
+        for shards in [1usize, 3, 5] {
+            for tiles in [1usize, 5] {
+                let p = base.clone().with_threads(threads);
+                let mut bank = MacroShards::with_tiling(&p, &w, op_2b(), shards, tiles).unwrap();
+                assert!(bank.row_tile_count() >= 3);
+                assert!(bank.shard_count() >= 2);
+                let got = bank.matvec_batch(&xs).unwrap();
+                assert_eq!(
+                    got, want,
+                    "threads={threads} shards={shards} tiles={tiles}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn noisy_results_are_thread_and_shard_invariant() {
+    let mut p = quiet64();
+    p.sigma_cmp_lsb = 1.1;
+    p.sigma_cmp_offset_lsb = 0.5;
+    p.sigma_cu_rel = 0.01;
+    // k = 150: 3 row tiles; 6 outputs at 2b: up to 6 shards.
+    let (w, xs) = tile(150, 6, 3, 103);
+    let run = |threads: usize, shards: usize| {
+        let pp = p.clone().with_threads(threads);
+        let mut bank = MacroShards::new(&pp, &w, op_2b(), shards).unwrap();
+        bank.matvec_batch(&xs).unwrap()
+    };
+    let baseline = run(1, 1);
+    for threads in [1usize, 2, 8] {
+        for shards in [1usize, 2, 6] {
+            assert_eq!(run(threads, shards), baseline, "threads={threads} shards={shards}");
+        }
+    }
+}
+
+#[test]
+fn noisy_tiled_runs_replay_exactly() {
+    let mut p = quiet64();
+    p.sigma_cmp_lsb = 1.1;
+    p.sigma_cu_rel = 0.01;
+    let (w, xs) = tile(200, 4, 3, 107);
+    let run = || {
+        let mut bank = MacroShards::with_tiling(&p, &w, op_2b(), 2, 4).unwrap();
+        assert_eq!(bank.row_tile_count(), 4);
+        bank.matvec_batch(&xs).unwrap()
+    };
+    assert_eq!(run(), run());
+}
+
+/// Per-output noise std around the per-output mean, rms'd over outputs,
+/// measured by streaming `trials` copies of one activation vector (each
+/// conversion draws fresh noise from its counter-keyed substream).
+fn measured_noise_std(bank: &mut MacroShards, x: &[i32], trials: usize) -> f64 {
+    let xs: Vec<Vec<i32>> = (0..trials).map(|_| x.to_vec()).collect();
+    let ys = bank.matvec_batch(&xs).unwrap();
+    let n = bank.n;
+    let mut var_sum = 0.0;
+    for j in 0..n {
+        let vals: Vec<f64> = ys.iter().map(|y| y[j] as f64).collect();
+        let mean = vals.iter().sum::<f64>() / vals.len() as f64;
+        var_sum += vals.iter().map(|v| (v - mean) * (v - mean)).sum::<f64>()
+            / (vals.len() - 1) as f64;
+    }
+    (var_sum / n as f64).sqrt()
+}
+
+#[test]
+fn accumulated_tile_noise_composes_in_quadrature() {
+    // Comparator noise only: per-conversion read noise is then identical
+    // across tiles, so 4 accumulated tiles should show ~2x the output σ
+    // of a single-tile calibration (independent per-tile substreams).
+    let mut p = quiet64();
+    p.sigma_cmp_lsb = 1.1;
+    let (w1, _) = tile(64, 2, 0, 109);
+    let (w4, _) = tile(256, 2, 0, 109);
+    let x1: Vec<i32> = (0..64).map(|i| (i % 4) as i32 - 2).collect();
+    let x4: Vec<i32> = (0..256).map(|i| (i % 4) as i32 - 2).collect();
+    let mut one = MacroShards::new(&p, &w1, op_2b(), 1).unwrap();
+    let mut four = MacroShards::new(&p, &w4, op_2b(), 1).unwrap();
+    assert_eq!(one.row_tile_count(), 1);
+    assert_eq!(four.row_tile_count(), 4);
+    let trials = 128;
+    let s1 = measured_noise_std(&mut one, &x1, trials);
+    let s4 = measured_noise_std(&mut four, &x4, trials);
+    assert!(s1 > 0.1, "single-tile calibration must see noise, got {s1}");
+    let ratio = s4 / s1;
+    assert!(
+        (1.4..=2.7).contains(&ratio),
+        "4-tile σ should be ~2x single-tile (quadrature), got {ratio:.2} (s1={s1:.2} s4={s4:.2})"
+    );
+    // The analytic bridge the SAC planner uses agrees exactly.
+    assert!((four.kernel_sigma(1.0) / one.kernel_sigma(1.0) - 2.0).abs() < 1e-12);
+}
+
+#[test]
+fn multi_die_grid_matches_exact_at_zero_noise() {
+    let base = quiet32();
+    let (w, xs) = tile(80, 5, 6, 113);
+    let reference = CimMacro::ideal(&base).unwrap();
+    let want: Vec<Vec<i64>> = xs.iter().map(|x| reference.matvec_exact(&w, x)).collect();
+    for threads in [1usize, 4] {
+        for dies in [1usize, 2, 4] {
+            let p = base.clone().with_threads(threads);
+            let mut bank = DieBank::new(&p, &w, op_2b(), 2, dies).unwrap();
+            assert_eq!(bank.matvec_batch(&xs).unwrap(), want, "threads={threads} dies={dies}");
+        }
+    }
+}
+
+#[test]
+fn vit_mlp_fc2_k3072_on_paper_geometry_across_dies() {
+    // The acceptance case: d_ff = 3072 on the true 1088x78 / 1024-row
+    // geometry needs exactly 3 row tiles and serves across 2 dies with
+    // results equal to the exact integer matvec at zero noise.
+    let mut p = MacroParams::default();
+    p.sigma_cu_rel = 0.0;
+    p.nonlin_cubic_lsb = 0.0;
+    p.sigma_cmp_lsb = 0.0;
+    p.sigma_cmp_offset_lsb = 0.0;
+    p.temperature_k = 0.0;
+    let (w, xs) = tile(3072, 8, 2, 127);
+    let reference = CimMacro::ideal(&p).unwrap();
+    let want: Vec<Vec<i64>> = xs.iter().map(|x| reference.matvec_exact(&w, x)).collect();
+    let mut bank = DieBank::new(&p, &w, op_2b(), 2, 2).unwrap();
+    assert_eq!(bank.die_count(), 2);
+    assert_eq!(bank.row_tile_count(), 3);
+    assert_eq!(bank.matvec_batch(&xs).unwrap(), want);
+    // Thread count never changes the answer, even on the deep layer.
+    let mut serial = DieBank::new(&p.clone().with_threads(1), &w, op_2b(), 2, 2).unwrap();
+    assert_eq!(serial.matvec_batch(&xs).unwrap(), want);
+}

@@ -1,0 +1,50 @@
+#!/usr/bin/env bash
+# Check that relative markdown links in the repo's docs point at files
+# that exist, so docs/ARCHITECTURE.md and README.md can't rot as the
+# tree moves. External (http/https/mailto) and pure-anchor links are
+# skipped; anchors on relative links are stripped before the check.
+#
+# Usage: scripts/check_doc_links.sh [file.md ...]
+# With no arguments, checks every tracked *.md (falling back to a find
+# that skips hidden dirs and build output when git is unavailable).
+set -u
+
+cd "$(dirname "$0")/.."
+
+if [ "$#" -gt 0 ]; then
+    files="$*"
+elif git ls-files '*.md' > /dev/null 2>&1; then
+    files=$(git ls-files '*.md')
+else
+    files=$(find . -name '*.md' -not -path './.*' -not -path '*/target/*' \
+        -not -path '*/node_modules/*' | sort)
+fi
+
+fail=0
+for f in $files; do
+    dir=$(dirname "$f")
+    # Extract inline markdown link targets: [text](target)
+    targets=$(grep -oE '\]\([^)]+\)' "$f" 2>/dev/null | sed -E 's/^\]\(//; s/\)$//')
+    while IFS= read -r t; do
+        [ -z "$t" ] && continue
+        case "$t" in
+            http://*|https://*|mailto:*|\#*) continue ;;
+        esac
+        # Strip anchors and surrounding whitespace/quotes.
+        path=${t%%#*}
+        path=$(printf '%s' "$path" | sed -E 's/^[[:space:]]+//; s/[[:space:]]+$//')
+        [ -z "$path" ] && continue
+        if [ ! -e "$dir/$path" ] && [ ! -e "$path" ]; then
+            echo "BROKEN LINK: $f -> $t"
+            fail=1
+        fi
+    done <<EOF
+$targets
+EOF
+done
+
+if [ "$fail" -ne 0 ]; then
+    echo "doc link check failed"
+    exit 1
+fi
+echo "doc links OK"
