@@ -10,16 +10,21 @@
 //! 5. Batch vectors through column-sharded parallel macros.
 //! 6. Row-tile a k = 3072 MLP `fc2` layer across 2 dies — the 2-D tiled
 //!    multi-die serving path (see docs/ARCHITECTURE.md).
+//! 7. Serve a whole ViT encoder forward pass through the model-graph
+//!    pipeline executor: per-layer-class die pools, double-buffered
+//!    weight reloads, per-layer accounting.
 //!
 //! Run: `cargo run --release --example quickstart`
 
 use cr_cim::cim::params::{CbMode, MacroParams};
 use cr_cim::cim::{CimMacro, Column};
 use cr_cim::coordinator::sac::{self, NoiseCalibration};
-use cr_cim::coordinator::{DieBank, MacroShards, Scheduler};
+use cr_cim::coordinator::server::BatchExecutor;
+use cr_cim::coordinator::{DieBank, MacroShards, ModelExecutor, PipelineConfig, Scheduler};
 use cr_cim::metrics::{characterize, measure_csnr, sqnr_db, CharacterizeOpts, CsnrEnsemble};
 use cr_cim::util::pool::default_threads;
 use cr_cim::util::rng::Rng;
+use cr_cim::vit::graph::ModelGraph;
 use cr_cim::vit::plan::PrecisionPlan;
 use cr_cim::vit::VitConfig;
 
@@ -142,6 +147,58 @@ fn main() -> Result<(), String> {
         sac::kernel_noise_sigma_for_row_tiles(dies.row_tile_count(), 4, 4, calib_sigma),
         dies.row_tile_count(),
         sac::kernel_noise_sigma_for_row_tiles(1, 4, 4, calib_sigma)
+    );
+
+    println!("\n== 7. model-graph pipeline: a ViT encoder forward pass ==");
+    // The unit of work becomes the whole encoder: a 2-block graph walks
+    // layer by layer through per-layer-class die pools (attention and
+    // MLP on disjoint silicon, sized by the router's LPT mass), and the
+    // scheduler prices each layer's weight reload double-buffered
+    // behind the previous layer's conversions.
+    let small = VitConfig {
+        image: 16,
+        patch: 4,
+        dim: 48,
+        depth: 2,
+        heads: 4,
+        mlp_ratio: 2,
+        num_classes: 10,
+    };
+    let graph = ModelGraph::encoder(&small, 2, &PrecisionPlan::paper_sac());
+    let pool_cfg = PipelineConfig::sized_by_router(&params, &graph, 2, 4);
+    println!(
+        "  graph: {} layers, {} weights | pools: {} attention dies, {} MLP dies",
+        graph.layer_count(),
+        graph.weight_params(),
+        pool_cfg.attention_dies,
+        pool_cfg.mlp_dies,
+    );
+    let mut pipe = ModelExecutor::new(&params, graph, pool_cfg)?;
+    let imgs: Vec<Vec<f32>> = (0..2)
+        .map(|i| (0..16).map(|j| ((i + j) % 7) as f32 / 7.0 - 0.4).collect())
+        .collect();
+    let logits = pipe.execute(&imgs)?;
+    println!("  served {} images -> {} logits each", logits.len(), logits[0].len());
+    println!(
+        "  {:<16} {:>8} {:>12} {:>12} {:>12}",
+        "layer", "class", "conversions", "compute µs", "reload µs"
+    );
+    for l in pipe.layer_costs() {
+        println!(
+            "  {:<16} {:>8} {:>12} {:>12.2} {:>12.2}",
+            l.name,
+            if l.class.contains("attention") { "attn" } else { "mlp" },
+            l.conversions,
+            l.compute_ns * 1e-3,
+            l.reload_ns * 1e-3,
+        );
+    }
+    let pp = pipe.pipeline();
+    println!(
+        "  full pass: serial reloads {:.1} µs, double-buffered {:.1} µs ({:.0}% saved)",
+        pp.serial_ns * 1e-3,
+        pp.pipelined_ns * 1e-3,
+        pp.overlap_saving() * 100.0
     );
     Ok(())
 }

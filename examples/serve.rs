@@ -59,7 +59,8 @@ fn main() -> Result<()> {
     let batcher = Batcher::new(
         vec![1, exe.batch],
         std::time::Duration::from_millis(args.get_parse("max-wait-ms").map_err(|e| anyhow!("{e}"))?),
-    );
+    )
+    .map_err(|e| anyhow!(e))?;
 
     println!(
         "serving {n} requests at ~{rate}/s ({}), batch {} window {:?}",

@@ -12,8 +12,10 @@ use cr_cim::coordinator::sac::evaluate_plan;
 use cr_cim::coordinator::Scheduler;
 use cr_cim::metrics::{characterize, CharacterizeOpts};
 use cr_cim::util::bench::{black_box, BenchSuite};
+use cr_cim::util::json::Json;
 use cr_cim::util::pool::default_threads;
 use cr_cim::util::rng::Rng;
+use cr_cim::vit::graph::ModelGraph;
 use cr_cim::vit::plan::PrecisionPlan;
 use cr_cim::vit::VitConfig;
 
@@ -106,10 +108,7 @@ fn main() {
             black_box(m_par.matvec_batch(black_box(&xs_batch), 6, CbMode::Off).unwrap());
         },
     );
-    suite.note(
-        "matvec_parallel_speedup",
-        cr_cim::util::json::Json::num(serial_ns / par_ns.max(1e-9)),
-    );
+    suite.note("matvec_parallel_speedup", Json::num(serial_ns / par_ns.max(1e-9)));
     println!(
         "matvec parallel speedup at {threads} threads: {:.2}x",
         serial_ns / par_ns.max(1e-9)
@@ -121,6 +120,37 @@ fn main() {
     suite.bench("evaluate_plan ViT-small", || {
         black_box(evaluate_plan(&sched, &cfg, 1, &PrecisionPlan::paper_sac()));
     });
+
+    // Model-graph pipeline plan: ViT-Base batch 8, serial vs
+    // double-buffered weight reloads. The comparison is written to
+    // target/bench-reports/BENCH_pipeline.json so the full-pass latency
+    // trajectory is tracked from this PR on.
+    let vitb = VitConfig::vit_base();
+    let graph8 = ModelGraph::encoder(&vitb, 8, &PrecisionPlan::paper_sac());
+    let topo = Scheduler::with_topology(&params, 4, 2);
+    suite.bench("plan_graph ViT-Base b8 (48 layers)", || {
+        black_box(topo.plan_graph(black_box(&graph8)));
+    });
+    let pp = topo.plan_graph(&graph8);
+    let mut pipe = Json::obj();
+    pipe.set("model", Json::str("vit-base"));
+    pipe.set("batch", Json::num(8.0));
+    pipe.set("layers", Json::num(pp.layers.len() as f64));
+    pipe.set("shards", Json::num(topo.shards as f64));
+    pipe.set("dies", Json::num(topo.dies as f64));
+    pipe.set("serial_reload_latency_us", Json::num(pp.serial_ns * 1e-3));
+    pipe.set("pipelined_reload_latency_us", Json::num(pp.pipelined_ns * 1e-3));
+    pipe.set("overlap_saving_frac", Json::num(pp.overlap_saving()));
+    let pipe = Json::Obj(pipe);
+    suite.note("pipeline_reload_overlap", pipe.clone());
+    let report_dir = std::path::Path::new("target/bench-reports");
+    if std::fs::create_dir_all(report_dir).is_ok() {
+        let path = report_dir.join("BENCH_pipeline.json");
+        match std::fs::write(&path, pipe.to_string_pretty()) {
+            Ok(()) => println!("[pipeline report written to {}]", path.display()),
+            Err(e) => eprintln!("warn: failed to write {}: {e}", path.display()),
+        }
+    }
 
     suite.finish();
 }

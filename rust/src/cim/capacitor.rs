@@ -36,9 +36,17 @@ pub struct CapacitorBank {
 impl CapacitorBank {
     /// Sample a bank for `column` of the die identified by `params.seed`.
     pub fn sample(params: &MacroParams, column: usize) -> Self {
+        let n = params.active_rows;
+        // σ_u = 0 collapses every draw to exactly 1.0, so skip the 2^bits
+        // gauss draws. Bit-identical (the bank owns its substream, so the
+        // skipped draws are invisible to every other consumer); makes
+        // zero-noise model-graph walks at ViT-Base scale cheap to
+        // instantiate.
+        if params.sigma_cu_rel == 0.0 {
+            return Self::from_cells(vec![1.0; n], params.adc_bits);
+        }
         let root = Rng::new(params.seed);
         let mut rng = root.substream(0x00C4_B44C, column as u64);
-        let n = params.active_rows;
         let mut cells = Vec::with_capacity(n);
         for _ in 0..n {
             // Truncate at ±6σ: a real cap cannot go negative.
@@ -216,6 +224,17 @@ mod tests {
         assert_eq!(a.cells, b.cells);
         let c = CapacitorBank::sample(&p, 6);
         assert_ne!(a.cells, c.cells);
+    }
+
+    #[test]
+    fn zero_sigma_fast_path_equals_ideal_bank() {
+        // The σ = 0 shortcut must be bit-identical to the drawn path
+        // (every draw would collapse to 1.0 anyway).
+        let p = small_params(0.0);
+        let sampled = CapacitorBank::sample(&p, 3);
+        let ideal = CapacitorBank::ideal(p.adc_bits);
+        assert_eq!(sampled.cells, ideal.cells);
+        assert_eq!(sampled.total(), ideal.total());
     }
 
     #[test]

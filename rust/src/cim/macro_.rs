@@ -282,17 +282,7 @@ impl CimMacro {
     /// Exact integer reference for the loaded tile (periphery bypass).
     /// An empty weight matrix has no outputs.
     pub fn matvec_exact(&self, w: &[Vec<i32>], x: &[i32]) -> Vec<i64> {
-        let n_out = match w.first() {
-            Some(row) => row.len(),
-            None => return Vec::new(),
-        };
-        let mut y = vec![0i64; n_out];
-        for (r, wrow) in w.iter().enumerate() {
-            for (j, &wv) in wrow.iter().enumerate() {
-                y[j] += wv as i64 * x[r] as i64;
-            }
-        }
-        y
+        matvec_exact(w, x)
     }
 
     /// 1b-normalized op count of one matvec on the loaded tile.
@@ -331,6 +321,24 @@ impl CimMacro {
         }
         Ok((sq / count as f64).sqrt())
     }
+}
+
+/// Exact integer matvec `y[j] = Σ_r w[r][j]·x[r]` — the digital
+/// reference every analog decomposition is tested against. Free
+/// function so graph-level reference walks (`coordinator::pipeline`)
+/// can use it without instantiating a macro.
+pub fn matvec_exact(w: &[Vec<i32>], x: &[i32]) -> Vec<i64> {
+    let n_out = match w.first() {
+        Some(row) => row.len(),
+        None => return Vec::new(),
+    };
+    let mut y = vec![0i64; n_out];
+    for (r, wrow) in w.iter().enumerate() {
+        for (j, &wv) in wrow.iter().enumerate() {
+            y[j] += wv as i64 * x[r] as i64;
+        }
+    }
+    y
 }
 
 #[cfg(test)]

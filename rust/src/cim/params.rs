@@ -108,6 +108,13 @@ pub struct MacroParams {
     /// accumulator when a reduction dimension spans multiple tiles
     /// (k > `active_rows`). Per extra row tile, per streamed vector.
     pub t_accum_ns: f64,
+    /// Latency of reprogramming one (row tile × column tile) weight load
+    /// [ns]: a row-parallel 6T SRAM write of the tile (≈1 ns/row over
+    /// 1024 active rows on the paper geometry). Paid per tile whenever a
+    /// layer's weights move onto a macro; the `Scheduler` can hide it
+    /// behind the previous layer's bit-serial conversions
+    /// (double-buffered reload, see `Scheduler::plan_graph`).
+    pub t_wload_ns: f64,
 
     // ---- environment ----
     /// Junction temperature [K].
@@ -168,6 +175,8 @@ impl Default for MacroParams {
             e_logic_pj: 0.60,
             // One registered add in the output periphery (65 nm digital).
             t_accum_ns: 2.0,
+            // Row-parallel SRAM write of one weight tile: ~1 ns/row.
+            t_wload_ns: 1000.0,
             temperature_k: 300.0,
             seed: 0x5EED_C100,
             threads: 0,
@@ -181,6 +190,9 @@ const DIE_SEED_SALT: u64 = 0xD1E5_EED5_A17E_D1E5;
 /// Seed salt separating the physical macros that hold different row tiles
 /// of one layer (the k > `active_rows` accumulation path).
 const TILE_SEED_SALT: u64 = 0x7113_5EED_5A17_7113;
+/// Seed salt separating per-layer-class die pools (the pipeline executor
+/// keeps attention-class and MLP-class layers on disjoint silicon).
+const POOL_SEED_SALT: u64 = 0x9001_5EED_0C1A_55E5;
 
 impl MacroParams {
     /// Number of ADC codes (2^adc_bits).
@@ -295,6 +307,18 @@ impl MacroParams {
         self
     }
 
+    /// Parameters of die pool `pool` in a per-layer-class deployment:
+    /// the master seed is mixed with the pool index so each pool's dies
+    /// are disjoint physical silicon — resizing one class's pool never
+    /// re-seeds the other's. Pool 0 keeps the master seed (the default
+    /// shared pool: a pool-less `DieBank` is unchanged). Composes with
+    /// [`for_die`](Self::for_die) / [`for_row_tile`](Self::for_row_tile)
+    /// into the hierarchy `seed → pool → die → row tile → column`.
+    pub fn for_pool(mut self, pool: usize) -> Self {
+        self.seed ^= (pool as u64).wrapping_mul(POOL_SEED_SALT);
+        self
+    }
+
     /// Set the noise-keying base for logical column 0 (see `col_base`).
     pub fn with_col_base(mut self, col_base: usize) -> Self {
         self.col_base = col_base;
@@ -402,6 +426,35 @@ mod tests {
         let dt = p.clone().for_die(1).for_row_tile(1).seed;
         assert_ne!(dt, d1);
         assert_ne!(dt, t1);
+    }
+
+    #[test]
+    fn class_pool_seeds_are_disjoint_and_identity_at_zero() {
+        let p = MacroParams::default();
+        // Pool 0 is the default shared pool: byte-for-byte unchanged.
+        assert_eq!(p.clone().for_pool(0).seed, p.seed);
+        let p1 = p.clone().for_pool(1).seed;
+        let p2 = p.clone().for_pool(2).seed;
+        assert_ne!(p1, p.seed);
+        assert_ne!(p1, p2);
+        // Pool salting must not collide with the die/tile axes.
+        assert_ne!(p1, p.clone().for_die(1).seed);
+        assert_ne!(p1, p.clone().for_row_tile(1).seed);
+        // Die i of pool 1 differs from die i of pool 2: resizing one
+        // class's pool cannot alias the other's silicon.
+        assert_ne!(
+            p.clone().for_pool(1).for_die(1).seed,
+            p.clone().for_pool(2).for_die(1).seed
+        );
+    }
+
+    #[test]
+    fn weight_load_latency_is_positive_and_row_scale() {
+        let p = MacroParams::default();
+        // ~1 ns/row over 1024 rows: the reload must be comparable to a
+        // handful of conversion cycles, or pipelining it is meaningless.
+        assert!(p.t_wload_ns > 0.0);
+        assert!(p.t_wload_ns < 100.0 * p.conversion_latency_ns(CbMode::Off));
     }
 
     #[test]

@@ -33,17 +33,25 @@ impl<T> Batch<T> {
 /// Batch-forming policy over compiled batch sizes.
 #[derive(Clone, Debug)]
 pub struct Batcher {
-    /// Compiled batch sizes, ascending (e.g. [1, 16]).
+    /// Compiled batch sizes, ascending (e.g. [1, 16]), all ≥ 1.
     pub sizes: Vec<usize>,
     pub max_wait: Duration,
-    queue: Vec<u64>, // placeholder to keep the struct Send-friendly
 }
 
 impl Batcher {
-    pub fn new(mut sizes: Vec<usize>, max_wait: Duration) -> Self {
-        assert!(!sizes.is_empty(), "need at least one compiled batch size");
+    /// Build a policy over the compiled batch sizes. Rejects an empty
+    /// list (there would be no valid execution size — the old assert
+    /// panicked the server thread instead of surfacing a config error)
+    /// and any zero size (a 0-size batch has undefined occupancy).
+    pub fn new(mut sizes: Vec<usize>, max_wait: Duration) -> Result<Self, String> {
+        if sizes.is_empty() {
+            return Err("batcher needs at least one compiled batch size".to_string());
+        }
+        if sizes.contains(&0) {
+            return Err("compiled batch sizes must be >= 1".to_string());
+        }
         sizes.sort_unstable();
-        Batcher { sizes, max_wait, queue: Vec::new() }
+        Ok(Batcher { sizes, max_wait })
     }
 
     pub fn max_batch(&self) -> usize {
@@ -86,11 +94,6 @@ impl Batcher {
         let exec_size = self.exec_size_for(requests.len());
         Some(Batch { requests, exec_size })
     }
-
-    #[allow(dead_code)]
-    fn _unused(&self) -> usize {
-        self.queue.len()
-    }
 }
 
 #[cfg(test)]
@@ -106,14 +109,14 @@ mod tests {
 
     #[test]
     fn full_batch_closes_immediately() {
-        let b = Batcher::new(vec![1, 16], Duration::from_millis(5));
+        let b = Batcher::new(vec![1, 16], Duration::from_millis(5)).unwrap();
         assert_eq!(b.decide(16, Some(Duration::ZERO)), 16);
         assert_eq!(b.decide(20, Some(Duration::ZERO)), 16);
     }
 
     #[test]
     fn partial_batch_waits_until_deadline() {
-        let b = Batcher::new(vec![1, 16], Duration::from_millis(5));
+        let b = Batcher::new(vec![1, 16], Duration::from_millis(5)).unwrap();
         assert_eq!(b.decide(3, Some(Duration::from_millis(1))), 0);
         assert_eq!(b.decide(3, Some(Duration::from_millis(6))), 3);
         assert_eq!(b.decide(0, None), 0);
@@ -121,7 +124,7 @@ mod tests {
 
     #[test]
     fn exec_size_picks_smallest_fitting() {
-        let b = Batcher::new(vec![1, 4, 16], Duration::from_millis(5));
+        let b = Batcher::new(vec![1, 4, 16], Duration::from_millis(5)).unwrap();
         assert_eq!(b.exec_size_for(1), 1);
         assert_eq!(b.exec_size_for(2), 4);
         assert_eq!(b.exec_size_for(5), 16);
@@ -130,7 +133,7 @@ mod tests {
 
     #[test]
     fn form_batch_drains_and_pads() {
-        let b = Batcher::new(vec![1, 16], Duration::from_millis(5));
+        let b = Batcher::new(vec![1, 16], Duration::from_millis(5)).unwrap();
         let mut pending = reqs(3, Duration::from_millis(10));
         let batch = b.form_batch(&mut pending, Instant::now()).unwrap();
         assert_eq!(batch.requests.len(), 3);
@@ -141,15 +144,24 @@ mod tests {
 
     #[test]
     fn form_batch_returns_none_when_waiting() {
-        let b = Batcher::new(vec![16], Duration::from_secs(10));
+        let b = Batcher::new(vec![16], Duration::from_secs(10)).unwrap();
         let mut pending = reqs(2, Duration::ZERO);
         assert!(b.form_batch(&mut pending, Instant::now()).is_none());
         assert_eq!(pending.len(), 2);
     }
 
     #[test]
+    fn empty_or_zero_sizes_are_rejected() {
+        // An empty list used to panic via assert (and before that,
+        // silently produced a 0-size max batch); it is a config error.
+        assert!(Batcher::new(vec![], Duration::from_millis(5)).is_err());
+        assert!(Batcher::new(vec![0, 4], Duration::from_millis(5)).is_err());
+        assert!(Batcher::new(vec![4], Duration::from_millis(5)).is_ok());
+    }
+
+    #[test]
     fn fifo_order_preserved() {
-        let b = Batcher::new(vec![2], Duration::ZERO);
+        let b = Batcher::new(vec![2], Duration::ZERO).unwrap();
         let mut pending = reqs(5, Duration::from_millis(1));
         let batch = b.form_batch(&mut pending, Instant::now()).unwrap();
         assert_eq!(batch.requests[0].id, 0);

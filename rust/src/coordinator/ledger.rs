@@ -9,6 +9,28 @@ use crate::coordinator::sac::PlanCost;
 use crate::util::json::Json;
 use crate::util::stats::Moments;
 
+/// Cumulative per-layer accounting reported by a model-graph executor
+/// (see `coordinator::pipeline::ModelExecutor::layer_costs`): what each
+/// graph layer actually spent across all forward passes so far.
+#[derive(Clone, Debug)]
+pub struct LayerCost {
+    /// Graph layer name (`block3.fc2`).
+    pub name: String,
+    /// SAC class label (`Transformer attention` / `Transformer MLP`).
+    pub class: &'static str,
+    /// Forward passes this layer has executed.
+    pub calls: u64,
+    /// Simulated conversions actually performed (bank counters).
+    pub conversions: u64,
+    /// Simulated conversion energy [pJ] actually spent.
+    pub energy_pj: f64,
+    /// Modeled per-pass conversion latency [ns].
+    pub compute_ns: f64,
+    /// Modeled per-pass weight-reload latency [ns] (hidden behind the
+    /// previous layer's conversions in the pipelined accounting).
+    pub reload_ns: f64,
+}
+
 /// Running serving statistics.
 #[derive(Clone, Debug, Default)]
 pub struct Ledger {
@@ -21,6 +43,9 @@ pub struct Ledger {
     occupancy: Moments,
     conversions: u64,
     ops_1b: f64,
+    /// Latest per-layer breakdown from a graph executor (cumulative on
+    /// the executor side; refreshed wholesale after each batch).
+    layers: Vec<LayerCost>,
 }
 
 impl Ledger {
@@ -80,6 +105,18 @@ impl Ledger {
         self.host_latency.mean()
     }
 
+    /// Replace the per-layer breakdown with the executor's latest
+    /// cumulative snapshot (the executor owns the counters; the ledger
+    /// only reports them).
+    pub fn set_layer_breakdown(&mut self, layers: Vec<LayerCost>) {
+        self.layers = layers;
+    }
+
+    /// Latest per-layer breakdown (empty if no graph executor ran).
+    pub fn layer_breakdown(&self) -> &[LayerCost] {
+        &self.layers
+    }
+
     pub fn to_json(&self) -> Json {
         let mut o = Json::obj();
         o.set("requests", Json::num(self.requests as f64));
@@ -91,6 +128,24 @@ impl Ledger {
         o.set("effective_tops_per_watt", Json::num(self.effective_tops_per_watt()));
         o.set("mean_host_latency_us", Json::num(self.mean_host_latency_us()));
         o.set("mean_occupancy", Json::num(self.mean_occupancy()));
+        if !self.layers.is_empty() {
+            let rows = self
+                .layers
+                .iter()
+                .map(|l| {
+                    let mut r = Json::obj();
+                    r.set("layer", Json::str(&l.name));
+                    r.set("class", Json::str(l.class));
+                    r.set("calls", Json::num(l.calls as f64));
+                    r.set("conversions", Json::num(l.conversions as f64));
+                    r.set("energy_uj", Json::num(l.energy_pj * 1e-6));
+                    r.set("compute_us", Json::num(l.compute_ns * 1e-3));
+                    r.set("reload_us", Json::num(l.reload_ns * 1e-3));
+                    Json::Obj(r)
+                })
+                .collect();
+            o.set("layers", Json::Arr(rows));
+        }
         Json::Obj(o)
     }
 }
@@ -148,5 +203,42 @@ mod tests {
         for key in ["requests", "energy_per_request_uj", "effective_tops_per_watt"] {
             assert!(j.get_path(key).is_some(), "{key}");
         }
+        // No graph executor ran: no layers key.
+        assert!(j.get_path("layers").is_none());
+    }
+
+    #[test]
+    fn layer_breakdown_is_reported_in_json() {
+        let mut l = Ledger::new();
+        l.set_layer_breakdown(vec![
+            LayerCost {
+                name: "block0.qkv".into(),
+                class: "Transformer attention",
+                calls: 2,
+                conversions: 1000,
+                energy_pj: 5e6,
+                compute_ns: 1e5,
+                reload_ns: 4e4,
+            },
+            LayerCost {
+                name: "block0.fc2".into(),
+                class: "Transformer MLP",
+                calls: 2,
+                conversions: 3000,
+                energy_pj: 2e7,
+                compute_ns: 3e5,
+                reload_ns: 1.8e5,
+            },
+        ]);
+        let j = l.to_json();
+        let rows = j.get_path("layers").unwrap().as_arr().unwrap();
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[0].get_path("layer").unwrap().as_str().unwrap(), "block0.qkv");
+        assert_eq!(rows[1].get_path("conversions").unwrap().as_f64().unwrap(), 3000.0);
+        assert!((rows[1].get_path("energy_uj").unwrap().as_f64().unwrap() - 20.0).abs() < 1e-9);
+        assert_eq!(l.layer_breakdown().len(), 2);
+        // Refresh replaces wholesale.
+        l.set_layer_breakdown(Vec::new());
+        assert!(l.to_json().get_path("layers").is_none());
     }
 }

@@ -1,25 +1,35 @@
 //! L3 coordinator: the paper's system layer.
 //!
-//! - [`scheduler`] — tiles linear layers onto the 1088×78 macro
+//! - [`scheduler`] — tiles linear layers onto the 1088×78 macro; prices
+//!                   whole model graphs with serial vs double-buffered
+//!                   weight reloads
 //! - [`sac`]       — the software-analog co-design policy engine: per-layer
 //!                   CB/bit-width selection, circuit↔graph noise bridge,
 //!                   plan cost evaluation (Fig. 4's 2.1×, Fig. 6 ablation)
+//! - [`router`]    — LPT placement of every (row tile × column tile)
+//!                   unit of a model graph; sizes the per-class die pools
 //! - [`batcher`]   — time/size-bounded dynamic batching over the compiled
 //!                   batch sizes
-//! - [`ledger`]    — energy/latency/occupancy accounting
-//! - [`server`]    — std-TCP line-JSON inference service (request path)
+//! - [`ledger`]    — energy/latency/occupancy accounting, with a
+//!                   per-layer breakdown when a graph executor serves
+//! - [`server`]    — std-TCP line-JSON inference service (request path;
+//!                   `classify` and whole-graph `forward` kinds)
 //! - [`shard`]     — 2-D tiled macro execution (row tiles × column
 //!                   shards) + the macro-simulator batch executor for
 //!                   the serving path
 //! - [`multidie`]  — the multi-die tier: one layer replicated across
-//!                   independent dies, batches routed across them
+//!                   independent dies (optionally inside a per-class die
+//!                   pool), batches routed across them
+//! - [`pipeline`]  — the model-graph pipeline executor: full ViT encoder
+//!                   forward passes through per-class die pools
 //!
-//! See `docs/ARCHITECTURE.md` for the layer map, the 2-D tiling model
-//! and the determinism contract.
+//! See `docs/ARCHITECTURE.md` for the layer map, the 2-D tiling model,
+//! the pipeline/pool model and the determinism contract.
 
 pub mod batcher;
 pub mod ledger;
 pub mod multidie;
+pub mod pipeline;
 pub mod router;
 pub mod sac;
 pub mod scheduler;
@@ -27,6 +37,8 @@ pub mod server;
 pub mod shard;
 
 pub use multidie::DieBank;
+pub use pipeline::{ModelExecutor, PipelineConfig};
+pub use router::Router;
 pub use sac::{NoiseCalibration, PlanCost};
-pub use scheduler::{Scheduler, TilePlan};
+pub use scheduler::{PipelinePlan, Scheduler, TilePlan};
 pub use shard::{MacroShards, SimExecutor};

@@ -49,19 +49,38 @@ impl DieBank {
         shards: usize,
         dies: usize,
     ) -> Result<Self, String> {
+        Self::in_pool(params, w, op, shards, dies, 0)
+    }
+
+    /// Like [`new`](Self::new), but drawing the dies from die pool
+    /// `pool` (see [`MacroParams::for_pool`]). Pool 0 is the default
+    /// shared pool (`new` delegates here unchanged); nonzero pools are
+    /// disjoint silicon, which is how the pipeline executor keeps
+    /// attention-class and MLP-class layers on separate per-class pools
+    /// whose sizes can change independently without re-seeding each
+    /// other.
+    pub fn in_pool(
+        params: &MacroParams,
+        w: &[Vec<i32>],
+        op: OperatingPoint,
+        shards: usize,
+        dies: usize,
+        pool: usize,
+    ) -> Result<Self, String> {
+        let pooled = params.clone().for_pool(pool);
         let d = dies.max(1);
         // Each die keeps a slice of the worker budget; its shard bank
         // subdivides further. Total parallelism stays at the caller's
         // thread count.
-        let inner = params.effective_threads().div_ceil(d).max(1);
+        let inner = pooled.effective_threads().div_ceil(d).max(1);
         let banks = (0..d)
             .map(|i| {
-                let p = params.clone().for_die(i).with_threads(inner);
+                let p = pooled.clone().for_die(i).with_threads(inner);
                 MacroShards::new(&p, w, op, shards)
             })
             .collect::<Result<Vec<_>, _>>()?;
         let (k, n) = (banks[0].k, banks[0].n);
-        Ok(DieBank { dies: banks, op, k, n, threads: params.effective_threads() })
+        Ok(DieBank { dies: banks, op, k, n, threads: pooled.effective_threads() })
     }
 
     /// Independent dies in the bank.
@@ -184,6 +203,30 @@ mod tests {
         let mut bank = DieBank::new(&p, &w, op_2b(), 1, 2).unwrap();
         let ys = bank.matvec_batch(&xs).unwrap();
         assert_ne!(ys[0], ys[1], "distinct dies must draw distinct noise");
+    }
+
+    #[test]
+    fn pool_zero_replays_the_default_bank_and_pools_are_disjoint() {
+        let mut p = quiet_params();
+        p.sigma_cmp_lsb = 1.2; // real noise: pool identity is nontrivial
+        let (w, xs) = tile(64, 4, 3, 31);
+        let mut plain = DieBank::new(&p, &w, op_2b(), 1, 2).unwrap();
+        let mut pool0 = DieBank::in_pool(&p, &w, op_2b(), 1, 2, 0).unwrap();
+        let want = plain.matvec_batch(&xs).unwrap();
+        assert_eq!(pool0.matvec_batch(&xs).unwrap(), want);
+        // A nonzero pool is different silicon: same weights, same
+        // batch, different noise draws.
+        let mut pool1 = DieBank::in_pool(&p, &w, op_2b(), 1, 2, 1).unwrap();
+        assert_ne!(pool1.matvec_batch(&xs).unwrap(), want);
+        // Distinct pools are mutually disjoint too.
+        let mut pool2 = DieBank::in_pool(&p, &w, op_2b(), 1, 2, 2).unwrap();
+        let mut pool1b = DieBank::in_pool(&p, &w, op_2b(), 1, 2, 1).unwrap();
+        assert_ne!(pool2.matvec_batch(&xs).unwrap(), pool1b.matvec_batch(&xs).unwrap());
+        // At zero noise every pool computes the same exact result.
+        let q = quiet_params();
+        let mut a = DieBank::in_pool(&q, &w, op_2b(), 1, 2, 1).unwrap();
+        let mut b = DieBank::in_pool(&q, &w, op_2b(), 1, 2, 2).unwrap();
+        assert_eq!(a.matvec_batch(&xs).unwrap(), b.matvec_batch(&xs).unwrap());
     }
 
     #[test]

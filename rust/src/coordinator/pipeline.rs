@@ -1,0 +1,567 @@
+//! Model-graph pipeline executor: serves full ViT encoder forward
+//! passes through the tiled multi-die macro simulator.
+//!
+//! The unit of work here is a [`ModelGraph`] — the typed chain of
+//! per-block qkv / attn-proj / fc1 / fc2 linears — not a single matvec.
+//! Per layer, the executor:
+//!
+//! 1. **draws macros from a per-layer-class die pool**: attention-class
+//!    and MLP-class layers own disjoint pools
+//!    ([`MacroParams::for_pool`] via [`DieBank::in_pool`]), sized by the
+//!    router's LPT mass split
+//!    ([`PipelineConfig::sized_by_router`]). Resizing one class's pool
+//!    never re-seeds the other's silicon;
+//! 2. **executes through the existing tiled path**: the layer's weights
+//!    load onto the pool dies as a [`DieBank`] of
+//!    (row tile × column shard) [`MacroShards`](super::shard::MacroShards)
+//!    units — every conversion runs the true column circuit model;
+//! 3. **prices the reload double-buffered**: the modeled pass latency
+//!    is [`Scheduler::plan_graph`]'s pipelined accounting, where layer
+//!    i+1's weight reload hides behind layer i's bit-serial
+//!    conversions (`PipelinePlan::pipelined_ns`), replacing the old
+//!    fully-serial reload assumption.
+//!
+//! Between linears, the digital periphery (softmax / GELU / layernorm +
+//! requantization on silicon) is modeled as the deterministic
+//! [`requantize`] map, so the macro walk and the `matvec_exact`
+//! reference walk ([`ModelExecutor::reference_ints`]) stay comparable
+//! bit for bit.
+//!
+//! # Determinism contract
+//!
+//! The substream hierarchy extends to
+//! `seed → class pool → die → row tile → global column → conversion
+//! counter`. Consequences (test-enforced in `rust/tests/pipeline.rs`):
+//! full-pass outputs are **bit-identical at any worker-thread count and
+//! any column-shard count** even with noise; at zero noise any
+//! (threads × shards × per-class dies) decomposition equals the exact
+//! reference walk. Changing a pool's die count re-routes vectors onto
+//! different physical silicon, which legitimately changes noisy outputs
+//! — per-class pools make that re-mapping *local to the class*. Each
+//! forward pass reprograms the pool dies (weights reload per layer), so
+//! conversion counters restart per pass: runs are reproducible.
+
+use crate::cim::macro_::matvec_exact;
+use crate::cim::netstats::LayerClass;
+use crate::cim::MacroParams;
+use crate::util::rng::Rng;
+use crate::vit::graph::{GraphLayer, ModelGraph};
+use crate::vit::plan::OperatingPoint;
+
+use super::ledger::LayerCost;
+use super::multidie::DieBank;
+use super::router::Router;
+use super::sac::PlanCost;
+use super::scheduler::{PipelinePlan, Scheduler};
+use super::server::BatchExecutor;
+
+/// Seed salt for the deterministic stand-in weights each graph layer
+/// loads (a fixed pretrained checkpoint stand-in, keyed by layer index).
+const WEIGHT_SEED_SALT: u64 = 0x57E1_6475_EED5_0115;
+
+/// Die-pool index per SAC layer class. Pool 0 is the shared default a
+/// standalone [`DieBank`] uses; the pipeline keeps the attention and
+/// MLP classes on disjoint silicon. `CnnConv` rides the MLP pool — the
+/// same dispatch `PrecisionPlan::point` and
+/// [`PipelineConfig::dies_for`] apply, so sizing, pricing and execution
+/// agree on which silicon a conv layer uses.
+pub fn class_pool(class: LayerClass) -> usize {
+    match class {
+        LayerClass::TransformerAttention => 1,
+        LayerClass::TransformerMlp | LayerClass::CnnConv => 2,
+    }
+}
+
+/// Topology of the pipeline executor: the column-shard request per
+/// layer plus the per-layer-class die pools.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct PipelineConfig {
+    /// Column-shard request per layer (raised per layer to the minimum
+    /// its outputs need, exactly like [`MacroShards::new`]).
+    ///
+    /// [`MacroShards::new`]: super::shard::MacroShards::new
+    pub shards: usize,
+    /// Dies in the attention-class pool.
+    pub attention_dies: usize,
+    /// Dies in the MLP-class pool (also serves `CnnConv` layers).
+    pub mlp_dies: usize,
+}
+
+impl Default for PipelineConfig {
+    fn default() -> Self {
+        PipelineConfig { shards: 1, attention_dies: 1, mlp_dies: 1 }
+    }
+}
+
+impl PipelineConfig {
+    /// Size the class pools from a total die budget using the router's
+    /// LPT mass split over the graph (the class with more placed unit
+    /// latency gets proportionally more dies, each pool at least one —
+    /// so a budget below 2 yields `(1, 1)`, slightly over budget rather
+    /// than an empty pool; see `Router::class_pool_split`).
+    pub fn sized_by_router(
+        params: &MacroParams,
+        graph: &ModelGraph,
+        shards: usize,
+        total_dies: usize,
+    ) -> Self {
+        let router = Router::new(params, total_dies.max(1));
+        let (attention_dies, mlp_dies) = router.class_pool_split(graph, total_dies);
+        PipelineConfig { shards: shards.max(1), attention_dies, mlp_dies }
+    }
+
+    /// Pool size serving `class`.
+    pub fn dies_for(&self, class: LayerClass) -> usize {
+        match class {
+            LayerClass::TransformerAttention => self.attention_dies.max(1),
+            LayerClass::TransformerMlp | LayerClass::CnnConv => self.mlp_dies.max(1),
+        }
+    }
+}
+
+/// Cumulative per-layer simulation counters.
+#[derive(Clone, Debug, Default)]
+struct LayerStats {
+    calls: u64,
+    conversions: u64,
+    energy_pj: f64,
+}
+
+/// Digital inter-layer glue: re-quantize a layer's `i64` outputs into
+/// the next layer's `k`-long `a_bits`-wide activation vector. Stands in
+/// for the digital nonlinearities between macro-mapped linears; it is a
+/// pure integer map, so the macro walk and the exact reference walk
+/// apply byte-identical glue. The position-salted multiplicative mix
+/// keeps replicated outputs (k > n) from repeating verbatim while
+/// staying exactly reproducible.
+pub fn requantize(y: &[i64], k: usize, a_bits: u32) -> Vec<i32> {
+    debug_assert!(!y.is_empty(), "requantize needs at least one output");
+    debug_assert!((1..=31).contains(&a_bits));
+    let span = 1i64 << a_bits;
+    let half = span / 2;
+    (0..k)
+        .map(|i| {
+            let v = y[i % y.len()];
+            let h = v.wrapping_mul(0x9E37_79B9_7F4A_7C15_u64 as i64).wrapping_add(i as i64);
+            (h.rem_euclid(span) - half) as i32
+        })
+        .collect()
+}
+
+/// Quantize one image's floats into a `k`-long activation vector in the
+/// operating point's `a_bits` range (the patch-embed stand-in; mirror
+/// of `SimExecutor::featurize`).
+pub fn featurize(op: OperatingPoint, k: usize, img: &[f32]) -> Vec<i32> {
+    let (a_lo, a_hi) = op.a_range();
+    (0..k)
+        .map(|r| {
+            if img.is_empty() {
+                return 0;
+            }
+            let v = img[r * img.len() / k];
+            let q = (v.clamp(-1.0, 1.0) * a_hi.max(1) as f32).round() as i32;
+            q.clamp(a_lo, a_hi)
+        })
+        .collect()
+}
+
+/// Walks a [`ModelGraph`] layer by layer through per-class die pools —
+/// the server's whole-model [`BatchExecutor`]. Weights are a
+/// deterministic pretrained stand-in (keyed by layer index off the die
+/// seed) and reload onto the pool for every layer of every pass, which
+/// is exactly the reload stream the double-buffered `Scheduler`
+/// accounting prices; memory stays bounded by one layer's bank.
+pub struct ModelExecutor {
+    params: MacroParams,
+    pub graph: ModelGraph,
+    pub config: PipelineConfig,
+    pipeline: PipelinePlan,
+    cost: PlanCost,
+    stats: Vec<LayerStats>,
+    /// Forward passes executed.
+    passes: u64,
+}
+
+impl ModelExecutor {
+    pub fn new(
+        params: &MacroParams,
+        graph: ModelGraph,
+        config: PipelineConfig,
+    ) -> Result<Self, String> {
+        if graph.layers.is_empty() {
+            return Err("model graph has no layers".to_string());
+        }
+        for l in &graph.layers {
+            l.op.validate()?;
+        }
+        // Price each layer with its own class pool's topology: latency
+        // divides by that pool's die count, conversions/energy are
+        // topology-independent.
+        let att = Scheduler::with_topology(
+            params,
+            config.shards.max(1),
+            config.dies_for(LayerClass::TransformerAttention),
+        );
+        let mlp = Scheduler::with_topology(
+            params,
+            config.shards.max(1),
+            config.dies_for(LayerClass::TransformerMlp),
+        );
+        let sched_for = |class: LayerClass| match class {
+            LayerClass::TransformerAttention => &att,
+            LayerClass::TransformerMlp | LayerClass::CnnConv => &mlp,
+        };
+        let plan_with = |per_batch: bool| {
+            PipelinePlan::from_layers(
+                graph
+                    .layers
+                    .iter()
+                    .map(|l| {
+                        let s = sched_for(l.shape.class);
+                        // The graph's m is batch × tokens, so the
+                        // per-inference stream is exactly m / batch.
+                        let mut shape = l.shape;
+                        if !per_batch {
+                            shape.m /= graph.batch.max(1);
+                        }
+                        let reload = s.weight_load_ns(&shape, l.op);
+                        (l.name(), s.plan_linear(&shape, l.op), reload)
+                    })
+                    .collect(),
+            )
+        };
+        // Full-batch timing for reporting (layer_costs, pipeline()).
+        let pipeline = plan_with(true);
+        // The ledger contract is per-inference: `record_batch`
+        // multiplies cost energy/conversions/ops by the executed batch
+        // size, so the installed PlanCost must price ONE inference —
+        // with its reload-overlapped pipeline latency, not the bare
+        // conversion sum. (SimExecutor keeps the same convention via
+        // m = 1.)
+        let per_inference = plan_with(false);
+        let mut total = per_inference.total;
+        total.latency_ns = per_inference.pipelined_ns;
+        let cost = PlanCost::from_total(
+            "model-graph pipeline (per-class pools, overlapped reloads)",
+            total,
+        );
+        let stats = vec![LayerStats::default(); graph.layers.len()];
+        let params = params.clone();
+        Ok(ModelExecutor { params, graph, config, pipeline, cost, stats, passes: 0 })
+    }
+
+    /// The modeled full-pass timing (serial vs overlapped reloads).
+    pub fn pipeline(&self) -> &PipelinePlan {
+        &self.pipeline
+    }
+
+    /// Forward passes executed so far.
+    pub fn passes(&self) -> u64 {
+        self.passes
+    }
+
+    /// The deterministic stand-in weight matrix of one graph layer
+    /// (same draw for the macro walk and the reference walk).
+    fn layer_weights(&self, layer: &GraphLayer) -> Vec<Vec<i32>> {
+        let root = Rng::new(self.params.seed ^ WEIGHT_SEED_SALT);
+        let mut rng = root.substream(0x0057_E167, layer.index as u64);
+        let (lo, _) = layer.op.w_range();
+        let span = 1u64 << layer.op.w_bits;
+        (0..layer.shape.k)
+            .map(|_| (0..layer.shape.n).map(|_| lo + rng.below(span) as i32).collect())
+            .collect()
+    }
+
+    /// The one graph walk both the macro run and the exact reference
+    /// share: per layer, `run_layer` produces the outputs (banked
+    /// simulation or `matvec_exact`), then the [`requantize`] glue
+    /// derives the next layer's activations. Keeping the walk single
+    /// keeps the zero-noise equality contract structural instead of
+    /// coincidental.
+    fn walk_graph<F>(
+        graph: &ModelGraph,
+        xs: &[Vec<i32>],
+        mut run_layer: F,
+    ) -> Result<Vec<Vec<i64>>, String>
+    where
+        F: FnMut(usize, &GraphLayer, &[Vec<i32>]) -> Result<Vec<Vec<i64>>, String>,
+    {
+        let layer_count = graph.layers.len();
+        let mut acts = xs.to_vec();
+        let mut last = Vec::new();
+        for li in 0..layer_count {
+            let ys = run_layer(li, &graph.layers[li], &acts)?;
+            if li + 1 < layer_count {
+                let next = &graph.layers[li + 1];
+                acts = ys.iter().map(|y| requantize(y, next.shape.k, next.op.a_bits)).collect();
+            } else {
+                last = ys;
+            }
+        }
+        Ok(last)
+    }
+
+    /// Run integer activation vectors through the full graph on the
+    /// macro simulator; returns the last layer's raw integer outputs.
+    /// Weights load per layer (the bank lives only while its layer
+    /// executes), so memory stays O(largest layer) even at ViT-Base
+    /// scale.
+    pub fn forward_ints(&mut self, xs: &[Vec<i32>]) -> Result<Vec<Vec<i64>>, String> {
+        let graph = self.graph.clone();
+        let last = Self::walk_graph(&graph, xs, |li, layer, acts| {
+            let w = self.layer_weights(layer);
+            let mut bank = DieBank::in_pool(
+                &self.params,
+                &w,
+                layer.op,
+                self.config.shards.max(1),
+                self.config.dies_for(layer.shape.class),
+                class_pool(layer.shape.class),
+            )?;
+            let ys = bank.matvec_batch(acts).map_err(|e| format!("{}: {e}", layer.name()))?;
+            self.stats[li].calls += 1;
+            self.stats[li].conversions += bank.total_conversions();
+            self.stats[li].energy_pj += bank.total_energy_pj();
+            Ok(ys)
+        })?;
+        self.passes += 1;
+        Ok(last)
+    }
+
+    /// The exact digital reference: the same walk (same weights, same
+    /// featurization and glue) with `matvec_exact` instead of the macro
+    /// banks. At zero noise, [`forward_ints`](Self::forward_ints) must
+    /// equal this for any (threads × shards × dies) decomposition.
+    pub fn reference_ints(&self, xs: &[Vec<i32>]) -> Vec<Vec<i64>> {
+        Self::walk_graph(&self.graph, xs, |_, layer, acts| {
+            let w = self.layer_weights(layer);
+            Ok(acts.iter().map(|x| matvec_exact(&w, x)).collect())
+        })
+        .expect("exact reference walk is infallible")
+    }
+
+    /// Featurize images into the first layer's input vectors.
+    pub fn featurize_images(&self, images: &[Vec<f32>]) -> Vec<Vec<i32>> {
+        let first = &self.graph.layers[0];
+        images.iter().map(|img| featurize(first.op, first.shape.k, img)).collect()
+    }
+
+    /// Cumulative per-layer accounting: measured bank counters plus the
+    /// modeled per-pass compute/reload latencies.
+    pub fn layer_costs(&self) -> Vec<LayerCost> {
+        self.graph
+            .layers
+            .iter()
+            .zip(&self.stats)
+            .zip(&self.pipeline.layers)
+            .map(|((l, s), t)| LayerCost {
+                name: l.name(),
+                class: l.shape.class.label(),
+                calls: s.calls,
+                conversions: s.conversions,
+                energy_pj: s.energy_pj,
+                compute_ns: t.compute_ns,
+                reload_ns: t.reload_ns,
+            })
+            .collect()
+    }
+
+    /// Scale raw last-layer integers into O(1) logits (argmax-invariant).
+    fn scale_outputs(&self, ys: Vec<Vec<i64>>) -> Vec<Vec<f32>> {
+        let last = self.graph.layers.last().expect("graph has layers");
+        let (_, w_hi) = last.op.w_range();
+        let (_, a_hi) = last.op.a_range();
+        let scale =
+            (last.shape.k as f64 * (w_hi.max(1) as f64) * (a_hi.max(1) as f64)).recip();
+        ys.into_iter()
+            .map(|y| y.into_iter().map(|v| (v as f64 * scale) as f32).collect())
+            .collect()
+    }
+}
+
+impl BatchExecutor for ModelExecutor {
+    fn execute(&mut self, images: &[Vec<f32>]) -> Result<Vec<Vec<f32>>, String> {
+        if images.is_empty() {
+            return Ok(Vec::new());
+        }
+        let xs = self.featurize_images(images);
+        let ys = self.forward_ints(&xs)?;
+        Ok(self.scale_outputs(ys))
+    }
+
+    fn forward(&mut self, images: &[Vec<f32>]) -> Result<Vec<Vec<f32>>, String> {
+        self.execute(images)
+    }
+
+    fn graph_layers(&self) -> usize {
+        self.graph.layer_count()
+    }
+
+    fn layer_breakdown(&self) -> Vec<LayerCost> {
+        self.layer_costs()
+    }
+
+    fn cost(&self) -> &PlanCost {
+        &self.cost
+    }
+
+    fn num_classes(&self) -> usize {
+        self.graph.output_dim()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cim::params::CbMode;
+    use crate::vit::plan::PrecisionPlan;
+    use crate::vit::VitConfig;
+
+    fn quiet_params() -> MacroParams {
+        let mut p = MacroParams::default();
+        p.adc_bits = 6;
+        p.active_rows = 64;
+        p.rows = 64;
+        p.cols = 12;
+        p.sigma_cu_rel = 0.0;
+        p.nonlin_cubic_lsb = 0.0;
+        p.sigma_cmp_lsb = 0.0;
+        p.sigma_cmp_offset_lsb = 0.0;
+        p.temperature_k = 0.0;
+        p
+    }
+
+    fn plan_2b() -> PrecisionPlan {
+        PrecisionPlan {
+            name: "test 2b/2b",
+            attention: OperatingPoint { a_bits: 2, w_bits: 2, cb: CbMode::Off },
+            mlp: OperatingPoint { a_bits: 2, w_bits: 2, cb: CbMode::Off },
+        }
+    }
+
+    fn tiny_cfg() -> VitConfig {
+        // d_ff = 96 > 64 active rows: fc2 row-tiles even in the tiny rig.
+        VitConfig { image: 16, patch: 4, dim: 48, depth: 2, heads: 4, mlp_ratio: 2, num_classes: 4 }
+    }
+
+    fn images(n: usize, k: usize) -> Vec<Vec<f32>> {
+        (0..n)
+            .map(|i| (0..k).map(|j| ((i * 31 + j * 7) % 13) as f32 / 13.0 - 0.5).collect())
+            .collect()
+    }
+
+    #[test]
+    fn requantize_stays_in_range_and_is_deterministic() {
+        let y = vec![123_456_789i64, -987, 0, 42];
+        for a_bits in [1u32, 2, 4, 8] {
+            let lo = -(1i32 << (a_bits - 1));
+            let hi = (1i32 << (a_bits - 1)) - 1;
+            let x = requantize(&y, 11, a_bits);
+            assert_eq!(x.len(), 11);
+            assert!(x.iter().all(|&v| v >= lo && v <= hi), "a_bits {a_bits}: {x:?}");
+            assert_eq!(x, requantize(&y, 11, a_bits));
+        }
+        // Replicated outputs must not repeat verbatim (position salt).
+        let x = requantize(&[7], 8, 8);
+        assert!(x.windows(2).any(|w| w[0] != w[1]), "{x:?}");
+    }
+
+    #[test]
+    fn zero_noise_forward_equals_reference_walk() {
+        let p = quiet_params();
+        let graph = ModelGraph::encoder(&tiny_cfg(), 2, &plan_2b());
+        let mut exec = ModelExecutor::new(&p, graph, PipelineConfig::default()).unwrap();
+        let xs = exec.featurize_images(&images(3, 32));
+        let want = exec.reference_ints(&xs);
+        let got = exec.forward_ints(&xs).unwrap();
+        assert_eq!(got, want);
+        assert_eq!(got.len(), 3);
+        assert!(got.iter().all(|y| y.len() == exec.graph.output_dim()));
+        assert_eq!(exec.passes(), 1);
+    }
+
+    #[test]
+    fn layer_stats_accumulate_across_passes() {
+        let p = quiet_params();
+        let graph = ModelGraph::encoder(&tiny_cfg(), 1, &plan_2b());
+        let mut exec = ModelExecutor::new(&p, graph, PipelineConfig::default()).unwrap();
+        let xs = exec.featurize_images(&images(2, 32));
+        exec.forward_ints(&xs).unwrap();
+        let once = exec.layer_costs();
+        assert_eq!(once.len(), 8); // 2 blocks × 4 linears
+        assert!(once.iter().all(|l| l.calls == 1 && l.conversions > 0 && l.energy_pj > 0.0));
+        assert!(once.iter().all(|l| l.compute_ns > 0.0 && l.reload_ns > 0.0));
+        exec.forward_ints(&xs).unwrap();
+        let twice = exec.layer_costs();
+        for (a, b) in once.iter().zip(&twice) {
+            assert_eq!(b.calls, 2);
+            assert_eq!(b.conversions, 2 * a.conversions, "{}", a.name);
+        }
+        // Class labels partition the graph 50/50 for the encoder.
+        let att = twice.iter().filter(|l| l.class == "Transformer attention").count();
+        assert_eq!(att, 4);
+    }
+
+    #[test]
+    fn executor_cost_is_per_inference_with_pipelined_latency() {
+        let p = quiet_params();
+        // Batch 1: the per-inference cost IS the full-pass pipeline.
+        let one = ModelExecutor::new(
+            &p,
+            ModelGraph::encoder(&tiny_cfg(), 1, &plan_2b()),
+            PipelineConfig::default(),
+        )
+        .unwrap();
+        let pp1 = one.pipeline();
+        assert!(pp1.pipelined_ns < pp1.serial_ns, "{} vs {}", pp1.pipelined_ns, pp1.serial_ns);
+        assert!((one.cost.total.latency_ns - pp1.pipelined_ns).abs() < 1e-9);
+        assert!(one.cost.energy_uj > 0.0);
+        // Batch 4: the installed cost stays per-inference (the server's
+        // record_batch multiplies by exec_size), while pipeline()
+        // reports the full batch.
+        let four = ModelExecutor::new(
+            &p,
+            ModelGraph::encoder(&tiny_cfg(), 4, &plan_2b()),
+            PipelineConfig::default(),
+        )
+        .unwrap();
+        assert!((four.cost.total.energy_pj - one.cost.total.energy_pj).abs() < 1e-6);
+        assert_eq!(four.cost.total.conversions, one.cost.total.conversions);
+        assert!(four.pipeline().total.energy_pj > 3.9 * one.cost.total.energy_pj);
+    }
+
+    #[test]
+    fn rejects_empty_graph_and_bad_ops() {
+        let p = quiet_params();
+        let mut graph = ModelGraph::encoder(&tiny_cfg(), 1, &plan_2b());
+        graph.layers.clear();
+        assert!(ModelExecutor::new(&p, graph, PipelineConfig::default()).is_err());
+        let mut bad = ModelGraph::encoder(&tiny_cfg(), 1, &plan_2b());
+        bad.layers[0].op.a_bits = 0;
+        assert!(ModelExecutor::new(&p, bad, PipelineConfig::default()).is_err());
+    }
+
+    #[test]
+    fn class_pools_are_stable_under_the_other_pools_resizing() {
+        // Attention pool die seeds must not move when the MLP pool
+        // grows: the per-class salt isolates them. (Noisy *outputs*
+        // still change downstream because activations flow through MLP
+        // layers — the invariant is at the silicon-identity level.)
+        let p = MacroParams::default();
+        let a1 = p.clone().for_pool(class_pool(LayerClass::TransformerAttention)).for_die(0);
+        let a2 = p.clone().for_pool(class_pool(LayerClass::TransformerAttention)).for_die(0);
+        assert_eq!(a1.seed, a2.seed);
+        let m = p.clone().for_pool(class_pool(LayerClass::TransformerMlp)).for_die(0);
+        assert_ne!(a1.seed, m.seed);
+    }
+
+    #[test]
+    fn sized_by_router_gives_both_classes_dies() {
+        let p = MacroParams::default();
+        let graph = ModelGraph::encoder(&VitConfig::vit_base(), 8, &PrecisionPlan::paper_sac());
+        let cfg = PipelineConfig::sized_by_router(&p, &graph, 2, 6);
+        assert_eq!(cfg.attention_dies + cfg.mlp_dies, 6);
+        assert!(cfg.attention_dies >= 1 && cfg.mlp_dies >= 1);
+        assert_eq!(cfg.shards, 2);
+    }
+}

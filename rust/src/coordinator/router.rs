@@ -1,31 +1,50 @@
 //! Multi-macro router: a deployment packages several CR-CIM macros
 //! behind one coordinator (the chip photo's macro is the unit cell of a
-//! bigger accelerator). The router places each layer's column tiles on
-//! macros, balancing load so the bit-serial pipelines of all macros
-//! finish together, and models weight residency so repeated inferences
-//! don't pay reload cost.
+//! bigger accelerator). The router places every (row tile × column tile)
+//! unit of a [`ModelGraph`] on macros, balancing load so the bit-serial
+//! pipelines of all macros finish together, and models weight residency
+//! so repeated inferences don't pay reload cost.
 //!
-//! Placement policy: longest-processing-time (LPT) greedy over per-tile
-//! latency — optimal within 4/3 for makespan, fine for this tile
-//! granularity.
+//! The unit of placement is the same unit the 2-D tiled executor
+//! (`coordinator::MacroShards`) actually instantiates: one physical
+//! macro holding at most `active_rows` rows × `⌊cols / w_bits⌋` whole
+//! outputs — a `w_bits`-bit weight cannot straddle macros, so when
+//! `cols % w_bits != 0` (the paper's 4b attention point on 78 columns)
+//! a macro leaves `cols % w_bits` columns idle and the unit count
+//! exceeds the scheduler's plane-packed `⌈n·w_bits / cols⌉`, which
+//! remains the optimistic latency accounting. (An earlier revision
+//! placed plane-packed column tiles with all `k` rows attributed to one
+//! macro — which overstated `resident_bits` and understated the unit
+//! count for every k > `active_rows` layer, i.e. every ViT MLP `fc2`.)
+//!
+//! Placement policy: longest-processing-time (LPT) greedy over per-unit
+//! latency — optimal within 4/3 for makespan, fine for this unit
+//! granularity. The same LPT mass, split per SAC layer class, sizes the
+//! pipeline executor's per-class die pools
+//! ([`Router::class_pool_split`]).
 
+use crate::cim::netstats::LayerClass;
 use crate::cim::params::MacroParams;
-use crate::vit::plan::PrecisionPlan;
-use crate::vit::{linear_workload, VitConfig};
+use crate::vit::graph::ModelGraph;
 
 use super::scheduler::Scheduler;
 
-/// One placed tile.
+/// One placed (row tile × column tile) unit.
 #[derive(Clone, Debug)]
 pub struct Placement {
+    /// Graph layer the unit belongs to.
     pub layer_index: usize,
+    /// Row tile of the layer's reduction dimension.
+    pub row_tile: u64,
+    /// Column tile of the layer's weight-bit planes.
     pub col_tile: u64,
+    /// Macro the unit was placed on.
     pub macro_id: usize,
     pub latency_ns: f64,
     pub energy_pj: f64,
 }
 
-/// Routing result for one inference pass.
+/// Routing result for one full-graph inference pass.
 #[derive(Clone, Debug)]
 pub struct RoutePlan {
     pub placements: Vec<Placement>,
@@ -35,7 +54,9 @@ pub struct RoutePlan {
     pub makespan_ns: f64,
     /// Total energy [pJ].
     pub energy_pj: f64,
-    /// Weight SRAM bits resident per macro (capacity check).
+    /// Weight SRAM bits resident per macro (capacity check). Each unit
+    /// contributes its true tile footprint: (rows in its row tile) ×
+    /// (planes in its column tile) — never more than one macro's array.
     pub resident_bits: Vec<u64>,
 }
 
@@ -51,6 +72,11 @@ impl RoutePlan {
             max / mean
         }
     }
+
+    /// Largest per-macro resident weight footprint [bits].
+    pub fn max_resident_bits(&self) -> u64 {
+        self.resident_bits.iter().copied().max().unwrap_or(0)
+    }
 }
 
 /// The router.
@@ -64,39 +90,56 @@ pub struct Router {
 impl Router {
     pub fn new(params: &MacroParams, num_macros: usize) -> Self {
         let sram_bits = (params.rows * params.cols) as u64;
-        Router { sched: Scheduler::new(params), num_macros, sram_bits_per_macro: sram_bits }
+        Router {
+            sched: Scheduler::new(params),
+            num_macros: num_macros.max(1),
+            sram_bits_per_macro: sram_bits,
+        }
     }
 
-    /// Route one full ViT inference under a precision plan.
-    pub fn route(&self, cfg: &VitConfig, batch: usize, plan: &PrecisionPlan) -> RoutePlan {
-        // Decompose every layer into column tiles (the unit of placement:
-        // a column tile keeps its weights loaded while the m vectors
-        // stream through bit-serially).
-        struct TileJob {
+    /// Route one full model-graph pass: decompose every layer into its
+    /// (row tile × column tile) units and place them LPT-greedily.
+    pub fn route(&self, graph: &ModelGraph) -> RoutePlan {
+        struct UnitJob {
             layer_index: usize,
+            row_tile: u64,
             col_tile: u64,
             latency_ns: f64,
             energy_pj: f64,
             weight_bits: u64,
         }
-        let mut jobs: Vec<TileJob> = Vec::new();
-        for (layer_index, shape) in linear_workload(cfg, batch).iter().enumerate() {
-            let op = plan.point(shape.class);
-            let tiles = self.sched.col_tiles(shape.n, op.w_bits).max(1);
-            let full = self.sched.plan_linear(shape, op);
-            for col_tile in 0..tiles {
-                jobs.push(TileJob {
-                    layer_index,
-                    col_tile,
-                    latency_ns: full.latency_ns / tiles as f64,
-                    energy_pj: full.energy_pj / tiles as f64,
-                    weight_bits: (shape.k as u64)
-                        * (self.sched.params.cols as u64).min(shape.n as u64 * op.w_bits as u64),
-                });
+        let mut jobs: Vec<UnitJob> = Vec::new();
+        for layer in &graph.layers {
+            let shape = &layer.shape;
+            let w_bits = layer.op.w_bits as u64;
+            let rt = self.sched.row_tiles(shape.k).max(1);
+            // Whole-output packing, exactly like MacroShards: one unit
+            // holds at most ⌊cols / w_bits⌋ outputs (a multi-bit weight
+            // never straddles macros).
+            let cap_out = (self.sched.params.cols as u64 / w_bits).max(1);
+            let ct = (shape.n as u64).div_ceil(cap_out).max(1);
+            let full = self.sched.plan_linear(shape, layer.op);
+            let units = (rt * ct) as f64;
+            // Balanced row split with front-loaded remainders — the same
+            // split MacroShards::with_tiling instantiates.
+            let (row_base, row_extra) = (shape.k as u64 / rt, shape.k as u64 % rt);
+            for ti in 0..rt {
+                let rows = row_base + u64::from(ti < row_extra);
+                for ci in 0..ct {
+                    let outs = (shape.n as u64 - ci * cap_out).min(cap_out);
+                    jobs.push(UnitJob {
+                        layer_index: layer.index,
+                        row_tile: ti,
+                        col_tile: ci,
+                        latency_ns: full.latency_ns / units,
+                        energy_pj: full.energy_pj / units,
+                        weight_bits: rows * outs * w_bits,
+                    });
+                }
             }
         }
-        // LPT greedy: longest job to the least-loaded macro.
-        jobs.sort_by(|a, b| b.latency_ns.partial_cmp(&a.latency_ns).unwrap());
+        // LPT greedy: longest unit to the least-loaded macro.
+        jobs.sort_by(|a, b| b.latency_ns.total_cmp(&a.latency_ns));
         let mut busy = vec![0.0f64; self.num_macros];
         let mut resident = vec![0u64; self.num_macros];
         let mut placements = Vec::with_capacity(jobs.len());
@@ -105,13 +148,14 @@ impl Router {
             let (mid, _) = busy
                 .iter()
                 .enumerate()
-                .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-                .unwrap();
+                .min_by(|a, b| a.1.total_cmp(b.1))
+                .expect("router has at least one macro");
             busy[mid] += job.latency_ns;
             resident[mid] += job.weight_bits;
             energy += job.energy_pj;
             placements.push(Placement {
                 layer_index: job.layer_index,
+                row_tile: job.row_tile,
                 col_tile: job.col_tile,
                 macro_id: mid,
                 latency_ns: job.latency_ns,
@@ -132,37 +176,95 @@ impl Router {
     pub fn fits_resident(&self, plan: &RoutePlan) -> bool {
         plan.resident_bits.iter().all(|&b| b <= self.sram_bits_per_macro)
     }
+
+    /// Split a die budget between the attention-class and MLP-class
+    /// pools, proportionally to each class's LPT mass (total per-layer
+    /// latency) over the graph. Each pool gets at least one die, so the
+    /// budget is clamped to a minimum of 2 — a caller asking for fewer
+    /// dies than classes receives `(1, 1)`, i.e. more silicon than it
+    /// budgeted, never an empty pool. This is how the pipeline executor
+    /// sizes its per-class pools
+    /// (`coordinator::pipeline::PipelineConfig::sized_by_router`).
+    pub fn class_pool_split(&self, graph: &ModelGraph, dies: usize) -> (usize, usize) {
+        let mass = |class: LayerClass| -> f64 {
+            graph
+                .class_layers(class)
+                .map(|l| self.sched.plan_linear(&l.shape, l.op).latency_ns)
+                .sum()
+        };
+        let att = mass(LayerClass::TransformerAttention);
+        let mlp = mass(LayerClass::TransformerMlp);
+        let d = dies.max(2);
+        let total = att + mlp;
+        if total <= 0.0 {
+            return (d / 2, d - d / 2);
+        }
+        let a = ((att / total * d as f64).round() as usize).clamp(1, d - 1);
+        (a, d - a)
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::cim::params::MacroParams;
+    use crate::vit::plan::PrecisionPlan;
+    use crate::vit::VitConfig;
 
     fn router(n: usize) -> Router {
         Router::new(&MacroParams::default(), n)
     }
 
+    fn graph(cfg: &VitConfig, batch: usize) -> ModelGraph {
+        ModelGraph::encoder(cfg, batch, &PrecisionPlan::paper_sac())
+    }
+
     #[test]
-    fn all_tiles_get_placed_once() {
+    fn all_units_get_placed_once_and_energy_is_conserved() {
         let r = router(4);
-        let cfg = VitConfig::default();
-        let plan = r.route(&cfg, 1, &PrecisionPlan::paper_sac());
+        let g = graph(&VitConfig::default(), 1);
+        let plan = r.route(&g);
         assert!(!plan.placements.is_empty());
         // Energy equals the single-macro scheduler total (work conserved).
-        let sched_total: f64 = linear_workload(&cfg, 1)
-            .iter()
-            .map(|s| r.sched.plan_linear(s, PrecisionPlan::paper_sac().point(s.class)).energy_pj)
-            .sum();
+        let sched_total: f64 =
+            g.layers.iter().map(|l| r.sched.plan_linear(&l.shape, l.op).energy_pj).sum();
         assert!((plan.energy_pj - sched_total).abs() / sched_total < 1e-9);
+        // Unit count: Σ row_tiles × output-packed column tiles per layer
+        // (whole outputs per macro, ⌊cols / w_bits⌋ each).
+        let units: u64 = g
+            .layers
+            .iter()
+            .map(|l| {
+                let cap = (r.sched.params.cols as u64 / l.op.w_bits as u64).max(1);
+                r.sched.row_tiles(l.shape.k) * (l.shape.n as u64).div_ceil(cap)
+            })
+            .sum();
+        assert_eq!(plan.placements.len() as u64, units);
+    }
+
+    #[test]
+    fn units_match_macro_shards_output_packing_at_4b() {
+        // cols = 78, w_bits = 4: a macro holds ⌊78/4⌋ = 19 whole outputs
+        // (76 of 78 planes) — NOT ⌈n·4/78⌉ plane-packed tiles. ViT-Base
+        // qkv (n = 2304) therefore routes as ⌈2304/19⌉ = 122 units, the
+        // number of macros MacroShards would actually instantiate.
+        let r = router(4);
+        let g = graph(&VitConfig::vit_base(), 1);
+        let plan = r.route(&g);
+        let qkv_units =
+            plan.placements.iter().filter(|p| p.layer_index == 0).count();
+        assert_eq!(qkv_units, 122);
+        // Plane packing would have claimed 119 — an undercount no
+        // physical macro layout can realize.
+        assert_eq!(r.sched.col_tiles(2304, 4), 119);
     }
 
     #[test]
     fn more_macros_shrink_makespan() {
-        let cfg = VitConfig::vit_small();
-        let m1 = router(1).route(&cfg, 1, &PrecisionPlan::paper_sac()).makespan_ns;
-        let m4 = router(4).route(&cfg, 1, &PrecisionPlan::paper_sac()).makespan_ns;
-        let m8 = router(8).route(&cfg, 1, &PrecisionPlan::paper_sac()).makespan_ns;
+        let g = graph(&VitConfig::vit_small(), 1);
+        let m1 = router(1).route(&g).makespan_ns;
+        let m4 = router(4).route(&g).makespan_ns;
+        let m8 = router(8).route(&g).makespan_ns;
         assert!(m4 < m1 * 0.5, "4 macros: {m4} vs {m1}");
         assert!(m8 <= m4);
     }
@@ -170,26 +272,81 @@ mod tests {
     #[test]
     fn load_is_balanced() {
         let r = router(6);
-        let plan = r.route(&VitConfig::vit_small(), 1, &PrecisionPlan::paper_sac());
+        let plan = r.route(&graph(&VitConfig::vit_small(), 1));
         assert!(plan.imbalance() < 1.35, "imbalance {}", plan.imbalance());
     }
 
     #[test]
     fn residency_accounting_scales_with_macros() {
-        let cfg = VitConfig::vit_small();
-        let p2 = router(2).route(&cfg, 1, &PrecisionPlan::paper_sac());
-        let p8 = router(8).route(&cfg, 1, &PrecisionPlan::paper_sac());
-        let max2 = p2.resident_bits.iter().max().unwrap();
-        let max8 = p8.resident_bits.iter().max().unwrap();
-        assert!(max8 < max2, "residency per macro should drop: {max2} -> {max8}");
+        let g = graph(&VitConfig::vit_small(), 1);
+        let p2 = router(2).route(&g);
+        let p8 = router(8).route(&g);
+        assert!(
+            p8.max_resident_bits() < p2.max_resident_bits(),
+            "residency per macro should drop: {} -> {}",
+            p2.max_resident_bits(),
+            p8.max_resident_bits()
+        );
+    }
+
+    #[test]
+    fn deep_k_units_never_exceed_one_macro_array() {
+        // The rework's point: a k = 3072 fc2 used to attribute all 3072
+        // rows to one macro (3× its physical array). Per-unit footprints
+        // must now fit a single macro, so a big enough deployment holds
+        // ViT-Base fully resident.
+        let g = graph(&VitConfig::vit_base(), 1);
+        let r = router(8);
+        let plan = r.route(&g);
+        let per_macro = r.sram_bits_per_macro;
+        let fc2_units: Vec<_> = plan
+            .placements
+            .iter()
+            .filter(|p| g.layers[p.layer_index].shape.k == 3072)
+            .collect();
+        assert!(!fc2_units.is_empty());
+        // Row-tiled placements exist (row_tile > 0 for k = 3072 layers).
+        assert!(fc2_units.iter().any(|p| p.row_tile > 0));
+        // Total resident bits equal the graph's weight planes exactly:
+        // Σ k·n·w_bits per layer.
+        let want: u64 =
+            g.layers.iter().map(|l| (l.shape.k * l.shape.n) as u64 * l.op.w_bits as u64).sum();
+        assert_eq!(plan.resident_bits.iter().sum::<u64>(), want);
+        // One macro per unit ⇒ every macro's residency fits its array.
+        let units = plan.placements.len();
+        let wide = Router::new(&MacroParams::default(), units);
+        let plan_wide = wide.route(&g);
+        assert!(
+            plan_wide.max_resident_bits() <= per_macro,
+            "unit footprint {} exceeds one macro array {per_macro}",
+            plan_wide.max_resident_bits()
+        );
+        assert!(wide.fits_resident(&plan_wide));
     }
 
     #[test]
     fn single_macro_route_matches_scheduler_latency_scale() {
         let r = router(1);
-        let cfg = VitConfig::default();
-        let plan = r.route(&cfg, 1, &PrecisionPlan::paper_sac());
+        let plan = r.route(&graph(&VitConfig::default(), 1));
         assert!((plan.makespan_ns - plan.macro_busy_ns[0]).abs() < 1e-9);
         assert_eq!(plan.macro_busy_ns.len(), 1);
+    }
+
+    #[test]
+    fn class_pool_split_tracks_lpt_mass() {
+        let r = router(4);
+        let g = graph(&VitConfig::vit_base(), 8);
+        let (att, mlp) = r.class_pool_split(&g, 8);
+        assert_eq!(att + mlp, 8);
+        assert!(att >= 1 && mlp >= 1);
+        // SAC runs MLP at 6b w/CB vs attention 4b wo/CB, and the MLP
+        // layers carry more planes — the MLP pool must be the bigger one.
+        assert!(mlp > att, "att {att} mlp {mlp}");
+        // Degenerate budgets (fewer dies than classes) clamp to one die
+        // per class instead of emptying a pool.
+        for budget in [0usize, 1] {
+            let (a1, m1) = r.class_pool_split(&g, budget);
+            assert_eq!((a1, m1), (1, 1), "budget {budget}");
+        }
     }
 }

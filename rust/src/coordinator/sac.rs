@@ -176,6 +176,21 @@ pub struct PlanCost {
     pub tops_per_watt_effective: f64,
 }
 
+impl PlanCost {
+    /// Derive the summary figures (µJ, µs, TOPS/W) from a tile-plan
+    /// total — the one place that math lives; every executor and
+    /// evaluator builds its `PlanCost` through here.
+    pub fn from_total(plan_name: &'static str, total: TilePlan) -> Self {
+        PlanCost {
+            plan_name,
+            total,
+            energy_uj: total.energy_pj * 1e-6,
+            latency_us: total.latency_ns * 1e-3,
+            tops_per_watt_effective: total.ops_1b / (total.energy_pj * 1e-12) / 1e12,
+        }
+    }
+}
+
 /// Evaluate a plan over the ViT linear workload.
 pub fn evaluate_plan(
     sched: &Scheduler,
@@ -188,10 +203,19 @@ pub fn evaluate_plan(
         let op = plan.point(shape.class);
         total.add(&sched.plan_linear(&shape, op));
     }
-    let energy_uj = total.energy_pj * 1e-6;
-    let latency_us = total.latency_ns * 1e-3;
-    let tops_per_watt_effective = total.ops_1b / (total.energy_pj * 1e-12) / 1e12;
-    PlanCost { plan_name: plan.name, total, energy_uj, latency_us, tops_per_watt_effective }
+    PlanCost::from_total(plan.name, total)
+}
+
+/// Evaluate an explicit model graph (the pipeline executor's unit of
+/// work): per-layer operating points come from the graph itself, and
+/// the reported latency is the reload-overlapped pipeline
+/// (`Scheduler::plan_graph`'s `pipelined_ns`), not the bare conversion
+/// sum `evaluate_plan` reports.
+pub fn evaluate_graph(sched: &Scheduler, graph: &crate::vit::graph::ModelGraph) -> PlanCost {
+    let pp = sched.plan_graph(graph);
+    let mut total = pp.total;
+    total.latency_ns = pp.pipelined_ns;
+    PlanCost::from_total(graph.plan_name, total)
 }
 
 /// The Fig. 4 headline: energy ratio of the safe uniform plan over the
@@ -335,5 +359,26 @@ mod tests {
         assert!(cost.energy_uj > 0.0);
         assert!(cost.latency_us > 0.0);
         assert!(cost.tops_per_watt_effective > 50.0);
+    }
+
+    #[test]
+    fn graph_cost_matches_workload_energy_and_adds_reload_latency() {
+        use crate::vit::graph::ModelGraph;
+        let sched = Scheduler::new(&MacroParams::default());
+        let cfg = VitConfig::vit_small();
+        let plan = PrecisionPlan::paper_sac();
+        let graph = ModelGraph::encoder(&cfg, 1, &plan);
+        let g = evaluate_graph(&sched, &graph);
+        // Same conversions/energy as pricing the encoder layers directly.
+        let mut body = TilePlan::default();
+        for l in &graph.layers {
+            body.add(&sched.plan_linear(&l.shape, l.op));
+        }
+        assert_eq!(g.total.conversions, body.conversions);
+        assert!((g.total.energy_pj - body.energy_pj).abs() < 1e-6);
+        // The graph latency carries the (overlapped) reload term the
+        // flat workload evaluation ignores.
+        assert!(g.total.latency_ns > body.latency_ns);
+        assert_eq!(g.plan_name, plan.name);
     }
 }

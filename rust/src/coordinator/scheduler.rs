@@ -6,15 +6,20 @@
 //!   - column tiles: n·w_bits physical columns, ⌈n·w_bits / 78⌉ loads,
 //!   - m activation vectors, each a_bits bit-serial cycles.
 //!
-//! Weight reloads are SRAM writes (cheap, amortized over m); conversions
-//! dominate energy/latency. The scheduler produces a [`TilePlan`] with the
-//! exact conversion count, energy and latency the macro would spend,
-//! using the same `EnergyModel` the characterization benches use.
+//! Conversions dominate energy; weight reloads are SRAM writes whose
+//! *latency* still matters at the model-graph level, where every layer
+//! of a forward pass reprograms the macros it draws from a pool. The
+//! scheduler produces a [`TilePlan`] per layer (exact conversion count,
+//! energy, conversion latency — the same `EnergyModel` the
+//! characterization benches use) and a [`PipelinePlan`] per model graph,
+//! pricing reloads both fully serially and double-buffered (layer i+1's
+//! reload hidden behind layer i's bit-serial conversions).
 
 use crate::cim::energy::EnergyModel;
 use crate::cim::params::MacroParams;
 #[cfg(test)]
 use crate::cim::params::CbMode;
+use crate::vit::graph::ModelGraph;
 use crate::vit::plan::OperatingPoint;
 use crate::vit::LinearShape;
 
@@ -41,6 +46,70 @@ impl TilePlan {
         self.energy_pj += other.energy_pj;
         self.latency_ns += other.latency_ns;
         self.ops_1b += other.ops_1b;
+    }
+}
+
+/// Modeled timing of one graph layer inside a [`PipelinePlan`].
+#[derive(Clone, Debug)]
+pub struct LayerTiming {
+    /// Display name (`block3.fc2`).
+    pub name: String,
+    /// Weight-reload latency [ns] for the layer's (row tile × column
+    /// tile) loads, shard-parallel (see [`Scheduler::weight_load_ns`]).
+    pub reload_ns: f64,
+    /// Bit-serial conversion latency [ns] (the layer's
+    /// [`TilePlan::latency_ns`]).
+    pub compute_ns: f64,
+}
+
+/// Full-graph cost: per-layer timings, the conversion/energy totals, and
+/// the two weight-reload accounting models.
+#[derive(Clone, Debug)]
+pub struct PipelinePlan {
+    /// Per-layer timing in execution order.
+    pub layers: Vec<LayerTiming>,
+    /// Summed per-layer [`TilePlan`]s (conversion latency only — no
+    /// reload term; see `serial_ns` / `pipelined_ns` for wall time).
+    pub total: TilePlan,
+    /// Fully-serial accounting: each layer's reload completes before its
+    /// conversions start — Σ (reload + compute).
+    pub serial_ns: f64,
+    /// Double-buffered accounting: layer i+1's reload overlaps layer i's
+    /// bit-serial conversions, so only the first reload and any reload
+    /// longer than the conversions it hides behind stay exposed.
+    pub pipelined_ns: f64,
+}
+
+impl PipelinePlan {
+    /// Assemble a plan from per-layer (name, compute plan, reload
+    /// latency) triples. The double-buffer fold: wall time is the first
+    /// reload plus, per layer, `max(compute_i, reload_{i+1})` — the next
+    /// layer's reload runs on its target macros while the current
+    /// layer's conversions stream, and the pipeline stalls only when the
+    /// reload outlasts them.
+    pub fn from_layers(entries: Vec<(String, TilePlan, f64)>) -> Self {
+        let mut total = TilePlan::default();
+        let mut layers = Vec::with_capacity(entries.len());
+        for (name, plan, reload_ns) in entries {
+            total.add(&plan);
+            layers.push(LayerTiming { name, reload_ns, compute_ns: plan.latency_ns });
+        }
+        let serial_ns: f64 = layers.iter().map(|t| t.reload_ns + t.compute_ns).sum();
+        let mut pipelined_ns = layers.first().map(|t| t.reload_ns).unwrap_or(0.0);
+        for (i, t) in layers.iter().enumerate() {
+            let next_reload = layers.get(i + 1).map(|n| n.reload_ns).unwrap_or(0.0);
+            pipelined_ns += t.compute_ns.max(next_reload);
+        }
+        PipelinePlan { layers, total, serial_ns, pipelined_ns }
+    }
+
+    /// Fraction of the serial-reload latency the overlap saves.
+    pub fn overlap_saving(&self) -> f64 {
+        if self.serial_ns <= 0.0 {
+            0.0
+        } else {
+            1.0 - self.pipelined_ns / self.serial_ns
+        }
     }
 }
 
@@ -90,6 +159,35 @@ impl Scheduler {
     /// Column tiles for `n` outputs at `w_bits` weight planes.
     pub fn col_tiles(&self, n: usize, w_bits: u32) -> u64 {
         (n as u64 * w_bits as u64).div_ceil(self.params.cols as u64)
+    }
+
+    /// Weight-reload latency [ns] for one layer: every
+    /// (row tile × column tile) SRAM load pays `t_wload_ns`; loads of
+    /// different column shards target different macros and run
+    /// concurrently, so only `⌈tiles / shards⌉` serialize. Dies each
+    /// hold a full copy and load concurrently (no die division).
+    pub fn weight_load_ns(&self, shape: &LinearShape, op: OperatingPoint) -> f64 {
+        let tiles = self.row_tiles(shape.k) * self.col_tiles(shape.n, op.w_bits);
+        tiles.div_ceil(self.shards.max(1) as u64) as f64 * self.params.t_wload_ns
+    }
+
+    /// Plan a whole model graph: per-layer conversion plans plus the
+    /// serial and double-buffered weight-reload accountings. This is the
+    /// model the pipeline executor reports — the old per-layer path
+    /// ignored reload latency entirely (equivalent to assuming every
+    /// layer's weights were already resident, which is false the moment
+    /// a forward pass streams 48 layers through a bounded die pool).
+    pub fn plan_graph(&self, graph: &ModelGraph) -> PipelinePlan {
+        PipelinePlan::from_layers(
+            graph
+                .layers
+                .iter()
+                .map(|l| {
+                    let reload = self.weight_load_ns(&l.shape, l.op);
+                    (l.name(), self.plan_linear(&l.shape, l.op), reload)
+                })
+                .collect(),
+        )
     }
 
     /// Plan one linear layer at an operating point.
@@ -241,6 +339,67 @@ mod tests {
         // 4b: fewer bit-serial cycles AND fewer weight planes.
         assert!(b4.energy_pj < b6.energy_pj * 0.6);
         assert!(b4.latency_ns < b6.latency_ns);
+    }
+
+    #[test]
+    fn weight_load_latency_counts_tiles_and_divides_by_shards() {
+        let p = MacroParams::default();
+        let op = PrecisionPlan::paper_sac().mlp; // 6b
+        // (3072, 768): 3 row tiles × ⌈768·6/78⌉ = 60 column tiles.
+        let sh = shape(3072, 768, 1);
+        let s1 = Scheduler::new(&p);
+        assert!((s1.weight_load_ns(&sh, op) - 180.0 * p.t_wload_ns).abs() < 1e-9);
+        let s4 = Scheduler::with_shards(&p, 4);
+        assert!((s4.weight_load_ns(&sh, op) - 45.0 * p.t_wload_ns).abs() < 1e-9);
+        // Dies do not divide the reload (each die loads its own copy).
+        let d2 = Scheduler::with_topology(&p, 1, 2);
+        assert!((d2.weight_load_ns(&sh, op) - 180.0 * p.t_wload_ns).abs() < 1e-9);
+    }
+
+    #[test]
+    fn pipelined_reload_is_strictly_below_serial_for_vit_base_batch8() {
+        // Acceptance anchor: double-buffered reloads must beat the
+        // fully-serial accounting on the real target workload.
+        use crate::vit::graph::ModelGraph;
+        use crate::vit::VitConfig;
+        let graph = ModelGraph::encoder(&VitConfig::vit_base(), 8, &PrecisionPlan::paper_sac());
+        for (shards, dies) in [(1usize, 1usize), (4, 2), (8, 4)] {
+            let sched = Scheduler::with_topology(&MacroParams::default(), shards, dies);
+            let pp = sched.plan_graph(&graph);
+            assert_eq!(pp.layers.len(), 48);
+            assert!(
+                pp.pipelined_ns < pp.serial_ns,
+                "overlap must strictly help: {} vs {} (shards {shards}, dies {dies})",
+                pp.pipelined_ns,
+                pp.serial_ns
+            );
+            // But it can never hide the conversions themselves.
+            let conv: f64 = pp.layers.iter().map(|t| t.compute_ns).sum();
+            assert!(pp.pipelined_ns >= conv);
+            assert!(pp.overlap_saving() > 0.0 && pp.overlap_saving() < 1.0);
+        }
+    }
+
+    #[test]
+    fn pipeline_fold_matches_hand_computation() {
+        let mk = |latency_ns: f64| TilePlan { latency_ns, ..TilePlan::default() };
+        let pp = PipelinePlan::from_layers(vec![
+            ("a".into(), mk(100.0), 10.0),
+            ("b".into(), mk(50.0), 80.0),
+            ("c".into(), mk(70.0), 20.0),
+        ]);
+        // serial: (10+100) + (80+50) + (20+70) = 330
+        assert!((pp.serial_ns - 330.0).abs() < 1e-12);
+        // pipelined: 10 + max(100, 80) + max(50, 20) + 70 = 230
+        assert!((pp.pipelined_ns - 230.0).abs() < 1e-12);
+        assert!((pp.overlap_saving() - (1.0 - 230.0 / 330.0)).abs() < 1e-12);
+        // Degenerate cases.
+        let empty = PipelinePlan::from_layers(Vec::new());
+        assert_eq!(empty.serial_ns, 0.0);
+        assert_eq!(empty.pipelined_ns, 0.0);
+        assert_eq!(empty.overlap_saving(), 0.0);
+        let one = PipelinePlan::from_layers(vec![("x".into(), mk(40.0), 5.0)]);
+        assert!((one.serial_ns - one.pipelined_ns).abs() < 1e-12);
     }
 
     #[test]

@@ -4,13 +4,21 @@
 //! Protocol (one JSON object per line):
 //!   → {"id": 1, "image": [3072 floats]}
 //!   ← {"id": 1, "pred": 7, "logits": [...], "queue_us": ..., "batch": 16}
-//!   → {"cmd": "stats"}   ← the ledger report
+//!   → {"id": 2, "kind": "forward", "image": [...]}
+//!   ← {"id": 2, "pred": ..., "logits": [...], "layers": 48, ...}
+//!   → {"cmd": "stats"}   ← the ledger report (incl. per-layer breakdown
+//!                          when a model-graph executor is serving)
 //!   → {"cmd": "shutdown"}
+//!
+//! The `"forward"` kind runs a whole encoder pass through a model-graph
+//! executor (`coordinator::pipeline::ModelExecutor`); the default kind
+//! classifies through the executor's single-layer path.
 //!
 //! Architecture: acceptor threads push requests into a shared queue; a
 //! single executor thread forms batches (Batcher policy), runs the PJRT
-//! executable, accounts costs in the Ledger, and writes responses back
-//! through per-connection response channels.
+//! executable or the macro-simulator pipeline, accounts costs in the
+//! Ledger, and writes responses back through per-connection response
+//! channels.
 
 use std::collections::{HashMap, HashSet};
 use std::io::{BufRead, BufReader, Write};
@@ -20,9 +28,18 @@ use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use crate::coordinator::batcher::{Batcher, Request};
-use crate::coordinator::ledger::Ledger;
+use crate::coordinator::ledger::{LayerCost, Ledger};
 use crate::coordinator::sac::PlanCost;
 use crate::util::json::{self, Json};
+
+/// What a request asks the executor to run.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RequestKind {
+    /// Single-layer classification (the default; every executor).
+    Classify,
+    /// Whole model-graph forward pass (graph executors only).
+    Forward,
+}
 
 /// A parsed inference request payload.
 #[derive(Clone, Debug)]
@@ -30,6 +47,7 @@ pub struct InferencePayload {
     pub image: Vec<f32>,
     pub conn_id: u64,
     pub client_req_id: f64,
+    pub kind: RequestKind,
 }
 
 /// Response sender side: per-connection outbox.
@@ -42,6 +60,21 @@ type Outbox = Arc<Mutex<HashMap<u64, Vec<String>>>>;
 pub trait BatchExecutor {
     /// Execute `images` (n × image_floats) and return per-request logits.
     fn execute(&mut self, images: &[Vec<f32>]) -> Result<Vec<Vec<f32>>, String>;
+    /// Run a full model-graph forward pass (the `"kind": "forward"`
+    /// request path). Default: single-layer executors don't support it.
+    fn forward(&mut self, _images: &[Vec<f32>]) -> Result<Vec<Vec<f32>>, String> {
+        Err("this executor does not serve model-graph forward passes".to_string())
+    }
+    /// Layers in the executor's model graph (0 = not a graph executor).
+    fn graph_layers(&self) -> usize {
+        0
+    }
+    /// Cumulative per-layer accounting (empty = not a graph executor).
+    /// The server refreshes the ledger's breakdown from this after every
+    /// executed batch.
+    fn layer_breakdown(&self) -> Vec<LayerCost> {
+        Vec::new()
+    }
     /// Modeled per-inference macro cost for accounting.
     fn cost(&self) -> &PlanCost;
     fn num_classes(&self) -> usize;
@@ -73,8 +106,10 @@ pub struct Server {
 }
 
 impl Server {
-    pub fn new(cfg: &ServerConfig) -> Self {
-        Server {
+    /// Build a server; fails on an invalid batching config (empty or
+    /// zero batch sizes) instead of panicking the serving thread later.
+    pub fn new(cfg: &ServerConfig) -> Result<Self, String> {
+        Ok(Server {
             pending: Arc::new(Mutex::new(Vec::new())),
             outbox: Arc::new(Mutex::new(HashMap::new())),
             ledger: Arc::new(Mutex::new(Ledger::new())),
@@ -82,8 +117,8 @@ impl Server {
             next_conn: AtomicU64::new(1),
             next_req: AtomicU64::new(1),
             live_conns: Mutex::new(HashSet::new()),
-            batcher: Batcher::new(cfg.batch_sizes.clone(), cfg.max_wait),
-        }
+            batcher: Batcher::new(cfg.batch_sizes.clone(), cfg.max_wait)?,
+        })
     }
 
     /// Register a new connection and return its id. Responses are only
@@ -129,50 +164,85 @@ impl Server {
     }
 
     /// One executor step: form a batch if policy allows, execute, account,
-    /// and stage responses. Returns the number of requests served.
+    /// and stage responses. A formed batch can mix request kinds; each
+    /// kind runs as its own sub-batch through the matching executor
+    /// entry point (`execute` vs `forward`). Returns the number of
+    /// requests served.
     pub fn executor_step(&self, exec: &mut dyn BatchExecutor) -> usize {
         let batch = {
             let mut pending = self.pending.lock().unwrap();
             self.batcher.form_batch(&mut pending, Instant::now())
         };
         let Some(batch) = batch else { return 0 };
-        let t0 = Instant::now();
-        let images: Vec<Vec<f32>> = batch.requests.iter().map(|r| r.payload.image.clone()).collect();
         let served = batch.requests.len();
-        match exec.execute(&images) {
-            Ok(logits) => {
-                let wall = t0.elapsed();
-                self.ledger.lock().unwrap().record_batch(
-                    served,
-                    batch.exec_size,
-                    exec.cost(),
-                    wall,
-                );
-                let nc = exec.num_classes();
-                self.stage_responses(batch.requests.iter().zip(&logits).map(|(req, lg)| {
-                    // Built eagerly (collected before locking) so JSON
-                    // serialization never runs under the outbox lock.
-                    let pred = crate::util::stats::argmax_rows(lg, nc)[0];
-                    let mut o = Json::obj();
-                    o.set("id", Json::num(req.payload.client_req_id));
-                    o.set("pred", Json::num(pred as f64));
-                    o.set("logits", Json::arr_f64(&lg.iter().map(|&x| x as f64).collect::<Vec<_>>()));
-                    o.set(
-                        "queue_us",
-                        Json::num(t0.duration_since(req.arrived).as_secs_f64() * 1e6),
+        // Queue time ends when the batch is formed, for every request in
+        // it — measuring per sub-batch would charge the second kind for
+        // the first kind's execution time.
+        let formed_at = Instant::now();
+        for kind in [RequestKind::Classify, RequestKind::Forward] {
+            let reqs: Vec<&Request<InferencePayload>> =
+                batch.requests.iter().filter(|r| r.payload.kind == kind).collect();
+            if reqs.is_empty() {
+                continue;
+            }
+            let images: Vec<Vec<f32>> = reqs.iter().map(|r| r.payload.image.clone()).collect();
+            let exec_size = self.batcher.exec_size_for(reqs.len());
+            let t0 = Instant::now();
+            let result = match kind {
+                RequestKind::Classify => exec.execute(&images),
+                RequestKind::Forward => exec.forward(&images),
+            };
+            match result {
+                Ok(logits) => {
+                    let wall = t0.elapsed();
+                    self.ledger.lock().unwrap().record_batch(
+                        reqs.len(),
+                        exec_size,
+                        exec.cost(),
+                        wall,
                     );
-                    o.set("batch", Json::num(batch.exec_size as f64));
-                    (req.payload.conn_id, Json::Obj(o).to_string())
-                }));
+                    let layers = exec.graph_layers();
+                    self.stage_responses(reqs.iter().zip(&logits).map(|(req, lg)| {
+                        // Built eagerly (collected before locking) so JSON
+                        // serialization never runs under the outbox lock.
+                        let pred = if lg.is_empty() {
+                            0
+                        } else {
+                            crate::util::stats::argmax_rows(lg, lg.len())[0]
+                        };
+                        let mut o = Json::obj();
+                        o.set("id", Json::num(req.payload.client_req_id));
+                        o.set("pred", Json::num(pred as f64));
+                        o.set(
+                            "logits",
+                            Json::arr_f64(&lg.iter().map(|&x| x as f64).collect::<Vec<_>>()),
+                        );
+                        o.set(
+                            "queue_us",
+                            Json::num(formed_at.duration_since(req.arrived).as_secs_f64() * 1e6),
+                        );
+                        o.set("batch", Json::num(exec_size as f64));
+                        if kind == RequestKind::Forward {
+                            o.set("layers", Json::num(layers as f64));
+                        }
+                        (req.payload.conn_id, Json::Obj(o).to_string())
+                    }));
+                }
+                Err(e) => {
+                    self.stage_responses(reqs.iter().map(|req| {
+                        let mut o = Json::obj();
+                        o.set("id", Json::num(req.payload.client_req_id));
+                        o.set("error", Json::str(&e));
+                        (req.payload.conn_id, Json::Obj(o).to_string())
+                    }));
+                }
             }
-            Err(e) => {
-                self.stage_responses(batch.requests.iter().map(|req| {
-                    let mut o = Json::obj();
-                    o.set("id", Json::num(req.payload.client_req_id));
-                    o.set("error", Json::str(&e));
-                    (req.payload.conn_id, Json::Obj(o).to_string())
-                }));
-            }
+        }
+        // Graph executors keep cumulative per-layer counters; refresh the
+        // ledger's breakdown snapshot after the batch.
+        let layers = exec.layer_breakdown();
+        if !layers.is_empty() {
+            self.ledger.lock().unwrap().set_layer_breakdown(layers);
         }
         served
     }
@@ -235,7 +305,18 @@ impl Server {
             .map(|v| v.as_f64().unwrap_or(0.0) as f32)
             .collect();
         let client_req_id = j.get_path("id").and_then(|x| x.as_f64()).unwrap_or(0.0);
-        self.enqueue(InferencePayload { image, conn_id, client_req_id });
+        let kind = match j.get_path("kind") {
+            None => RequestKind::Classify,
+            Some(k) => match k.as_str() {
+                Some("classify") => RequestKind::Classify,
+                Some("forward") => RequestKind::Forward,
+                Some(other) => return Err(format!("unknown kind '{other}'")),
+                // A present-but-non-string kind is a client bug, not a
+                // silent classify.
+                None => return Err("'kind' must be a string".to_string()),
+            },
+        };
+        self.enqueue(InferencePayload { image, conn_id, client_req_id, kind });
         Ok(None)
     }
 
@@ -385,6 +466,7 @@ mod tests {
             batch_sizes: vec![1, 4],
             max_wait: Duration::from_millis(1),
         })
+        .unwrap()
     }
 
     #[test]
@@ -435,6 +517,117 @@ mod tests {
         assert!(srv.handle_line("not json", 1).is_err());
         assert!(srv.handle_line(r#"{"nothing": 1}"#, 1).is_err());
         assert!(srv.handle_line(r#"{"cmd": "nope"}"#, 1).is_err());
+        assert!(srv.handle_line(r#"{"id": 1, "kind": "nope", "image": [1.0]}"#, 1).is_err());
+        // A non-string kind is rejected, not silently classified.
+        assert!(srv.handle_line(r#"{"id": 1, "kind": 7, "image": [1.0]}"#, 1).is_err());
+    }
+
+    #[test]
+    fn bad_batch_config_is_rejected_at_construction() {
+        let bad = ServerConfig {
+            addr: "unused".into(),
+            batch_sizes: vec![],
+            max_wait: Duration::from_millis(1),
+        };
+        assert!(Server::new(&bad).is_err());
+    }
+
+    #[test]
+    fn forward_requests_error_on_single_layer_executors() {
+        // FakeExec has no model graph: the forward kind must surface a
+        // per-request error, not crash or silently classify.
+        let srv = test_server();
+        let mut exec = FakeExec::new();
+        let conn = srv.open_conn();
+        srv.handle_line(r#"{"id": 9, "kind": "forward", "image": [1.0]}"#, conn).unwrap();
+        std::thread::sleep(Duration::from_millis(3));
+        assert_eq!(srv.executor_step(&mut exec), 1);
+        let resps = srv.take_responses(conn);
+        assert_eq!(resps.len(), 1);
+        let j = json::parse(&resps[0]).unwrap();
+        assert_eq!(j.get_path("id").unwrap().as_f64().unwrap(), 9.0);
+        assert!(j.get_path("error").is_some());
+    }
+
+    #[test]
+    fn mixed_kind_batches_split_into_sub_batches() {
+        // A classify and a forward request in one formed batch: the
+        // classify half succeeds through execute(), the forward half
+        // errors (FakeExec is not a graph executor) — both get replies.
+        let srv = test_server();
+        let mut exec = FakeExec::new();
+        let conn = srv.open_conn();
+        srv.handle_line(r#"{"id": 1, "image": [1.0]}"#, conn).unwrap();
+        srv.handle_line(r#"{"id": 2, "kind": "forward", "image": [1.0]}"#, conn).unwrap();
+        std::thread::sleep(Duration::from_millis(3));
+        assert_eq!(srv.executor_step(&mut exec), 2);
+        let resps = srv.take_responses(conn);
+        assert_eq!(resps.len(), 2);
+        let by_id: std::collections::HashMap<u64, Json> = resps
+            .iter()
+            .map(|r| {
+                let j = json::parse(r).unwrap();
+                (j.get_path("id").unwrap().as_f64().unwrap() as u64, j)
+            })
+            .collect();
+        assert!(by_id[&1].get_path("pred").is_some());
+        assert!(by_id[&2].get_path("error").is_some());
+    }
+
+    #[test]
+    fn model_graph_forward_serves_with_per_layer_ledger() {
+        // The smallest end-to-end pipeline: a 2-block encoder on a tiny
+        // zero-noise geometry, served through the forward request kind.
+        use crate::coordinator::pipeline::{ModelExecutor, PipelineConfig};
+        use crate::vit::graph::ModelGraph;
+        use crate::vit::plan::OperatingPoint;
+        let mut p = MacroParams::default();
+        p.adc_bits = 6;
+        p.active_rows = 64;
+        p.rows = 64;
+        p.cols = 12;
+        p.sigma_cu_rel = 0.0;
+        p.nonlin_cubic_lsb = 0.0;
+        p.sigma_cmp_lsb = 0.0;
+        p.sigma_cmp_offset_lsb = 0.0;
+        p.temperature_k = 0.0;
+        let op = OperatingPoint { a_bits: 2, w_bits: 2, cb: crate::cim::params::CbMode::Off };
+        let plan = PrecisionPlan { name: "test 2b", attention: op, mlp: op };
+        let mut cfg = VitConfig::default();
+        cfg.image = 16;
+        cfg.dim = 48;
+        cfg.depth = 2;
+        cfg.mlp_ratio = 2;
+        cfg.num_classes = 4;
+        let graph = ModelGraph::encoder(&cfg, 2, &plan);
+        let mut exec = ModelExecutor::new(&p, graph, PipelineConfig::default()).unwrap();
+        let srv = test_server();
+        let conn = srv.open_conn();
+        for i in 0..2 {
+            let img: Vec<f32> = (0..16).map(|j| ((i + j) % 7) as f32 / 7.0 - 0.4).collect();
+            let body: Vec<String> = img.iter().map(|v| format!("{v}")).collect();
+            srv.handle_line(
+                &format!(r#"{{"id": {i}, "kind": "forward", "image": [{}]}}"#, body.join(", ")),
+                conn,
+            )
+            .unwrap();
+        }
+        std::thread::sleep(Duration::from_millis(3));
+        assert_eq!(srv.executor_step(&mut exec), 2);
+        let resps = srv.take_responses(conn);
+        assert_eq!(resps.len(), 2);
+        for r in resps {
+            let j = json::parse(&r).unwrap();
+            assert_eq!(j.get_path("layers").unwrap().as_f64().unwrap(), 8.0);
+            assert_eq!(j.get_path("logits").unwrap().as_arr().unwrap().len(), 48);
+        }
+        let stats = srv.ledger_json();
+        assert_eq!(stats.get_path("requests").unwrap().as_f64().unwrap(), 2.0);
+        let layers = stats.get_path("layers").unwrap().as_arr().unwrap();
+        assert_eq!(layers.len(), 8);
+        assert!(layers
+            .iter()
+            .all(|l| l.get_path("conversions").unwrap().as_f64().unwrap() > 0.0));
     }
 
     #[test]
@@ -597,7 +790,7 @@ mod tests {
         let addr = listener.local_addr().unwrap();
         drop(listener);
         let cfg = ServerConfig { addr: addr.to_string(), ..cfg };
-        let srv = Arc::new(Server::new(&cfg));
+        let srv = Arc::new(Server::new(&cfg).unwrap());
         let srv2 = srv.clone();
         let handle = std::thread::spawn(move || {
             srv2.serve(&cfg, Box::new(FakeExec::new())).unwrap();

@@ -282,7 +282,7 @@ impl SimExecutor {
             return Err(format!("w_bits {} out of range 1..=16", op.w_bits));
         }
         let mut rng = crate::util::rng::Rng::new(params.seed ^ 0x51AC_0E5E);
-        let lo = -(1i32 << (op.w_bits - 1));
+        let (lo, _) = op.w_range();
         let span = 1u64 << op.w_bits;
         let w: Vec<Vec<i32>> = (0..k)
             .map(|_| (0..classes).map(|_| lo + rng.below(span) as i32).collect())
@@ -291,13 +291,7 @@ impl SimExecutor {
         let sched = Scheduler::with_topology(params, bank.shard_count(), bank.die_count());
         let shape = LinearShape { class: LayerClass::TransformerMlp, k, n: classes, m: 1 };
         let total = sched.plan_linear(&shape, op);
-        let cost = PlanCost {
-            plan_name: "sim-linear (tiled multi-die macro)",
-            total,
-            energy_uj: total.energy_pj * 1e-6,
-            latency_us: total.latency_ns * 1e-3,
-            tops_per_watt_effective: total.ops_1b / (total.energy_pj * 1e-12) / 1e12,
-        };
+        let cost = PlanCost::from_total("sim-linear (tiled multi-die macro)", total);
         Ok(SimExecutor { bank, cost, classes })
     }
 
@@ -306,20 +300,11 @@ impl SimExecutor {
         self.bank.die_count()
     }
 
-    /// Quantize one image into a k-long activation vector in a_bits range.
+    /// Quantize one image into a k-long activation vector in a_bits range
+    /// (the same map the pipeline executor's
+    /// [`featurize`](super::pipeline::featurize) applies per layer 0).
     fn featurize(&self, img: &[f32]) -> Vec<i32> {
-        let a_hi = (1i32 << (self.bank.op.a_bits - 1)) - 1;
-        let a_lo = -(1i32 << (self.bank.op.a_bits - 1));
-        (0..self.bank.k)
-            .map(|r| {
-                if img.is_empty() {
-                    return 0;
-                }
-                let v = img[r * img.len() / self.bank.k];
-                let q = (v.clamp(-1.0, 1.0) * a_hi as f32).round() as i32;
-                q.clamp(a_lo, a_hi)
-            })
-            .collect()
+        super::pipeline::featurize(self.bank.op, self.bank.k, img)
     }
 }
 

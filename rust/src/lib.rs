@@ -32,16 +32,28 @@
 //! (`coordinator::DieBank`) routes served batches across independent
 //! dies.
 //!
+//! The unit of served work is a **model graph** (`vit::ModelGraph`):
+//! the pipeline executor (`coordinator::ModelExecutor`) walks the ViT
+//! encoder's per-block qkv / attn-proj / fc1 / fc2 linears, drawing
+//! macros from **per-layer-class die pools** (attention and MLP classes
+//! own disjoint silicon) and pricing each layer's weight reload
+//! double-buffered behind the previous layer's conversions
+//! (`coordinator::Scheduler::plan_graph`). The server's `forward`
+//! request kind runs a whole encoder pass with a per-layer ledger
+//! breakdown.
+//!
 //! The determinism contract is the substream hierarchy
-//! `seed → die → row tile → global column → conversion counter`: every
-//! RNG consumer owns a splittable substream, so **results are
-//! bit-identical at any worker-thread count and at any column-shard
-//! count** (the shard split is invisible to the noise model), and equal
-//! to the exact integer matvec at zero noise for any decomposition.
+//! `seed → class pool → die → row tile → global column → conversion
+//! counter`: every RNG consumer owns a splittable substream, so
+//! **results are bit-identical at any worker-thread count and at any
+//! column-shard count** (the shard split is invisible to the noise
+//! model), and equal to the exact integer matvec — or, for a graph, the
+//! exact reference walk — at zero noise for any decomposition.
 //! Monte-Carlo sweeps (`cim::montecarlo`), CSNR calibration
 //! (`coordinator::NoiseCalibration`) and the serving path
-//! (`coordinator::SimExecutor`) all ride the same engine. See
-//! `docs/ARCHITECTURE.md` for the full layer map and tiling model.
+//! (`coordinator::SimExecutor`, `coordinator::ModelExecutor`) all ride
+//! the same engine. See `docs/ARCHITECTURE.md` for the full layer map,
+//! tiling and pipeline model.
 //!
 //! The PJRT runtime (`runtime`) is gated behind the `pjrt` cargo feature
 //! because the `xla` / `anyhow` crates are only present in images that

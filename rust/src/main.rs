@@ -244,7 +244,7 @@ fn cmd_serve(argv: Vec<String>) -> Result<()> {
         "serving ViT-CIM on {} (batch {batch}, σ_attn={sa:.2}, σ_mlp={sm:.2} LSB)",
         cfg.addr
     );
-    let server = Arc::new(Server::new(&cfg));
+    let server = Arc::new(Server::new(&cfg).map_err(|e| anyhow!(e))?);
     server.serve(&cfg, Box::new(executor))?;
     println!("server shut down");
     Ok(())

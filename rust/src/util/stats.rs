@@ -81,10 +81,14 @@ impl Moments {
 
 /// Exact percentile by sorting a copy (fine at bench-result scale).
 /// `q` in [0,1]; linear interpolation between order statistics.
+/// NaN-safe: sorts by IEEE total order, so NaNs collect at the top of
+/// the distribution instead of panicking mid-sort (the old
+/// `partial_cmp().unwrap()` aborted the whole bench run on one NaN
+/// sample).
 pub fn percentile(xs: &[f64], q: f64) -> f64 {
     assert!(!xs.is_empty(), "percentile of empty slice");
     let mut v: Vec<f64> = xs.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    v.sort_by(f64::total_cmp);
     let pos = q.clamp(0.0, 1.0) * (v.len() - 1) as f64;
     let lo = pos.floor() as usize;
     let hi = pos.ceil() as usize;
@@ -174,14 +178,17 @@ impl Histogram {
 
 /// Argmax of each `width`-sized row of a flattened logits buffer. Lives
 /// here (not in `runtime`) so the serving path works without the PJRT
-/// feature.
+/// feature. NaN-safe via IEEE total order: a NaN logit ranks above
+/// every number (so a poisoned row yields the NaN's index instead of
+/// panicking the executor thread mid-batch, as the old
+/// `partial_cmp().unwrap()` did).
 pub fn argmax_rows(logits: &[f32], width: usize) -> Vec<usize> {
     logits
         .chunks(width)
         .map(|row| {
             row.iter()
                 .enumerate()
-                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .max_by(|a, b| a.1.total_cmp(b.1))
                 .map(|(i, _)| i)
                 .unwrap_or(0)
         })
@@ -282,6 +289,25 @@ mod tests {
         let logits = vec![0.1, 0.9, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0, 2.0];
         assert_eq!(argmax_rows(&logits, 5), vec![1, 4]);
         assert_eq!(argmax_rows(&[], 5), Vec::<usize>::new());
+    }
+
+    #[test]
+    fn nan_inputs_do_not_panic() {
+        // Regression: percentile/argmax used partial_cmp().unwrap(),
+        // which aborted the executor/bench thread on the first NaN.
+        let with_nan = [2.0, f64::NAN, 1.0];
+        assert_eq!(percentile(&with_nan, 0.0), 1.0);
+        assert!((percentile(&with_nan, 0.5) - 2.0).abs() < 1e-12);
+        // NaN ranks above every number in IEEE total order.
+        assert!(percentile(&with_nan, 1.0).is_nan());
+        let rows = argmax_rows(&[0.5, f32::NAN, 0.1, 1.0, 0.0, -1.0], 3);
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[0], 1, "NaN logit wins its row (poisoned, but no panic)");
+        assert_eq!(rows[1], 0);
+        // All-NaN rows still yield an in-bounds index.
+        let all_nan = argmax_rows(&[f32::NAN, f32::NAN], 2);
+        assert_eq!(all_nan.len(), 1);
+        assert!(all_nan[0] < 2);
     }
 
     #[test]

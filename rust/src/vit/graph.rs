@@ -1,0 +1,223 @@
+//! Typed ViT encoder layer graph: the unit of work for the model-graph
+//! pipeline executor.
+//!
+//! The serving stack's unit of work used to be a single linear layer;
+//! the paper's headline result, however, is an *end-to-end* ViT forward
+//! pass with per-layer software-analog co-design (attention 4b wo/CB,
+//! MLP 6b w/CB). [`ModelGraph`] captures that pass as a typed chain of
+//! the macro-mapped operators — per-block `qkv`, `attn_proj`, `fc1`,
+//! `fc2` linears — each carrying its [`LinearShape`], its
+//! [`LayerClass`] and the [`OperatingPoint`] the precision plan
+//! resolves for that class. Softmax, GELU and layernorm run in the
+//! digital periphery between linears and are not macro work; the
+//! pipeline executor models them as a deterministic digital
+//! re-quantization (see `coordinator::pipeline`).
+//!
+//! The graph is consumed by three tiers that previously disagreed about
+//! layer decomposition:
+//! - `coordinator::Scheduler::plan_graph` — full-pass latency with
+//!   serial vs double-buffered weight reloads;
+//! - `coordinator::Router::route` — LPT placement of every
+//!   (row tile × column tile) unit;
+//! - `coordinator::pipeline::ModelExecutor` — simulated execution
+//!   through per-layer-class die pools.
+
+use crate::cim::netstats::LayerClass;
+use crate::vit::plan::{OperatingPoint, PrecisionPlan};
+use crate::vit::{LinearShape, VitConfig};
+
+/// Role of one linear layer inside an encoder block.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LayerRole {
+    /// Fused query/key/value projection (d → 3d), attention class.
+    Qkv,
+    /// Attention output projection (d → d), attention class.
+    AttnProj,
+    /// MLP expansion (d → d_ff), MLP class.
+    Fc1,
+    /// MLP contraction (d_ff → d), MLP class — the deep-reduction layer
+    /// that forces row tiling on the 1024-row macro whenever d_ff > 1024.
+    Fc2,
+}
+
+impl LayerRole {
+    pub fn label(self) -> &'static str {
+        match self {
+            LayerRole::Qkv => "qkv",
+            LayerRole::AttnProj => "attn_proj",
+            LayerRole::Fc1 => "fc1",
+            LayerRole::Fc2 => "fc2",
+        }
+    }
+
+    /// SAC class of the role (which operating point it draws from a plan).
+    pub fn class(self) -> LayerClass {
+        match self {
+            LayerRole::Qkv | LayerRole::AttnProj => LayerClass::TransformerAttention,
+            LayerRole::Fc1 | LayerRole::Fc2 => LayerClass::TransformerMlp,
+        }
+    }
+
+    /// The four roles of one encoder block, in execution order.
+    pub fn block_order() -> [LayerRole; 4] {
+        [LayerRole::Qkv, LayerRole::AttnProj, LayerRole::Fc1, LayerRole::Fc2]
+    }
+}
+
+/// One linear layer of the model graph: shape plus the operating point
+/// the SAC plan resolved for its class at graph-build time.
+#[derive(Clone, Debug)]
+pub struct GraphLayer {
+    /// Position in the execution order (0-based across the whole graph).
+    pub index: usize,
+    /// Encoder block this layer belongs to (0-based).
+    pub block: usize,
+    pub role: LayerRole,
+    /// Layer shape; `shape.m` is the true per-pass activation stream
+    /// (batch × tokens) — the quantity the `Scheduler` prices.
+    pub shape: LinearShape,
+    /// Operating point (bits + CB mode) resolved from the plan.
+    pub op: OperatingPoint,
+}
+
+impl GraphLayer {
+    /// Stable display name, e.g. `block3.fc2`.
+    pub fn name(&self) -> String {
+        format!("block{}.{}", self.block, self.role.label())
+    }
+}
+
+/// The typed layer graph of a ViT encoder under a precision plan: a
+/// linear chain of `4 × depth` macro-mapped linears.
+#[derive(Clone, Debug)]
+pub struct ModelGraph {
+    pub cfg: VitConfig,
+    /// Images per forward pass.
+    pub batch: usize,
+    /// Name of the precision plan the operating points came from.
+    pub plan_name: &'static str,
+    /// Layers in execution order.
+    pub layers: Vec<GraphLayer>,
+}
+
+impl ModelGraph {
+    /// Build the encoder graph: `depth` blocks × (qkv, attn-proj, fc1,
+    /// fc2), each layer carrying its class's operating point from `plan`.
+    pub fn encoder(cfg: &VitConfig, batch: usize, plan: &PrecisionPlan) -> Self {
+        let d = cfg.dim;
+        let batch = batch.max(1);
+        let m = batch * cfg.tokens();
+        let mut layers = Vec::with_capacity(4 * cfg.depth);
+        for block in 0..cfg.depth {
+            for role in LayerRole::block_order() {
+                let (k, n) = match role {
+                    LayerRole::Qkv => (d, 3 * d),
+                    LayerRole::AttnProj => (d, d),
+                    LayerRole::Fc1 => (d, cfg.mlp_dim()),
+                    LayerRole::Fc2 => (cfg.mlp_dim(), d),
+                };
+                let class = role.class();
+                layers.push(GraphLayer {
+                    index: layers.len(),
+                    block,
+                    role,
+                    shape: LinearShape { class, k, n, m },
+                    op: plan.point(class),
+                });
+            }
+        }
+        ModelGraph { cfg: *cfg, batch, plan_name: plan.name, layers }
+    }
+
+    pub fn layer_count(&self) -> usize {
+        self.layers.len()
+    }
+
+    /// Layers of one SAC class, in execution order.
+    pub fn class_layers(&self, class: LayerClass) -> impl Iterator<Item = &GraphLayer> {
+        self.layers.iter().filter(move |l| l.shape.class == class)
+    }
+
+    /// Input width of the first layer (what a featurized image must be).
+    pub fn input_dim(&self) -> usize {
+        self.layers.first().map(|l| l.shape.k).unwrap_or(0)
+    }
+
+    /// Output width of the last layer (the served logit vector width).
+    pub fn output_dim(&self) -> usize {
+        self.layers.last().map(|l| l.shape.n).unwrap_or(0)
+    }
+
+    /// Total weight parameters across the graph's linears.
+    pub fn weight_params(&self) -> u64 {
+        self.layers.iter().map(|l| (l.shape.k * l.shape.n) as u64).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::vit::linear_workload;
+
+    #[test]
+    fn encoder_mirrors_linear_workload_block_shapes() {
+        let cfg = VitConfig::default();
+        let batch = 3;
+        let graph = ModelGraph::encoder(&cfg, batch, &PrecisionPlan::paper_sac());
+        assert_eq!(graph.layer_count(), 4 * cfg.depth);
+        // The per-block entries of the flat workload catalog (skip patch
+        // embed, drop the head) must coincide with the graph layers.
+        let wl = linear_workload(&cfg, batch);
+        let body = &wl[1..wl.len() - 1];
+        assert_eq!(body.len(), graph.layer_count());
+        for (g, w) in graph.layers.iter().zip(body) {
+            assert_eq!((g.shape.k, g.shape.n, g.shape.m), (w.k, w.n, w.m), "{}", g.name());
+            assert_eq!(g.shape.class, w.class, "{}", g.name());
+        }
+    }
+
+    #[test]
+    fn vit_base_graph_has_48_layers_with_dff_3072() {
+        let graph = ModelGraph::encoder(&VitConfig::vit_base(), 1, &PrecisionPlan::paper_sac());
+        assert_eq!(graph.layer_count(), 48);
+        let fc2: Vec<_> = graph.layers.iter().filter(|l| l.role == LayerRole::Fc2).collect();
+        assert_eq!(fc2.len(), 12);
+        assert!(fc2.iter().all(|l| l.shape.k == 3072 && l.shape.n == 768));
+        assert_eq!(graph.input_dim(), 768);
+        assert_eq!(graph.output_dim(), 768);
+        // 12 × (768·2304 + 768·768 + 768·3072 + 3072·768) ≈ 85M weights.
+        assert_eq!(graph.weight_params(), 12 * (768 * 2304 + 768 * 768 + 2 * 768 * 3072));
+    }
+
+    #[test]
+    fn operating_points_follow_the_plan_per_class() {
+        let plan = PrecisionPlan::paper_sac();
+        let graph = ModelGraph::encoder(&VitConfig::default(), 1, &plan);
+        for l in &graph.layers {
+            let want = plan.point(l.shape.class);
+            assert_eq!(l.op, want, "{}", l.name());
+        }
+        let att = graph.class_layers(LayerClass::TransformerAttention).count();
+        let mlp = graph.class_layers(LayerClass::TransformerMlp).count();
+        assert_eq!(att, 2 * graph.cfg.depth);
+        assert_eq!(mlp, 2 * graph.cfg.depth);
+    }
+
+    #[test]
+    fn names_and_indices_are_stable() {
+        let graph = ModelGraph::encoder(&VitConfig::default(), 1, &PrecisionPlan::paper_sac());
+        assert_eq!(graph.layers[0].name(), "block0.qkv");
+        assert_eq!(graph.layers[7].name(), "block1.fc2");
+        for (i, l) in graph.layers.iter().enumerate() {
+            assert_eq!(l.index, i);
+        }
+    }
+
+    #[test]
+    fn batch_zero_is_clamped_to_one() {
+        let g0 = ModelGraph::encoder(&VitConfig::default(), 0, &PrecisionPlan::paper_sac());
+        let g1 = ModelGraph::encoder(&VitConfig::default(), 1, &PrecisionPlan::paper_sac());
+        assert_eq!(g0.batch, 1);
+        assert_eq!(g0.layers[0].shape.m, g1.layers[0].shape.m);
+    }
+}

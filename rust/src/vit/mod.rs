@@ -1,11 +1,15 @@
-//! ViT model catalog: shapes, per-layer precision plans, and the linear-
-//! layer workload the scheduler maps onto the macro.
+//! ViT model catalog: shapes, per-layer precision plans, the typed
+//! encoder layer graph, and the linear-layer workload the scheduler
+//! maps onto the macro.
 //!
 //! Mirrors `python/compile/model.py` (`VitConfig`, `count_linear_workload`)
 //! — the two sides are kept in sync by the manifest check in
 //! `runtime::artifact` and the bridge tests in `rust/tests/`.
 
+pub mod graph;
 pub mod plan;
+
+pub use graph::{GraphLayer, LayerRole, ModelGraph};
 
 use crate::cim::netstats::LayerClass;
 
@@ -31,6 +35,22 @@ impl VitConfig {
     /// ViT-small-like configuration (the paper's network: 12 blocks).
     pub fn vit_small() -> Self {
         VitConfig { image: 32, patch: 4, dim: 384, depth: 12, heads: 6, mlp_ratio: 4, num_classes: 10 }
+    }
+
+    /// ViT-Base: 12 blocks at dim 768, d_ff = 3072 — the canonical
+    /// transformer whose MLP `fc2` reduction (k = 3072) exceeds the
+    /// macro's 1024-row tile and therefore exercises the full
+    /// (row tile × column shard × die pool) pipeline path.
+    pub fn vit_base() -> Self {
+        VitConfig {
+            image: 224,
+            patch: 16,
+            dim: 768,
+            depth: 12,
+            heads: 12,
+            mlp_ratio: 4,
+            num_classes: 1000,
+        }
     }
 
     pub fn tokens(&self) -> usize {
@@ -130,6 +150,16 @@ mod tests {
             assert_eq!(a.n, b.n);
             assert_eq!(b.m, 4 * a.m);
         }
+    }
+
+    #[test]
+    fn vit_base_matches_canonical_shapes() {
+        let cfg = VitConfig::vit_base();
+        assert_eq!(cfg.tokens(), 197); // 14×14 patches + CLS
+        assert_eq!(cfg.mlp_dim(), 3072);
+        // ≈85M encoder linear params (plus embed/head).
+        let p = cfg.linear_params();
+        assert!(p > 80_000_000 && p < 95_000_000, "{p}");
     }
 
     #[test]

@@ -31,6 +31,17 @@ impl OperatingPoint {
         }
         Ok(())
     }
+
+    /// Two's-complement activation range `(lo, hi)` at `a_bits`.
+    /// Callers must have routed through [`validate`](Self::validate).
+    pub fn a_range(&self) -> (i32, i32) {
+        (-(1i32 << (self.a_bits - 1)), (1i32 << (self.a_bits - 1)) - 1)
+    }
+
+    /// Two's-complement weight range `(lo, hi)` at `w_bits`.
+    pub fn w_range(&self) -> (i32, i32) {
+        (-(1i32 << (self.w_bits - 1)), (1i32 << (self.w_bits - 1)) - 1)
+    }
 }
 
 /// A full precision/CB plan.
@@ -128,6 +139,16 @@ mod tests {
         ] {
             assert!(bad.validate().is_err(), "{bad:?}");
         }
+    }
+
+    #[test]
+    fn operand_ranges_are_twos_complement() {
+        let op = OperatingPoint { a_bits: 4, w_bits: 6, cb: CbMode::Off };
+        assert_eq!(op.a_range(), (-8, 7));
+        assert_eq!(op.w_range(), (-32, 31));
+        let one = OperatingPoint { a_bits: 1, w_bits: 1, cb: CbMode::Off };
+        assert_eq!(one.a_range(), (-1, 0));
+        assert_eq!(one.w_range(), (-1, 0));
     }
 
     #[test]

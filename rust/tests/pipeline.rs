@@ -1,0 +1,221 @@
+//! Integration tests for the model-graph pipeline executor: the
+//! determinism contract at graph scale (zero-noise equality with the
+//! exact reference walk for any thread × shard × die-pool
+//! decomposition, bit-identical noisy results across threads/shards),
+//! and the ViT-Base end-to-end serving path with per-layer ledger
+//! accounting.
+
+use std::time::Duration;
+
+use cr_cim::cim::params::{CbMode, MacroParams};
+use cr_cim::coordinator::pipeline::{ModelExecutor, PipelineConfig};
+use cr_cim::coordinator::server::{BatchExecutor, Server, ServerConfig};
+use cr_cim::coordinator::Scheduler;
+use cr_cim::util::json;
+use cr_cim::vit::graph::ModelGraph;
+use cr_cim::vit::plan::{OperatingPoint, PrecisionPlan};
+use cr_cim::vit::VitConfig;
+
+fn zero_noise(mut p: MacroParams) -> MacroParams {
+    p.sigma_cu_rel = 0.0;
+    p.nonlin_cubic_lsb = 0.0;
+    p.sigma_cmp_lsb = 0.0;
+    p.sigma_cmp_offset_lsb = 0.0;
+    p.temperature_k = 0.0;
+    p
+}
+
+fn tiny_params() -> MacroParams {
+    let mut p = MacroParams::default();
+    p.adc_bits = 6;
+    p.active_rows = 64;
+    p.rows = 64;
+    p.cols = 12;
+    zero_noise(p)
+}
+
+fn plan(a_bits: u32, w_bits: u32) -> PrecisionPlan {
+    let op = OperatingPoint { a_bits, w_bits, cb: CbMode::Off };
+    PrecisionPlan { name: "probe plan", attention: op, mlp: op }
+}
+
+/// d_ff = 96 > 64 active rows: fc2 row-tiles even on the tiny geometry.
+fn tiny_cfg() -> VitConfig {
+    VitConfig { image: 16, patch: 4, dim: 48, depth: 2, heads: 4, mlp_ratio: 2, num_classes: 4 }
+}
+
+fn images(n: usize, floats: usize) -> Vec<Vec<f32>> {
+    (0..n)
+        .map(|i| (0..floats).map(|j| ((i * 31 + j * 7) % 13) as f32 / 13.0 - 0.5).collect())
+        .collect()
+}
+
+#[test]
+fn zero_noise_full_pass_equals_reference_for_any_decomposition() {
+    let base = tiny_params();
+    let graph = ModelGraph::encoder(&tiny_cfg(), 2, &plan(2, 2));
+    let imgs = images(3, 32);
+    // The reference walk is decomposition-free by construction.
+    let reference = {
+        let exec =
+            ModelExecutor::new(&base, graph.clone(), PipelineConfig::default()).unwrap();
+        exec.reference_ints(&exec.featurize_images(&imgs))
+    };
+    // shards = 40 exceeds every tiny layer's minimum shard count, so the
+    // two shard settings instantiate genuinely different unit grids.
+    for threads in [1usize, 4] {
+        for shards in [1usize, 40] {
+            for (att, mlp) in [(1usize, 1usize), (2, 1), (1, 2), (2, 2)] {
+                let p = base.clone().with_threads(threads);
+                let cfg = PipelineConfig { shards, attention_dies: att, mlp_dies: mlp };
+                let mut exec = ModelExecutor::new(&p, graph.clone(), cfg).unwrap();
+                let xs = exec.featurize_images(&imgs);
+                let got = exec.forward_ints(&xs).unwrap();
+                assert_eq!(
+                    got, reference,
+                    "threads {threads} shards {shards} pools ({att},{mlp})"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn noisy_full_pass_is_bit_identical_across_threads_and_shards() {
+    // The strong half of the contract at graph scale: with real
+    // comparator noise, the thread count and the column-shard split are
+    // invisible to the noise model — layer after layer.
+    let mut p = tiny_params();
+    p.sigma_cmp_lsb = 1.1;
+    let graph = ModelGraph::encoder(&tiny_cfg(), 1, &plan(2, 2));
+    let imgs = images(2, 32);
+    let run = |threads: usize, shards: usize| {
+        let cfg = PipelineConfig { shards, attention_dies: 1, mlp_dies: 1 };
+        let mut exec =
+            ModelExecutor::new(&p.clone().with_threads(threads), graph.clone(), cfg).unwrap();
+        let xs = exec.featurize_images(&imgs);
+        exec.forward_ints(&xs).unwrap()
+    };
+    let one = run(1, 1);
+    // shards = 40 > every layer's minimum: a truly different shard grid.
+    for (threads, shards) in [(4usize, 1usize), (1, 40), (4, 40)] {
+        assert_eq!(run(threads, shards), one, "threads {threads} shards {shards}");
+    }
+    // Noise is actually present: the macro walk differs from exact.
+    let exec = ModelExecutor::new(&p, graph.clone(), PipelineConfig::default()).unwrap();
+    let xs = exec.featurize_images(&imgs);
+    assert_ne!(one, exec.reference_ints(&xs), "noisy walk should deviate from exact");
+}
+
+#[test]
+fn vit_base_zero_noise_equals_reference_across_decompositions() {
+    // The acceptance anchor at real scale: ViT-Base (12 blocks,
+    // d_ff = 3072) on the paper's 1024-row geometry, probed at 1b so a
+    // full pass stays test-sized. fc2 row-tiles 3×; qkv spans 30 column
+    // shards; pools re-route layers onto per-class silicon — all of it
+    // must collapse to the exact reference at zero noise.
+    let p = zero_noise(MacroParams::default());
+    let graph = ModelGraph::encoder(&VitConfig::vit_base(), 2, &plan(1, 1));
+    let imgs = images(2, 32);
+    let reference = {
+        let exec = ModelExecutor::new(&p, graph.clone(), PipelineConfig::default()).unwrap();
+        exec.reference_ints(&exec.featurize_images(&imgs))
+    };
+    assert_eq!(reference.len(), 2);
+    assert!(reference.iter().all(|y| y.len() == 768));
+    for cfg in [
+        PipelineConfig { shards: 1, attention_dies: 1, mlp_dies: 1 },
+        PipelineConfig { shards: 4, attention_dies: 2, mlp_dies: 2 },
+    ] {
+        let mut exec = ModelExecutor::new(&p, graph.clone(), cfg).unwrap();
+        let xs = exec.featurize_images(&imgs);
+        let got = exec.forward_ints(&xs).unwrap();
+        assert_eq!(got, reference, "{cfg:?}");
+    }
+}
+
+#[test]
+fn vit_base_forward_serves_through_server_with_layer_ledger() {
+    let p = zero_noise(MacroParams::default());
+    let graph = ModelGraph::encoder(&VitConfig::vit_base(), 2, &plan(1, 1));
+    // Router-sized pools over a 3-die budget: MLP mass dominates.
+    let cfg = PipelineConfig::sized_by_router(&p, &graph, 2, 3);
+    assert_eq!(cfg.attention_dies + cfg.mlp_dies, 3);
+    let mut exec = ModelExecutor::new(&p, graph, cfg).unwrap();
+    let srv = Server::new(&ServerConfig {
+        addr: "unused".into(),
+        batch_sizes: vec![1, 4],
+        max_wait: Duration::from_millis(1),
+    })
+    .unwrap();
+    let conn = srv.open_conn();
+    for (i, img) in images(2, 16).iter().enumerate() {
+        let body: Vec<String> = img.iter().map(|v| format!("{v}")).collect();
+        srv.handle_line(
+            &format!(r#"{{"id": {i}, "kind": "forward", "image": [{}]}}"#, body.join(", ")),
+            conn,
+        )
+        .unwrap();
+    }
+    std::thread::sleep(Duration::from_millis(3));
+    assert_eq!(srv.executor_step(&mut exec), 2);
+    let resps = srv.take_responses(conn);
+    assert_eq!(resps.len(), 2);
+    for r in &resps {
+        let j = json::parse(r).unwrap();
+        assert_eq!(j.get_path("layers").unwrap().as_f64().unwrap(), 48.0);
+        let logits = j.get_path("logits").unwrap().as_arr().unwrap();
+        assert_eq!(logits.len(), 768);
+        assert!(logits.iter().all(|v| v.as_f64().unwrap().is_finite()));
+        let pred = j.get_path("pred").unwrap().as_f64().unwrap();
+        assert!((0.0..768.0).contains(&pred));
+    }
+    // Per-layer breakdown: 48 rows, every layer executed once, both
+    // classes accounted, conversions and energy strictly positive.
+    let stats = srv.ledger_json();
+    assert_eq!(stats.get_path("requests").unwrap().as_f64().unwrap(), 2.0);
+    let layers = stats.get_path("layers").unwrap().as_arr().unwrap();
+    assert_eq!(layers.len(), 48);
+    for l in layers {
+        assert_eq!(l.get_path("calls").unwrap().as_f64().unwrap(), 1.0);
+        assert!(l.get_path("conversions").unwrap().as_f64().unwrap() > 0.0);
+        assert!(l.get_path("energy_uj").unwrap().as_f64().unwrap() > 0.0);
+        assert!(l.get_path("reload_us").unwrap().as_f64().unwrap() > 0.0);
+    }
+    let classes: Vec<&str> =
+        layers.iter().map(|l| l.get_path("class").unwrap().as_str().unwrap()).collect();
+    assert!(classes.contains(&"Transformer attention"));
+    assert!(classes.contains(&"Transformer MLP"));
+    assert_eq!(layers[0].get_path("layer").unwrap().as_str().unwrap(), "block0.qkv");
+}
+
+#[test]
+fn reload_overlap_beats_serial_accounting_for_vit_base_batch8() {
+    // Acceptance criterion, end to end: the Scheduler's pipelined
+    // (double-buffered) reload latency is strictly below the serial
+    // accounting for ViT-Base at batch 8 under the paper's SAC plan.
+    let graph = ModelGraph::encoder(&VitConfig::vit_base(), 8, &PrecisionPlan::paper_sac());
+    let sched = Scheduler::with_topology(&MacroParams::default(), 4, 2);
+    let pp = sched.plan_graph(&graph);
+    assert!(
+        pp.pipelined_ns < pp.serial_ns,
+        "pipelined {} must beat serial {}",
+        pp.pipelined_ns,
+        pp.serial_ns
+    );
+    assert!(pp.overlap_saving() > 0.0);
+    // The executor's installed cost is per-inference, priced with the
+    // same reload-overlapped model; its full-batch pipeline keeps the
+    // strict serial > pipelined ordering.
+    let exec = ModelExecutor::new(
+        &zero_noise(MacroParams::default()),
+        graph,
+        PipelineConfig { shards: 4, attention_dies: 2, mlp_dies: 2 },
+    )
+    .unwrap();
+    let pp2 = exec.pipeline();
+    assert!(pp2.pipelined_ns < pp2.serial_ns);
+    // Per-inference latency ≤ the 8-image pass latency, and nonzero.
+    assert!(exec.cost().total.latency_ns > 0.0);
+    assert!(exec.cost().total.latency_ns < pp2.pipelined_ns);
+}
