@@ -5,6 +5,7 @@
 //!
 //! Run: `make artifacts && cargo run --release --example serve [-- --rate 200]`
 
+use std::collections::VecDeque;
 use std::path::PathBuf;
 use std::time::Instant;
 
@@ -72,7 +73,7 @@ fn main() -> Result<()> {
     // Open-loop replay: requests arrive on the trace clock; the executor
     // drains with the batching policy.
     let w = eval.image_floats();
-    let mut pending: Vec<Request<usize>> = Vec::new();
+    let mut pending: VecDeque<Request<usize>> = VecDeque::new();
     let mut ledger = Ledger::new();
     let mut latencies_us: Vec<f64> = Vec::new();
     let start = Instant::now();
@@ -82,7 +83,7 @@ fn main() -> Result<()> {
         let now_us = start.elapsed().as_secs_f64() * 1e6;
         // Admit due arrivals.
         while next_event < events.len() && events[next_event].t_us <= now_us {
-            pending.push(Request {
+            pending.push_back(Request {
                 id: next_event as u64,
                 payload: events[next_event].image_index,
                 arrived: Instant::now(),

@@ -132,6 +132,17 @@ fn main() {
         black_box(topo.plan_graph(black_box(&graph8)));
     });
     let pp = topo.plan_graph(&graph8);
+    // Cold vs warm full-pass latency: the default deployment (one array
+    // of weight SRAM per macro) cannot hold ViT-Base resident, so its
+    // warm pass equals the cold pass; a banked-SRAM deployment keeps the
+    // whole model resident and its warm pass is conversion-bound.
+    let resident_sram_bits: u64 = 1 << 26;
+    let banked = Scheduler::with_topology(
+        &params.clone().with_sram_bits(resident_sram_bits),
+        topo.shards,
+        topo.dies,
+    );
+    let wp = banked.plan_graph(&graph8);
     let mut pipe = Json::obj();
     pipe.set("model", Json::str("vit-base"));
     pipe.set("batch", Json::num(8.0));
@@ -141,6 +152,17 @@ fn main() {
     pipe.set("serial_reload_latency_us", Json::num(pp.serial_ns * 1e-3));
     pipe.set("pipelined_reload_latency_us", Json::num(pp.pipelined_ns * 1e-3));
     pipe.set("overlap_saving_frac", Json::num(pp.overlap_saving()));
+    pipe.set("cold_pass_latency_us", Json::num(pp.pipelined_ns * 1e-3));
+    pipe.set("warm_pass_latency_us", Json::num(wp.warm_pipelined_ns * 1e-3));
+    pipe.set("warm_resident_layers", Json::num(wp.resident_layers() as f64));
+    pipe.set("warm_saving_frac", Json::num(wp.residency_saving()));
+    pipe.set("resident_sram_bits_per_macro", Json::num(resident_sram_bits as f64));
+    println!(
+        "vit-base b8 full pass: cold {:.1} µs, warm/resident {:.1} µs ({:.2}% saved)",
+        pp.pipelined_ns * 1e-3,
+        wp.warm_pipelined_ns * 1e-3,
+        wp.residency_saving() * 100.0
+    );
     let pipe = Json::Obj(pipe);
     suite.note("pipeline_reload_overlap", pipe.clone());
     let report_dir = std::path::Path::new("target/bench-reports");

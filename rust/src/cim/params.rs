@@ -115,6 +115,22 @@ pub struct MacroParams {
     /// behind the previous layer's bit-serial conversions
     /// (double-buffered reload, see `Scheduler::plan_graph`).
     pub t_wload_ns: f64,
+    /// Weight-SRAM budget per macro array [bits]: how many weight bits
+    /// one macro can keep *resident* between forward passes. The default
+    /// is one **paper-geometry** array (1088 × 78 = 84 864 bits — a
+    /// macro holds exactly the tile programmed into it); a banked-SRAM
+    /// deployment raises it ([`with_sram_bits`](Self::with_sram_bits)),
+    /// `0` disables residency entirely (every pass reloads every
+    /// layer). This is a fixed deployment knob, **not** derived from
+    /// `rows`/`cols` — a shrunken test geometry keeps the paper-scale
+    /// budget (generously resident) unless it sets its own. The budget
+    /// bounds the resident-weight cache: the pipeline executor keeps a
+    /// layer's programmed dies alive across passes only while the
+    /// pool's resident footprint fits `pool macros × sram_bits_per_macro`
+    /// (see `coordinator::Scheduler::pool_capacity_bits`), and the same
+    /// number seeds `coordinator::Router::sram_bits_per_macro` for the
+    /// placement-level residency check.
+    pub sram_bits_per_macro: u64,
 
     // ---- environment ----
     /// Junction temperature [K].
@@ -177,6 +193,9 @@ impl Default for MacroParams {
             t_accum_ns: 2.0,
             // Row-parallel SRAM write of one weight tile: ~1 ns/row.
             t_wload_ns: 1000.0,
+            // One paper-geometry array of weight storage per macro (a
+            // deployment knob — it does not track rows/cols mutations).
+            sram_bits_per_macro: 1088 * 78,
             temperature_k: 300.0,
             seed: 0x5EED_C100,
             threads: 0,
@@ -319,6 +338,14 @@ impl MacroParams {
         self
     }
 
+    /// Set the per-macro weight-SRAM residency budget [bits]
+    /// (see [`sram_bits_per_macro`](Self::sram_bits_per_macro); 0
+    /// disables weight residency).
+    pub fn with_sram_bits(mut self, bits: u64) -> Self {
+        self.sram_bits_per_macro = bits;
+        self
+    }
+
     /// Set the noise-keying base for logical column 0 (see `col_base`).
     pub fn with_col_base(mut self, col_base: usize) -> Self {
         self.col_base = col_base;
@@ -446,6 +473,26 @@ mod tests {
             p.clone().for_pool(1).for_die(1).seed,
             p.clone().for_pool(2).for_die(1).seed
         );
+    }
+
+    #[test]
+    fn sram_budget_defaults_to_one_paper_array_and_is_settable() {
+        let p = MacroParams::default();
+        // One paper-geometry array — for the default geometry this is
+        // exactly rows × cols.
+        assert_eq!(p.sram_bits_per_macro, 1088 * 78);
+        assert_eq!(p.sram_bits_per_macro, (p.rows * p.cols) as u64);
+        // It is a deployment knob, not derived: shrinking the array
+        // geometry does not shrink the budget.
+        let mut tiny = p.clone();
+        tiny.rows = 64;
+        tiny.cols = 12;
+        assert_eq!(tiny.sram_bits_per_macro, 1088 * 78);
+        let big = p.clone().with_sram_bits(1 << 26);
+        assert_eq!(big.sram_bits_per_macro, 1 << 26);
+        // The budget is an accounting knob, not a circuit property.
+        assert!(big.validate().is_ok());
+        assert!(p.with_sram_bits(0).validate().is_ok());
     }
 
     #[test]

@@ -6,6 +6,7 @@
 //! oldest request has waited `max_wait`, mirroring a vLLM-style
 //! time/size-bounded batching window.
 
+use std::collections::VecDeque;
 use std::time::{Duration, Instant};
 
 /// One queued request.
@@ -84,8 +85,16 @@ impl Batcher {
     }
 
     /// Form a batch from `pending` (drains up to the decision count).
-    pub fn form_batch<T>(&self, pending: &mut Vec<Request<T>>, now: Instant) -> Option<Batch<T>> {
-        let oldest_wait = pending.first().map(|r| now.duration_since(r.arrived));
+    /// The queue is a `VecDeque`: popping `take` requests off the front
+    /// is O(take), where draining the front of a `Vec` memmoved the
+    /// whole remaining queue on every batch — an O(queue) tax per batch
+    /// on the serve hot path. Batch-formation order is unchanged (FIFO).
+    pub fn form_batch<T>(
+        &self,
+        pending: &mut VecDeque<Request<T>>,
+        now: Instant,
+    ) -> Option<Batch<T>> {
+        let oldest_wait = pending.front().map(|r| now.duration_since(r.arrived));
         let take = self.decide(pending.len(), oldest_wait);
         if take == 0 {
             return None;
@@ -100,7 +109,7 @@ impl Batcher {
 mod tests {
     use super::*;
 
-    fn reqs(n: usize, age: Duration) -> Vec<Request<u32>> {
+    fn reqs(n: usize, age: Duration) -> VecDeque<Request<u32>> {
         let now = Instant::now();
         (0..n)
             .map(|i| Request { id: i as u64, payload: i as u32, arrived: now - age })

@@ -27,8 +27,64 @@ pub struct LayerCost {
     /// Modeled per-pass conversion latency [ns].
     pub compute_ns: f64,
     /// Modeled per-pass weight-reload latency [ns] (hidden behind the
-    /// previous layer's conversions in the pipelined accounting).
+    /// previous layer's conversions in the pipelined accounting; paid
+    /// only on reload misses).
     pub reload_ns: f64,
+    /// Passes that found this layer resident on its pool (reload
+    /// skipped by the resident-weight cache).
+    pub reload_hits: u64,
+    /// Passes that (re)programmed this layer onto its pool.
+    pub reload_misses: u64,
+}
+
+/// Resident-weight cache counters reported by a graph executor (see
+/// `coordinator::pipeline::ModelExecutor::residency_stats`): measured
+/// reload hits/misses across all forward passes, the modeled reload
+/// latency actually paid, the cache's current residency against its
+/// capacity, and the modeled cold/warm full-pass latencies.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ResidencyStats {
+    /// Layer executions that skipped the reload (weights resident).
+    pub reload_hits: u64,
+    /// Layer executions that paid the reload (cold or evicted).
+    pub reload_misses: u64,
+    /// LRU evictions performed by the cache so far.
+    pub evictions: u64,
+    /// Weight bits currently resident across all pools.
+    pub resident_bits: u64,
+    /// Total residency capacity across all pools [bits].
+    pub capacity_bits: u64,
+    /// Modeled reload latency actually paid so far [ns].
+    pub paid_reload_ns: f64,
+    /// Forward passes executed.
+    pub passes: u64,
+    /// Modeled cold-pass (every layer reloads) pipelined latency [ns].
+    pub cold_pass_ns: f64,
+    /// Modeled warm-pass (steady-state residency) pipelined latency [ns].
+    pub warm_pass_ns: f64,
+}
+
+impl ResidencyStats {
+    /// Reload latency amortized over the passes that actually ran [ns]:
+    /// `paid / passes` — the honest per-inference reload charge, cold
+    /// first pass included.
+    pub fn amortized_reload_ns(&self) -> f64 {
+        if self.passes == 0 {
+            0.0
+        } else {
+            self.paid_reload_ns / self.passes as f64
+        }
+    }
+
+    /// Fraction of layer executions that found weights resident.
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.reload_hits + self.reload_misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.reload_hits as f64 / total as f64
+        }
+    }
 }
 
 /// Running serving statistics.
@@ -46,6 +102,10 @@ pub struct Ledger {
     /// Latest per-layer breakdown from a graph executor (cumulative on
     /// the executor side; refreshed wholesale after each batch).
     layers: Vec<LayerCost>,
+    /// Latest resident-weight cache snapshot from a graph executor
+    /// (refreshed wholesale after each batch; `None` = the serving
+    /// executor keeps no weights resident).
+    residency: Option<ResidencyStats>,
 }
 
 impl Ledger {
@@ -117,6 +177,17 @@ impl Ledger {
         &self.layers
     }
 
+    /// Replace the residency snapshot with the executor's latest (the
+    /// executor owns the cache; the ledger only reports it).
+    pub fn set_residency(&mut self, residency: ResidencyStats) {
+        self.residency = Some(residency);
+    }
+
+    /// Latest resident-weight cache snapshot, if a caching executor ran.
+    pub fn residency(&self) -> Option<&ResidencyStats> {
+        self.residency.as_ref()
+    }
+
     pub fn to_json(&self) -> Json {
         let mut o = Json::obj();
         o.set("requests", Json::num(self.requests as f64));
@@ -128,6 +199,17 @@ impl Ledger {
         o.set("effective_tops_per_watt", Json::num(self.effective_tops_per_watt()));
         o.set("mean_host_latency_us", Json::num(self.mean_host_latency_us()));
         o.set("mean_occupancy", Json::num(self.mean_occupancy()));
+        if let Some(r) = &self.residency {
+            o.set("reload_hits", Json::num(r.reload_hits as f64));
+            o.set("reload_misses", Json::num(r.reload_misses as f64));
+            o.set("reload_hit_rate", Json::num(r.hit_rate()));
+            o.set("cache_evictions", Json::num(r.evictions as f64));
+            o.set("resident_bits", Json::num(r.resident_bits as f64));
+            o.set("cache_capacity_bits", Json::num(r.capacity_bits as f64));
+            o.set("amortized_reload_us", Json::num(r.amortized_reload_ns() * 1e-3));
+            o.set("cold_pass_us", Json::num(r.cold_pass_ns * 1e-3));
+            o.set("warm_pass_us", Json::num(r.warm_pass_ns * 1e-3));
+        }
         if !self.layers.is_empty() {
             let rows = self
                 .layers
@@ -141,6 +223,8 @@ impl Ledger {
                     r.set("energy_uj", Json::num(l.energy_pj * 1e-6));
                     r.set("compute_us", Json::num(l.compute_ns * 1e-3));
                     r.set("reload_us", Json::num(l.reload_ns * 1e-3));
+                    r.set("reload_hits", Json::num(l.reload_hits as f64));
+                    r.set("reload_misses", Json::num(l.reload_misses as f64));
                     Json::Obj(r)
                 })
                 .collect();
@@ -219,6 +303,8 @@ mod tests {
                 energy_pj: 5e6,
                 compute_ns: 1e5,
                 reload_ns: 4e4,
+                reload_hits: 1,
+                reload_misses: 1,
             },
             LayerCost {
                 name: "block0.fc2".into(),
@@ -228,6 +314,8 @@ mod tests {
                 energy_pj: 2e7,
                 compute_ns: 3e5,
                 reload_ns: 1.8e5,
+                reload_hits: 0,
+                reload_misses: 2,
             },
         ]);
         let j = l.to_json();
@@ -236,9 +324,50 @@ mod tests {
         assert_eq!(rows[0].get_path("layer").unwrap().as_str().unwrap(), "block0.qkv");
         assert_eq!(rows[1].get_path("conversions").unwrap().as_f64().unwrap(), 3000.0);
         assert!((rows[1].get_path("energy_uj").unwrap().as_f64().unwrap() - 20.0).abs() < 1e-9);
+        assert_eq!(rows[0].get_path("reload_hits").unwrap().as_f64().unwrap(), 1.0);
+        assert_eq!(rows[1].get_path("reload_misses").unwrap().as_f64().unwrap(), 2.0);
         assert_eq!(l.layer_breakdown().len(), 2);
         // Refresh replaces wholesale.
         l.set_layer_breakdown(Vec::new());
         assert!(l.to_json().get_path("layers").is_none());
+    }
+
+    #[test]
+    fn residency_snapshot_is_reported_in_json() {
+        let mut l = Ledger::new();
+        // No caching executor ran: no residency keys at all.
+        assert!(l.to_json().get_path("reload_hits").is_none());
+        let r = ResidencyStats {
+            reload_hits: 40,
+            reload_misses: 8,
+            evictions: 2,
+            resident_bits: 1_000,
+            capacity_bits: 4_000,
+            paid_reload_ns: 80_000.0,
+            passes: 6,
+            cold_pass_ns: 50_000.0,
+            warm_pass_ns: 30_000.0,
+        };
+        assert!((r.amortized_reload_ns() - 80_000.0 / 6.0).abs() < 1e-9);
+        assert!((r.hit_rate() - 40.0 / 48.0).abs() < 1e-12);
+        l.set_residency(r);
+        let j = l.to_json();
+        assert_eq!(j.get_path("reload_hits").unwrap().as_f64().unwrap(), 40.0);
+        assert_eq!(j.get_path("reload_misses").unwrap().as_f64().unwrap(), 8.0);
+        assert!((j.get_path("reload_hit_rate").unwrap().as_f64().unwrap() - 40.0 / 48.0).abs()
+            < 1e-12);
+        assert_eq!(j.get_path("cache_evictions").unwrap().as_f64().unwrap(), 2.0);
+        assert_eq!(j.get_path("resident_bits").unwrap().as_f64().unwrap(), 1000.0);
+        assert_eq!(j.get_path("cache_capacity_bits").unwrap().as_f64().unwrap(), 4000.0);
+        assert!(
+            (j.get_path("amortized_reload_us").unwrap().as_f64().unwrap() - 80.0 / 6.0).abs()
+                < 1e-9
+        );
+        assert!((j.get_path("cold_pass_us").unwrap().as_f64().unwrap() - 50.0).abs() < 1e-12);
+        assert!((j.get_path("warm_pass_us").unwrap().as_f64().unwrap() - 30.0).abs() < 1e-12);
+        // Degenerate snapshot divides by nothing.
+        let zero = ResidencyStats::default();
+        assert_eq!(zero.amortized_reload_ns(), 0.0);
+        assert_eq!(zero.hit_rate(), 0.0);
     }
 }

@@ -98,6 +98,15 @@ impl DieBank {
         self.dies[0].row_tile_count()
     }
 
+    /// Weight bits this bank keeps programmed **per die**
+    /// (`k · n · w_bits` — each die holds a full copy of the layer, so
+    /// per-die accounting is what a residency budget compares against;
+    /// matches `Scheduler::layer_weight_bits` and the router's
+    /// `resident_bits` unit sum exactly).
+    pub fn weight_footprint_bits(&self) -> u64 {
+        (self.k as u64) * (self.n as u64) * self.op.w_bits as u64
+    }
+
     /// Cumulative conversions across all dies and calls.
     pub fn total_conversions(&self) -> u64 {
         self.dies.iter().map(|d| d.total_conversions).sum()
@@ -242,6 +251,18 @@ mod tests {
         }
         // Empty batches are a no-op.
         assert_eq!(bank.matvec_batch(&[]).unwrap(), Vec::<Vec<i64>>::new());
+    }
+
+    #[test]
+    fn weight_footprint_is_per_die_layer_bits() {
+        let p = quiet_params();
+        let (w, _) = tile(64, 5, 0, 11);
+        // Footprint is k·n·w_bits regardless of how many dies replicate
+        // the layer (per-die accounting).
+        for dies in [1usize, 3] {
+            let bank = DieBank::new(&p, &w, op_2b(), 1, dies).unwrap();
+            assert_eq!(bank.weight_footprint_bits(), 64 * 5 * 2, "dies={dies}");
+        }
     }
 
     #[test]

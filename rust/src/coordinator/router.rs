@@ -83,17 +83,18 @@ impl RoutePlan {
 pub struct Router {
     pub sched: Scheduler,
     pub num_macros: usize,
-    /// Weight SRAM capacity per macro [bits].
+    /// Weight SRAM capacity per macro [bits], seeded from
+    /// [`MacroParams::sram_bits_per_macro`] — the same budget the
+    /// pipeline executor's resident-weight cache accounts against.
     pub sram_bits_per_macro: u64,
 }
 
 impl Router {
     pub fn new(params: &MacroParams, num_macros: usize) -> Self {
-        let sram_bits = (params.rows * params.cols) as u64;
         Router {
             sched: Scheduler::new(params),
             num_macros: num_macros.max(1),
-            sram_bits_per_macro: sram_bits,
+            sram_bits_per_macro: params.sram_bits_per_macro,
         }
     }
 
@@ -322,6 +323,22 @@ mod tests {
             plan_wide.max_resident_bits()
         );
         assert!(wide.fits_resident(&plan_wide));
+    }
+
+    #[test]
+    fn sram_budget_comes_from_params() {
+        let p = MacroParams::default();
+        assert_eq!(router(2).sram_bits_per_macro, p.sram_bits_per_macro);
+        let banked = Router::new(&p.clone().with_sram_bits(1 << 22), 2);
+        assert_eq!(banked.sram_bits_per_macro, 1 << 22);
+        // A bigger per-macro budget flips fits_resident for the same
+        // routing (capacity is accounting, placement is unchanged).
+        let g = graph(&VitConfig::vit_small(), 1);
+        let tight = Router::new(&p.clone().with_sram_bits(1), 2);
+        let plan = tight.route(&g);
+        assert!(!tight.fits_resident(&plan));
+        let roomy = Router::new(&p.with_sram_bits(u64::MAX), 2);
+        assert!(roomy.fits_resident(&roomy.route(&g)));
     }
 
     #[test]

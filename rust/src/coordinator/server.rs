@@ -20,7 +20,7 @@
 //! Ledger, and writes responses back through per-connection response
 //! channels.
 
-use std::collections::{HashMap, HashSet};
+use std::collections::{HashMap, HashSet, VecDeque};
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
@@ -28,7 +28,7 @@ use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use crate::coordinator::batcher::{Batcher, Request};
-use crate::coordinator::ledger::{LayerCost, Ledger};
+use crate::coordinator::ledger::{LayerCost, Ledger, ResidencyStats};
 use crate::coordinator::sac::PlanCost;
 use crate::util::json::{self, Json};
 
@@ -46,7 +46,11 @@ pub enum RequestKind {
 pub struct InferencePayload {
     pub image: Vec<f32>,
     pub conn_id: u64,
-    pub client_req_id: f64,
+    /// The client's `"id"`, echoed back verbatim. `None` = the request
+    /// carried no id, echoed as JSON `null` so clients can tell an
+    /// absent id from a literal `0` (a non-numeric id is rejected
+    /// outright at parse time).
+    pub client_req_id: Option<f64>,
     pub kind: RequestKind,
 }
 
@@ -75,6 +79,12 @@ pub trait BatchExecutor {
     fn layer_breakdown(&self) -> Vec<LayerCost> {
         Vec::new()
     }
+    /// Resident-weight cache counters (`None` = this executor keeps no
+    /// weights resident between passes). The server refreshes the
+    /// ledger's snapshot from this after every executed batch.
+    fn residency(&self) -> Option<ResidencyStats> {
+        None
+    }
     /// Modeled per-inference macro cost for accounting.
     fn cost(&self) -> &PlanCost;
     fn num_classes(&self) -> usize;
@@ -89,7 +99,10 @@ pub struct ServerConfig {
 
 /// Shared server state.
 pub struct Server {
-    pending: Arc<Mutex<Vec<Request<InferencePayload>>>>,
+    /// FIFO request queue. A `VecDeque` so forming a batch pops from the
+    /// front in O(batch) — draining the front of a `Vec` memmoved the
+    /// entire remaining queue on every batch of the serve hot path.
+    pending: Arc<Mutex<VecDeque<Request<InferencePayload>>>>,
     outbox: Outbox,
     ledger: Arc<Mutex<Ledger>>,
     shutdown: Arc<AtomicBool>,
@@ -110,7 +123,7 @@ impl Server {
     /// zero batch sizes) instead of panicking the serving thread later.
     pub fn new(cfg: &ServerConfig) -> Result<Self, String> {
         Ok(Server {
-            pending: Arc::new(Mutex::new(Vec::new())),
+            pending: Arc::new(Mutex::new(VecDeque::new())),
             outbox: Arc::new(Mutex::new(HashMap::new())),
             ledger: Arc::new(Mutex::new(Ledger::new())),
             shutdown: Arc::new(AtomicBool::new(false)),
@@ -156,7 +169,7 @@ impl Server {
     /// connection (see [`open_conn`](Self::open_conn)).
     pub fn enqueue(&self, payload: InferencePayload) {
         let id = self.next_req.fetch_add(1, Ordering::Relaxed);
-        self.pending.lock().unwrap().push(Request {
+        self.pending.lock().unwrap().push_back(Request {
             id,
             payload,
             arrived: Instant::now(),
@@ -211,7 +224,7 @@ impl Server {
                             crate::util::stats::argmax_rows(lg, lg.len())[0]
                         };
                         let mut o = Json::obj();
-                        o.set("id", Json::num(req.payload.client_req_id));
+                        o.set("id", Self::id_json(req.payload.client_req_id));
                         o.set("pred", Json::num(pred as f64));
                         o.set(
                             "logits",
@@ -231,7 +244,7 @@ impl Server {
                 Err(e) => {
                     self.stage_responses(reqs.iter().map(|req| {
                         let mut o = Json::obj();
-                        o.set("id", Json::num(req.payload.client_req_id));
+                        o.set("id", Self::id_json(req.payload.client_req_id));
                         o.set("error", Json::str(&e));
                         (req.payload.conn_id, Json::Obj(o).to_string())
                     }));
@@ -239,12 +252,28 @@ impl Server {
             }
         }
         // Graph executors keep cumulative per-layer counters; refresh the
-        // ledger's breakdown snapshot after the batch.
+        // ledger's breakdown + residency snapshots after the batch.
         let layers = exec.layer_breakdown();
-        if !layers.is_empty() {
-            self.ledger.lock().unwrap().set_layer_breakdown(layers);
+        let residency = exec.residency();
+        if !layers.is_empty() || residency.is_some() {
+            let mut ledger = self.ledger.lock().unwrap();
+            if !layers.is_empty() {
+                ledger.set_layer_breakdown(layers);
+            }
+            if let Some(r) = residency {
+                ledger.set_residency(r);
+            }
         }
         served
+    }
+
+    /// The echoed `"id"`: the client's number, or JSON `null` when the
+    /// request carried none.
+    fn id_json(id: Option<f64>) -> Json {
+        match id {
+            Some(x) => Json::num(x),
+            None => Json::Null,
+        }
     }
 
     /// Stage response lines, dropping any whose connection is no longer
@@ -297,14 +326,30 @@ impl Server {
                 other => Err(format!("unknown cmd '{other}'")),
             };
         }
-        let image: Vec<f32> = j
+        // Strict payload policy (matching the `'kind' must be a string`
+        // rule): malformed requests are rejected, never silently coerced.
+        // The old path mapped non-numeric / null entries to 0.0 pixels —
+        // a corrupt image would classify as *something* instead of
+        // erroring.
+        let arr = j
             .get_path("image")
-            .and_then(|x| x.as_arr())
             .ok_or("missing 'image'")?
-            .iter()
-            .map(|v| v.as_f64().unwrap_or(0.0) as f32)
-            .collect();
-        let client_req_id = j.get_path("id").and_then(|x| x.as_f64()).unwrap_or(0.0);
+            .as_arr()
+            .ok_or("'image' must be an array of numbers")?;
+        if arr.is_empty() {
+            return Err("'image' must not be empty".to_string());
+        }
+        let mut image = Vec::with_capacity(arr.len());
+        for v in arr {
+            image.push(v.as_f64().ok_or("'image' entries must be numbers")? as f32);
+        }
+        // A missing id is allowed (echoed as null); a present id must be
+        // numeric — defaulting it let distinct malformed clients collide
+        // on the same echoed id.
+        let client_req_id = match j.get_path("id") {
+            None => None,
+            Some(v) => Some(v.as_f64().ok_or("'id' must be a number")?),
+        };
         let kind = match j.get_path("kind") {
             None => RequestKind::Classify,
             Some(k) => match k.as_str() {
@@ -520,6 +565,50 @@ mod tests {
         assert!(srv.handle_line(r#"{"id": 1, "kind": "nope", "image": [1.0]}"#, 1).is_err());
         // A non-string kind is rejected, not silently classified.
         assert!(srv.handle_line(r#"{"id": 1, "kind": 7, "image": [1.0]}"#, 1).is_err());
+    }
+
+    #[test]
+    fn malformed_payloads_error_and_never_enqueue() {
+        // Strict-parse table: every malformed shape yields a parse error
+        // and leaves the queue untouched — no request is half-accepted.
+        let srv = test_server();
+        let cases = [
+            // The old path coerced these entries to 0.0 pixels silently.
+            (r#"{"id": 1, "image": [1.0, "x"]}"#, "non-numeric image entry"),
+            (r#"{"id": 1, "image": [1.0, null]}"#, "null image entry"),
+            (r#"{"id": 1, "image": [[1.0]]}"#, "nested-array image entry"),
+            (r#"{"id": 1, "image": null}"#, "null image"),
+            (r#"{"id": 1, "image": 3.0}"#, "non-array image"),
+            (r#"{"id": 1, "image": []}"#, "empty image"),
+            (r#"{"image": [1.0], "id": "abc"}"#, "non-numeric id"),
+            (r#"{"image": [1.0], "id": null}"#, "null id"),
+            (r#"{"image": [1.0], "id": [3]}"#, "array id"),
+            (r#"{"id": 1, "kind": 7, "image": [1.0]}"#, "wrong-type kind"),
+        ];
+        for (line, why) in cases {
+            assert!(srv.handle_line(line, 1).is_err(), "{why} must error: {line}");
+            assert!(srv.pending.lock().unwrap().is_empty(), "{why} must never enqueue");
+        }
+        // A well-formed request still enqueues.
+        srv.handle_line(r#"{"id": 1, "image": [1.0]}"#, 1).unwrap();
+        assert_eq!(srv.pending.lock().unwrap().len(), 1);
+    }
+
+    #[test]
+    fn absent_id_is_echoed_as_null() {
+        // Distinct clients that omit "id" must not collide on a default
+        // echoed 0 — an absent id round-trips as JSON null.
+        let srv = test_server();
+        let mut exec = FakeExec::new();
+        let conn = srv.open_conn();
+        srv.handle_line(r#"{"image": [1.0, 2.0]}"#, conn).unwrap();
+        std::thread::sleep(Duration::from_millis(3));
+        assert_eq!(srv.executor_step(&mut exec), 1);
+        let resps = srv.take_responses(conn);
+        assert_eq!(resps.len(), 1);
+        let j = json::parse(&resps[0]).unwrap();
+        assert_eq!(j.get_path("id"), Some(&Json::Null));
+        assert!(j.get_path("pred").is_some());
     }
 
     #[test]

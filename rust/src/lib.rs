@@ -36,11 +36,14 @@
 //! the pipeline executor (`coordinator::ModelExecutor`) walks the ViT
 //! encoder's per-block qkv / attn-proj / fc1 / fc2 linears, drawing
 //! macros from **per-layer-class die pools** (attention and MLP classes
-//! own disjoint silicon) and pricing each layer's weight reload
-//! double-buffered behind the previous layer's conversions
+//! own disjoint silicon), keeping programmed pool dies **resident**
+//! across passes in an LRU weight cache bounded by
+//! `MacroParams::sram_bits_per_macro`, and pricing each layer's weight
+//! reload double-buffered behind the previous layer's conversions —
+//! cold (every layer reloads) and warm (resident layers skip it)
 //! (`coordinator::Scheduler::plan_graph`). The server's `forward`
 //! request kind runs a whole encoder pass with a per-layer ledger
-//! breakdown.
+//! breakdown plus reload hit/miss and amortized-reload accounting.
 //!
 //! The determinism contract is the substream hierarchy
 //! `seed → class pool → die → row tile → global column → conversion

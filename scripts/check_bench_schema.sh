@@ -1,0 +1,44 @@
+#!/usr/bin/env bash
+# Schema-drift guard for the hotpath bench report: the serving dashboards
+# and the cold/warm residency acceptance numbers key off
+# target/bench-reports/BENCH_pipeline.json, so CI fails loudly if a
+# refactor drops or renames a field. Run after `cargo bench --bench
+# hotpath` (CRCIM_BENCH_FAST=1 keeps it smoke-sized).
+set -euo pipefail
+
+report="${1:-target/bench-reports/BENCH_pipeline.json}"
+
+if [[ ! -f "$report" ]]; then
+  echo "FAIL: $report not found (did the hotpath bench run?)" >&2
+  exit 1
+fi
+
+required_keys=(
+  model
+  batch
+  layers
+  shards
+  dies
+  serial_reload_latency_us
+  pipelined_reload_latency_us
+  overlap_saving_frac
+  cold_pass_latency_us
+  warm_pass_latency_us
+  warm_resident_layers
+  warm_saving_frac
+  resident_sram_bits_per_macro
+)
+
+fail=0
+for key in "${required_keys[@]}"; do
+  if ! grep -q "\"$key\"" "$report"; then
+    echo "FAIL: $report is missing key \"$key\"" >&2
+    fail=1
+  fi
+done
+
+if [[ $fail -ne 0 ]]; then
+  exit 1
+fi
+
+echo "OK: $report carries all ${#required_keys[@]} required keys (incl. cold/warm pass latency)"
