@@ -13,13 +13,17 @@
 //! 7. Serve a whole ViT encoder forward pass through the model-graph
 //!    pipeline executor: per-layer-class die pools, double-buffered
 //!    weight reloads, per-layer accounting.
+//! 8. Drive a serving session that exercises every server request kind
+//!    — `classify`, `forward` and token-level `stream` (continuous
+//!    batching into conversion waves, out-of-order completion) — and
+//!    read the ledger's streaming stats (see docs/SERVING.md).
 //!
 //! Run: `cargo run --release --example quickstart`
 
 use cr_cim::cim::params::{CbMode, MacroParams};
 use cr_cim::cim::{CimMacro, Column};
 use cr_cim::coordinator::sac::{self, NoiseCalibration};
-use cr_cim::coordinator::server::BatchExecutor;
+use cr_cim::coordinator::server::{BatchExecutor, Server, ServerConfig};
 use cr_cim::coordinator::{DieBank, MacroShards, ModelExecutor, PipelineConfig, Scheduler};
 use cr_cim::metrics::{characterize, measure_csnr, sqnr_db, CharacterizeOpts, CsnrEnsemble};
 use cr_cim::util::pool::default_threads;
@@ -218,5 +222,61 @@ fn main() -> Result<(), String> {
         res.reload_hits,
         res.amortized_reload_ns() * 1e-3,
     );
+
+    println!("\n== 8. streaming token-level serving (every server kind) ==");
+    // The same executor serves a whole session through the server's
+    // request path (no TCP needed — handle_line + executor_step is the
+    // same code the socket loop runs). One classify, one forward, one
+    // stream request whose image splits into 3 tokens: the tokens
+    // coalesce into 2-token conversion waves (no padding), complete out
+    // of order across waves, and reassemble into one pooled response.
+    let srv = Server::new(&ServerConfig {
+        addr: "unused".into(),
+        batch_sizes: vec![1, 2],
+        max_wait: std::time::Duration::from_millis(1),
+        wave_tokens: 2,
+    })?;
+    let conn = srv.open_conn();
+    let body: Vec<String> = imgs[0].iter().map(|v| format!("{v}")).collect();
+    let body = body.join(", ");
+    srv.handle_line(&format!(r#"{{"id": 1, "image": [{body}]}}"#), conn)?;
+    srv.handle_line(&format!(r#"{{"id": 2, "kind": "forward", "image": [{body}]}}"#), conn)?;
+    srv.handle_line(
+        &format!(r#"{{"id": 3, "kind": "stream", "tokens": 3, "image": [{body}]}}"#),
+        conn,
+    )?;
+    // Step the executor until everything is answered (the last 1-token
+    // wave closes on the max_wait deadline).
+    let mut answers = Vec::new();
+    while answers.len() < 3 {
+        srv.executor_step(&mut pipe);
+        answers.extend(srv.take_responses(conn));
+        std::thread::sleep(std::time::Duration::from_millis(2));
+    }
+    for line in &answers {
+        println!("  <- {line}");
+    }
+    // The scheduler's streaming occupancy model, next to the measured
+    // stats: planned wave utilization and the saturation latency tail.
+    let sp = Scheduler::new(&params).plan_stream(&pipe.graph, 2);
+    println!(
+        "  planned 2-token wave: {:.1} µs warm, {:.0}% die utilization, p99 token {:.1} µs",
+        sp.warm_wave_ns * 1e-3,
+        sp.die_utilization * 100.0,
+        sp.p99_token_latency_ns * 1e-3,
+    );
+    let stats = srv.ledger_json();
+    for key in [
+        "stream_requests",
+        "stream_tokens_served",
+        "stream_waves",
+        "mean_wave_occupancy",
+        "token_latency_p50_us",
+        "token_latency_p99_us",
+    ] {
+        if let Some(v) = stats.get_path(key) {
+            println!("  stats.{key} = {v}");
+        }
+    }
     Ok(())
 }

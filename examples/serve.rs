@@ -3,6 +3,15 @@
 //! system: throughput, batch occupancy, queue + execute latency
 //! percentiles, and energy per request under the SAC plan.
 //!
+//! The same trace then replays through the **streaming admission** tier
+//! (`coordinator::stream`): padding-free token waves instead of padded
+//! fixed batches, with wave occupancy and p50/p99 token latency
+//! compared against the fixed-batch numbers, plus the scheduler's
+//! planned wave model (`Scheduler::plan_stream`). The PJRT executable
+//! consumes whole images, so each request is one token here; the
+//! macro-simulator server streams true patch chunks (see
+//! docs/SERVING.md §Worked example).
+//!
 //! Run: `make artifacts && cargo run --release --example serve [-- --rate 200]`
 
 use std::collections::VecDeque;
@@ -15,11 +24,13 @@ use cr_cim::cim::params::MacroParams;
 use cr_cim::coordinator::batcher::{Batcher, Request};
 use cr_cim::coordinator::ledger::Ledger;
 use cr_cim::coordinator::sac::{self, NoiseCalibration};
+use cr_cim::coordinator::stream::{StreamConfig, TokenStream};
 use cr_cim::coordinator::Scheduler;
 use cr_cim::runtime::{Manifest, Runtime, VitExecutable};
 use cr_cim::util::args::Args;
 use cr_cim::util::pool::default_threads;
 use cr_cim::util::stats::percentile;
+use cr_cim::vit::graph::ModelGraph;
 use cr_cim::vit::plan::PrecisionPlan;
 use cr_cim::vit::VitConfig;
 use cr_cim::workload::{trace, ArrivalProcess, EvalSet};
@@ -122,6 +133,74 @@ fn main() -> Result<()> {
     println!("mean batch occupancy: {:.2}", ledger.mean_occupancy());
     println!("macro energy/request: {:.1} µJ (modeled)", ledger.energy_per_request_uj());
     println!("effective TOPS/W    : {:.0}", ledger.effective_tops_per_watt());
+
+    // §8: the same trace through the streaming admission tier — waves
+    // of up to `exe.batch` tokens, closed by size or by the batching
+    // window, with no padded inferences counted. Each request is one
+    // token against the fixed-image PJRT executable.
+    let mut stream = TokenStream::new(&StreamConfig {
+        wave_tokens: exe.batch,
+        max_wait: batcher.max_wait,
+    })
+    .map_err(|e| anyhow!(e))?;
+    let start2 = Instant::now();
+    let mut next2 = 0usize;
+    let mut done = 0usize;
+    while done < n {
+        let now_us = start2.elapsed().as_secs_f64() * 1e6;
+        while next2 < events.len() && events[next2].t_us <= now_us {
+            stream.enqueue_request(
+                0,
+                Some(next2 as f64),
+                eval.image_slice(events[next2].image_index),
+                1,
+                Instant::now(),
+            );
+            next2 += 1;
+        }
+        let Some(wave) = stream.form_wave(Instant::now()) else {
+            std::thread::sleep(std::time::Duration::from_micros(100));
+            continue;
+        };
+        let mut flat = vec![0f32; exe.batch * w];
+        for (i, item) in wave.items.iter().enumerate() {
+            flat[i * w..(i + 1) * w].copy_from_slice(&item.chunk);
+        }
+        seed += 1;
+        let logits = exe.infer(&flat, seed, sa as f32, sm as f32)?;
+        let rows: Vec<Vec<f32>> = (0..wave.items.len())
+            .map(|i| logits[i * exe.num_classes..(i + 1) * exe.num_classes].to_vec())
+            .collect();
+        done += stream
+            .complete_wave(&wave, &rows, Instant::now())
+            .iter()
+            .filter(|f| f.result.is_ok())
+            .count();
+    }
+    let snap = stream.snapshot();
+    println!("\n== streaming admission (token waves, padding-free) ==");
+    println!(
+        "waves {} | wave occupancy {:.2} (fixed-batch occupancy above: {:.2})",
+        snap.waves,
+        snap.mean_wave_occupancy,
+        ledger.mean_occupancy()
+    );
+    println!(
+        "token latency p50/p99: {:.1} / {:.1} ms",
+        snap.token_latency_p50_us / 1e3,
+        snap.token_latency_p99_us / 1e3
+    );
+    // The planned wave model for the full token-level ViT workload.
+    let cfg = VitConfig::default();
+    let graph = ModelGraph::encoder(&cfg, 1, &PrecisionPlan::paper_sac());
+    let sp = sched.plan_stream(&graph, exe.batch * cfg.tokens());
+    println!(
+        "planned wave ({} tokens): {:.1} µs warm, {:.0}% die utilization, p99 token {:.1} µs",
+        sp.wave_tokens,
+        sp.warm_wave_ns * 1e-3,
+        sp.die_utilization * 100.0,
+        sp.p99_token_latency_ns * 1e-3
+    );
     println!("\nledger: {}", ledger.to_json().to_string_pretty());
     Ok(())
 }

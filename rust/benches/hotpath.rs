@@ -143,6 +143,15 @@ fn main() {
         topo.dies,
     );
     let wp = banked.plan_graph(&graph8);
+    // Streaming occupancy model: one conversion wave of the same total
+    // token stream (8 images × 197 tokens) on the banked deployment —
+    // planned die utilization (wave occupancy) and the saturation-model
+    // token latency tail, comparable against the fixed-batch numbers.
+    let wave_tokens = graph8.layers[0].shape.m;
+    suite.bench("plan_stream ViT-Base wave (48 layers)", || {
+        black_box(banked.plan_stream(black_box(&graph8), wave_tokens));
+    });
+    let sp = banked.plan_stream(&graph8, wave_tokens);
     let mut pipe = Json::obj();
     pipe.set("model", Json::str("vit-base"));
     pipe.set("batch", Json::num(8.0));
@@ -157,6 +166,19 @@ fn main() {
     pipe.set("warm_resident_layers", Json::num(wp.resident_layers() as f64));
     pipe.set("warm_saving_frac", Json::num(wp.residency_saving()));
     pipe.set("resident_sram_bits_per_macro", Json::num(resident_sram_bits as f64));
+    pipe.set("stream_wave_tokens", Json::num(sp.wave_tokens as f64));
+    pipe.set("stream_wave_latency_us", Json::num(sp.warm_wave_ns * 1e-3));
+    pipe.set("stream_tokens_per_s", Json::num(sp.tokens_per_s));
+    pipe.set("stream_wave_occupancy", Json::num(sp.die_utilization));
+    pipe.set("stream_token_latency_p50_us", Json::num(sp.p50_token_latency_ns * 1e-3));
+    pipe.set("stream_token_latency_p99_us", Json::num(sp.p99_token_latency_ns * 1e-3));
+    println!(
+        "vit-base stream wave ({} tokens): {:.1} µs, occupancy {:.2}, p99 token {:.1} µs",
+        sp.wave_tokens,
+        sp.warm_wave_ns * 1e-3,
+        sp.die_utilization,
+        sp.p99_token_latency_ns * 1e-3
+    );
     println!(
         "vit-base b8 full pass: cold {:.1} µs, warm/resident {:.1} µs ({:.2}% saved)",
         pp.pipelined_ns * 1e-3,

@@ -5,6 +5,14 @@
 //! Policy: close a batch when (a) it reaches `max_batch`, or (b) the
 //! oldest request has waited `max_wait`, mirroring a vLLM-style
 //! time/size-bounded batching window.
+//!
+//! This is the **fixed-batch** admission tier: the unit of admission is
+//! a whole request, and a partial batch pads to a compiled size. The
+//! streaming tier ([`super::stream`]) reuses the same [`Batcher::decide`]
+//! policy with the *token* as the unit of admission and no padding; the
+//! two tiers' occupancy numbers are directly comparable in the ledger's
+//! `stats` report (`mean_occupancy` vs `mean_wave_occupancy` — see
+//! `docs/SERVING.md`).
 
 use std::collections::VecDeque;
 use std::time::{Duration, Instant};

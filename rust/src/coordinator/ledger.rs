@@ -2,6 +2,15 @@
 //! macro spent, per inference and cumulatively. Drives the serving
 //! metrics report (J/inference, inferences/s, effective TOPS/W) of the
 //! end-to-end example and the Fig. 4/6 ablation benches.
+//!
+//! The ledger owns no counters of its own beyond the per-batch tallies:
+//! graph executors push their cumulative per-layer breakdown
+//! ([`LayerCost`]) and resident-weight cache snapshot
+//! ([`ResidencyStats`]) after every executed batch, and the streaming
+//! tier pushes its wave/occupancy/token-latency snapshot
+//! ([`StreamSnapshot`]) after every conversion wave. [`Ledger::to_json`]
+//! is the single source of the server's `{"cmd": "stats"}` report —
+//! every field it emits is documented in `docs/SERVING.md`.
 
 use std::time::Duration;
 
@@ -87,6 +96,42 @@ impl ResidencyStats {
     }
 }
 
+/// Streaming-tier accounting snapshot reported by the server's
+/// token-level admission loop (`coordinator::stream::TokenStream`,
+/// method `snapshot`): continuous-batching waves, their occupancy, and
+/// the per-token latency distribution. Refreshed wholesale like the
+/// other executor-owned snapshots; `None` on the ledger = no streaming
+/// request was ever admitted.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct StreamSnapshot {
+    /// Stream requests fully served (all tokens completed).
+    pub requests: u64,
+    /// Tokens executed across all conversion waves.
+    pub tokens_served: u64,
+    /// Tokens currently queued or mid-wave.
+    pub tokens_in_flight: u64,
+    /// Conversion waves executed.
+    pub waves: u64,
+    /// Mean admitted-tokens / wave-size (waves carry no padding, so
+    /// this is true macro occupancy, < 1 only for deadline-closed
+    /// waves).
+    pub mean_wave_occupancy: f64,
+    /// p50 of measured token latency (arrival → wave completion) [µs].
+    pub token_latency_p50_us: f64,
+    /// p99 of measured token latency [µs].
+    pub token_latency_p99_us: f64,
+}
+
+impl StreamSnapshot {
+    /// Whether this snapshot carries live streaming state (waves ran or
+    /// tokens are in flight). Note the server's refresh gate is
+    /// *ever-admitted*, not this: an all-zero snapshot still overwrites
+    /// a stale one after a purge.
+    pub fn is_active(&self) -> bool {
+        self.waves > 0 || self.tokens_in_flight > 0
+    }
+}
+
 /// Running serving statistics.
 #[derive(Clone, Debug, Default)]
 pub struct Ledger {
@@ -106,6 +151,10 @@ pub struct Ledger {
     /// (refreshed wholesale after each batch; `None` = the serving
     /// executor keeps no weights resident).
     residency: Option<ResidencyStats>,
+    /// Latest streaming-tier snapshot (refreshed after each conversion
+    /// wave and on every `stats` request; `None` = no streaming request
+    /// was ever admitted).
+    stream: Option<StreamSnapshot>,
 }
 
 impl Ledger {
@@ -188,6 +237,17 @@ impl Ledger {
         self.residency.as_ref()
     }
 
+    /// Replace the streaming snapshot with the token stream's latest
+    /// (the stream owns the counters; the ledger only reports them).
+    pub fn set_stream(&mut self, stream: StreamSnapshot) {
+        self.stream = Some(stream);
+    }
+
+    /// Latest streaming-tier snapshot, if any stream request was served.
+    pub fn stream(&self) -> Option<&StreamSnapshot> {
+        self.stream.as_ref()
+    }
+
     pub fn to_json(&self) -> Json {
         let mut o = Json::obj();
         o.set("requests", Json::num(self.requests as f64));
@@ -209,6 +269,15 @@ impl Ledger {
             o.set("amortized_reload_us", Json::num(r.amortized_reload_ns() * 1e-3));
             o.set("cold_pass_us", Json::num(r.cold_pass_ns * 1e-3));
             o.set("warm_pass_us", Json::num(r.warm_pass_ns * 1e-3));
+        }
+        if let Some(s) = &self.stream {
+            o.set("stream_requests", Json::num(s.requests as f64));
+            o.set("stream_tokens_served", Json::num(s.tokens_served as f64));
+            o.set("tokens_in_flight", Json::num(s.tokens_in_flight as f64));
+            o.set("stream_waves", Json::num(s.waves as f64));
+            o.set("mean_wave_occupancy", Json::num(s.mean_wave_occupancy));
+            o.set("token_latency_p50_us", Json::num(s.token_latency_p50_us));
+            o.set("token_latency_p99_us", Json::num(s.token_latency_p99_us));
         }
         if !self.layers.is_empty() {
             let rows = self
@@ -369,5 +438,36 @@ mod tests {
         let zero = ResidencyStats::default();
         assert_eq!(zero.amortized_reload_ns(), 0.0);
         assert_eq!(zero.hit_rate(), 0.0);
+    }
+
+    #[test]
+    fn stream_snapshot_is_reported_in_json() {
+        let mut l = Ledger::new();
+        // No streaming tier ran: none of the stream keys appear.
+        assert!(l.to_json().get_path("stream_waves").is_none());
+        assert!(l.to_json().get_path("tokens_in_flight").is_none());
+        let s = StreamSnapshot {
+            requests: 3,
+            tokens_served: 17,
+            tokens_in_flight: 2,
+            waves: 5,
+            mean_wave_occupancy: 0.85,
+            token_latency_p50_us: 120.0,
+            token_latency_p99_us: 480.0,
+        };
+        assert!(s.is_active());
+        l.set_stream(s);
+        let j = l.to_json();
+        assert_eq!(j.get_path("stream_requests").unwrap().as_f64().unwrap(), 3.0);
+        assert_eq!(j.get_path("stream_tokens_served").unwrap().as_f64().unwrap(), 17.0);
+        assert_eq!(j.get_path("tokens_in_flight").unwrap().as_f64().unwrap(), 2.0);
+        assert_eq!(j.get_path("stream_waves").unwrap().as_f64().unwrap(), 5.0);
+        let occ = j.get_path("mean_wave_occupancy").unwrap().as_f64().unwrap();
+        assert!((occ - 0.85).abs() < 1e-12);
+        assert_eq!(j.get_path("token_latency_p50_us").unwrap().as_f64().unwrap(), 120.0);
+        assert_eq!(j.get_path("token_latency_p99_us").unwrap().as_f64().unwrap(), 480.0);
+        assert_eq!(l.stream().unwrap().waves, 5);
+        // The empty snapshot reports nothing worth including.
+        assert!(!StreamSnapshot::default().is_active());
     }
 }

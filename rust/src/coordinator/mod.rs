@@ -13,7 +13,8 @@
 //! - [`ledger`]    — energy/latency/occupancy accounting, with a
 //!                   per-layer breakdown when a graph executor serves
 //! - [`server`]    — std-TCP line-JSON inference service (request path;
-//!                   `classify` and whole-graph `forward` kinds)
+//!                   `classify`, whole-graph `forward` and token-level
+//!                   `stream` kinds)
 //! - [`shard`]     — 2-D tiled macro execution (row tiles × column
 //!                   shards) + the macro-simulator batch executor for
 //!                   the serving path
@@ -22,9 +23,15 @@
 //!                   pool), batches routed across them
 //! - [`pipeline`]  — the model-graph pipeline executor: full ViT encoder
 //!                   forward passes through per-class die pools
+//! - [`stream`]    — streaming token-level batching: continuous
+//!                   admission of per-token work items into macro
+//!                   conversion waves, with out-of-order per-request
+//!                   reassembly
 //!
 //! See `docs/ARCHITECTURE.md` for the layer map, the 2-D tiling model,
-//! the pipeline/pool model and the determinism contract.
+//! the pipeline/pool model, the streaming-admission model and the
+//! determinism contract, and `docs/SERVING.md` for the server's wire
+//! protocol end to end.
 
 pub mod batcher;
 pub mod ledger;
@@ -35,10 +42,12 @@ pub mod sac;
 pub mod scheduler;
 pub mod server;
 pub mod shard;
+pub mod stream;
 
 pub use multidie::DieBank;
 pub use pipeline::{ModelExecutor, PipelineConfig};
 pub use router::Router;
 pub use sac::{NoiseCalibration, PlanCost};
-pub use scheduler::{PipelinePlan, Scheduler, TilePlan};
+pub use scheduler::{PipelinePlan, Scheduler, StreamPlan, TilePlan};
 pub use shard::{MacroShards, SimExecutor};
+pub use stream::{StreamConfig, TokenStream};

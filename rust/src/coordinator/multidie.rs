@@ -15,6 +15,13 @@
 //! thread count. Changing the die count re-routes vectors onto different
 //! silicon, which legitimately changes noisy outputs — at zero noise
 //! every die computes the same exact integer result.
+//!
+//! In the serving stack this tier sits under everything that executes:
+//! the single-layer `SimExecutor` drives one bank directly, while the
+//! model-graph pipeline ([`super::pipeline`]) draws one bank per layer
+//! from a per-class die pool and keeps programmed banks resident across
+//! passes; fixed batches and streaming conversion waves
+//! ([`super::stream`]) both land here as `matvec_batch` calls.
 
 use crate::cim::MacroParams;
 use crate::util::pool::parallel_map_mut;

@@ -429,6 +429,17 @@ impl ModelExecutor {
         .expect("exact reference walk is infallible")
     }
 
+    /// The exact reference walk as *served* logits: featurization,
+    /// [`reference_ints`](Self::reference_ints) and the same output
+    /// scaling [`execute`](BatchExecutor::execute) applies — so the
+    /// server-level streaming and fixed-batch paths can be anchored to
+    /// the digital reference end to end (f32 for f32), not just at the
+    /// integer layer.
+    pub fn reference_logits(&self, images: &[Vec<f32>]) -> Vec<Vec<f32>> {
+        let xs = self.featurize_images(images);
+        self.scale_outputs(self.reference_ints(&xs))
+    }
+
     /// Featurize images into the first layer's input vectors.
     pub fn featurize_images(&self, images: &[Vec<f32>]) -> Vec<Vec<i32>> {
         let first = &self.graph.layers[0];

@@ -323,6 +323,47 @@ impl PipelinePlan {
     }
 }
 
+/// Streaming occupancy/latency model of one token **conversion wave**:
+/// the [`Scheduler::plan_stream`] counterpart to the fixed-batch
+/// [`PipelinePlan`], so planned die utilization and tail latency are
+/// comparable between the two admission tiers.
+///
+/// The model assumes **saturated admission**: every wave is full
+/// (`wave_tokens` tokens) and waves run back to back, which is the
+/// regime streaming exists for — a macro kept busy between batch
+/// boundaries. Under saturation a token arrives uniformly at random
+/// while the previous wave is in flight, waits out its remainder
+/// (`U·warm_wave_ns`, U uniform on [0, 1]) and rides the next wave
+/// (`warm_wave_ns`), so modeled token latency is `(1 + U)·warm_wave_ns`:
+/// p50 = 1.5×, p99 = 1.99× the warm wave. Waves reuse the same pool
+/// silicon back to back, so the steady-state wave is the **warm**
+/// (residency-aware) pass; the cold number prices the first wave.
+#[derive(Clone, Debug)]
+pub struct StreamPlan {
+    /// Tokens coalesced per conversion wave.
+    pub wave_tokens: usize,
+    /// First-wave (cold — every layer reloads) pipelined latency [ns].
+    pub cold_wave_ns: f64,
+    /// Steady-state (warm — resident layers skip reloads) wave latency
+    /// [ns].
+    pub warm_wave_ns: f64,
+    /// Sustained token throughput at saturation: `wave_tokens /
+    /// warm_wave_ns`.
+    pub tokens_per_s: f64,
+    /// Fraction of the warm wave the dies spend converting
+    /// (Σ compute / warm wave); the remainder is exposed weight
+    /// reloads. Written to the bench report as
+    /// `stream_wave_occupancy`. Distinct from the server's measured
+    /// `mean_wave_occupancy`, which is slot fill (admitted tokens /
+    /// wave size): a run can have every wave full (slot fill 1.0) while
+    /// die utilization stays below 1 on exposed reloads.
+    pub die_utilization: f64,
+    /// Modeled p50 token latency at saturation [ns] (1.5 × warm wave).
+    pub p50_token_latency_ns: f64,
+    /// Modeled p99 token latency at saturation [ns] (1.99 × warm wave).
+    pub p99_token_latency_ns: f64,
+}
+
 /// The scheduler: stateless; all methods derive from macro parameters
 /// plus the serving topology (how many macros and dies run in parallel).
 #[derive(Clone, Debug)]
@@ -457,6 +498,35 @@ impl Scheduler {
                 })
                 .collect(),
         )
+    }
+
+    /// Price one streaming conversion wave of `wave_tokens` tokens over
+    /// `graph`'s layer chain (see [`StreamPlan`] for the saturation
+    /// model). The wave re-shapes every layer's activation stream to
+    /// `wave_tokens` vectors ([`ModelGraph::with_stream_m`]) and runs
+    /// through the same [`plan_graph`](Self::plan_graph) accounting as
+    /// the fixed-batch tier, so `plan_stream(graph, m)` with `m` equal
+    /// to the graph's own stream reproduces `plan_graph(graph)` exactly
+    /// — the two admission models are comparable by construction.
+    pub fn plan_stream(&self, graph: &ModelGraph, wave_tokens: usize) -> StreamPlan {
+        let wt = wave_tokens.max(1);
+        let pp = self.plan_graph(&graph.with_stream_m(wt));
+        let conv: f64 = pp.layers.iter().map(|t| t.compute_ns).sum();
+        let warm = pp.warm_pipelined_ns;
+        let (tokens_per_s, die_utilization) = if warm > 0.0 {
+            (wt as f64 / (warm * 1e-9), conv / warm)
+        } else {
+            (0.0, 0.0)
+        };
+        StreamPlan {
+            wave_tokens: wt,
+            cold_wave_ns: pp.pipelined_ns,
+            warm_wave_ns: warm,
+            tokens_per_s,
+            die_utilization,
+            p50_token_latency_ns: 1.5 * warm,
+            p99_token_latency_ns: 1.99 * warm,
+        }
     }
 
     /// Plan one linear layer at an operating point.
@@ -694,6 +764,36 @@ mod tests {
         assert_eq!(empty.overlap_saving(), 0.0);
         let one = PipelinePlan::from_layers(vec![("x".into(), mk(40.0), 5.0, false)]);
         assert!((one.serial_ns - one.pipelined_ns).abs() < 1e-12);
+    }
+
+    #[test]
+    fn plan_stream_is_comparable_to_plan_graph_and_models_saturation() {
+        use crate::vit::graph::ModelGraph;
+        use crate::vit::VitConfig;
+        let graph = ModelGraph::encoder(&VitConfig::vit_base(), 8, &PrecisionPlan::paper_sac());
+        let sched = Scheduler::with_topology(&MacroParams::default(), 4, 2);
+        // A wave of exactly the graph's activation stream reproduces the
+        // fixed-batch plan: the two admission tiers price the same work
+        // identically by construction.
+        let m = graph.layers[0].shape.m; // 8 × 197 tokens
+        let sp = sched.plan_stream(&graph, m);
+        let pp = sched.plan_graph(&graph);
+        assert_eq!(sp.wave_tokens, m);
+        assert!((sp.cold_wave_ns - pp.pipelined_ns).abs() < 1e-9);
+        assert!((sp.warm_wave_ns - pp.warm_pipelined_ns).abs() < 1e-9);
+        // Saturation model: utilization is the conversion share of the
+        // warm wave; tail latencies are fixed multiples of it.
+        assert!(sp.die_utilization > 0.0 && sp.die_utilization <= 1.0);
+        assert!((sp.p50_token_latency_ns - 1.5 * sp.warm_wave_ns).abs() < 1e-9);
+        assert!((sp.p99_token_latency_ns - 1.99 * sp.warm_wave_ns).abs() < 1e-9);
+        assert!(sp.tokens_per_s > 0.0);
+        // Bigger waves amortize the exposed reloads: throughput and die
+        // utilization never degrade as the wave grows.
+        let small = sched.plan_stream(&graph, 197);
+        assert!(sp.tokens_per_s >= small.tokens_per_s * (1.0 - 1e-9));
+        assert!(sp.die_utilization >= small.die_utilization * (1.0 - 1e-9));
+        // Degenerate wave sizes clamp to one token.
+        assert_eq!(sched.plan_stream(&graph, 0).wave_tokens, 1);
     }
 
     #[test]

@@ -1,24 +1,33 @@
 //! Request server: a std-TCP, line-delimited-JSON inference service
 //! (tokio is not in the vendored crate set; blocking I/O + threads).
 //!
-//! Protocol (one JSON object per line):
+//! Protocol (one JSON object per line; the full wire contract — every
+//! request kind, response schema, `stats` field and error string — is
+//! documented in `docs/SERVING.md`):
 //!   → {"id": 1, "image": [3072 floats]}
 //!   ← {"id": 1, "pred": 7, "logits": [...], "queue_us": ..., "batch": 16}
 //!   → {"id": 2, "kind": "forward", "image": [...]}
 //!   ← {"id": 2, "pred": ..., "logits": [...], "layers": 48, ...}
+//!   → {"id": 3, "kind": "stream", "tokens": 4, "image": [...]}
+//!   ← {"id": 3, "pred": ..., "logits": [...], "tokens": 4, "waves": 2, ...}
 //!   → {"cmd": "stats"}   ← the ledger report (incl. per-layer breakdown
-//!                          when a model-graph executor is serving)
+//!                          and streaming fields when applicable)
 //!   → {"cmd": "shutdown"}
 //!
 //! The `"forward"` kind runs a whole encoder pass through a model-graph
 //! executor (`coordinator::pipeline::ModelExecutor`); the default kind
-//! classifies through the executor's single-layer path.
+//! classifies through the executor's single-layer path. The `"stream"`
+//! kind admits the request to the token-level continuous-batching tier
+//! (`coordinator::stream`): its image splits into per-token patch
+//! chunks that coalesce with other requests' tokens into macro
+//! conversion waves, complete out of order, and reassemble per request.
 //!
-//! Architecture: acceptor threads push requests into a shared queue; a
-//! single executor thread forms batches (Batcher policy), runs the PJRT
-//! executable or the macro-simulator pipeline, accounts costs in the
-//! Ledger, and writes responses back through per-connection response
-//! channels.
+//! Architecture: acceptor threads push classify/forward requests into a
+//! shared queue and stream requests into the token stream; a single
+//! executor thread forms batches (Batcher policy) and conversion waves
+//! (TokenStream policy), runs the PJRT executable or the macro-simulator
+//! pipeline, accounts costs in the Ledger, and writes responses back
+//! through per-connection response channels.
 
 use std::collections::{HashMap, HashSet, VecDeque};
 use std::io::{BufRead, BufReader, Write};
@@ -27,9 +36,10 @@ use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
-use crate::coordinator::batcher::{Batcher, Request};
+use crate::coordinator::batcher::{Batch, Batcher, Request};
 use crate::coordinator::ledger::{LayerCost, Ledger, ResidencyStats};
 use crate::coordinator::sac::PlanCost;
+use crate::coordinator::stream::{StreamConfig, TokenStream};
 use crate::util::json::{self, Json};
 
 /// What a request asks the executor to run.
@@ -39,6 +49,10 @@ pub enum RequestKind {
     Classify,
     /// Whole model-graph forward pass (graph executors only).
     Forward,
+    /// Token-level streaming forward pass: the request is admitted to
+    /// the continuous-batching tier (`coordinator::stream`) instead of
+    /// the fixed-batch queue, so this kind never appears in `pending`.
+    Stream,
 }
 
 /// A parsed inference request payload.
@@ -95,6 +109,10 @@ pub struct ServerConfig {
     pub addr: String,
     pub batch_sizes: Vec<usize>,
     pub max_wait: Duration,
+    /// Tokens coalesced into one streaming conversion wave (`"kind":
+    /// "stream"` requests); the wave closes early on `max_wait` like a
+    /// fixed batch. Must be ≥ 1.
+    pub wave_tokens: usize,
 }
 
 /// Shared server state.
@@ -116,11 +134,17 @@ pub struct Server {
     /// cannot leak outbox entries (the old leak's remaining race).
     live_conns: Mutex<HashSet<u64>>,
     batcher: Batcher,
+    /// The token-level streaming tier: per-token admission queue,
+    /// conversion-wave formation and out-of-order reassembly. Connection
+    /// threads enqueue under this lock; the executor loop forms and
+    /// completes waves.
+    stream: Mutex<TokenStream>,
 }
 
 impl Server {
     /// Build a server; fails on an invalid batching config (empty or
-    /// zero batch sizes) instead of panicking the serving thread later.
+    /// zero batch sizes, zero wave size) instead of panicking the
+    /// serving thread later.
     pub fn new(cfg: &ServerConfig) -> Result<Self, String> {
         Ok(Server {
             pending: Arc::new(Mutex::new(VecDeque::new())),
@@ -131,6 +155,10 @@ impl Server {
             next_req: AtomicU64::new(1),
             live_conns: Mutex::new(HashSet::new()),
             batcher: Batcher::new(cfg.batch_sizes.clone(), cfg.max_wait)?,
+            stream: Mutex::new(TokenStream::new(&StreamConfig {
+                wave_tokens: cfg.wave_tokens,
+                max_wait: cfg.max_wait,
+            })?),
         })
     }
 
@@ -143,9 +171,10 @@ impl Server {
     }
 
     /// Close a connection: stop staging its responses, drop anything
-    /// already staged, and purge its queued (unserved) requests. Lock
-    /// order matches `executor_step` (live before outbox) so the two
-    /// cannot interleave into a leaked entry.
+    /// already staged, and purge its queued (unserved) requests — from
+    /// the fixed-batch queue and the token stream alike. Lock order
+    /// matches `executor_step` (live before outbox) so the two cannot
+    /// interleave into a leaked entry.
     pub fn close_conn(&self, conn_id: u64) {
         {
             let mut live = self.live_conns.lock().unwrap();
@@ -154,6 +183,7 @@ impl Server {
             outbox.remove(&conn_id);
         }
         self.pending.lock().unwrap().retain(|r| r.payload.conn_id != conn_id);
+        self.stream.lock().unwrap().purge_conn(conn_id);
     }
 
     pub fn ledger_json(&self) -> Json {
@@ -176,23 +206,87 @@ impl Server {
         });
     }
 
-    /// One executor step: form a batch if policy allows, execute, account,
-    /// and stage responses. A formed batch can mix request kinds; each
-    /// kind runs as its own sub-batch through the matching executor
-    /// entry point (`execute` vs `forward`). Returns the number of
-    /// requests served.
+    /// One executor step: form a fixed batch if policy allows, execute,
+    /// account and stage responses; then form at most one streaming
+    /// token wave and do the same through the streaming tier. A formed
+    /// batch can mix request kinds; each kind runs as its own sub-batch
+    /// through the matching executor entry point (`execute` vs
+    /// `forward`; `stream` requests never enter the batch queue).
+    /// Returns the number of requests served — batch requests plus
+    /// stream requests whose last token completed this step.
     pub fn executor_step(&self, exec: &mut dyn BatchExecutor) -> usize {
+        self.step(exec).0
+    }
+
+    /// [`executor_step`](Self::executor_step) plus whether any work ran
+    /// (a batch formed or a wave executed). The serve loop idles on the
+    /// flag, not the served count: a conversion wave that completes no
+    /// *request* (all its tokens belong to still-unfinished requests)
+    /// is real work, and sleeping after it would throttle back-to-back
+    /// waves of a multi-token backlog.
+    fn step(&self, exec: &mut dyn BatchExecutor) -> (usize, bool) {
         let batch = {
             let mut pending = self.pending.lock().unwrap();
             self.batcher.form_batch(&mut pending, Instant::now())
         };
-        let Some(batch) = batch else { return 0 };
-        let served = batch.requests.len();
+        let mut served = 0usize;
+        let batch_ran = batch.is_some();
+        if let Some(batch) = batch {
+            served += batch.requests.len();
+            self.run_batch(exec, &batch);
+        }
+        // Streaming tier: at most one conversion wave per step, so batch
+        // and stream traffic interleave fairly on the executor thread.
+        let (completed, wave_ran) = self.stream_step(exec);
+        served += completed;
+        if batch_ran || wave_ran {
+            // Graph executors keep cumulative per-layer counters; refresh
+            // the ledger's breakdown + residency + streaming snapshots
+            // after the work.
+            let layers = exec.layer_breakdown();
+            let residency = exec.residency();
+            if !layers.is_empty() || residency.is_some() {
+                let mut ledger = self.ledger.lock().unwrap();
+                if !layers.is_empty() {
+                    ledger.set_layer_breakdown(layers);
+                }
+                if let Some(r) = residency {
+                    ledger.set_residency(r);
+                }
+            }
+            self.refresh_stream_stats();
+        }
+        (served, batch_ran || wave_ran)
+    }
+
+    /// Push the streaming tier's current snapshot into the ledger.
+    /// Gated on *ever admitted* (not on the snapshot's own liveness):
+    /// a purge back to all-zero counters must overwrite a previously
+    /// stored snapshot instead of freezing stale tokens-in-flight, and
+    /// a server that never saw a stream request keeps the `stream_*`
+    /// fields out of its stats report entirely.
+    fn refresh_stream_stats(&self) {
+        let (snap, touched) = {
+            let stream = self.stream.lock().unwrap();
+            (stream.snapshot(), stream.ever_admitted())
+        };
+        if touched {
+            self.ledger.lock().unwrap().set_stream(snap);
+        }
+    }
+
+    /// Execute one formed fixed batch: per-kind sub-batches, ledger
+    /// accounting, response staging.
+    fn run_batch(&self, exec: &mut dyn BatchExecutor, batch: &Batch<InferencePayload>) {
         // Queue time ends when the batch is formed, for every request in
         // it — measuring per sub-batch would charge the second kind for
         // the first kind's execution time.
         let formed_at = Instant::now();
-        for kind in [RequestKind::Classify, RequestKind::Forward] {
+        // handle_line never enqueues Stream payloads here (they go to
+        // the token stream), but the public `enqueue` API can; such a
+        // request degrades to a whole-image forward pass rather than
+        // being silently dropped while counted as served.
+        for kind in [RequestKind::Classify, RequestKind::Forward, RequestKind::Stream] {
             let reqs: Vec<&Request<InferencePayload>> =
                 batch.requests.iter().filter(|r| r.payload.kind == kind).collect();
             if reqs.is_empty() {
@@ -203,7 +297,7 @@ impl Server {
             let t0 = Instant::now();
             let result = match kind {
                 RequestKind::Classify => exec.execute(&images),
-                RequestKind::Forward => exec.forward(&images),
+                RequestKind::Forward | RequestKind::Stream => exec.forward(&images),
             };
             match result {
                 Ok(logits) => {
@@ -251,20 +345,56 @@ impl Server {
                 }
             }
         }
-        // Graph executors keep cumulative per-layer counters; refresh the
-        // ledger's breakdown + residency snapshots after the batch.
-        let layers = exec.layer_breakdown();
-        let residency = exec.residency();
-        if !layers.is_empty() || residency.is_some() {
-            let mut ledger = self.ledger.lock().unwrap();
-            if !layers.is_empty() {
-                ledger.set_layer_breakdown(layers);
+    }
+
+    /// One streaming admission step: form at most one token wave,
+    /// execute it as a single batch through the executor's model-graph
+    /// path (pools and the resident-weight cache included), feed
+    /// completions back to the reassembly buffer and stage finished
+    /// requests' responses. A wave-execution error fails every request
+    /// with a token in the wave. Returns (completed stream requests,
+    /// whether a wave ran).
+    fn stream_step(&self, exec: &mut dyn BatchExecutor) -> (usize, bool) {
+        let wave = self.stream.lock().unwrap().form_wave(Instant::now());
+        let Some(mut wave) = wave else { return (0, false) };
+        // Completion/failure only read the items' identities, so the
+        // activation chunks move out instead of being cloned per wave.
+        let chunks: Vec<Vec<f32>> =
+            wave.items.iter_mut().map(|t| std::mem::take(&mut t.chunk)).collect();
+        let finished = match exec.forward(&chunks) {
+            Ok(logits) => {
+                self.stream.lock().unwrap().complete_wave(&wave, &logits, Instant::now())
             }
-            if let Some(r) = residency {
-                ledger.set_residency(r);
+            Err(e) => self.stream.lock().unwrap().fail_wave(&wave, &e),
+        };
+        let completed = finished.iter().filter(|f| f.result.is_ok()).count();
+        self.stage_responses(finished.iter().map(|f| {
+            let mut o = Json::obj();
+            o.set("id", Self::id_json(f.client_req_id));
+            match &f.result {
+                Ok(out) => {
+                    let pred = if out.logits.is_empty() {
+                        0
+                    } else {
+                        crate::util::stats::argmax_rows(&out.logits, out.logits.len())[0]
+                    };
+                    o.set("pred", Json::num(pred as f64));
+                    o.set(
+                        "logits",
+                        Json::arr_f64(&out.logits.iter().map(|&x| x as f64).collect::<Vec<_>>()),
+                    );
+                    o.set("tokens", Json::num(out.tokens as f64));
+                    o.set("waves", Json::num(out.waves as f64));
+                    o.set("first_token_us", Json::num(out.first_token_us));
+                    o.set("last_token_us", Json::num(out.last_token_us));
+                }
+                Err(e) => {
+                    o.set("error", Json::str(e));
+                }
             }
-        }
-        served
+            (f.conn_id, Json::Obj(o).to_string())
+        }));
+        (completed, true)
     }
 
     /// The echoed `"id"`: the client's number, or JSON `null` when the
@@ -318,7 +448,13 @@ impl Server {
         let j = json::parse(line).map_err(|e| format!("bad json: {e}"))?;
         if let Some(cmd) = j.get_path("cmd").and_then(|c| c.as_str()) {
             return match cmd {
-                "stats" => Ok(Some(self.ledger_json().to_string())),
+                "stats" => {
+                    // Refresh the streaming snapshot first so a stats
+                    // probe sees current tokens-in-flight, not the state
+                    // as of the last executed wave.
+                    self.refresh_stream_stats();
+                    Ok(Some(self.ledger_json().to_string()))
+                }
                 "shutdown" => {
                     self.shutdown.store(true, Ordering::SeqCst);
                     Ok(Some(r#"{"ok": true}"#.to_string()))
@@ -355,12 +491,39 @@ impl Server {
             Some(k) => match k.as_str() {
                 Some("classify") => RequestKind::Classify,
                 Some("forward") => RequestKind::Forward,
+                Some("stream") => RequestKind::Stream,
                 Some(other) => return Err(format!("unknown kind '{other}'")),
                 // A present-but-non-string kind is a client bug, not a
                 // silent classify.
                 None => return Err("'kind' must be a string".to_string()),
             },
         };
+        if kind == RequestKind::Stream {
+            // `"tokens"` (stream only): how many patch chunks the image
+            // splits into. Strictly validated like everything else —
+            // absent means 1 (the whole image as a single token).
+            let tokens = match j.get_path("tokens") {
+                None => 1usize,
+                Some(v) => {
+                    let t = v.as_f64().ok_or("'tokens' must be a number")?;
+                    if t.fract() != 0.0 || !(1.0..=1e9).contains(&t) {
+                        return Err("'tokens' must be a positive integer".to_string());
+                    }
+                    t as usize
+                }
+            };
+            if tokens > image.len() {
+                return Err("'tokens' must not exceed the image length".to_string());
+            }
+            self.stream.lock().unwrap().enqueue_request(
+                conn_id,
+                client_req_id,
+                &image,
+                tokens,
+                Instant::now(),
+            );
+            return Ok(None);
+        }
         self.enqueue(InferencePayload { image, conn_id, client_req_id, kind });
         Ok(None)
     }
@@ -394,9 +557,11 @@ impl Server {
                 h.join().ok();
             }
         });
-        // Executor loop on the current thread.
+        // Executor loop on the current thread. Idle (sleep) only when
+        // neither a batch nor a conversion wave ran — a wave completing
+        // zero requests is still work, and more full waves may be ready.
         while !self.is_shutdown() {
-            if self.executor_step(exec.as_mut()) == 0 {
+            if !self.step(exec.as_mut()).1 {
                 std::thread::sleep(Duration::from_micros(200));
             }
         }
@@ -510,6 +675,7 @@ mod tests {
             addr: "unused".into(),
             batch_sizes: vec![1, 4],
             max_wait: Duration::from_millis(1),
+            wave_tokens: 2,
         })
         .unwrap()
     }
@@ -595,6 +761,124 @@ mod tests {
     }
 
     #[test]
+    fn malformed_stream_token_counts_error_and_never_enqueue() {
+        let srv = test_server();
+        let cases = [
+            (r#"{"id": 1, "kind": "stream", "tokens": "x", "image": [1.0, 2.0]}"#, "string tokens"),
+            (r#"{"id": 1, "kind": "stream", "tokens": null, "image": [1.0, 2.0]}"#, "null tokens"),
+            (r#"{"id": 1, "kind": "stream", "tokens": 0, "image": [1.0, 2.0]}"#, "zero tokens"),
+            (r#"{"id": 1, "kind": "stream", "tokens": -2, "image": [1.0, 2.0]}"#, "negative"),
+            (r#"{"id": 1, "kind": "stream", "tokens": 1.5, "image": [1.0, 2.0]}"#, "fractional"),
+            (r#"{"id": 1, "kind": "stream", "tokens": 3, "image": [1.0, 2.0]}"#, "tokens > len"),
+        ];
+        for (line, why) in cases {
+            assert!(srv.handle_line(line, 1).is_err(), "{why} must error: {line}");
+            assert_eq!(srv.stream.lock().unwrap().queued_tokens(), 0, "{why} must not enqueue");
+        }
+        // A valid stream request enqueues its tokens (and only into the
+        // streaming tier — never the fixed-batch queue).
+        srv.handle_line(r#"{"id": 1, "kind": "stream", "tokens": 2, "image": [1.0, 2.0]}"#, 1)
+            .unwrap();
+        assert_eq!(srv.stream.lock().unwrap().queued_tokens(), 2);
+        assert!(srv.pending.lock().unwrap().is_empty());
+        // An absent "tokens" means one token.
+        srv.handle_line(r#"{"id": 2, "kind": "stream", "image": [1.0, 2.0]}"#, 1).unwrap();
+        assert_eq!(srv.stream.lock().unwrap().queued_tokens(), 3);
+    }
+
+    #[test]
+    fn stream_requests_error_per_request_on_single_layer_executors() {
+        // FakeExec has no model graph: a wave fails as a unit and every
+        // request with a token in it gets one error line.
+        let srv = test_server();
+        let mut exec = FakeExec::new();
+        let conn = srv.open_conn();
+        srv.handle_line(r#"{"id": 9, "kind": "stream", "tokens": 2, "image": [1.0, 2.0]}"#, conn)
+            .unwrap();
+        assert_eq!(srv.executor_step(&mut exec), 0, "failed stream requests are not served");
+        let resps = srv.take_responses(conn);
+        assert_eq!(resps.len(), 1);
+        let j = json::parse(&resps[0]).unwrap();
+        assert_eq!(j.get_path("id").unwrap().as_f64().unwrap(), 9.0);
+        assert!(j.get_path("error").is_some());
+        assert_eq!(srv.stream.lock().unwrap().tokens_in_flight(), 0);
+    }
+
+    #[test]
+    fn stream_requests_serve_through_a_graph_executor_with_stats() {
+        // A 2-block tiny-geometry pipeline serves "stream" requests:
+        // tokens coalesce into 2-token waves, responses reassemble per
+        // request, and the stats report carries the streaming fields.
+        use crate::coordinator::pipeline::{ModelExecutor, PipelineConfig};
+        use crate::vit::graph::ModelGraph;
+        use crate::vit::plan::OperatingPoint;
+        let mut p = MacroParams::default();
+        p.adc_bits = 6;
+        p.active_rows = 64;
+        p.rows = 64;
+        p.cols = 12;
+        p.sigma_cu_rel = 0.0;
+        p.nonlin_cubic_lsb = 0.0;
+        p.sigma_cmp_lsb = 0.0;
+        p.sigma_cmp_offset_lsb = 0.0;
+        p.temperature_k = 0.0;
+        let op = OperatingPoint { a_bits: 2, w_bits: 2, cb: crate::cim::params::CbMode::Off };
+        let plan = PrecisionPlan { name: "test 2b", attention: op, mlp: op };
+        let mut cfg = VitConfig::default();
+        cfg.image = 16;
+        cfg.dim = 48;
+        cfg.depth = 2;
+        cfg.mlp_ratio = 2;
+        cfg.num_classes = 4;
+        let graph = ModelGraph::encoder(&cfg, 2, &plan);
+        let mut exec = ModelExecutor::new(&p, graph, PipelineConfig::default()).unwrap();
+        let srv = test_server();
+        let conn = srv.open_conn();
+        let img: Vec<f32> = (0..16).map(|j| (j % 7) as f32 / 7.0 - 0.4).collect();
+        let body: Vec<String> = img.iter().map(|v| format!("{v}")).collect();
+        let payload = body.join(", ");
+        let line = format!(r#"{{"id": 1, "kind": "stream", "tokens": 3, "image": [{payload}]}}"#);
+        srv.handle_line(&line, conn).unwrap();
+        // Wave 1 (2 tokens) leaves the request unfinished; wave 2 (the
+        // deadline-closed single token) completes it.
+        assert_eq!(srv.executor_step(&mut exec), 0);
+        assert!(srv.take_responses(conn).is_empty());
+        std::thread::sleep(Duration::from_millis(3));
+        assert_eq!(srv.executor_step(&mut exec), 1);
+        let resps = srv.take_responses(conn);
+        assert_eq!(resps.len(), 1);
+        let j = json::parse(&resps[0]).unwrap();
+        assert_eq!(j.get_path("id").unwrap().as_f64().unwrap(), 1.0);
+        assert_eq!(j.get_path("tokens").unwrap().as_f64().unwrap(), 3.0);
+        assert_eq!(j.get_path("waves").unwrap().as_f64().unwrap(), 2.0);
+        assert_eq!(j.get_path("logits").unwrap().as_arr().unwrap().len(), 48);
+        assert!(j.get_path("first_token_us").unwrap().as_f64().unwrap() > 0.0);
+        assert!(
+            j.get_path("last_token_us").unwrap().as_f64().unwrap()
+                >= j.get_path("first_token_us").unwrap().as_f64().unwrap()
+        );
+        let stats = srv.ledger_json();
+        assert_eq!(stats.get_path("stream_requests").unwrap().as_f64().unwrap(), 1.0);
+        assert_eq!(stats.get_path("stream_tokens_served").unwrap().as_f64().unwrap(), 3.0);
+        assert_eq!(stats.get_path("tokens_in_flight").unwrap().as_f64().unwrap(), 0.0);
+        assert_eq!(stats.get_path("stream_waves").unwrap().as_f64().unwrap(), 2.0);
+        let occ = stats.get_path("mean_wave_occupancy").unwrap().as_f64().unwrap();
+        assert!((occ - 0.75).abs() < 1e-12, "waves of 2/2 and 1/2 tokens: {occ}");
+        assert!(stats.get_path("token_latency_p50_us").unwrap().as_f64().unwrap() > 0.0);
+        assert!(
+            stats.get_path("token_latency_p99_us").unwrap().as_f64().unwrap()
+                >= stats.get_path("token_latency_p50_us").unwrap().as_f64().unwrap()
+        );
+        // The streaming work shows up in the measured per-layer counters
+        // even though it bypasses the fixed-batch ledger accounting.
+        let layers = stats.get_path("layers").unwrap().as_arr().unwrap();
+        assert_eq!(layers.len(), 8);
+        assert!(layers
+            .iter()
+            .all(|l| l.get_path("conversions").unwrap().as_f64().unwrap() > 0.0));
+    }
+
+    #[test]
     fn absent_id_is_echoed_as_null() {
         // Distinct clients that omit "id" must not collide on a default
         // echoed 0 — an absent id round-trips as JSON null.
@@ -617,8 +901,17 @@ mod tests {
             addr: "unused".into(),
             batch_sizes: vec![],
             max_wait: Duration::from_millis(1),
+            wave_tokens: 2,
         };
         assert!(Server::new(&bad).is_err());
+        // A zero wave size is equally a config error, not a later panic.
+        let bad_wave = ServerConfig {
+            addr: "unused".into(),
+            batch_sizes: vec![1, 4],
+            max_wait: Duration::from_millis(1),
+            wave_tokens: 0,
+        };
+        assert!(Server::new(&bad_wave).is_err());
     }
 
     #[test]
@@ -873,6 +1166,7 @@ mod tests {
             addr: "127.0.0.1:0".into(),
             batch_sizes: vec![1, 4],
             max_wait: Duration::from_millis(1),
+            wave_tokens: 2,
         };
         // Bind manually to learn the port, then serve on it.
         let listener = TcpListener::bind("127.0.0.1:0").unwrap();

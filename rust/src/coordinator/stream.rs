@@ -1,0 +1,650 @@
+//! Streaming token-level batching: the continuous-admission tier of the
+//! serving stack.
+//!
+//! Transformer serving is token-shaped: a request is a ViT patch
+//! *sequence*, not an indivisible image, and a macro that waits for
+//! whole-request batches idles between batch boundaries. This module
+//! makes the **token** the unit of admission:
+//!
+//! 1. **Tokenization** ([`split_tokens`]): a request's image floats
+//!    split into `tokens` contiguous patch chunks; each chunk featurizes
+//!    into one activation vector exactly like a standalone image, so the
+//!    token path reuses the model-graph executor's
+//!    [`forward`](super::server::BatchExecutor::forward) — per-layer-class
+//!    die pools and the resident-weight cache included.
+//! 2. **Continuous admission** ([`TokenStream::form_wave`]): queued
+//!    tokens — *from any mix of requests* — coalesce into the next
+//!    macro **conversion wave** under the same size/deadline policy the
+//!    fixed-batch [`Batcher`](super::batcher::Batcher) uses (a wave
+//!    closes at `wave_tokens` tokens or when the oldest token has waited
+//!    `max_wait`). Admission is **depth-fair**: a wave takes the queued
+//!    tokens with the smallest `(token index, request sequence)` —
+//!    breadth-first across requests, FIFO within a depth level — so a
+//!    short request admitted behind a long one streams through the next
+//!    waves instead of waiting for the long request to drain. An
+//!    **aging guard** bounds the other direction: once any token has
+//!    waited past `max_wait`, the wave admits in arrival order instead,
+//!    so sustained fresh traffic cannot starve a long request's deeper
+//!    tokens. Waves carry no padding: occupancy is the admitted token
+//!    count over the wave size.
+//! 3. **Out-of-order completion** ([`TokenStream::complete_wave`]): a
+//!    request finishes when its last token's wave lands, so a short
+//!    request admitted after a long one can complete first. Token
+//!    outputs reassemble per request in **token-index order** (never
+//!    completion order) and mean-pool into the response logits
+//!    ([`pool_tokens`]); per-token latency feeds the p50/p99 accounting
+//!    the ledger reports ([`StreamSnapshot`]).
+//!
+//! # Determinism under out-of-order arrival
+//!
+//! The macro's noise draws key on `seed → class pool → die → row tile →
+//! global column → conversion counter`, so *conversion order* is part of
+//! the served contract. The streaming tier pins that order structurally:
+//!
+//! - token sequence numbers are assigned **inside** the stream lock
+//!   ([`TokenStream::enqueue_request`]), so the queue is totally ordered
+//!   even when connection threads race;
+//! - within a wave, tokens execute in `(request sequence, token index)`
+//!   order — [`form_wave`](TokenStream::form_wave) sorts before
+//!   returning, so the conversion-counter sequence is a pure function of
+//!   the wave's *composition*, never of scheduler timing;
+//! - waves are serialized by the single executor loop, and each wave
+//!   runs through the ordinary deterministic graph walk.
+//!
+//! Consequences (test-enforced in `rust/tests/stream.rs`): at zero noise
+//! streamed token outputs are bit-identical to the fixed-batch forward
+//! path and to the exact reference walk for **any** arrival interleaving
+//! and **any** wave partitioning; with noise, results are bit-identical
+//! at any thread count and any column-shard count for a fixed request
+//! trace. What legitimately changes noisy results is wave *composition*
+//! (which tokens share a wave) — exactly as the batch composition does
+//! on real silicon.
+//!
+//! The wire protocol (`"kind": "stream"`, the `stats` fields) is
+//! documented in `docs/SERVING.md`; the occupancy/latency planning model
+//! lives in [`Scheduler::plan_stream`](super::scheduler::Scheduler::plan_stream).
+
+use std::collections::HashMap;
+use std::time::{Duration, Instant};
+
+use crate::util::stats::percentile;
+
+use super::batcher::Batcher;
+use super::ledger::StreamSnapshot;
+
+/// Bounded ring of token-latency samples backing the p50/p99 report
+/// (old samples are overwritten once the ring is full).
+const LATENCY_SAMPLE_CAP: usize = 16_384;
+
+/// Streaming admission policy: wave size and deadline.
+#[derive(Clone, Debug)]
+pub struct StreamConfig {
+    /// Tokens coalesced into one conversion wave (the streaming
+    /// analogue of a compiled batch size), ≥ 1.
+    pub wave_tokens: usize,
+    /// Close a partial wave once its oldest token has waited this long.
+    pub max_wait: Duration,
+}
+
+/// One queued unit of work: a single token (patch chunk) of a request.
+#[derive(Clone, Debug)]
+pub struct TokenItem {
+    /// Admission sequence number of the owning request (assigned under
+    /// the stream lock — the total order conversions follow).
+    pub req_seq: u64,
+    /// Connection that owns the response.
+    pub conn_id: u64,
+    /// The client's echoed `"id"` (None = absent, echoed as null).
+    pub client_req_id: Option<f64>,
+    /// Position of this token within its request.
+    pub token_index: usize,
+    /// The token's patch chunk (featurized by the executor).
+    pub chunk: Vec<f32>,
+    /// When the owning request arrived.
+    pub arrived: Instant,
+}
+
+/// A formed conversion wave: tokens sorted by `(req_seq, token_index)`,
+/// ready to execute as one batch through the graph executor.
+#[derive(Debug)]
+pub struct Wave {
+    pub items: Vec<TokenItem>,
+    /// Admitted tokens over the configured wave size (waves carry no
+    /// padding, so occupancy < 1 only for deadline-closed waves).
+    pub occupancy: f64,
+}
+
+/// Aggregated per-request logits and latency accounting, emitted when a
+/// request's last token completes.
+#[derive(Clone, Debug)]
+pub struct StreamOutput {
+    /// Mean-pooled logits over the request's tokens ([`pool_tokens`]).
+    pub logits: Vec<f32>,
+    /// Tokens the request was split into.
+    pub tokens: usize,
+    /// Conversion waves the request's tokens rode.
+    pub waves: u64,
+    /// Request arrival → first completed token [µs].
+    pub first_token_us: f64,
+    /// Request arrival → last completed token [µs].
+    pub last_token_us: f64,
+}
+
+/// A request leaving the streaming tier: either its pooled output or
+/// the wave-execution error that killed it.
+#[derive(Clone, Debug)]
+pub struct FinishedRequest {
+    pub conn_id: u64,
+    pub client_req_id: Option<f64>,
+    pub result: Result<StreamOutput, String>,
+}
+
+/// Reassembly state of one in-flight request.
+struct StreamRequest {
+    conn_id: u64,
+    client_req_id: Option<f64>,
+    arrived: Instant,
+    /// Per-token logits slots, indexed by token position.
+    logits: Vec<Option<Vec<f32>>>,
+    /// Slots filled so far.
+    done: usize,
+    /// Waves that carried at least one of this request's tokens.
+    waves: u64,
+    first_token_us: Option<f64>,
+    last_token_us: f64,
+}
+
+/// Split a request's image floats into `tokens` contiguous patch
+/// chunks (balanced, remainder spread — chunk `t` covers
+/// `[t·len/T, (t+1)·len/T)`). `tokens` is clamped to `[1, len]` so
+/// every chunk is non-empty; the server's strict parse rejects
+/// out-of-range token counts before they reach this clamp.
+pub fn split_tokens(image: &[f32], tokens: usize) -> Vec<Vec<f32>> {
+    let len = image.len();
+    let t = tokens.clamp(1, len.max(1));
+    (0..t).map(|i| image[i * len / t..(i + 1) * len / t].to_vec()).collect()
+}
+
+/// Deterministic mean-pool over a request's per-token logits, applied
+/// in token-index order: f64 accumulation with a single f32 rounding at
+/// the end, so out-of-order *completion* cannot perturb the pooled
+/// response.
+pub fn pool_tokens(token_logits: &[Vec<f32>]) -> Vec<f32> {
+    let Some(first) = token_logits.first() else {
+        return Vec::new();
+    };
+    let mut sums = vec![0f64; first.len()];
+    for lg in token_logits {
+        for (s, &v) in sums.iter_mut().zip(lg) {
+            *s += v as f64;
+        }
+    }
+    let n = token_logits.len() as f64;
+    sums.into_iter().map(|s| (s / n) as f32).collect()
+}
+
+/// The token-level admission queue + reassembly buffer. One instance
+/// per server, shared behind a mutex: connection threads enqueue,
+/// the executor loop forms and completes waves.
+pub struct TokenStream {
+    /// Wave policy — a one-size [`Batcher`] (size = `wave_tokens`), so
+    /// the streaming and fixed-batch tiers share the close-on-size /
+    /// close-on-deadline decision logic.
+    policy: Batcher,
+    wave_tokens: usize,
+    /// Queued tokens. Order is immaterial: admission selects by the
+    /// depth-fair `(token_index, req_seq)` key and the deadline scans
+    /// for the oldest arrival.
+    queue: Vec<TokenItem>,
+    requests: HashMap<u64, StreamRequest>,
+    /// Next request sequence number (assigned under the stream lock so
+    /// the queue is totally ordered even when connections race).
+    next_seq: u64,
+    /// Tokens admitted to a wave and not yet completed/failed.
+    executing: usize,
+    waves: u64,
+    occupancy_sum: f64,
+    completed_requests: u64,
+    tokens_served: u64,
+    latencies_us: Vec<f64>,
+    /// Next ring slot to overwrite once `latencies_us` is full; always
+    /// points at the oldest sample.
+    latency_cursor: usize,
+}
+
+impl TokenStream {
+    /// Build the streaming tier; rejects a zero wave size (by the same
+    /// policy validation the fixed-batch `Batcher` applies).
+    pub fn new(cfg: &StreamConfig) -> Result<Self, String> {
+        let policy = Batcher::new(vec![cfg.wave_tokens], cfg.max_wait)?;
+        Ok(TokenStream {
+            policy,
+            wave_tokens: cfg.wave_tokens,
+            queue: Vec::new(),
+            requests: HashMap::new(),
+            next_seq: 1,
+            executing: 0,
+            waves: 0,
+            occupancy_sum: 0.0,
+            completed_requests: 0,
+            tokens_served: 0,
+            latencies_us: Vec::new(),
+            latency_cursor: 0,
+        })
+    }
+
+    /// Admit a request: split its image into `tokens` patch chunks and
+    /// enqueue them as per-token work items. Returns the token count.
+    pub fn enqueue_request(
+        &mut self,
+        conn_id: u64,
+        client_req_id: Option<f64>,
+        image: &[f32],
+        tokens: usize,
+        now: Instant,
+    ) -> usize {
+        let chunks = split_tokens(image, tokens);
+        let n = chunks.len();
+        let req_seq = self.next_seq;
+        self.next_seq += 1;
+        self.requests.insert(
+            req_seq,
+            StreamRequest {
+                conn_id,
+                client_req_id,
+                arrived: now,
+                logits: vec![None; n],
+                done: 0,
+                waves: 0,
+                first_token_us: None,
+                last_token_us: 0.0,
+            },
+        );
+        for (token_index, chunk) in chunks.into_iter().enumerate() {
+            self.queue.push(TokenItem {
+                req_seq,
+                conn_id,
+                client_req_id,
+                token_index,
+                chunk,
+                arrived: now,
+            });
+        }
+        n
+    }
+
+    /// Form the next conversion wave if the policy allows. Admission is
+    /// **depth-fair** continuous batching: the wave takes the queued
+    /// tokens with the smallest `(token_index, req_seq)` — breadth-first
+    /// across requests, FIFO within a depth level — so tokens of
+    /// different requests mix freely and short requests overtake long
+    /// ones. **Aging guard:** once any queued token has waited past the
+    /// admission window (`max_wait`), the wave admits in arrival
+    /// (request-FIFO) order instead, so a deep token can never starve
+    /// behind an endless stream of fresh first tokens — full waves of
+    /// new arrivals would otherwise outrank `token_index ≥ 1` forever.
+    /// The admitted tokens are then re-sorted by
+    /// `(req_seq, token_index)` so conversion order within the wave is a
+    /// pure function of its composition, never of scheduler timing.
+    pub fn form_wave(&mut self, now: Instant) -> Option<Wave> {
+        let oldest_wait = self.queue.iter().map(|t| now.duration_since(t.arrived)).max();
+        let take = self.policy.decide(self.queue.len(), oldest_wait);
+        if take == 0 {
+            return None;
+        }
+        // Re-sorting the whole queue per wave is deliberate: the queue
+        // is near-sorted between waves (appends are per-request runs),
+        // so the sort is ~linear, and a wave's cost is dominated by the
+        // macro conversions it triggers, not this bookkeeping.
+        let aged = oldest_wait.is_some_and(|w| w >= self.policy.max_wait);
+        if aged {
+            self.queue.sort_by_key(|t| (t.req_seq, t.token_index));
+        } else {
+            self.queue.sort_by_key(|t| (t.token_index, t.req_seq));
+        }
+        let mut items: Vec<TokenItem> = self.queue.drain(..take).collect();
+        items.sort_by_key(|t| (t.req_seq, t.token_index));
+        self.executing += items.len();
+        self.waves += 1;
+        let occupancy = items.len() as f64 / self.wave_tokens as f64;
+        self.occupancy_sum += occupancy;
+        Some(Wave { items, occupancy })
+    }
+
+    fn push_latency(&mut self, us: f64) {
+        if self.latencies_us.len() < LATENCY_SAMPLE_CAP {
+            self.latencies_us.push(us);
+        } else {
+            self.latencies_us[self.latency_cursor] = us;
+        }
+        self.latency_cursor = (self.latency_cursor + 1) % LATENCY_SAMPLE_CAP;
+    }
+
+    /// Record a wave's outputs (one logits row per wave token, in wave
+    /// order): per-token latency samples, per-request reassembly, and
+    /// the finished requests whose last token just landed.
+    pub fn complete_wave(
+        &mut self,
+        wave: &Wave,
+        outputs: &[Vec<f32>],
+        now: Instant,
+    ) -> Vec<FinishedRequest> {
+        debug_assert_eq!(wave.items.len(), outputs.len());
+        let mut finished = Vec::new();
+        let mut seen: Vec<u64> = Vec::new();
+        for (item, lg) in wave.items.iter().zip(outputs) {
+            self.executing = self.executing.saturating_sub(1);
+            self.tokens_served += 1;
+            let us = now.duration_since(item.arrived).as_secs_f64() * 1e6;
+            self.push_latency(us);
+            // The owning request may be gone (connection closed mid-wave).
+            let Some(req) = self.requests.get_mut(&item.req_seq) else {
+                continue;
+            };
+            if !seen.contains(&item.req_seq) {
+                seen.push(item.req_seq);
+                req.waves += 1;
+            }
+            let rel_us = now.duration_since(req.arrived).as_secs_f64() * 1e6;
+            if req.first_token_us.is_none() {
+                req.first_token_us = Some(rel_us);
+            }
+            req.last_token_us = rel_us;
+            if req.logits[item.token_index].is_none() {
+                req.done += 1;
+            }
+            req.logits[item.token_index] = Some(lg.clone());
+            if req.done == req.logits.len() {
+                let req = self.requests.remove(&item.req_seq).expect("request is present");
+                self.completed_requests += 1;
+                let toks: Vec<Vec<f32>> =
+                    req.logits.into_iter().map(|o| o.expect("all token slots filled")).collect();
+                finished.push(FinishedRequest {
+                    conn_id: req.conn_id,
+                    client_req_id: req.client_req_id,
+                    result: Ok(StreamOutput {
+                        logits: pool_tokens(&toks),
+                        tokens: toks.len(),
+                        waves: req.waves,
+                        first_token_us: req.first_token_us.unwrap_or(rel_us),
+                        last_token_us: req.last_token_us,
+                    }),
+                });
+            }
+        }
+        finished
+    }
+
+    /// A wave's execution failed: every request with a token in the
+    /// wave fails as a unit — its reassembly state and any still-queued
+    /// tokens are purged, and one error response per request is emitted.
+    pub fn fail_wave(&mut self, wave: &Wave, error: &str) -> Vec<FinishedRequest> {
+        let mut finished = Vec::new();
+        let mut failed: Vec<u64> = Vec::new();
+        for item in &wave.items {
+            self.executing = self.executing.saturating_sub(1);
+            if let Some(req) = self.requests.remove(&item.req_seq) {
+                failed.push(item.req_seq);
+                finished.push(FinishedRequest {
+                    conn_id: req.conn_id,
+                    client_req_id: req.client_req_id,
+                    result: Err(error.to_string()),
+                });
+            }
+        }
+        // One queue sweep for the whole wave (not one per failed
+        // request); `failed` is at most wave-sized, so the lookup stays
+        // cheap.
+        if !failed.is_empty() {
+            self.queue.retain(|t| !failed.contains(&t.req_seq));
+        }
+        finished
+    }
+
+    /// Drop a closed connection's queued tokens and reassembly state
+    /// (tokens already admitted to a wave finish executing; their
+    /// completions find no request and are dropped).
+    pub fn purge_conn(&mut self, conn_id: u64) {
+        self.queue.retain(|t| t.conn_id != conn_id);
+        self.requests.retain(|_, r| r.conn_id != conn_id);
+    }
+
+    /// Whether any stream request was ever admitted. Drives the
+    /// server's ledger refresh: once true, every snapshot is pushed —
+    /// including the all-zero one after a disconnecting client's queued
+    /// tokens are purged, which would otherwise leave a stale
+    /// `tokens_in_flight` frozen in the stats report.
+    pub fn ever_admitted(&self) -> bool {
+        self.next_seq > 1
+    }
+
+    /// Tokens queued for admission.
+    pub fn queued_tokens(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// Tokens somewhere in the tier: queued or mid-wave.
+    pub fn tokens_in_flight(&self) -> u64 {
+        (self.queue.len() + self.executing) as u64
+    }
+
+    /// The accounting snapshot the ledger's `stats` report carries.
+    pub fn snapshot(&self) -> StreamSnapshot {
+        let (p50, p99) = if self.latencies_us.is_empty() {
+            (0.0, 0.0)
+        } else {
+            (percentile(&self.latencies_us, 0.5), percentile(&self.latencies_us, 0.99))
+        };
+        StreamSnapshot {
+            requests: self.completed_requests,
+            tokens_served: self.tokens_served,
+            tokens_in_flight: self.tokens_in_flight(),
+            waves: self.waves,
+            mean_wave_occupancy: if self.waves == 0 {
+                0.0
+            } else {
+                self.occupancy_sum / self.waves as f64
+            },
+            token_latency_p50_us: p50,
+            token_latency_p99_us: p99,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg(wave_tokens: usize, wait_ms: u64) -> StreamConfig {
+        StreamConfig { wave_tokens, max_wait: Duration::from_millis(wait_ms) }
+    }
+
+    fn img(n: usize) -> Vec<f32> {
+        (0..n).map(|i| i as f32).collect()
+    }
+
+    #[test]
+    fn split_tokens_is_balanced_and_lossless() {
+        let image = img(10);
+        for t in [1usize, 2, 3, 4, 10] {
+            let chunks = split_tokens(&image, t);
+            assert_eq!(chunks.len(), t);
+            assert!(chunks.iter().all(|c| !c.is_empty()), "tokens {t}");
+            let flat: Vec<f32> = chunks.concat();
+            assert_eq!(flat, image, "tokens {t}");
+            let (min, max) = chunks
+                .iter()
+                .fold((usize::MAX, 0), |(lo, hi), c| (lo.min(c.len()), hi.max(c.len())));
+            assert!(max - min <= 1, "balanced split, tokens {t}");
+        }
+        // Out-of-range token counts clamp instead of producing empties.
+        assert_eq!(split_tokens(&image, 0).len(), 1);
+        assert_eq!(split_tokens(&image, 99).len(), 10);
+    }
+
+    #[test]
+    fn wave_forms_on_size_or_deadline() {
+        let mut ts = TokenStream::new(&cfg(4, 50)).unwrap();
+        let now = Instant::now();
+        ts.enqueue_request(1, Some(1.0), &img(6), 3, now);
+        // 3 < 4 queued and the deadline has not passed: keep waiting.
+        assert!(ts.form_wave(now).is_none());
+        ts.enqueue_request(1, Some(2.0), &img(4), 2, now);
+        // 5 ≥ 4: a full wave closes immediately, one token stays queued.
+        let wave = ts.form_wave(now).unwrap();
+        assert_eq!(wave.items.len(), 4);
+        assert!((wave.occupancy - 1.0).abs() < 1e-12);
+        assert_eq!(ts.queued_tokens(), 1);
+        // The leftover closes alone once its deadline passes.
+        assert!(ts.form_wave(now).is_none());
+        let later = now + Duration::from_millis(60);
+        let tail = ts.form_wave(later).unwrap();
+        assert_eq!(tail.items.len(), 1);
+        assert!((tail.occupancy - 0.25).abs() < 1e-12);
+        assert_eq!(ts.tokens_in_flight(), 5);
+    }
+
+    #[test]
+    fn zero_wave_size_is_rejected() {
+        assert!(TokenStream::new(&cfg(0, 1)).is_err());
+        assert!(TokenStream::new(&cfg(1, 1)).is_ok());
+    }
+
+    #[test]
+    fn waves_execute_in_request_then_token_order() {
+        let mut ts = TokenStream::new(&cfg(8, 1)).unwrap();
+        let now = Instant::now();
+        ts.enqueue_request(1, Some(10.0), &img(6), 3, now); // seq 1
+        ts.enqueue_request(2, Some(20.0), &img(4), 2, now); // seq 2
+        let wave = ts.form_wave(now + Duration::from_millis(5)).unwrap();
+        let order: Vec<(u64, usize)> =
+            wave.items.iter().map(|t| (t.req_seq, t.token_index)).collect();
+        assert_eq!(order, vec![(1, 0), (1, 1), (1, 2), (2, 0), (2, 1)]);
+    }
+
+    #[test]
+    fn short_requests_overtake_long_ones_and_reassemble_per_request() {
+        // Request 1 (4 tokens) arrives before request 2 (2 tokens).
+        // Depth-fair 2-token waves: w1 = {r1t0, r2t0}, w2 = {r1t1, r2t1}
+        // — the *later* request completes first (wave 2), the earlier
+        // one finishes in wave 3. Out-of-order completion by design.
+        let mut ts = TokenStream::new(&cfg(2, 1)).unwrap();
+        let now = Instant::now();
+        ts.enqueue_request(7, Some(1.0), &img(8), 4, now); // seq 1
+        ts.enqueue_request(8, Some(2.0), &img(4), 2, now); // seq 2
+        let outs: Vec<Vec<f32>> = vec![vec![1.0, 2.0], vec![3.0, 4.0]];
+        let w1 = ts.form_wave(now).unwrap();
+        let keys1: Vec<(u64, usize)> =
+            w1.items.iter().map(|t| (t.req_seq, t.token_index)).collect();
+        assert_eq!(keys1, vec![(1, 0), (2, 0)]);
+        assert!(ts.complete_wave(&w1, &outs, now + Duration::from_millis(1)).is_empty());
+        let w2 = ts.form_wave(now).unwrap();
+        let keys2: Vec<(u64, usize)> =
+            w2.items.iter().map(|t| (t.req_seq, t.token_index)).collect();
+        assert_eq!(keys2, vec![(1, 1), (2, 1)]);
+        let done2 = ts.complete_wave(&w2, &outs, now + Duration::from_millis(2));
+        assert_eq!(done2.len(), 1, "the short request completes first");
+        assert_eq!(done2[0].client_req_id, Some(2.0));
+        let out = done2[0].result.as_ref().unwrap();
+        assert_eq!(out.tokens, 2);
+        assert_eq!(out.waves, 2);
+        // Mean pool over r2's tokens, both of which got [3, 4]: r2t0 is
+        // item 1 of wave 1 and r2t1 item 1 of wave 2.
+        assert_eq!(out.logits, vec![3.0, 4.0]);
+        assert!(out.first_token_us > 0.0 && out.last_token_us >= out.first_token_us);
+        // Wave 3 finishes the long request.
+        let w3 = ts.form_wave(now).unwrap();
+        let keys3: Vec<(u64, usize)> =
+            w3.items.iter().map(|t| (t.req_seq, t.token_index)).collect();
+        assert_eq!(keys3, vec![(1, 2), (1, 3)]);
+        let done3 = ts.complete_wave(&w3, &outs, now + Duration::from_millis(3));
+        assert_eq!(done3.len(), 1);
+        assert_eq!(done3[0].client_req_id, Some(1.0));
+        assert_eq!(done3[0].result.as_ref().unwrap().waves, 3);
+        assert_eq!(ts.tokens_in_flight(), 0);
+        let snap = ts.snapshot();
+        assert_eq!(snap.requests, 2);
+        assert_eq!(snap.tokens_served, 6);
+        assert_eq!(snap.waves, 3);
+        assert!((snap.mean_wave_occupancy - 1.0).abs() < 1e-12);
+        assert!(snap.token_latency_p50_us > 0.0);
+        assert!(snap.token_latency_p99_us >= snap.token_latency_p50_us);
+    }
+
+    #[test]
+    fn aged_queues_fall_back_to_arrival_order() {
+        // Fresh traffic admits depth-fair; once the oldest token has
+        // waited past the window, the wave admits request-FIFO so deep
+        // tokens of old requests cannot starve behind new first tokens.
+        let mut ts = TokenStream::new(&cfg(2, 50)).unwrap();
+        let now = Instant::now();
+        ts.enqueue_request(1, Some(1.0), &img(4), 2, now); // seq 1
+        ts.enqueue_request(2, Some(2.0), &img(4), 2, now); // seq 2
+        let aged = now + Duration::from_millis(60);
+        let wave = ts.form_wave(aged).unwrap();
+        let keys: Vec<(u64, usize)> =
+            wave.items.iter().map(|t| (t.req_seq, t.token_index)).collect();
+        // Arrival order: the whole of request 1 first — not {r1t0, r2t0}.
+        assert_eq!(keys, vec![(1, 0), (1, 1)]);
+    }
+
+    #[test]
+    fn a_request_spanning_waves_counts_them() {
+        let mut ts = TokenStream::new(&cfg(2, 1)).unwrap();
+        let now = Instant::now();
+        ts.enqueue_request(1, None, &img(8), 4, now);
+        let outs = vec![vec![1.0f32], vec![2.0]];
+        let w1 = ts.form_wave(now).unwrap();
+        assert!(ts.complete_wave(&w1, &outs, now).is_empty());
+        let w2 = ts.form_wave(now).unwrap();
+        let done = ts.complete_wave(&w2, &outs, now);
+        assert_eq!(done.len(), 1);
+        let out = done[0].result.as_ref().unwrap();
+        assert_eq!(out.tokens, 4);
+        assert_eq!(out.waves, 2);
+        assert_eq!(done[0].client_req_id, None);
+    }
+
+    #[test]
+    fn fail_wave_purges_the_whole_request() {
+        let mut ts = TokenStream::new(&cfg(2, 1)).unwrap();
+        let now = Instant::now();
+        ts.enqueue_request(3, Some(5.0), &img(6), 3, now);
+        let wave = ts.form_wave(now).unwrap();
+        assert_eq!(wave.items.len(), 2);
+        assert_eq!(ts.queued_tokens(), 1);
+        let failed = ts.fail_wave(&wave, "boom");
+        assert_eq!(failed.len(), 1);
+        assert_eq!(failed[0].conn_id, 3);
+        assert_eq!(failed[0].result.as_ref().err().unwrap(), "boom");
+        // The third (queued) token is gone with its request.
+        assert_eq!(ts.queued_tokens(), 0);
+        assert_eq!(ts.tokens_in_flight(), 0);
+        // Failed requests are not counted as served.
+        assert_eq!(ts.snapshot().requests, 0);
+    }
+
+    #[test]
+    fn purge_conn_drops_queue_and_reassembly() {
+        let mut ts = TokenStream::new(&cfg(2, 1)).unwrap();
+        let now = Instant::now();
+        ts.enqueue_request(1, Some(1.0), &img(4), 2, now);
+        ts.enqueue_request(2, Some(2.0), &img(4), 2, now);
+        ts.purge_conn(1);
+        assert_eq!(ts.queued_tokens(), 2);
+        // Mid-wave purge: completions for the dead request are dropped.
+        let wave = ts.form_wave(now).unwrap();
+        ts.purge_conn(2);
+        let done = ts.complete_wave(&wave, &[vec![1.0], vec![2.0]], now);
+        assert!(done.is_empty());
+        assert_eq!(ts.tokens_in_flight(), 0);
+    }
+
+    #[test]
+    fn pool_tokens_is_token_order_mean() {
+        assert_eq!(pool_tokens(&[]), Vec::<f32>::new());
+        assert_eq!(pool_tokens(&[vec![1.0, -2.0]]), vec![1.0, -2.0]);
+        let pooled = pool_tokens(&[vec![1.0, 0.0], vec![2.0, 6.0], vec![3.0, 0.0]]);
+        assert_eq!(pooled, vec![2.0, 2.0]);
+    }
+}

@@ -217,7 +217,8 @@ fn cmd_serve(argv: Vec<String>) -> Result<()> {
             .opt("addr", "127.0.0.1:7878", "listen address")
             .opt("artifacts", "artifacts", "artifacts directory")
             .opt("batch", "16", "execution batch artifact (1 or 16)")
-            .opt("max-wait-ms", "2", "batching window"),
+            .opt("max-wait-ms", "2", "batching window")
+            .opt("wave-tokens", "16", "streaming conversion-wave size (tokens)"),
         argv,
     )?;
     let batch: usize = args.get_parse("batch")?;
@@ -239,6 +240,7 @@ fn cmd_serve(argv: Vec<String>) -> Result<()> {
         addr: args.get("addr").unwrap().to_string(),
         batch_sizes: vec![1, batch],
         max_wait: Duration::from_millis(args.get_parse::<u64>("max-wait-ms")?),
+        wave_tokens: args.get_parse::<usize>("wave-tokens")?,
     };
     println!(
         "serving ViT-CIM on {} (batch {batch}, σ_attn={sa:.2}, σ_mlp={sm:.2} LSB)",

@@ -133,6 +133,21 @@ impl ModelGraph {
         self.layers.len()
     }
 
+    /// A copy of the graph re-shaped to one streaming **conversion
+    /// wave**: every layer's activation stream becomes `wave_tokens`
+    /// vectors (`batch` collapses to 1 — a wave has no image-batch
+    /// structure, only tokens). This is what
+    /// `coordinator::Scheduler::plan_stream` prices, so streaming and
+    /// fixed-batch plans stay comparable layer for layer.
+    pub fn with_stream_m(&self, wave_tokens: usize) -> ModelGraph {
+        let mut g = self.clone();
+        g.batch = 1;
+        for l in &mut g.layers {
+            l.shape.m = wave_tokens.max(1);
+        }
+        g
+    }
+
     /// Layers of one SAC class, in execution order.
     pub fn class_layers(&self, class: LayerClass) -> impl Iterator<Item = &GraphLayer> {
         self.layers.iter().filter(move |l| l.shape.class == class)
@@ -211,6 +226,27 @@ mod tests {
         for (i, l) in graph.layers.iter().enumerate() {
             assert_eq!(l.index, i);
         }
+    }
+
+    #[test]
+    fn with_stream_m_reshapes_every_layer_and_keeps_ops() {
+        let graph = ModelGraph::encoder(&VitConfig::default(), 4, &PrecisionPlan::paper_sac());
+        let wave = graph.with_stream_m(24);
+        assert_eq!(wave.batch, 1);
+        assert_eq!(wave.layer_count(), graph.layer_count());
+        for (w, g) in wave.layers.iter().zip(&graph.layers) {
+            assert_eq!(w.shape.m, 24, "{}", w.name());
+            assert_eq!((w.shape.k, w.shape.n), (g.shape.k, g.shape.n), "{}", w.name());
+            assert_eq!(w.op, g.op, "{}", w.name());
+        }
+        // A wave of exactly the graph's stream replays its shapes.
+        let m = graph.layers[0].shape.m;
+        let same = graph.with_stream_m(m);
+        for (s, g) in same.layers.iter().zip(&graph.layers) {
+            assert_eq!(s.shape.m, g.shape.m);
+        }
+        // Zero clamps to one.
+        assert_eq!(graph.with_stream_m(0).layers[0].shape.m, 1);
     }
 
     #[test]

@@ -273,6 +273,7 @@ fn vit_base_forward_serves_through_server_with_layer_ledger() {
         addr: "unused".into(),
         batch_sizes: vec![1, 4],
         max_wait: Duration::from_millis(1),
+        wave_tokens: 2,
     })
     .unwrap();
     let conn = srv.open_conn();

@@ -1,0 +1,329 @@
+//! Integration tests for streaming token-level batching: the
+//! determinism acceptance anchors of the serving tier.
+//!
+//! - At zero noise, streamed per-request outputs are bit-identical to
+//!   the fixed-batch forward path AND to the exact reference walk, for
+//!   distinct arrival interleavings (which produce distinct wave
+//!   compositions) — on the tiny grid and on a ViT-Base config.
+//! - With real comparator noise, streamed responses are bit-identical
+//!   at any worker-thread count and any column-shard count for a fixed
+//!   request trace.
+//! - Out-of-order completion: a short request admitted behind a long
+//!   one completes first, and the stats report carries the streaming
+//!   fields (tokens in flight, wave occupancy, token latency p50/p99).
+
+use std::time::Duration;
+
+use cr_cim::cim::params::{CbMode, MacroParams};
+use cr_cim::coordinator::pipeline::{ModelExecutor, PipelineConfig};
+use cr_cim::coordinator::server::{BatchExecutor, Server, ServerConfig};
+use cr_cim::coordinator::stream::{pool_tokens, split_tokens};
+use cr_cim::util::json::{self, Json};
+use cr_cim::vit::graph::ModelGraph;
+use cr_cim::vit::plan::{OperatingPoint, PrecisionPlan};
+use cr_cim::vit::VitConfig;
+
+fn zero_noise(mut p: MacroParams) -> MacroParams {
+    p.sigma_cu_rel = 0.0;
+    p.nonlin_cubic_lsb = 0.0;
+    p.sigma_cmp_lsb = 0.0;
+    p.sigma_cmp_offset_lsb = 0.0;
+    p.temperature_k = 0.0;
+    p
+}
+
+fn tiny_params() -> MacroParams {
+    let mut p = MacroParams::default();
+    p.adc_bits = 6;
+    p.active_rows = 64;
+    p.rows = 64;
+    p.cols = 12;
+    zero_noise(p)
+}
+
+fn plan(a_bits: u32, w_bits: u32) -> PrecisionPlan {
+    let op = OperatingPoint { a_bits, w_bits, cb: CbMode::Off };
+    PrecisionPlan { name: "probe plan", attention: op, mlp: op }
+}
+
+/// d_ff = 96 > 64 active rows: fc2 row-tiles even on the tiny geometry.
+fn tiny_cfg() -> VitConfig {
+    VitConfig { image: 16, patch: 4, dim: 48, depth: 2, heads: 4, mlp_ratio: 2, num_classes: 4 }
+}
+
+fn image(seed: usize, floats: usize) -> Vec<f32> {
+    (0..floats).map(|j| ((seed * 31 + j * 7) % 13) as f32 / 13.0 - 0.5).collect()
+}
+
+fn server_with(wave_tokens: usize, max_wait_ms: u64) -> Server {
+    Server::new(&ServerConfig {
+        addr: "unused".into(),
+        batch_sizes: vec![1, 4],
+        max_wait: Duration::from_millis(max_wait_ms),
+        wave_tokens,
+    })
+    .unwrap()
+}
+
+fn test_server(wave_tokens: usize) -> Server {
+    server_with(wave_tokens, 1)
+}
+
+fn stream_line(id: usize, tokens: usize, img: &[f32]) -> String {
+    let body: Vec<String> = img.iter().map(|v| format!("{v}")).collect();
+    format!(
+        r#"{{"id": {id}, "kind": "stream", "tokens": {tokens}, "image": [{}]}}"#,
+        body.join(", ")
+    )
+}
+
+/// Drain the server: step until every expected response is staged (the
+/// tail wave needs its deadline, so idle steps sleep past `max_wait`).
+fn drain_responses(
+    srv: &Server,
+    exec: &mut dyn BatchExecutor,
+    conn: u64,
+    want: usize,
+) -> Vec<Json> {
+    let mut out = Vec::new();
+    for _ in 0..200 {
+        srv.executor_step(exec);
+        for line in srv.take_responses(conn) {
+            out.push(json::parse(&line).unwrap());
+        }
+        if out.len() >= want {
+            return out;
+        }
+        std::thread::sleep(Duration::from_millis(2));
+    }
+    panic!("server drained only {} of {want} responses", out.len());
+}
+
+fn logits_of(j: &Json) -> Vec<f64> {
+    j.get_path("logits")
+        .unwrap_or_else(|| panic!("response carries logits: {j:?}"))
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|v| v.as_f64().unwrap())
+        .collect()
+}
+
+/// The fixed-batch ground truth for a streamed request: run its token
+/// chunks as one forward batch and mean-pool, exactly as the streaming
+/// tier reassembles.
+fn pooled_fixed_batch(exec: &mut ModelExecutor, img: &[f32], tokens: usize) -> Vec<f32> {
+    let chunks = split_tokens(img, tokens);
+    let per_token = exec.forward(&chunks).unwrap();
+    pool_tokens(&per_token)
+}
+
+#[test]
+fn zero_noise_streamed_equals_fixed_batch_and_reference_for_two_interleavings() {
+    let p = tiny_params();
+    let graph = ModelGraph::encoder(&tiny_cfg(), 1, &plan(2, 2));
+    let img_a = image(1, 48); // 3 tokens
+    let img_b = image(2, 32); // 2 tokens
+    // Ground truth, twice over: the fixed-batch forward path on the same
+    // token chunks, and the exact digital reference walk. At zero noise
+    // the three serving paths must agree f32-for-f32.
+    let (want_a, want_b, ref_a, ref_b) = {
+        let mut exec = ModelExecutor::new(&p, graph.clone(), PipelineConfig::default()).unwrap();
+        let want_a = pooled_fixed_batch(&mut exec, &img_a, 3);
+        let want_b = pooled_fixed_batch(&mut exec, &img_b, 2);
+        let ref_a = pool_tokens(&exec.reference_logits(&split_tokens(&img_a, 3)));
+        let ref_b = pool_tokens(&exec.reference_logits(&split_tokens(&img_b, 2)));
+        (want_a, want_b, ref_a, ref_b)
+    };
+    assert_eq!(want_a, ref_a, "fixed batch == exact reference (request a)");
+    assert_eq!(want_b, ref_b, "fixed batch == exact reference (request b)");
+    // Two distinct arrival interleavings → distinct wave compositions
+    // (wave size 2 mixes the requests' tokens differently); at zero
+    // noise both must still reproduce the reference exactly.
+    for (order, label) in [([0usize, 1], "a then b"), ([1, 0], "b then a")] {
+        let mut exec =
+            ModelExecutor::new(&p, graph.clone(), PipelineConfig::default()).unwrap();
+        let srv = test_server(2);
+        let conn = srv.open_conn();
+        for &r in &order {
+            match r {
+                0 => srv.handle_line(&stream_line(10, 3, &img_a), conn).unwrap(),
+                _ => srv.handle_line(&stream_line(20, 2, &img_b), conn).unwrap(),
+            };
+        }
+        let resps = drain_responses(&srv, &mut exec, conn, 2);
+        assert_eq!(resps.len(), 2, "{label}");
+        for j in &resps {
+            let id = j.get_path("id").unwrap().as_f64().unwrap() as u64;
+            let want = if id == 10 { &want_a } else { &want_b };
+            let got = logits_of(j);
+            let want_f64: Vec<f64> = want.iter().map(|&x| x as f64).collect();
+            assert_eq!(got, want_f64, "{label}, request {id}");
+            assert_eq!(
+                j.get_path("tokens").unwrap().as_f64().unwrap(),
+                if id == 10 { 3.0 } else { 2.0 },
+                "{label}, request {id}"
+            );
+        }
+    }
+}
+
+#[test]
+fn vit_base_zero_noise_streamed_equals_fixed_batch_and_reference() {
+    // The acceptance anchor at real scale: ViT-Base (12 blocks,
+    // d_ff = 3072) on the paper's 1024-row geometry, probed at 1b so a
+    // full pass stays test-sized. Two interleavings of two requests.
+    let p = zero_noise(MacroParams::default());
+    let graph = ModelGraph::encoder(&VitConfig::vit_base(), 1, &plan(1, 1));
+    let img_a = image(3, 32); // 2 tokens
+    let img_b = image(4, 16); // 1 token
+    let (want_a, want_b) = {
+        let mut exec = ModelExecutor::new(&p, graph.clone(), PipelineConfig::default()).unwrap();
+        let want_a = pooled_fixed_batch(&mut exec, &img_a, 2);
+        let want_b = pooled_fixed_batch(&mut exec, &img_b, 1);
+        // Anchor the fixed-batch truth to the exact reference walk.
+        assert_eq!(want_a, pool_tokens(&exec.reference_logits(&split_tokens(&img_a, 2))));
+        assert_eq!(want_b, pool_tokens(&exec.reference_logits(&split_tokens(&img_b, 1))));
+        (want_a, want_b)
+    };
+    assert_eq!(want_a.len(), 768);
+    for (order, label) in [([0usize, 1], "a then b"), ([1, 0], "b then a")] {
+        let mut exec =
+            ModelExecutor::new(&p, graph.clone(), PipelineConfig::default()).unwrap();
+        let srv = test_server(2);
+        let conn = srv.open_conn();
+        for &r in &order {
+            match r {
+                0 => srv.handle_line(&stream_line(1, 2, &img_a), conn).unwrap(),
+                _ => srv.handle_line(&stream_line(2, 1, &img_b), conn).unwrap(),
+            };
+        }
+        let resps = drain_responses(&srv, &mut exec, conn, 2);
+        for j in &resps {
+            let id = j.get_path("id").unwrap().as_f64().unwrap() as u64;
+            let want = if id == 1 { &want_a } else { &want_b };
+            let want_f64: Vec<f64> = want.iter().map(|&x| x as f64).collect();
+            assert_eq!(logits_of(j), want_f64, "{label}, request {id}");
+        }
+    }
+}
+
+#[test]
+fn noisy_streamed_responses_are_thread_and_shard_invariant() {
+    // The strong half of the contract: with real comparator noise and a
+    // fixed request trace, the worker-thread count and the column-shard
+    // split must be invisible to the streamed results, wave after wave.
+    let mut p = tiny_params();
+    p.sigma_cmp_lsb = 1.1;
+    let graph = ModelGraph::encoder(&tiny_cfg(), 1, &plan(2, 2));
+    let img_a = image(5, 48);
+    let img_b = image(6, 32);
+    // 3 + 3 tokens over 2-token waves: every wave closes full, by size,
+    // so the wave partition is a pure function of the request trace —
+    // no deadline/aging path whose timing could vary between runs (the
+    // generous max_wait keeps both switched off).
+    let run = |threads: usize, shards: usize| -> Vec<(u64, Vec<f64>)> {
+        let cfg = PipelineConfig { shards, attention_dies: 1, mlp_dies: 1 };
+        let mut exec =
+            ModelExecutor::new(&p.clone().with_threads(threads), graph.clone(), cfg).unwrap();
+        let srv = server_with(2, 60_000);
+        let conn = srv.open_conn();
+        srv.handle_line(&stream_line(1, 3, &img_a), conn).unwrap();
+        srv.handle_line(&stream_line(2, 3, &img_b), conn).unwrap();
+        let mut got: Vec<(u64, Vec<f64>)> = drain_responses(&srv, &mut exec, conn, 2)
+            .iter()
+            .map(|j| (j.get_path("id").unwrap().as_f64().unwrap() as u64, logits_of(j)))
+            .collect();
+        got.sort_by_key(|(id, _)| *id);
+        got
+    };
+    let one = run(1, 1);
+    // shards = 40 > every tiny layer's minimum: a truly different grid.
+    for (threads, shards) in [(4usize, 1usize), (1, 40), (4, 40)] {
+        assert_eq!(run(threads, shards), one, "threads {threads} shards {shards}");
+    }
+    // Noise is actually present: the streamed walk deviates from the
+    // zero-noise reference.
+    let exec = ModelExecutor::new(&p, graph.clone(), PipelineConfig::default()).unwrap();
+    let quiet = pool_tokens(&exec.reference_logits(&split_tokens(&img_a, 3)));
+    let quiet_f64: Vec<f64> = quiet.iter().map(|&x| x as f64).collect();
+    assert_ne!(one[0].1, quiet_f64, "noisy streamed walk should deviate from exact");
+}
+
+#[test]
+fn short_requests_complete_out_of_order_with_streaming_stats() {
+    let p = tiny_params();
+    let graph = ModelGraph::encoder(&tiny_cfg(), 1, &plan(2, 2));
+    let mut exec = ModelExecutor::new(&p, graph, PipelineConfig::default()).unwrap();
+    // Generous max_wait: all three waves close full, by size, so the
+    // depth-fair order (not the aging fallback) governs deterministically.
+    let srv = server_with(2, 60_000);
+    let conn = srv.open_conn();
+    // A long request (4 tokens) admitted before a short one (2 tokens):
+    // depth-fair waves of 2 are {l0, s0}, {l1, s1}, {l2, l3} — the short
+    // request's response lands a full wave before the long one's.
+    srv.handle_line(&stream_line(100, 4, &image(7, 48)), conn).unwrap();
+    srv.handle_line(&stream_line(200, 2, &image(8, 32)), conn).unwrap();
+    assert_eq!(srv.executor_step(&mut exec), 0, "wave 1 completes nothing");
+    assert!(srv.take_responses(conn).is_empty());
+    assert_eq!(srv.executor_step(&mut exec), 1, "wave 2 completes the short request");
+    let first = srv.take_responses(conn);
+    assert_eq!(first.len(), 1);
+    let j = json::parse(&first[0]).unwrap();
+    assert_eq!(j.get_path("id").unwrap().as_f64().unwrap(), 200.0);
+    assert_eq!(j.get_path("waves").unwrap().as_f64().unwrap(), 2.0);
+    assert_eq!(srv.executor_step(&mut exec), 1, "wave 3 completes the long request");
+    let second = srv.take_responses(conn);
+    assert_eq!(second.len(), 1);
+    let j2 = json::parse(&second[0]).unwrap();
+    assert_eq!(j2.get_path("id").unwrap().as_f64().unwrap(), 100.0);
+    assert_eq!(j2.get_path("tokens").unwrap().as_f64().unwrap(), 4.0);
+    assert_eq!(j2.get_path("waves").unwrap().as_f64().unwrap(), 3.0);
+    // The stats report carries the streaming fields: all six tokens
+    // served over three full waves, nothing left in flight.
+    let stats = srv.ledger_json();
+    assert_eq!(stats.get_path("stream_requests").unwrap().as_f64().unwrap(), 2.0);
+    assert_eq!(stats.get_path("stream_tokens_served").unwrap().as_f64().unwrap(), 6.0);
+    assert_eq!(stats.get_path("tokens_in_flight").unwrap().as_f64().unwrap(), 0.0);
+    assert_eq!(stats.get_path("stream_waves").unwrap().as_f64().unwrap(), 3.0);
+    let occ = stats.get_path("mean_wave_occupancy").unwrap().as_f64().unwrap();
+    assert!((occ - 1.0).abs() < 1e-12, "all waves were full: {occ}");
+    let p50 = stats.get_path("token_latency_p50_us").unwrap().as_f64().unwrap();
+    let p99 = stats.get_path("token_latency_p99_us").unwrap().as_f64().unwrap();
+    assert!(p50 > 0.0 && p99 >= p50);
+}
+
+#[test]
+fn mixed_kinds_serve_side_by_side_with_streams() {
+    // classify + forward + stream in one session: the batch tier and the
+    // streaming tier share the executor loop without starving each other.
+    let p = tiny_params();
+    let graph = ModelGraph::encoder(&tiny_cfg(), 1, &plan(2, 2));
+    let mut exec = ModelExecutor::new(&p, graph, PipelineConfig::default()).unwrap();
+    let srv = test_server(2);
+    let conn = srv.open_conn();
+    let img = image(9, 32);
+    let body: Vec<String> = img.iter().map(|v| format!("{v}")).collect();
+    srv.handle_line(&format!(r#"{{"id": 1, "image": [{}]}}"#, body.join(", ")), conn).unwrap();
+    srv.handle_line(
+        &format!(r#"{{"id": 2, "kind": "forward", "image": [{}]}}"#, body.join(", ")),
+        conn,
+    )
+    .unwrap();
+    srv.handle_line(&stream_line(3, 2, &img), conn).unwrap();
+    let resps = drain_responses(&srv, &mut exec, conn, 3);
+    assert_eq!(resps.len(), 3);
+    for j in &resps {
+        assert!(j.get_path("pred").is_some(), "every kind answers: {j:?}");
+        let id = j.get_path("id").unwrap().as_f64().unwrap() as u64;
+        match id {
+            2 => assert!(j.get_path("layers").is_some(), "forward reports layers"),
+            3 => assert!(j.get_path("tokens").is_some(), "stream reports tokens"),
+            _ => assert!(j.get_path("batch").is_some(), "classify reports batch"),
+        }
+    }
+    // Both accounting tiers populated: batch requests and stream fields.
+    let stats = srv.ledger_json();
+    assert_eq!(stats.get_path("requests").unwrap().as_f64().unwrap(), 2.0);
+    assert_eq!(stats.get_path("stream_requests").unwrap().as_f64().unwrap(), 1.0);
+}

@@ -27,6 +27,12 @@ required_keys=(
   warm_resident_layers
   warm_saving_frac
   resident_sram_bits_per_macro
+  stream_wave_tokens
+  stream_wave_latency_us
+  stream_tokens_per_s
+  stream_wave_occupancy
+  stream_token_latency_p50_us
+  stream_token_latency_p99_us
 )
 
 fail=0
@@ -41,4 +47,4 @@ if [[ $fail -ne 0 ]]; then
   exit 1
 fi
 
-echo "OK: $report carries all ${#required_keys[@]} required keys (incl. cold/warm pass latency)"
+echo "OK: $report carries all ${#required_keys[@]} required keys (incl. cold/warm pass + streaming wave)"

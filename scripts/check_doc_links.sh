@@ -21,6 +21,18 @@ else
 fi
 
 fail=0
+
+# The contract documents must exist before anything links to them: a
+# rename or deletion would otherwise silently drop them from the link
+# scan (nothing links *from* a missing file). docs/SERVING.md carries
+# the server wire protocol; docs/ARCHITECTURE.md the simulator contract.
+for required in README.md ROADMAP.md docs/ARCHITECTURE.md docs/SERVING.md; do
+    if [ ! -f "$required" ]; then
+        echo "MISSING DOC: $required"
+        fail=1
+    fi
+done
+
 for f in $files; do
     dir=$(dirname "$f")
     # Extract inline markdown link targets: [text](target)
