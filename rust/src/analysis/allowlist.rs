@@ -1,0 +1,114 @@
+//! Allowlists and suppression annotations for the determinism lint.
+//!
+//! Two escape hatches exist, both deliberately narrow:
+//!
+//! - The **wall-clock tier**: the fixed set of modules allowed to read
+//!   `Instant::now` / `SystemTime`. These are the timing/deadline
+//!   modules whose outputs are *reported*, never fed back into computed
+//!   values (the ledger prices work from counted conversions, not
+//!   measured time).
+//! - **`detlint` annotations**: a finding on line N is suppressed by a
+//!   comment on line N or N-1 of the form
+//!   `detlint: allow(<rule>) -- <why>`. The justification after `--` is
+//!   mandatory; an annotation without one is itself reported
+//!   (`unjustified-allow`), so suppressions stay auditable.
+
+use super::scanner::Scanned;
+
+/// Modules (paths relative to the scan root, `/`-separated) allowed to
+/// read the wall clock. Keep this list sorted and short.
+pub const WALLCLOCK_TIER: [&str; 5] = [
+    "coordinator/batcher.rs",
+    "coordinator/ledger.rs",
+    "coordinator/server.rs",
+    "coordinator/stream.rs",
+    "util/bench.rs",
+];
+
+/// True when `rel` (scan-root-relative, `/`-separated) may read the
+/// wall clock.
+pub fn wallclock_allowed(rel: &str) -> bool {
+    WALLCLOCK_TIER.contains(&rel)
+}
+
+/// A parsed `detlint: allow(...)` annotation.
+#[derive(Debug, Clone)]
+pub struct Allow {
+    /// Line the annotation comment sits on (1-based).
+    pub line: usize,
+    /// Rule name inside `allow(...)`.
+    pub rule: String,
+    /// True when a non-empty `-- <why>` justification follows.
+    pub justified: bool,
+}
+
+/// Collect every `detlint: allow(<rule>) -- <why>` annotation in a file.
+pub fn collect_allows(scanned: &Scanned) -> Vec<Allow> {
+    let marker = "detlint: allow(";
+    let mut out = Vec::new();
+    for line in &scanned.lines {
+        let Some(pos) = line.comment.find(marker) else { continue };
+        let rest = &line.comment[pos + marker.len()..];
+        let Some(close) = rest.find(')') else { continue };
+        let rule = rest[..close].trim().to_string();
+        // Only kebab-case names are annotation candidates; this keeps doc
+        // prose like `allow(<rule>)` from parsing as a real suppression.
+        if rule.is_empty() || !rule.chars().all(|c| c.is_ascii_lowercase() || c == '-') {
+            continue;
+        }
+        let after = &rest[close + 1..];
+        let justified = after
+            .split_once("--")
+            .map(|(_, why)| !why.trim().is_empty())
+            .unwrap_or(false);
+        out.push(Allow { line: line.number, rule, justified });
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::scanner::scan;
+
+    #[test]
+    fn wallclock_tier_is_exact() {
+        assert!(wallclock_allowed("coordinator/ledger.rs"));
+        assert!(!wallclock_allowed("coordinator/pipeline.rs"));
+        assert!(!wallclock_allowed("cim/macro_.rs"));
+    }
+
+    #[test]
+    fn parses_justified_allow() {
+        let s = scan("// detlint: allow(unordered-iter) -- keys sorted before use\nlet x = 1;\n");
+        let allows = collect_allows(&s);
+        assert_eq!(allows.len(), 1);
+        assert_eq!(allows[0].rule, "unordered-iter");
+        assert_eq!(allows[0].line, 1);
+        assert!(allows[0].justified);
+    }
+
+    #[test]
+    fn flags_missing_justification() {
+        let s = scan("let x = 1; // detlint: allow(wallclock)\n");
+        let allows = collect_allows(&s);
+        assert_eq!(allows.len(), 1);
+        assert!(!allows[0].justified);
+        let s2 = scan("let x = 1; // detlint: allow(wallclock) --   \n");
+        assert!(!collect_allows(&s2)[0].justified);
+    }
+
+    #[test]
+    fn annotation_in_string_is_not_an_allow() {
+        let s = scan("let x = \"detlint: allow(wallclock) -- nope\";\n");
+        assert!(collect_allows(&s).is_empty());
+    }
+
+    #[test]
+    fn doc_prose_placeholders_are_not_allows() {
+        let s = scan("// syntax: detlint: allow(<rule>) -- <why>\n");
+        assert!(collect_allows(&s).is_empty());
+        let s2 = scan("// e.g. detlint: allow(...) -- reason\n");
+        assert!(collect_allows(&s2).is_empty());
+    }
+}

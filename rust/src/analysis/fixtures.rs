@@ -1,0 +1,231 @@
+//! Fixture-backed tests: one violating and one clean fixture per rule,
+//! run through the full `check_source` path (scan → rules → allowlist)
+//! exactly as `crcim lint` does.
+
+use super::check_source;
+
+/// Rule names fired by linting `src` as `rel`, sorted and deduplicated.
+fn fired(rel: &str, src: &str) -> Vec<String> {
+    let mut rules: Vec<String> = check_source(rel, src).into_iter().map(|f| f.rule).collect();
+    rules.sort();
+    rules.dedup();
+    rules
+}
+
+#[test]
+fn rng_discipline_flags_ad_hoc_seed() {
+    let bad = r#"
+pub fn jitter() -> f64 {
+    let mut rng = Rng::new(42);
+    rng.gauss()
+}
+"#;
+    assert_eq!(fired("cim/x.rs", bad), vec!["rng-discipline"]);
+}
+
+#[test]
+fn rng_discipline_accepts_keyed_constructors() {
+    let good = r#"
+pub fn jitter(params: &MacroParams) -> f64 {
+    let mut a = Rng::new(params.seed ^ 0xC0FFEE);
+    let mut b = Rng::salted(params.seed, 0xC0FFEE);
+    a.gauss() + b.gauss()
+}
+"#;
+    assert!(fired("cim/x.rs", good).is_empty());
+    // util/rng.rs itself may construct however it likes.
+    assert!(fired("util/rng.rs", "fn f() { let r = Rng::new(7); }").is_empty());
+    // Test code is exempt.
+    let in_test = "#[cfg(test)]\nmod tests {\n    fn t() { let r = Rng::new(7); }\n}\n";
+    assert!(fired("cim/x.rs", in_test).is_empty());
+}
+
+#[test]
+fn unordered_iter_flags_hash_containers_in_compute() {
+    let bad = r#"
+use std::collections::HashMap;
+pub fn route(m: &HashMap<u64, f64>) -> f64 {
+    m.values().copied().fold(0.0, f64::max)
+}
+"#;
+    assert_eq!(fired("coordinator/x.rs", bad), vec!["unordered-iter"]);
+}
+
+#[test]
+fn unordered_iter_accepts_btree_and_out_of_scope() {
+    let good = r#"
+use std::collections::BTreeMap;
+pub fn route(m: &BTreeMap<u64, f64>) -> f64 {
+    m.values().copied().fold(0.0, f64::max)
+}
+"#;
+    assert!(fired("coordinator/x.rs", good).is_empty());
+    // Non-compute modules (util/, analysis/) are out of scope.
+    assert!(fired("util/x.rs", "use std::collections::HashMap;\n").is_empty());
+    // Comments and strings never trip the rule.
+    assert!(fired("cim/x.rs", "// HashMap is banned here\nlet s = \"HashMap\";\n").is_empty());
+}
+
+#[test]
+fn unordered_iter_respects_justified_allow() {
+    let annotated = r#"
+// detlint: allow(unordered-iter) -- keys are sorted before any iteration
+use std::collections::HashMap;
+"#;
+    assert!(fired("cim/x.rs", annotated).is_empty());
+}
+
+#[test]
+fn wallclock_flags_reads_outside_timing_tier() {
+    let bad = "pub fn now_ns() -> u128 { Instant::now().elapsed().as_nanos() }\n";
+    assert_eq!(fired("cim/x.rs", bad), vec!["wallclock"]);
+    let bad2 = "use std::time::SystemTime;\n";
+    assert_eq!(fired("vit/x.rs", bad2), vec!["wallclock"]);
+}
+
+#[test]
+fn wallclock_accepts_timing_tier() {
+    let src = "pub fn stamp() -> Instant { Instant::now() }\n";
+    assert!(fired("coordinator/ledger.rs", src).is_empty());
+    assert!(fired("util/bench.rs", src).is_empty());
+}
+
+#[test]
+fn lock_order_flags_inverted_nesting() {
+    let bad = r#"
+impl Server {
+    fn broken(&self) {
+        let mut outbox = self.outbox.lock().unwrap();
+        let live = self.live_conns.lock().unwrap();
+        drop(live);
+        drop(outbox);
+    }
+}
+"#;
+    assert_eq!(fired("coordinator/x.rs", bad), vec!["lock-order"]);
+}
+
+#[test]
+fn lock_order_flags_undeclared_receiver() {
+    let bad = "fn f(&self) { self.mystery.lock().unwrap().poke(); }\n";
+    assert_eq!(fired("coordinator/x.rs", bad), vec!["lock-order"]);
+}
+
+#[test]
+fn lock_order_accepts_declared_nesting_and_temporaries() {
+    let good = r#"
+impl Server {
+    fn ok(&self) {
+        let live = self.live_conns.lock().unwrap();
+        let mut outbox = self.outbox.lock().unwrap();
+        outbox.clear();
+        drop(outbox);
+        drop(live);
+    }
+    fn scoped(&self) {
+        {
+            let mut pending = self.pending.lock().unwrap();
+            pending.clear();
+        }
+        self.ledger.lock().unwrap().note(1);
+        let wave = self.stream.lock().unwrap().form_wave();
+        let n = self.stream.lock().unwrap().len();
+    }
+}
+"#;
+    assert!(fired("coordinator/x.rs", good).is_empty());
+}
+
+#[test]
+fn float_reduction_flags_raw_sums_in_compute() {
+    let turbofish = "fn f(xs: &[f64]) -> f64 { xs.iter().sum::<f64>() }\n";
+    assert_eq!(fired("cim/x.rs", turbofish), vec!["float-reduction"]);
+    let typed = "fn f(xs: &[f32]) -> f32 { let t: f32 = xs.iter().sum(); t }\n";
+    assert_eq!(fired("coordinator/x.rs", typed), vec!["float-reduction"]);
+}
+
+#[test]
+fn float_reduction_accepts_helpers_and_untyped_integer_sums() {
+    let good = r#"
+fn f(xs: &[f64]) -> f64 {
+    stats::sum_ordered(xs.iter().copied())
+}
+fn g(ns: &[u64]) -> u64 {
+    let total: u64 = ns.iter().sum();
+    total
+}
+"#;
+    assert!(fired("cim/x.rs", good).is_empty());
+    // Out-of-scope module and test code are exempt.
+    assert!(fired("util/x.rs", "fn f(xs: &[f64]) -> f64 { xs.iter().sum::<f64>() }\n").is_empty());
+    let in_test =
+        "#[cfg(test)]\nmod tests {\n    fn t(xs: &[f64]) -> f64 { xs.iter().sum::<f64>() }\n}\n";
+    assert!(fired("cim/x.rs", in_test).is_empty());
+}
+
+#[test]
+fn float_reduction_respects_justified_allow() {
+    let annotated = r#"
+fn f(cells: &[f64]) -> f64 {
+    // detlint: allow(float-reduction) -- sequential sum over a fixed cell order
+    let total: f64 = cells.iter().sum();
+    total
+}
+"#;
+    assert!(fired("cim/x.rs", annotated).is_empty());
+}
+
+#[test]
+fn unsafe_justified_flags_bare_unsafe() {
+    let bad = r#"
+fn f(p: *mut u32) {
+    unsafe {
+        *p = 1;
+    }
+}
+"#;
+    assert_eq!(fired("util/x.rs", bad), vec!["unsafe-justified"]);
+}
+
+#[test]
+fn unsafe_justified_accepts_safety_comment() {
+    let good = r#"
+fn f(p: *mut u32) {
+    // SAFETY: p points at a live, exclusively-owned u32.
+    unsafe {
+        *p = 1;
+    }
+}
+struct P(*mut u8);
+// SAFETY: P is only handed to workers that write disjoint indices.
+#[allow(unsafe_code)]
+unsafe impl Sync for P {}
+"#;
+    assert!(fired("util/x.rs", good).is_empty());
+    // `unsafe_code` in lint attributes is not the `unsafe` keyword.
+    assert!(fired("util/x.rs", "#![deny(unsafe_code)]\n").is_empty());
+}
+
+#[test]
+fn unjustified_allow_is_itself_a_finding() {
+    let bare = "use std::collections::HashMap; // detlint: allow(unordered-iter)\n";
+    assert_eq!(fired("cim/x.rs", bare), vec!["unjustified-allow"]);
+}
+
+#[test]
+fn unknown_rule_in_allow_is_a_finding() {
+    let typo = "// detlint: allow(unordered-iters) -- oops\n";
+    assert_eq!(fired("cim/x.rs", typo), vec!["unknown-rule"]);
+}
+
+#[test]
+fn clean_fixture_stays_clean_end_to_end() {
+    let clean = r#"
+use std::collections::BTreeMap;
+
+pub fn energy(per_die: &BTreeMap<usize, f64>) -> f64 {
+    stats::sum_ordered(per_die.values().copied())
+}
+"#;
+    assert!(check_source("coordinator/x.rs", clean).is_empty());
+}

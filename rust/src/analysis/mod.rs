@@ -1,0 +1,119 @@
+//! Determinism-contract static analyzer (`crcim lint`).
+//!
+//! Every headline number this repo reproduces rests on the determinism
+//! hierarchy `seed → class pool → die → row tile → global column →
+//! conversion counter` staying bit-exact at any thread/shard/die/pool
+//! decomposition. This module enforces that contract *mechanically*: a
+//! dependency-free, lexer-level pass over the repo's own sources whose
+//! violations fail CI instead of surfacing as flaky-test archaeology.
+//!
+//! - [`scanner`] lexes each file into per-line code/comment/depth facts
+//!   (so rules never fire inside strings or comments, and test code is
+//!   excluded),
+//! - [`rules`] implements the six contract rules and the declared
+//!   lock-order table,
+//! - [`allowlist`] holds the wall-clock tier and parses
+//!   `// detlint: allow(<rule>) -- <why>` suppressions,
+//! - [`report`] renders stable, sorted text/JSON output.
+//!
+//! The dynamic companion — the schedule-perturbation harness in
+//! [`crate::util::pool::perturb`] — exercises the same orderings at run
+//! time: seeded yield injection at worker task boundaries, with tests
+//! proving zero-noise pipeline and stream logits bit-identical across
+//! perturbation seeds × thread grids.
+
+pub mod allowlist;
+pub mod report;
+pub mod rules;
+pub mod scanner;
+
+#[cfg(test)]
+mod fixtures;
+
+use std::fs;
+use std::path::{Path, PathBuf};
+
+pub use report::{Finding, Report};
+
+/// Lint one source file. `rel` is the path relative to the scan root,
+/// `/`-separated — rules use it for scoping (e.g. `cim/` vs `util/`).
+pub fn check_source(rel: &str, src: &str) -> Vec<Finding> {
+    let scanned = scanner::scan(src);
+    let mut findings = rules::check_file(rel, &scanned);
+    for allow in allowlist::collect_allows(&scanned) {
+        if !rules::RULES.contains(&allow.rule.as_str()) {
+            findings.push(Finding::new(
+                "unknown-rule",
+                rel,
+                allow.line,
+                format!(
+                    "detlint annotation names unknown rule '{}'; known rules: {:?}",
+                    allow.rule,
+                    rules::RULES
+                ),
+            ));
+            continue;
+        }
+        // The annotation suppresses findings on its own line or the line
+        // directly below (annotation-above-the-statement style).
+        findings
+            .retain(|f| !(f.rule == allow.rule && (f.line == allow.line || f.line == allow.line + 1)));
+        if !allow.justified {
+            findings.push(Finding::new(
+                "unjustified-allow",
+                rel,
+                allow.line,
+                format!(
+                    "detlint annotation for '{}' needs a '-- <why>' justification",
+                    allow.rule
+                ),
+            ));
+        }
+    }
+    findings
+}
+
+/// Lint every `*.rs` file under `root` (recursively), returning a sorted
+/// [`Report`]. Files are visited in sorted path order so output is
+/// stable regardless of directory-entry order.
+pub fn run_path(root: &Path) -> Result<Report, String> {
+    let mut files: Vec<(PathBuf, String)> = Vec::new();
+    collect_rs(root, Path::new(""), &mut files)?;
+    files.sort_by(|a, b| a.1.cmp(&b.1));
+    let mut report = Report { findings: Vec::new(), files_scanned: files.len() };
+    for (abs, rel) in &files {
+        let src = fs::read_to_string(abs)
+            .map_err(|e| format!("failed to read {}: {e}", abs.display()))?;
+        report.findings.extend(check_source(rel, &src));
+    }
+    report.sort();
+    Ok(report)
+}
+
+fn collect_rs(
+    root: &Path,
+    rel: &Path,
+    out: &mut Vec<(PathBuf, String)>,
+) -> Result<(), String> {
+    let dir = root.join(rel);
+    let entries =
+        fs::read_dir(&dir).map_err(|e| format!("failed to read dir {}: {e}", dir.display()))?;
+    for entry in entries {
+        let entry = entry.map_err(|e| format!("failed to read dir entry: {e}"))?;
+        let name = entry.file_name();
+        let sub = rel.join(&name);
+        let path = entry.path();
+        if path.is_dir() {
+            collect_rs(root, &sub, out)?;
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            // Normalize to `/` so rule scoping works on every platform.
+            let rel_str = sub
+                .components()
+                .map(|c| c.as_os_str().to_string_lossy())
+                .collect::<Vec<_>>()
+                .join("/");
+            out.push((path, rel_str));
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,113 @@
+//! Finding and report types for the determinism lint, with text and JSON
+//! renderers. Findings are sorted by (path, line, rule) so lint output is
+//! stable and diffable across runs and platforms.
+
+use crate::util::json::Json;
+
+/// One lint violation.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Finding {
+    /// Rule name (one of [`crate::analysis::rules::RULES`], or the
+    /// meta-rules `unjustified-allow` / `unknown-rule`).
+    pub rule: String,
+    /// Path of the offending file, relative to the scan root.
+    pub path: String,
+    /// 1-based line number.
+    pub line: usize,
+    /// Human-readable explanation.
+    pub message: String,
+}
+
+impl Finding {
+    pub fn new(rule: &str, path: &str, line: usize, message: String) -> Self {
+        Finding { rule: rule.to_string(), path: path.to_string(), line, message }
+    }
+}
+
+/// The outcome of a lint run over a file set.
+#[derive(Debug, Clone, Default)]
+pub struct Report {
+    pub findings: Vec<Finding>,
+    pub files_scanned: usize,
+}
+
+impl Report {
+    pub fn is_clean(&self) -> bool {
+        self.findings.is_empty()
+    }
+
+    /// Sort findings into the canonical (path, line, rule) order.
+    pub fn sort(&mut self) {
+        self.findings
+            .sort_by(|a, b| (&a.path, a.line, &a.rule).cmp(&(&b.path, b.line, &b.rule)));
+    }
+
+    /// `path:line: [rule] message` per finding, plus a summary line.
+    pub fn to_text(&self) -> String {
+        let mut s = String::new();
+        for f in &self.findings {
+            s.push_str(&format!("{}:{}: [{}] {}\n", f.path, f.line, f.rule, f.message));
+        }
+        s.push_str(&format!(
+            "determinism lint: {} finding(s) across {} file(s)\n",
+            self.findings.len(),
+            self.files_scanned
+        ));
+        s
+    }
+
+    /// Machine-readable form for CI artifacts and tooling.
+    pub fn to_json(&self) -> Json {
+        let findings = self
+            .findings
+            .iter()
+            .map(|f| {
+                let mut o = Json::obj();
+                o.set("rule", Json::str(f.rule.as_str()))
+                    .set("path", Json::str(f.path.as_str()))
+                    .set("line", Json::num(f.line as f64))
+                    .set("message", Json::str(f.message.as_str()));
+                Json::Obj(o)
+            })
+            .collect::<Vec<_>>();
+        let mut root = Json::obj();
+        root.set("files_scanned", Json::num(self.files_scanned as f64))
+            .set("finding_count", Json::num(self.findings.len() as f64))
+            .set("clean", Json::Bool(self.is_clean()))
+            .set("findings", Json::Arr(findings));
+        Json::Obj(root)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sorted_text_and_json_are_stable() {
+        let mut r = Report {
+            findings: vec![
+                Finding::new("wallclock", "b.rs", 9, "x".into()),
+                Finding::new("wallclock", "a.rs", 3, "y".into()),
+                Finding::new("lock-order", "a.rs", 3, "z".into()),
+            ],
+            files_scanned: 2,
+        };
+        r.sort();
+        assert_eq!(r.findings[0].rule, "lock-order");
+        assert_eq!(r.findings[2].path, "b.rs");
+        let text = r.to_text();
+        assert!(text.contains("a.rs:3: [lock-order] z"));
+        assert!(text.contains("3 finding(s) across 2 file(s)"));
+        let j = r.to_json();
+        assert_eq!(j.get_path("finding_count").and_then(|v| v.as_f64()), Some(3.0));
+        assert_eq!(j.get_path("clean").and_then(|v| v.as_bool()), Some(false));
+    }
+
+    #[test]
+    fn empty_report_is_clean() {
+        let r = Report { findings: vec![], files_scanned: 5 };
+        assert!(r.is_clean());
+        assert_eq!(r.to_json().get_path("clean").and_then(|v| v.as_bool()), Some(true));
+    }
+}

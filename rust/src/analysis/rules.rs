@@ -1,0 +1,414 @@
+//! The determinism-contract rules.
+//!
+//! Every rule runs over [`Scanned`] lines (comments/strings already
+//! stripped) and skips `#[cfg(test)]` code — tests are allowed to seed
+//! RNGs ad hoc, time things, and build whatever containers they like.
+//!
+//! | rule              | contract clause it enforces                        |
+//! |-------------------|----------------------------------------------------|
+//! | `rng-discipline`  | every `Rng` is keyed off the die seed hierarchy    |
+//! | `unordered-iter`  | no hash-ordered containers in compute/serving code |
+//! | `wallclock`       | wall clock only in the declared timing tier        |
+//! | `lock-order`      | nested `.lock()`s follow the declared total order  |
+//! | `float-reduction` | float accumulation goes through named helpers      |
+//! | `unsafe-justified`| every `unsafe` carries a `// SAFETY:` argument     |
+//!
+//! The pass is line-based by design: a violating construct split across
+//! lines in an unusual way can evade it, but every idiom the repo
+//! actually uses (and rustfmt produces) is covered, and the companion
+//! schedule-perturbation tests catch what slips through dynamically.
+
+use super::allowlist;
+use super::report::Finding;
+use super::scanner::Scanned;
+
+/// All rule names, in documentation order.
+pub const RULES: [&str; 6] = [
+    "rng-discipline",
+    "unordered-iter",
+    "wallclock",
+    "lock-order",
+    "float-reduction",
+    "unsafe-justified",
+];
+
+/// The declared lock-order table: a nested `.lock()` may only acquire a
+/// mutex that ranks *strictly later* than every lock already held in the
+/// same function body. Receivers are identified by the field/static name
+/// the `.lock()` is called on.
+///
+/// `PERTURB_GATE` (the schedule-perturbation serialization gate in
+/// `util::pool::perturb`) wraps entire perturbed sections, so it orders
+/// before everything; `inner` (the `WorkQueue` mutex) is a leaf.
+pub const LOCK_ORDER: [&str; 7] = [
+    "PERTURB_GATE", // perturbation harness gate — held around whole sections
+    "live_conns",   // server connection registry
+    "outbox",       // server response outbox
+    "pending",      // server batch queue
+    "stream",       // streaming tier state
+    "ledger",       // power/latency ledger
+    "inner",        // WorkQueue state — leaf, never holds another lock
+];
+
+/// Modules whose compute can reach conversion order, output assembly, or
+/// ledger aggregation — the scope of `unordered-iter` and
+/// `float-reduction`.
+fn in_compute(rel: &str) -> bool {
+    rel.starts_with("cim/") || rel.starts_with("coordinator/") || rel.starts_with("vit/")
+}
+
+/// Run every rule over one scanned file. `rel` is the path relative to
+/// the scan root, `/`-separated.
+pub fn check_file(rel: &str, scanned: &Scanned) -> Vec<Finding> {
+    let mut out = Vec::new();
+    rng_discipline(rel, scanned, &mut out);
+    unordered_iter(rel, scanned, &mut out);
+    wallclock(rel, scanned, &mut out);
+    lock_order(rel, scanned, &mut out);
+    float_reduction(rel, scanned, &mut out);
+    unsafe_justified(rel, scanned, &mut out);
+    out
+}
+
+/// Rule 1: `Rng::new(...)` outside `util/rng.rs` must be keyed off the
+/// seed hierarchy — the argument must mention a seed (or use the
+/// `Rng::salted` / `substream` constructors, which never trip this
+/// check). `Rng::new(42)`-style ad-hoc seeding silently forks the
+/// determinism tree and is unreproducible from the die seed.
+fn rng_discipline(rel: &str, scanned: &Scanned, out: &mut Vec<Finding>) {
+    if rel == "util/rng.rs" {
+        return;
+    }
+    for line in &scanned.lines {
+        if line.in_test {
+            continue;
+        }
+        let mut search = 0usize;
+        while let Some(pos) = line.code[search..].find("Rng::new(") {
+            let abs = search + pos;
+            let arg = line.code[abs + "Rng::new(".len()..].to_lowercase();
+            if !arg.contains("seed") && !arg.contains("salted") {
+                out.push(Finding::new(
+                    "rng-discipline",
+                    rel,
+                    line.number,
+                    "Rng::new with an argument not derived from the seed hierarchy; \
+                     use Rng::salted(seed, salt) or a substream"
+                        .to_string(),
+                ));
+            }
+            search = abs + "Rng::new(".len();
+        }
+    }
+}
+
+/// Rule 2: no `HashMap`/`HashSet` in compute/serving modules. Hash
+/// iteration order is randomized per process, so any walk over one can
+/// leak nondeterminism into conversion order or output assembly; use
+/// `BTreeMap`/`BTreeSet` or annotate
+/// `// detlint: allow(unordered-iter) -- <why>`.
+fn unordered_iter(rel: &str, scanned: &Scanned, out: &mut Vec<Finding>) {
+    if !in_compute(rel) {
+        return;
+    }
+    for line in &scanned.lines {
+        if line.in_test {
+            continue;
+        }
+        if line.code.contains("HashMap") || line.code.contains("HashSet") {
+            out.push(Finding::new(
+                "unordered-iter",
+                rel,
+                line.number,
+                "hash-ordered container in a compute/serving module; \
+                 use BTreeMap/BTreeSet or a sorted collection"
+                    .to_string(),
+            ));
+        }
+    }
+}
+
+/// Rule 3: `Instant::now` / `SystemTime` only in the allowlisted timing
+/// tier. Anywhere else, wall-clock reads can steer computed values and
+/// break replay.
+fn wallclock(rel: &str, scanned: &Scanned, out: &mut Vec<Finding>) {
+    if allowlist::wallclock_allowed(rel) {
+        return;
+    }
+    for line in &scanned.lines {
+        if line.in_test {
+            continue;
+        }
+        if line.code.contains("Instant::now") || line.code.contains("SystemTime") {
+            out.push(Finding::new(
+                "wallclock",
+                rel,
+                line.number,
+                "wall-clock read outside the allowlisted timing tier".to_string(),
+            ));
+        }
+    }
+}
+
+/// A lock currently held inside the function body being walked.
+struct Held {
+    rank: usize,
+    /// Brace depth of the binding line; released when depth drops below.
+    depth: usize,
+    var: String,
+}
+
+/// Rule 4: every `.lock()` receiver must be in [`LOCK_ORDER`], and a
+/// nested acquisition must rank strictly after every lock already held.
+/// Guard lifetimes are tracked structurally: a `let g = x.lock()...;`
+/// binding holds until its block closes (or `drop(g)`); a `.lock()` used
+/// as a statement temporary is acquire-and-release on that line.
+fn lock_order(rel: &str, scanned: &Scanned, out: &mut Vec<Finding>) {
+    let mut held: Vec<Held> = Vec::new();
+    for line in &scanned.lines {
+        if line.in_test {
+            held.clear();
+            continue;
+        }
+        held.retain(|h| line.depth_before >= h.depth);
+
+        // Explicit drops release bindings early.
+        if let Some(pos) = line.code.find("drop(") {
+            let inner: String = line.code[pos + "drop(".len()..]
+                .chars()
+                .take_while(|c| c.is_alphanumeric() || *c == '_')
+                .collect();
+            held.retain(|h| h.var != inner);
+        }
+
+        let mut search = 0usize;
+        let mut first_on_line = true;
+        while let Some(pos) = line.code[search..].find(".lock(") {
+            let abs = search + pos;
+            search = abs + ".lock(".len();
+            let recv = receiver_name(&line.code[..abs]);
+            let Some(rank) = LOCK_ORDER.iter().position(|&n| n == recv) else {
+                out.push(Finding::new(
+                    "lock-order",
+                    rel,
+                    line.number,
+                    format!("lock receiver '{recv}' is not in the declared lock-order table"),
+                ));
+                first_on_line = false;
+                continue;
+            };
+            for h in &held {
+                if rank <= h.rank {
+                    out.push(Finding::new(
+                        "lock-order",
+                        rel,
+                        line.number,
+                        format!(
+                            "acquires '{}' (rank {}) while holding '{}' (rank {}); \
+                             the declared order is {:?}",
+                            recv,
+                            rank,
+                            LOCK_ORDER[h.rank],
+                            h.rank,
+                            LOCK_ORDER
+                        ),
+                    ));
+                }
+            }
+            let trimmed = line.code.trim_start();
+            if first_on_line && trimmed.starts_with("let ") && guard_is_bound(&line.code[abs..]) {
+                held.push(Held {
+                    rank,
+                    depth: line.depth_before,
+                    var: let_binding_name(trimmed),
+                });
+            }
+            first_on_line = false;
+        }
+    }
+}
+
+/// Last identifier before `.lock(` — the field or static the mutex lives
+/// in (`self.outbox.lock()` → `outbox`, `PERTURB_GATE.lock()` →
+/// `PERTURB_GATE`).
+fn receiver_name(before: &str) -> String {
+    let tail: String = before
+        .chars()
+        .rev()
+        .take_while(|c| c.is_alphanumeric() || *c == '_')
+        .collect();
+    let name: String = tail.chars().rev().collect();
+    if name.is_empty() {
+        "<expr>".to_string()
+    } else {
+        name
+    }
+}
+
+/// Given the code from `.lock(` to end of line, decide whether the guard
+/// itself is what gets bound: after `.lock()` and any chained
+/// `.unwrap()`/`.expect()`/`.unwrap_or_else(...)`, a bound guard ends the
+/// statement, while a temporary keeps chaining (`.form_wave(...)` etc.).
+fn guard_is_bound(from_lock: &str) -> bool {
+    let mut rest = match from_lock.strip_prefix(".lock()") {
+        Some(r) => r,
+        None => return false, // `.lock(...)` with args — not the std idiom
+    };
+    loop {
+        let is_adapter = rest.starts_with(".unwrap") || rest.starts_with(".expect");
+        if !is_adapter {
+            break;
+        }
+        let Some(open) = rest.find('(') else { break };
+        let mut depth = 0i32;
+        let mut end = None;
+        for (i, c) in rest[open..].char_indices() {
+            match c {
+                '(' => depth += 1,
+                ')' => {
+                    depth -= 1;
+                    if depth == 0 {
+                        end = Some(open + i + 1);
+                        break;
+                    }
+                }
+                _ => {}
+            }
+        }
+        match end {
+            Some(e) => rest = &rest[e..],
+            None => break,
+        }
+    }
+    !rest.trim_start().starts_with('.')
+}
+
+/// `let mut name = ...` → `name`.
+fn let_binding_name(trimmed: &str) -> String {
+    let after_let = trimmed.trim_start_matches("let ").trim_start();
+    let after_mut = after_let.strip_prefix("mut ").unwrap_or(after_let);
+    after_mut
+        .chars()
+        .take_while(|c| c.is_alphanumeric() || *c == '_')
+        .collect()
+}
+
+/// Rule 5: raw typed float accumulation in compute modules. A
+/// `.sum::<f64>()` (or a `.sum()` with a `: f64` binding on the same
+/// line) is exactly the construct whose order a parallel refactor can
+/// silently change; route it through `util::stats::sum_ordered` (or the
+/// tiling executor's digital accumulators), or annotate
+/// `// detlint: allow(float-reduction) -- <why>`.
+fn float_reduction(rel: &str, scanned: &Scanned, out: &mut Vec<Finding>) {
+    if !in_compute(rel) {
+        return;
+    }
+    for line in &scanned.lines {
+        if line.in_test {
+            continue;
+        }
+        let code = &line.code;
+        let turbofish = code.contains(".sum::<f64>()") || code.contains(".sum::<f32>()");
+        let typed_binding =
+            code.contains(".sum()") && (code.contains(": f64") || code.contains(": f32"));
+        if turbofish || typed_binding {
+            out.push(Finding::new(
+                "float-reduction",
+                rel,
+                line.number,
+                "raw float accumulation in a compute module; \
+                 use util::stats::sum_ordered or an approved accumulator"
+                    .to_string(),
+            ));
+        }
+    }
+}
+
+/// Rule 6: every `unsafe` needs a `// SAFETY:` argument on the same line
+/// or in the comment block directly above (attribute lines between the
+/// comment and the `unsafe` are fine).
+fn unsafe_justified(rel: &str, scanned: &Scanned, out: &mut Vec<Finding>) {
+    for (idx, line) in scanned.lines.iter().enumerate() {
+        if line.in_test || !contains_word(&line.code, "unsafe") {
+            continue;
+        }
+        if line.comment.contains("SAFETY") {
+            continue;
+        }
+        let mut justified = false;
+        let mut j = idx;
+        while j > 0 {
+            j -= 1;
+            let prev = &scanned.lines[j];
+            if prev.comment.contains("SAFETY") {
+                justified = true;
+                break;
+            }
+            let t = prev.code.trim();
+            if !t.is_empty() && !t.starts_with("#[") {
+                break;
+            }
+        }
+        if !justified {
+            out.push(Finding::new(
+                "unsafe-justified",
+                rel,
+                line.number,
+                "unsafe without a `// SAFETY:` justification".to_string(),
+            ));
+        }
+    }
+}
+
+/// Word-boundary search: matches `unsafe {` but not `unsafe_code`.
+fn contains_word(code: &str, word: &str) -> bool {
+    let bytes = code.as_bytes();
+    let mut search = 0usize;
+    while let Some(pos) = code[search..].find(word) {
+        let abs = search + pos;
+        let before_ok = abs == 0 || {
+            let c = bytes[abs - 1] as char;
+            !c.is_alphanumeric() && c != '_'
+        };
+        let after = abs + word.len();
+        let after_ok = after >= bytes.len() || {
+            let c = bytes[after] as char;
+            !c.is_alphanumeric() && c != '_'
+        };
+        if before_ok && after_ok {
+            return true;
+        }
+        search = abs + word.len();
+    }
+    false
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn receiver_name_takes_last_segment() {
+        assert_eq!(receiver_name("self.live_conns"), "live_conns");
+        assert_eq!(receiver_name("        q.inner"), "inner");
+        assert_eq!(receiver_name("PERTURB_GATE"), "PERTURB_GATE");
+        assert_eq!(receiver_name("foo()"), "<expr>");
+    }
+
+    #[test]
+    fn guard_binding_detection() {
+        assert!(guard_is_bound(".lock().unwrap();"));
+        assert!(guard_is_bound(".lock().unwrap_or_else(|e| e.into_inner());"));
+        assert!(guard_is_bound(".lock().expect(\"\");"));
+        assert!(!guard_is_bound(".lock().unwrap().form_wave(now);"));
+        assert!(!guard_is_bound(".lock().unwrap().items.pop_front()"));
+    }
+
+    #[test]
+    fn word_boundaries_for_unsafe() {
+        assert!(contains_word("unsafe {", "unsafe"));
+        assert!(contains_word("let x = unsafe { y };", "unsafe"));
+        assert!(!contains_word("#![deny(unsafe_code)]", "unsafe"));
+        assert!(!contains_word("my_unsafe_helper()", "unsafe"));
+    }
+}

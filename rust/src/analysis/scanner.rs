@@ -1,0 +1,330 @@
+//! Lexer-level source scanner for the determinism lint.
+//!
+//! The lint deliberately avoids a full Rust parser (no `syn` in the
+//! vendored crate set, and the rules only need token-level facts). This
+//! scanner does the one thing a grep cannot: it walks the source
+//! character-by-character tracking string/char/comment state, so rules
+//! never fire on text inside a string literal or a comment, and it
+//! tracks brace depth plus `#[cfg(test)]` ranges so rules can skip test
+//! code.
+//!
+//! Output is one [`SourceLine`] per input line carrying:
+//! - `code`: the line with comments removed and string/char-literal
+//!   bodies blanked (quotes kept as `""` markers),
+//! - `comment`: the comment text on that line (line + block comments),
+//!   which is where `detlint: allow(...)` annotations and `SAFETY:`
+//!   justifications live,
+//! - brace depth before/after the line,
+//! - `in_test`: whether the line sits under a `#[cfg(test)]` item.
+
+/// One physical source line, lexed.
+#[derive(Debug, Clone)]
+pub struct SourceLine {
+    /// 1-based line number.
+    pub number: usize,
+    /// Code with comments stripped and string/char bodies blanked.
+    pub code: String,
+    /// Comment text on this line (without the `//` / `/*` markers).
+    pub comment: String,
+    /// Brace depth at the start of the line.
+    pub depth_before: usize,
+    /// Brace depth at the end of the line.
+    pub depth_after: usize,
+    /// True when the line is inside (or is) a `#[cfg(test)]`-gated item.
+    pub in_test: bool,
+}
+
+/// A fully scanned source file.
+#[derive(Debug, Clone)]
+pub struct Scanned {
+    pub lines: Vec<SourceLine>,
+}
+
+enum Mode {
+    Code,
+    LineComment,
+    /// Nested block comments: `/* /* */ */` — depth counts opens.
+    BlockComment(u32),
+    Str,
+    /// Raw string with this many `#` marks in the delimiter.
+    RawStr(u32),
+    CharLit,
+}
+
+/// Scan a source file into per-line lexical facts.
+pub fn scan(src: &str) -> Scanned {
+    let chars: Vec<char> = src.chars().collect();
+    let mut lines: Vec<SourceLine> = Vec::new();
+    let mut code = String::new();
+    let mut comment = String::new();
+    let mut depth: usize = 0;
+    let mut prev_depth: usize = 0;
+    let mut number = 1usize;
+    let mut mode = Mode::Code;
+    let mut i = 0usize;
+
+    while i < chars.len() {
+        let c = chars[i];
+        if c == '\n' {
+            if matches!(mode, Mode::LineComment) {
+                mode = Mode::Code;
+            }
+            lines.push(SourceLine {
+                number,
+                code: std::mem::take(&mut code),
+                comment: std::mem::take(&mut comment),
+                depth_before: prev_depth,
+                depth_after: depth,
+                in_test: false,
+            });
+            prev_depth = depth;
+            number += 1;
+            i += 1;
+            continue;
+        }
+        match mode {
+            Mode::Code => {
+                if c == '/' && chars.get(i + 1) == Some(&'/') {
+                    mode = Mode::LineComment;
+                    i += 2;
+                    continue;
+                }
+                if c == '/' && chars.get(i + 1) == Some(&'*') {
+                    mode = Mode::BlockComment(1);
+                    i += 2;
+                    continue;
+                }
+                if c == '"' {
+                    code.push_str("\"\"");
+                    mode = Mode::Str;
+                    i += 1;
+                    continue;
+                }
+                if c == 'r' || c == 'b' {
+                    // Raw-string start (`r"`, `r#"`, `br"`), but only when
+                    // the r/b is not the tail of an identifier like `var`.
+                    let prev_ident =
+                        i > 0 && (chars[i - 1].is_alphanumeric() || chars[i - 1] == '_');
+                    if !prev_ident {
+                        let mut j = i;
+                        if chars.get(j) == Some(&'b') {
+                            j += 1;
+                        }
+                        if chars.get(j) == Some(&'r') {
+                            j += 1;
+                            let mut hashes = 0u32;
+                            while chars.get(j) == Some(&'#') {
+                                hashes += 1;
+                                j += 1;
+                            }
+                            if chars.get(j) == Some(&'"') {
+                                code.push_str("\"\"");
+                                mode = Mode::RawStr(hashes);
+                                i = j + 1;
+                                continue;
+                            }
+                        }
+                    }
+                    code.push(c);
+                    i += 1;
+                    continue;
+                }
+                if c == '\'' {
+                    // Char literal (`'x'`, `'\n'`) vs lifetime (`'a`).
+                    let escaped = chars.get(i + 1) == Some(&'\\');
+                    let closes = chars.get(i + 2) == Some(&'\'');
+                    if escaped || closes {
+                        mode = Mode::CharLit;
+                        i += 1;
+                        continue;
+                    }
+                    code.push('\'');
+                    i += 1;
+                    continue;
+                }
+                if c == '{' {
+                    depth += 1;
+                }
+                if c == '}' {
+                    depth = depth.saturating_sub(1);
+                }
+                code.push(c);
+                i += 1;
+            }
+            Mode::LineComment => {
+                comment.push(c);
+                i += 1;
+            }
+            Mode::BlockComment(d) => {
+                if c == '/' && chars.get(i + 1) == Some(&'*') {
+                    mode = Mode::BlockComment(d + 1);
+                    i += 2;
+                    continue;
+                }
+                if c == '*' && chars.get(i + 1) == Some(&'/') {
+                    mode = if d == 1 { Mode::Code } else { Mode::BlockComment(d - 1) };
+                    i += 2;
+                    continue;
+                }
+                comment.push(c);
+                i += 1;
+            }
+            Mode::Str => {
+                if c == '\\' {
+                    // Skip the escaped char, but never swallow a newline so
+                    // line numbering stays exact for multi-line strings.
+                    i += if chars.get(i + 1) == Some(&'\n') { 1 } else { 2 };
+                    continue;
+                }
+                if c == '"' {
+                    mode = Mode::Code;
+                }
+                i += 1;
+            }
+            Mode::RawStr(h) => {
+                if c == '"' {
+                    let mut closes = true;
+                    for k in 0..h as usize {
+                        if chars.get(i + 1 + k) != Some(&'#') {
+                            closes = false;
+                            break;
+                        }
+                    }
+                    if closes {
+                        mode = Mode::Code;
+                        i += 1 + h as usize;
+                        continue;
+                    }
+                }
+                i += 1;
+            }
+            Mode::CharLit => {
+                if c == '\\' {
+                    i += if chars.get(i + 1) == Some(&'\n') { 1 } else { 2 };
+                    continue;
+                }
+                if c == '\'' {
+                    mode = Mode::Code;
+                }
+                i += 1;
+            }
+        }
+    }
+    if !code.is_empty() || !comment.is_empty() {
+        lines.push(SourceLine {
+            number,
+            code,
+            comment,
+            depth_before: prev_depth,
+            depth_after: depth,
+            in_test: false,
+        });
+    }
+
+    mark_test_ranges(&mut lines);
+    Scanned { lines }
+}
+
+/// Mark every line gated by `#[cfg(test)]`: the attribute line itself, the
+/// item it gates (a brace block held until depth returns, or a single
+/// `;`-terminated item), and everything inside.
+fn mark_test_ranges(lines: &mut [SourceLine]) {
+    // `pending` = saw the attribute, waiting for the gated item to open.
+    let mut pending = false;
+    // While Some(d): in a gated block opened at depth d.
+    let mut test_until: Option<usize> = None;
+
+    for line in lines.iter_mut() {
+        if let Some(d) = test_until {
+            line.in_test = true;
+            if line.depth_after <= d {
+                test_until = None;
+            }
+            continue;
+        }
+        if line.code.contains("#[cfg(test)]") {
+            line.in_test = true;
+            if line.depth_after > line.depth_before {
+                // `#[cfg(test)] mod tests {` on one line.
+                test_until = Some(line.depth_before);
+            } else if line.code.contains(';') {
+                // `#[cfg(test)] use ...;` — single gated item, done.
+            } else {
+                pending = true;
+            }
+            continue;
+        }
+        if pending {
+            line.in_test = true;
+            if line.depth_after > line.depth_before {
+                test_until = Some(line.depth_before);
+                pending = false;
+            } else if line.code.contains(';') {
+                pending = false;
+            }
+            // Otherwise: attribute/signature continuation — stay pending.
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn strips_comments_and_strings() {
+        let s = scan("let x = \"HashMap inside\"; // HashMap in comment\n");
+        assert_eq!(s.lines.len(), 1);
+        assert!(!s.lines[0].code.contains("HashMap"));
+        assert!(s.lines[0].comment.contains("HashMap in comment"));
+        assert!(s.lines[0].code.contains("let x = \"\";"));
+    }
+
+    #[test]
+    fn strips_raw_strings_and_char_literals() {
+        let s = scan("let r = r#\"Instant::now\"#; let c = '\\n'; let lt: &'a str = z;\n");
+        assert!(!s.lines[0].code.contains("Instant::now"));
+        assert!(s.lines[0].code.contains("&'a str"));
+    }
+
+    #[test]
+    fn tracks_nested_block_comments() {
+        let s = scan("a /* outer /* inner */ still */ b\nc\n");
+        assert_eq!(s.lines[0].code.trim(), "a  b");
+        assert_eq!(s.lines[1].code.trim(), "c");
+    }
+
+    #[test]
+    fn tracks_depth() {
+        let s = scan("fn f() {\n    if x {\n    }\n}\n");
+        assert_eq!(s.lines[0].depth_before, 0);
+        assert_eq!(s.lines[0].depth_after, 1);
+        assert_eq!(s.lines[1].depth_after, 2);
+        assert_eq!(s.lines[2].depth_after, 1);
+        assert_eq!(s.lines[3].depth_after, 0);
+    }
+
+    #[test]
+    fn marks_cfg_test_blocks() {
+        let src = "fn live() {}\n#[cfg(test)]\nmod tests {\n    fn t() {}\n}\nfn live2() {}\n";
+        let s = scan(src);
+        let flags: Vec<bool> = s.lines.iter().map(|l| l.in_test).collect();
+        assert_eq!(flags, vec![false, true, true, true, true, false]);
+    }
+
+    #[test]
+    fn marks_single_item_cfg_test() {
+        let src = "#[cfg(test)]\nuse crate::x::Y;\nfn live() {}\n";
+        let s = scan(src);
+        let flags: Vec<bool> = s.lines.iter().map(|l| l.in_test).collect();
+        assert_eq!(flags, vec![true, true, false]);
+    }
+
+    #[test]
+    fn multiline_string_keeps_line_numbers() {
+        let s = scan("let a = \"line one\nline two\";\nlet b = 1;\n");
+        assert_eq!(s.lines.len(), 3);
+        assert_eq!(s.lines[2].number, 3);
+        assert!(s.lines[2].code.contains("let b = 1;"));
+    }
+}

@@ -51,7 +51,7 @@ impl ConventionalColumn {
         let mut p2 = p.clone();
         p2.seed ^= 0xDAC0_0001;
         let dac_bank = CapacitorBank::sample(&p2, index);
-        let root = Rng::new(p.seed ^ 0xC047_E44B);
+        let root = Rng::salted(p.seed, 0xC047_E44B);
         let mut crng = root.substream(0xBA5E, index as u64);
         // Same physical comparator as CR-CIM, but the signal reaching it
         // is attenuated 2×, so in signal-LSB units its noise doubles.

@@ -56,6 +56,7 @@ impl CurrentColumn {
     /// Read a MAC of `count` active cells (prefix pattern), returning the
     /// coarse ADC code.
     pub fn read_count(&self, count: usize, rng: &mut Rng) -> u32 {
+        // detlint: allow(float-reduction) -- sequential sum over the fixed row prefix, never parallel
         let i_sum: f64 = self.cell_factor[..count.min(self.rows())].iter().sum();
         let level = self.compress(i_sum / self.rows() as f64);
         let n = (1u32 << self.bits) as f64;

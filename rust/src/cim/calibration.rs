@@ -33,7 +33,7 @@ impl CalibrationTable {
     /// enough for the static curve to dominate.
     pub fn measure(column: &Column, mode: CbMode, trials: usize, threads: usize) -> Self {
         let levels = column.params.levels();
-        let root = Rng::new(column.params.seed ^ 0xCA11_B4A7);
+        let root = Rng::salted(column.params.seed, 0xCA11_B4A7);
         // Mean measured code for each driven count.
         let mean_code = parallel_map(levels, threads, |count| {
             let mut rng = root.substream(3, count as u64);

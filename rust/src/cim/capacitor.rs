@@ -59,6 +59,7 @@ impl CapacitorBank {
     /// Build from explicit normalized cell values (testing / what-if).
     pub fn from_cells(cells: Vec<f64>, bits: u32) -> Self {
         assert_eq!(cells.len(), 1usize << bits, "bank must have 2^bits cells");
+        // detlint: allow(float-reduction) -- sequential sum over the fixed cell order, never parallel
         let total: f64 = cells.iter().sum();
         // Binary grouping: cells[1..2] -> bit0, cells[2..4] -> bit1, ...
         // cells[2^b .. 2^(b+1)] -> bit b. cells[0] is the terminating dummy.

@@ -102,7 +102,7 @@ pub fn sweep_macro_noise(
         return Err(format!("w_bits {w_bits} exceeds macro columns {}", base.cols));
     }
     let rows = base.active_rows;
-    let mut trng = Rng::new(base.seed ^ 0x711E_5EED);
+    let mut trng = Rng::salted(base.seed, 0x711E_5EED);
     let lo = -(1i32 << (w_bits - 1));
     let hi = (1i32 << (w_bits - 1)) - 1;
     let span = (hi - lo + 1) as u64;

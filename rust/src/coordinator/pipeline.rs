@@ -55,7 +55,7 @@
 //! sequence; evicted/cold layers reprogram and restart their counters,
 //! exactly as a real reload rewrites the array.
 
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 
 use crate::cim::macro_::matvec_exact;
 use crate::cim::netstats::LayerClass;
@@ -273,7 +273,7 @@ impl ModelExecutor {
             total,
         );
         let stats = vec![LayerStats::default(); graph.layers.len()];
-        let pool_capacity: HashMap<usize, u64> = graph
+        let pool_capacity: BTreeMap<usize, u64> = graph
             .layers
             .iter()
             .map(|l| class_pool(l.shape.class))
@@ -307,7 +307,7 @@ impl ModelExecutor {
     /// The deterministic stand-in weight matrix of one graph layer
     /// (same draw for the macro walk and the reference walk).
     fn layer_weights(&self, layer: &GraphLayer) -> Vec<Vec<i32>> {
-        let root = Rng::new(self.params.seed ^ WEIGHT_SEED_SALT);
+        let root = Rng::salted(self.params.seed, WEIGHT_SEED_SALT);
         let mut rng = root.substream(0x0057_E167, layer.index as u64);
         let (lo, _) = layer.op.w_range();
         let span = 1u64 << layer.op.w_bits;

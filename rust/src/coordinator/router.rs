@@ -64,8 +64,8 @@ impl RoutePlan {
     /// Load imbalance: max/mean busy time (1.0 = perfect).
     pub fn imbalance(&self) -> f64 {
         let max = self.macro_busy_ns.iter().cloned().fold(0.0f64, f64::max);
-        let mean =
-            self.macro_busy_ns.iter().sum::<f64>() / self.macro_busy_ns.len().max(1) as f64;
+        let mean = crate::util::stats::sum_ordered(self.macro_busy_ns.iter().copied())
+            / self.macro_busy_ns.len().max(1) as f64;
         if mean == 0.0 {
             1.0
         } else {

@@ -93,8 +93,8 @@ pub fn kernel_noise_sigma_for_row_tiles(
     w_bits: u32,
     sigma_read_lsb: f64,
 ) -> f64 {
-    let sa: f64 = (0..a_bits).map(|a| 4f64.powi(a as i32)).sum();
-    let sb: f64 = (0..w_bits).map(|b| 4f64.powi(b as i32)).sum();
+    let sa = crate::util::stats::sum_ordered((0..a_bits).map(|a| 4f64.powi(a as i32)));
+    let sb = crate::util::stats::sum_ordered((0..w_bits).map(|b| 4f64.powi(b as i32)));
     sigma_read_lsb * (row_tiles.max(1) as f64 * sa * sb).sqrt()
 }
 

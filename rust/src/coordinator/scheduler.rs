@@ -22,13 +22,14 @@
 //! inferences are priced by the warm pass, not a phantom per-pass
 //! reload of the whole model.
 
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 
 use crate::cim::energy::EnergyModel;
 use crate::cim::netstats::LayerClass;
 use crate::cim::params::MacroParams;
 #[cfg(test)]
 use crate::cim::params::CbMode;
+use crate::util::stats;
 use crate::vit::graph::ModelGraph;
 use crate::vit::plan::OperatingPoint;
 use crate::vit::LinearShape;
@@ -69,9 +70,11 @@ struct ResidentEntry<B> {
 /// are per pool and per die (each die of a pool holds a full copy of
 /// each resident layer, so the die count cancels out).
 pub struct ResidentLru<B> {
-    entries: HashMap<(usize, usize), ResidentEntry<B>>,
-    pool_bits: HashMap<usize, u64>,
-    capacity: HashMap<usize, u64>,
+    // BTreeMaps, not hash maps: victim selection iterates `entries`, so
+    // the tie-break order must be deterministic (detlint: unordered-iter).
+    entries: BTreeMap<(usize, usize), ResidentEntry<B>>,
+    pool_bits: BTreeMap<usize, u64>,
+    capacity: BTreeMap<usize, u64>,
     tick: u64,
     evictions: u64,
 }
@@ -79,10 +82,10 @@ pub struct ResidentLru<B> {
 impl<B> ResidentLru<B> {
     /// A cache with the given per-pool capacities [bits] (a pool absent
     /// from the map has capacity 0 — nothing is ever retained for it).
-    pub fn new(capacity: HashMap<usize, u64>) -> Self {
+    pub fn new(capacity: BTreeMap<usize, u64>) -> Self {
         ResidentLru {
-            entries: HashMap::new(),
-            pool_bits: HashMap::new(),
+            entries: BTreeMap::new(),
+            pool_bits: BTreeMap::new(),
             capacity,
             tick: 0,
             evictions: 0,
@@ -163,7 +166,7 @@ impl<B> ResidentLru<B> {
 /// periodic by then (all-fits → all hit; over-budget cycling → the
 /// classic LRU zero-hit steady state).
 pub fn lru_steady_hits(items: &[(usize, u64)], capacity: impl Fn(usize) -> u64) -> Vec<bool> {
-    let caps: HashMap<usize, u64> =
+    let caps: BTreeMap<usize, u64> =
         items.iter().map(|&(pool, _)| (pool, capacity(pool))).collect();
     let mut cache: ResidentLru<()> = ResidentLru::new(caps);
     let mut hits = vec![false; items.len()];
@@ -275,7 +278,7 @@ impl PipelinePlan {
             total.add(&plan);
             layers.push(LayerTiming { name, reload_ns, compute_ns: plan.latency_ns, resident });
         }
-        let serial_ns: f64 = layers.iter().map(|t| t.reload_ns + t.compute_ns).sum();
+        let serial_ns = stats::sum_ordered(layers.iter().map(|t| t.reload_ns + t.compute_ns));
         fn double_buffer_fold(layers: &[LayerTiming], reload: impl Fn(&LayerTiming) -> f64) -> f64 {
             let mut ns = layers.first().map(&reload).unwrap_or(0.0);
             for (i, t) in layers.iter().enumerate() {
@@ -468,7 +471,7 @@ impl Scheduler {
             .iter()
             .map(|l| (class_pool(l.shape.class), Self::layer_weight_bits(&l.shape, l.op)))
             .collect();
-        let caps: HashMap<usize, u64> = items
+        let caps: BTreeMap<usize, u64> = items
             .iter()
             .map(|&(pool, _)| (pool, self.pool_capacity_bits(graph, pool)))
             .collect();
@@ -511,7 +514,7 @@ impl Scheduler {
     pub fn plan_stream(&self, graph: &ModelGraph, wave_tokens: usize) -> StreamPlan {
         let wt = wave_tokens.max(1);
         let pp = self.plan_graph(&graph.with_stream_m(wt));
-        let conv: f64 = pp.layers.iter().map(|t| t.compute_ns).sum();
+        let conv = stats::sum_ordered(pp.layers.iter().map(|t| t.compute_ns));
         let warm = pp.warm_pipelined_ns;
         let (tokens_per_s, die_utilization) = if warm > 0.0 {
             (wt as f64 / (warm * 1e-9), conv / warm)

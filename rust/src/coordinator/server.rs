@@ -29,7 +29,7 @@
 //! pipeline, accounts costs in the Ledger, and writes responses back
 //! through per-connection response channels.
 
-use std::collections::{HashMap, HashSet, VecDeque};
+use std::collections::{BTreeMap, BTreeSet, VecDeque};
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
@@ -69,7 +69,7 @@ pub struct InferencePayload {
 }
 
 /// Response sender side: per-connection outbox.
-type Outbox = Arc<Mutex<HashMap<u64, Vec<String>>>>;
+type Outbox = Arc<Mutex<BTreeMap<u64, Vec<String>>>>;
 
 /// The batch executor abstraction (so tests can run without PJRT).
 /// Deliberately NOT `Send`: PJRT executables are single-threaded, so the
@@ -132,7 +132,7 @@ pub struct Server {
     /// Open connections. The executor only stages responses for live
     /// connections, so a client that disconnects with requests in flight
     /// cannot leak outbox entries (the old leak's remaining race).
-    live_conns: Mutex<HashSet<u64>>,
+    live_conns: Mutex<BTreeSet<u64>>,
     batcher: Batcher,
     /// The token-level streaming tier: per-token admission queue,
     /// conversion-wave formation and out-of-order reassembly. Connection
@@ -148,12 +148,12 @@ impl Server {
     pub fn new(cfg: &ServerConfig) -> Result<Self, String> {
         Ok(Server {
             pending: Arc::new(Mutex::new(VecDeque::new())),
-            outbox: Arc::new(Mutex::new(HashMap::new())),
+            outbox: Arc::new(Mutex::new(BTreeMap::new())),
             ledger: Arc::new(Mutex::new(Ledger::new())),
             shutdown: Arc::new(AtomicBool::new(false)),
             next_conn: AtomicU64::new(1),
             next_req: AtomicU64::new(1),
-            live_conns: Mutex::new(HashSet::new()),
+            live_conns: Mutex::new(BTreeSet::new()),
             batcher: Batcher::new(cfg.batch_sizes.clone(), cfg.max_wait)?,
             stream: Mutex::new(TokenStream::new(&StreamConfig {
                 wave_tokens: cfg.wave_tokens,
@@ -410,7 +410,7 @@ impl Server {
     /// live (client hung up while the batch ran). Lock order (live before
     /// outbox) matches `close_conn`, so a connection closed concurrently
     /// can never gain an outbox entry after its removal. Responses are
-    /// collected up front so the locks only guard HashMap pushes, not
+    /// collected up front so the locks only guard outbox pushes, not
     /// response construction.
     fn stage_responses(&self, responses: impl Iterator<Item = (u64, String)>) {
         let responses: Vec<(u64, String)> = responses.collect();

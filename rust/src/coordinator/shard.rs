@@ -281,7 +281,7 @@ impl SimExecutor {
         if op.w_bits == 0 || op.w_bits > 16 {
             return Err(format!("w_bits {} out of range 1..=16", op.w_bits));
         }
-        let mut rng = crate::util::rng::Rng::new(params.seed ^ 0x51AC_0E5E);
+        let mut rng = crate::util::rng::Rng::salted(params.seed, 0x51AC_0E5E);
         let (lo, _) = op.w_range();
         let span = 1u64 << op.w_bits;
         let w: Vec<Vec<i32>> = (0..k)

@@ -64,7 +64,7 @@
 //! documented in `docs/SERVING.md`; the occupancy/latency planning model
 //! lives in [`Scheduler::plan_stream`](super::scheduler::Scheduler::plan_stream).
 
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 use std::time::{Duration, Instant};
 
 use crate::util::stats::percentile;
@@ -196,7 +196,7 @@ pub struct TokenStream {
     /// depth-fair `(token_index, req_seq)` key and the deadline scans
     /// for the oldest arrival.
     queue: Vec<TokenItem>,
-    requests: HashMap<u64, StreamRequest>,
+    requests: BTreeMap<u64, StreamRequest>,
     /// Next request sequence number (assigned under the stream lock so
     /// the queue is totally ordered even when connections race).
     next_seq: u64,
@@ -221,7 +221,7 @@ impl TokenStream {
             policy,
             wave_tokens: cfg.wave_tokens,
             queue: Vec::new(),
-            requests: HashMap::new(),
+            requests: BTreeMap::new(),
             next_seq: 1,
             executing: 0,
             waves: 0,

@@ -62,7 +62,22 @@
 //! because the `xla` / `anyhow` crates are only present in images that
 //! vendor them; the simulator, coordinator and metrics layers are
 //! dependency-free.
+//!
+//! The contract above is *enforced mechanically* by the [`analysis`]
+//! module (`crcim lint`): six lexer-level rules — RNG discipline, no
+//! hash-ordered containers in compute modules, wall-clock hygiene, a
+//! declared lock-order table, fixed-order float reduction, and
+//! `SAFETY`-justified `unsafe` — plus the schedule-perturbation harness
+//! in [`util::pool::perturb`] that proves results bit-identical under
+//! adversarial thread interleavings. See the "Determinism enforcement"
+//! section of `docs/ARCHITECTURE.md`.
 
+// Unsafe is deny (not forbid) because the scoped worker pool needs two
+// audited sites (`util::pool::SendPtr`); each carries a `// SAFETY:`
+// justification and a per-site `#[allow]`, checked by `crcim lint`.
+#![deny(unsafe_code)]
+
+pub mod analysis;
 pub mod cim;
 pub mod coordinator;
 pub mod metrics;

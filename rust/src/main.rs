@@ -4,37 +4,35 @@
 //!   characterize   Fig. 5-style column characterization (INL/noise/SQNR/CSNR)
 //!   summary        Fig. 6-style performance summary vs baselines
 //!   plan           SAC plan costs over the ViT workload (Fig. 4)
-//!   serve          TCP inference server over the AOT ViT artifacts
-//!   infer          one-shot batch inference over the eval set
+//!   lint           determinism-contract static analysis over the sources
+//!   serve          TCP inference server over the AOT ViT artifacts (pjrt)
+//!   infer          one-shot batch inference over the eval set (pjrt)
+//!
+//! The binary builds without the `pjrt` feature; `serve` and `infer`
+//! then print an actionable error instead of linking the XLA runtime.
 //!
 //! Run `crcim <cmd> --help` for per-command options.
 
-use std::path::PathBuf;
-use std::sync::Arc;
-use std::time::Duration;
-
-use anyhow::{anyhow, Result};
-
 use cr_cim::cim::params::{CbMode, MacroParams};
 use cr_cim::cim::{Column, EnergyModel};
-use cr_cim::coordinator::sac::{self, NoiseCalibration};
-use cr_cim::coordinator::server::{BatchExecutor, Server, ServerConfig};
-use cr_cim::coordinator::{PlanCost, Scheduler};
+use cr_cim::coordinator::sac;
+use cr_cim::coordinator::Scheduler;
 use cr_cim::metrics::{characterize, measure_csnr, sqnr_db, CharacterizeOpts, CsnrEnsemble};
-use cr_cim::runtime::{Manifest, Runtime, VitExecutable};
 use cr_cim::util::args::{ArgError, Args};
-use cr_cim::util::json::Json;
 use cr_cim::util::pool::default_threads;
 use cr_cim::vit::plan::PrecisionPlan;
 use cr_cim::vit::VitConfig;
-use cr_cim::workload::EvalSet;
+
+/// CLI error type: anything printable; `String` and io errors convert via `?`.
+type CliError = Box<dyn std::error::Error + Send + Sync + 'static>;
+type CliResult = Result<(), CliError>;
 
 fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();
     let (cmd, rest) = match argv.split_first() {
         Some((c, r)) => (c.clone(), r.to_vec()),
         None => {
-            eprintln!("usage: crcim <characterize|summary|plan|serve|infer> [options]");
+            eprintln!("usage: crcim <characterize|summary|plan|lint|serve|infer> [options]");
             std::process::exit(2);
         }
     };
@@ -42,6 +40,7 @@ fn main() {
         "characterize" => cmd_characterize(rest),
         "summary" => cmd_summary(rest),
         "plan" => cmd_plan(rest),
+        "lint" => cmd_lint(rest),
         "serve" => cmd_serve(rest),
         "infer" => cmd_infer(rest),
         other => {
@@ -56,24 +55,24 @@ fn main() {
         {
             std::process::exit(0);
         }
-        eprintln!("error: {e:#}");
+        eprintln!("error: {e}");
         std::process::exit(1);
     }
 }
 
-fn parse_or_help(args: Args, argv: Vec<String>) -> Result<Args> {
+fn parse_or_help(args: Args, argv: Vec<String>) -> Result<Args, CliError> {
     let usage = args.usage();
     match args.parse_from(argv) {
         Ok(a) => Ok(a),
         Err(ArgError::HelpRequested) => {
             println!("{usage}");
-            Err(anyhow::Error::new(ArgError::HelpRequested))
+            Err(Box::new(ArgError::HelpRequested))
         }
-        Err(e) => Err(anyhow!("{e}\n\n{usage}")),
+        Err(e) => Err(format!("{e}\n\n{usage}").into()),
     }
 }
 
-fn cmd_characterize(argv: Vec<String>) -> Result<()> {
+fn cmd_characterize(argv: Vec<String>) -> CliResult {
     let args = parse_or_help(
         Args::new("crcim characterize", "Fig.5 column characterization")
             .opt("column", "0", "column index to characterize")
@@ -84,8 +83,7 @@ fn cmd_characterize(argv: Vec<String>) -> Result<()> {
     )?;
     let mut params = MacroParams::default();
     params.seed = args.get_parse::<u64>("seed")?;
-    let col = Column::new(&params, args.get_parse::<usize>("column")?)
-        .map_err(|e| anyhow!(e))?;
+    let col = Column::new(&params, args.get_parse::<usize>("column")?)?;
     let opts = CharacterizeOpts {
         step: args.get_parse::<usize>("step")?,
         trials: args.get_parse::<usize>("trials")?,
@@ -107,7 +105,7 @@ fn cmd_characterize(argv: Vec<String>) -> Result<()> {
     Ok(())
 }
 
-fn cmd_summary(argv: Vec<String>) -> Result<()> {
+fn cmd_summary(argv: Vec<String>) -> CliResult {
     let _args = parse_or_help(Args::new("crcim summary", "Fig.6 performance summary"), argv)?;
     let params = MacroParams::default();
     let m06 = EnergyModel::cr_cim(&params.clone().with_supply(0.6));
@@ -128,7 +126,7 @@ fn cmd_summary(argv: Vec<String>) -> Result<()> {
     Ok(())
 }
 
-fn cmd_plan(argv: Vec<String>) -> Result<()> {
+fn cmd_plan(argv: Vec<String>) -> CliResult {
     let args = parse_or_help(
         Args::new("crcim plan", "SAC plan costs over the ViT workload")
             .opt("batch", "1", "inference batch size")
@@ -154,143 +152,204 @@ fn cmd_plan(argv: Vec<String>) -> Result<()> {
     Ok(())
 }
 
-/// PJRT-backed batch executor for the server.
-struct PjrtExecutor {
-    exe: VitExecutable,
-    cost: PlanCost,
-    sigma_attn: f32,
-    sigma_mlp: f32,
-    seed: i32,
-    image_floats: usize,
-}
-
-impl BatchExecutor for PjrtExecutor {
-    fn execute(&mut self, images: &[Vec<f32>]) -> std::result::Result<Vec<Vec<f32>>, String> {
-        let b = self.exe.batch;
-        let mut flat = vec![0f32; b * self.image_floats];
-        for (i, img) in images.iter().take(b).enumerate() {
-            if img.len() != self.image_floats {
-                return Err(format!(
-                    "image {i} has {} floats, want {}",
-                    img.len(),
-                    self.image_floats
-                ));
-            }
-            flat[i * self.image_floats..(i + 1) * self.image_floats].copy_from_slice(img);
-        }
-        self.seed = self.seed.wrapping_add(1);
-        let logits = self
-            .exe
-            .infer(&flat, self.seed, self.sigma_attn, self.sigma_mlp)
-            .map_err(|e| format!("{e:#}"))?;
-        let nc = self.exe.num_classes;
-        Ok((0..images.len().min(b)).map(|i| logits[i * nc..(i + 1) * nc].to_vec()).collect())
-    }
-
-    fn cost(&self) -> &PlanCost {
-        &self.cost
-    }
-
-    fn num_classes(&self) -> usize {
-        self.exe.num_classes
-    }
-}
-
-fn load_vit(artifacts: &str, name: &str) -> Result<(VitExecutable, Manifest)> {
-    let dir = PathBuf::from(artifacts);
-    let manifest = Manifest::load(&dir).map_err(|e| anyhow!(e))?;
-    manifest.check_files().map_err(|e| anyhow!(e))?;
-    let art = manifest.get(name).ok_or_else(|| anyhow!("no artifact '{name}'"))?;
-    let rt = Runtime::cpu()?;
-    let exe = VitExecutable::new(&rt, art)?;
-    Ok((exe, manifest))
-}
-
-fn paper_cost(batch: usize) -> PlanCost {
-    let sched = Scheduler::new(&MacroParams::default());
-    sac::evaluate_plan(&sched, &VitConfig::default(), batch, &PrecisionPlan::paper_sac())
-}
-
-fn cmd_serve(argv: Vec<String>) -> Result<()> {
+fn cmd_lint(argv: Vec<String>) -> CliResult {
     let args = parse_or_help(
-        Args::new("crcim serve", "TCP inference server over the AOT ViT")
-            .opt("addr", "127.0.0.1:7878", "listen address")
-            .opt("artifacts", "artifacts", "artifacts directory")
-            .opt("batch", "16", "execution batch artifact (1 or 16)")
-            .opt("max-wait-ms", "2", "batching window")
-            .opt("wave-tokens", "16", "streaming conversion-wave size (tokens)"),
+        Args::new("crcim lint", "determinism-contract static analysis")
+            .opt("root", "rust/src", "source tree to analyze")
+            .flag("json", "emit the report as JSON instead of text"),
         argv,
     )?;
-    let batch: usize = args.get_parse("batch")?;
-    let (exe, _manifest) =
-        load_vit(args.get("artifacts").unwrap(), &format!("vit_cim_b{batch}"))?;
-    let calib = NoiseCalibration::measure(&MacroParams::default(), default_threads())
-        .map_err(|e| anyhow!(e))?;
-    let (sa, sm) = sac::plan_sigmas(&PrecisionPlan::paper_sac(), &calib);
-    let image_floats = exe.image * exe.image * 3;
-    let executor = PjrtExecutor {
-        exe,
-        cost: paper_cost(1),
-        sigma_attn: sa as f32,
-        sigma_mlp: sm as f32,
-        seed: 0,
-        image_floats,
-    };
-    let cfg = ServerConfig {
-        addr: args.get("addr").unwrap().to_string(),
-        batch_sizes: vec![1, batch],
-        max_wait: Duration::from_millis(args.get_parse::<u64>("max-wait-ms")?),
-        wave_tokens: args.get_parse::<usize>("wave-tokens")?,
-    };
-    println!(
-        "serving ViT-CIM on {} (batch {batch}, σ_attn={sa:.2}, σ_mlp={sm:.2} LSB)",
-        cfg.addr
-    );
-    let server = Arc::new(Server::new(&cfg).map_err(|e| anyhow!(e))?);
-    server.serve(&cfg, Box::new(executor))?;
-    println!("server shut down");
-    Ok(())
+    let root = std::path::PathBuf::from(args.get("root").unwrap());
+    let report = cr_cim::analysis::run_path(&root)?;
+    if args.get_flag("json") {
+        println!("{}", report.to_json().to_string_pretty());
+    } else {
+        println!("{}", report.to_text());
+    }
+    if report.is_clean() {
+        Ok(())
+    } else {
+        Err(format!("{} determinism finding(s); see report above", report.findings.len()).into())
+    }
 }
 
-fn cmd_infer(argv: Vec<String>) -> Result<()> {
-    let args = parse_or_help(
-        Args::new("crcim infer", "one-shot batch inference over the eval set")
-            .opt("artifacts", "artifacts", "artifacts directory")
-            .opt("count", "64", "images to run")
-            .opt("mode", "sac", "sac | ideal"),
-        argv,
-    )?;
-    let dir = PathBuf::from(args.get("artifacts").unwrap());
-    let eval = EvalSet::load(&dir).map_err(|e| anyhow!(e))?;
-    let mode = args.get("mode").unwrap().to_string();
-    let name = if mode == "ideal" { "vit_fp_b16" } else { "vit_cim_b16" };
-    let (exe, _) = load_vit(args.get("artifacts").unwrap(), name)?;
-    let calib = NoiseCalibration::measure(&MacroParams::default(), default_threads())
-        .map_err(|e| anyhow!(e))?;
-    let (sa, sm) = sac::plan_sigmas(&PrecisionPlan::paper_sac(), &calib);
-    let count = args.get_parse::<usize>("count")?.min(eval.n);
-    let w = eval.image_floats();
-    let mut correct = 0usize;
-    let mut done = 0usize;
-    while done < count {
-        let b = exe.batch.min(count - done).max(1);
-        let mut flat = vec![0f32; exe.batch * w];
-        for i in 0..b {
-            flat[i * w..(i + 1) * w].copy_from_slice(eval.image_slice(done + i));
-        }
-        let logits = exe.infer(&flat, done as i32, sa as f32, sm as f32)?;
-        let preds = exe.predict(&logits);
-        for i in 0..b {
-            if preds[i] == eval.labels[done + i] as usize {
-                correct += 1;
-            }
-        }
-        done += b;
+#[cfg(not(feature = "pjrt"))]
+fn cmd_serve(_argv: Vec<String>) -> CliResult {
+    Err("`crcim serve` requires the `pjrt` feature (build with --features pjrt \
+         and the vendored xla/anyhow crates)"
+        .into())
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn cmd_infer(_argv: Vec<String>) -> CliResult {
+    Err("`crcim infer` requires the `pjrt` feature (build with --features pjrt \
+         and the vendored xla/anyhow crates)"
+        .into())
+}
+
+#[cfg(feature = "pjrt")]
+use pjrt_cli::{cmd_infer, cmd_serve};
+
+#[cfg(feature = "pjrt")]
+mod pjrt_cli {
+    //! Artifact-driven subcommands; only compiled with the XLA runtime.
+
+    use std::path::PathBuf;
+    use std::sync::Arc;
+    use std::time::Duration;
+
+    use cr_cim::cim::params::MacroParams;
+    use cr_cim::coordinator::sac::{self, NoiseCalibration};
+    use cr_cim::coordinator::server::{BatchExecutor, Server, ServerConfig};
+    use cr_cim::coordinator::{PlanCost, Scheduler};
+    use cr_cim::runtime::{Manifest, Runtime, VitExecutable};
+    use cr_cim::util::args::Args;
+    use cr_cim::util::json::Json;
+    use cr_cim::util::pool::default_threads;
+    use cr_cim::vit::plan::PrecisionPlan;
+    use cr_cim::vit::VitConfig;
+    use cr_cim::workload::EvalSet;
+
+    use super::{parse_or_help, CliError, CliResult};
+
+    /// PJRT-backed batch executor for the server.
+    struct PjrtExecutor {
+        exe: VitExecutable,
+        cost: PlanCost,
+        sigma_attn: f32,
+        sigma_mlp: f32,
+        seed: i32,
+        image_floats: usize,
     }
-    let mut o = Json::obj();
-    o.set("mode", Json::str(&mode));
-    o.set("count", Json::num(count as f64));
-    o.set("accuracy", Json::num(correct as f64 / count as f64));
-    println!("{}", Json::Obj(o).to_string_pretty());
-    Ok(())
+
+    impl BatchExecutor for PjrtExecutor {
+        fn execute(&mut self, images: &[Vec<f32>]) -> Result<Vec<Vec<f32>>, String> {
+            let b = self.exe.batch;
+            let mut flat = vec![0f32; b * self.image_floats];
+            for (i, img) in images.iter().take(b).enumerate() {
+                if img.len() != self.image_floats {
+                    return Err(format!(
+                        "image {i} has {} floats, want {}",
+                        img.len(),
+                        self.image_floats
+                    ));
+                }
+                flat[i * self.image_floats..(i + 1) * self.image_floats].copy_from_slice(img);
+            }
+            self.seed = self.seed.wrapping_add(1);
+            let logits = self
+                .exe
+                .infer(&flat, self.seed, self.sigma_attn, self.sigma_mlp)
+                .map_err(|e| format!("{e:#}"))?;
+            let nc = self.exe.num_classes;
+            Ok((0..images.len().min(b)).map(|i| logits[i * nc..(i + 1) * nc].to_vec()).collect())
+        }
+
+        fn cost(&self) -> &PlanCost {
+            &self.cost
+        }
+
+        fn num_classes(&self) -> usize {
+            self.exe.num_classes
+        }
+    }
+
+    fn load_vit(artifacts: &str, name: &str) -> Result<(VitExecutable, Manifest), CliError> {
+        let dir = PathBuf::from(artifacts);
+        let manifest = Manifest::load(&dir)?;
+        manifest.check_files()?;
+        let art = manifest.get(name).ok_or_else(|| format!("no artifact '{name}'"))?;
+        let rt = Runtime::cpu().map_err(|e| format!("{e:#}"))?;
+        let exe = VitExecutable::new(&rt, art).map_err(|e| format!("{e:#}"))?;
+        Ok((exe, manifest))
+    }
+
+    fn paper_cost(batch: usize) -> PlanCost {
+        let sched = Scheduler::new(&MacroParams::default());
+        sac::evaluate_plan(&sched, &VitConfig::default(), batch, &PrecisionPlan::paper_sac())
+    }
+
+    pub fn cmd_serve(argv: Vec<String>) -> CliResult {
+        let args = parse_or_help(
+            Args::new("crcim serve", "TCP inference server over the AOT ViT")
+                .opt("addr", "127.0.0.1:7878", "listen address")
+                .opt("artifacts", "artifacts", "artifacts directory")
+                .opt("batch", "16", "execution batch artifact (1 or 16)")
+                .opt("max-wait-ms", "2", "batching window")
+                .opt("wave-tokens", "16", "streaming conversion-wave size (tokens)"),
+            argv,
+        )?;
+        let batch: usize = args.get_parse("batch")?;
+        let (exe, _manifest) =
+            load_vit(args.get("artifacts").unwrap(), &format!("vit_cim_b{batch}"))?;
+        let calib = NoiseCalibration::measure(&MacroParams::default(), default_threads())?;
+        let (sa, sm) = sac::plan_sigmas(&PrecisionPlan::paper_sac(), &calib);
+        let image_floats = exe.image * exe.image * 3;
+        let executor = PjrtExecutor {
+            exe,
+            cost: paper_cost(1),
+            sigma_attn: sa as f32,
+            sigma_mlp: sm as f32,
+            seed: 0,
+            image_floats,
+        };
+        let cfg = ServerConfig {
+            addr: args.get("addr").unwrap().to_string(),
+            batch_sizes: vec![1, batch],
+            max_wait: Duration::from_millis(args.get_parse::<u64>("max-wait-ms")?),
+            wave_tokens: args.get_parse::<usize>("wave-tokens")?,
+        };
+        println!(
+            "serving ViT-CIM on {} (batch {batch}, σ_attn={sa:.2}, σ_mlp={sm:.2} LSB)",
+            cfg.addr
+        );
+        let server = Arc::new(Server::new(&cfg)?);
+        server.serve(&cfg, Box::new(executor))?;
+        println!("server shut down");
+        Ok(())
+    }
+
+    pub fn cmd_infer(argv: Vec<String>) -> CliResult {
+        let args = parse_or_help(
+            Args::new("crcim infer", "one-shot batch inference over the eval set")
+                .opt("artifacts", "artifacts", "artifacts directory")
+                .opt("count", "64", "images to run")
+                .opt("mode", "sac", "sac | ideal"),
+            argv,
+        )?;
+        let dir = PathBuf::from(args.get("artifacts").unwrap());
+        let eval = EvalSet::load(&dir)?;
+        let mode = args.get("mode").unwrap().to_string();
+        let name = if mode == "ideal" { "vit_fp_b16" } else { "vit_cim_b16" };
+        let (exe, _) = load_vit(args.get("artifacts").unwrap(), name)?;
+        let calib = NoiseCalibration::measure(&MacroParams::default(), default_threads())?;
+        let (sa, sm) = sac::plan_sigmas(&PrecisionPlan::paper_sac(), &calib);
+        let count = args.get_parse::<usize>("count")?.min(eval.n);
+        let w = eval.image_floats();
+        let mut correct = 0usize;
+        let mut done = 0usize;
+        while done < count {
+            let b = exe.batch.min(count - done).max(1);
+            let mut flat = vec![0f32; exe.batch * w];
+            for i in 0..b {
+                flat[i * w..(i + 1) * w].copy_from_slice(eval.image_slice(done + i));
+            }
+            let logits = exe
+                .infer(&flat, done as i32, sa as f32, sm as f32)
+                .map_err(|e| format!("{e:#}"))?;
+            let preds = exe.predict(&logits);
+            for i in 0..b {
+                if preds[i] == eval.labels[done + i] as usize {
+                    correct += 1;
+                }
+            }
+            done += b;
+        }
+        let mut o = Json::obj();
+        o.set("mode", Json::str(&mode));
+        o.set("count", Json::num(count as f64));
+        o.set("accuracy", Json::num(correct as f64 / count as f64));
+        println!("{}", Json::Obj(o).to_string_pretty());
+        Ok(())
+    }
 }

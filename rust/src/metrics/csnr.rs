@@ -61,7 +61,7 @@ pub fn measure_csnr(
     threads: usize,
 ) -> CsnrResult {
     let n = column.params.active_rows;
-    let root = Rng::new(column.params.seed ^ 0xC5A4_0001);
+    let root = Rng::salted(column.params.seed, 0xC5A4_0001);
     // Weights for this measurement (one draw, like loading a layer).
     let mut wrng = root.substream(1, 0);
     let weights: Vec<bool> = (0..n).map(|_| wrng.bool(ens.w_density)).collect();

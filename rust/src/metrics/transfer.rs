@@ -103,7 +103,7 @@ pub fn characterize(column: &Column, mode: CbMode, opts: &CharacterizeOpts) -> T
     // top code and would contaminate the endpoint fit.
     let max_count = column.params.levels() - 1;
     let counts: Vec<usize> = (0..=max_count).step_by(opts.step.max(1)).collect();
-    let root = Rng::new(column.params.seed ^ 0x74A4_5FE4 ^ opts.stream);
+    let root = Rng::salted(column.params.seed, 0x74A4_5FE4 ^ opts.stream);
     let points = parallel_map(counts.len(), opts.threads, |i| {
         let count = counts[i];
         let mut rng = root.substream(mode as u64 + 1, count as u64);

@@ -10,10 +10,80 @@
 //!   every index is claimed exactly once.
 //! - [`WorkQueue`]: an MPMC queue built on Mutex+Condvar for the request
 //!   router's worker threads.
+//!
+//! The [`perturb`] submodule is a poor-man's race detector: seeded yield
+//! injection at every worker task boundary, so the determinism tests can
+//! prove results bit-identical under adversarially perturbed schedules.
 
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
+
+/// Schedule-perturbation harness: seeded `yield_now` injection at worker
+/// task boundaries.
+///
+/// The determinism contract promises bit-identical results at any thread
+/// count — which means results must not depend on the *interleaving* the
+/// OS happens to pick. This harness makes interleavings adversarial
+/// instead of accidental: under [`with_seed`](perturb::with_seed), every
+/// task boundary in [`parallel_map`], [`parallel_map_mut`] and
+/// [`WorkQueue`] derives 0–3 `yield_now` calls from
+/// `splitmix64(seed ^ mix(task))`, skewing which worker claims which
+/// index and when. Tests then assert outputs are bit-identical across a
+/// grid of perturbation seeds × thread counts (see `rust/tests/perturb.rs`).
+///
+/// Cost when disarmed (the default): one relaxed atomic load per task —
+/// negligible next to a column conversion.
+pub mod perturb {
+    use std::sync::atomic::{AtomicU64, Ordering};
+    use std::sync::Mutex;
+
+    /// Active perturbation seed; 0 = harness off.
+    static SEED: AtomicU64 = AtomicU64::new(0);
+    /// Total yields injected since process start (monotonic), so tests
+    /// can assert the harness actually fired.
+    static YIELDS: AtomicU64 = AtomicU64::new(0);
+    /// Serializes perturbed sections: the seed is process-global, so two
+    /// concurrent `with_seed` calls (e.g. parallel test threads) must not
+    /// interleave. First entry in the declared lock-order table.
+    static PERTURB_GATE: Mutex<()> = Mutex::new(());
+
+    /// Run `f` with schedule perturbation armed at `seed`. Nested pool
+    /// work inside `f` gets seeded yields injected at task boundaries.
+    /// Perturbed sections are serialized process-wide (via the private
+    /// `PERTURB_GATE` mutex); the harness is disarmed again on return.
+    pub fn with_seed<T>(seed: u64, f: impl FnOnce() -> T) -> T {
+        let _gate = PERTURB_GATE.lock().unwrap_or_else(|e| e.into_inner());
+        SEED.store(seed, Ordering::SeqCst);
+        let out = f();
+        SEED.store(0, Ordering::SeqCst);
+        out
+    }
+
+    /// Monotonic count of injected yields (for asserting the harness ran).
+    pub fn injected_yields() -> u64 {
+        YIELDS.load(Ordering::SeqCst)
+    }
+
+    /// Task-boundary hook: when armed, derive 0–3 yields from the seed
+    /// and a per-task mix so different tasks (and different seeds) stall
+    /// at different points. No-op (one relaxed load) when disarmed.
+    #[inline]
+    pub fn maybe_yield(task: u64) {
+        let seed = SEED.load(Ordering::Relaxed);
+        if seed == 0 {
+            return;
+        }
+        let mut state = seed ^ task.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        let n = crate::util::rng::splitmix64(&mut state) % 4;
+        for _ in 0..n {
+            std::thread::yield_now();
+        }
+        if n > 0 {
+            YIELDS.fetch_add(n, Ordering::Relaxed);
+        }
+    }
+}
 
 /// Number of worker threads to use by default: physical parallelism capped
 /// to keep the box responsive.
@@ -24,6 +94,7 @@ pub fn default_threads() -> usize {
 /// Run `f(i)` for every `i in 0..n` on `threads` workers and collect results
 /// in index order. `f` must be `Sync` (shared read-only state); per-index
 /// determinism is up to the caller (use RNG substreams keyed by `i`).
+#[allow(unsafe_code)]
 pub fn parallel_map<T, F>(n: usize, threads: usize, f: F) -> Vec<T>
 where
     T: Send,
@@ -46,6 +117,7 @@ where
                 if i >= n {
                     break;
                 }
+                perturb::maybe_yield(i as u64);
                 let val = f(i);
                 // SAFETY: each index i is claimed exactly once via the atomic
                 // counter, so no two threads write the same slot; the vec
@@ -64,6 +136,7 @@ where
 /// via an atomic counter, so the `&mut` borrows handed to `f` are disjoint.
 /// Determinism is the caller's job: give each element its own state (e.g.
 /// an owned RNG substream) and results are identical at any thread count.
+#[allow(unsafe_code)]
 pub fn parallel_map_mut<T, R, F>(items: &mut [T], threads: usize, f: F) -> Vec<R>
 where
     T: Send,
@@ -90,11 +163,14 @@ where
                 if i >= n {
                     break;
                 }
+                perturb::maybe_yield(i as u64);
                 // SAFETY: each index i is claimed exactly once via the
                 // atomic counter, so the element and output borrows are
                 // disjoint across workers; both slices outlive the scope.
                 let item = unsafe { &mut *item_ptr.0.add(i) };
                 let val = f(i, item);
+                // SAFETY: the same disjoint-index argument covers the
+                // output slot.
                 unsafe {
                     *out_ptr.0.add(i) = Some(val);
                 }
@@ -107,7 +183,14 @@ where
 /// Wrapper to move a raw pointer into threads. Safe usage is guaranteed by
 /// the disjoint-index argument in `parallel_map`.
 struct SendPtr<T>(*mut T);
+// SAFETY: SendPtr is only shared with scoped workers that write disjoint
+// indices (claimed via an atomic counter), so concurrent access never
+// aliases; the pointee outlives the thread scope.
+#[allow(unsafe_code)]
 unsafe impl<T> Sync for SendPtr<T> {}
+// SAFETY: same disjoint-index argument; moving the pointer between
+// threads is safe because the backing allocation outlives the scope.
+#[allow(unsafe_code)]
 unsafe impl<T> Send for SendPtr<T> {}
 
 /// Blocking MPMC queue. `pop` blocks until an item arrives or the queue is
@@ -132,6 +215,7 @@ impl<T> WorkQueue<T> {
 
     /// Push an item; returns false if the queue is already closed.
     pub fn push(&self, item: T) -> bool {
+        perturb::maybe_yield(u64::MAX - 1);
         let mut st = self.inner.lock().unwrap();
         if st.closed {
             return false;
@@ -143,6 +227,7 @@ impl<T> WorkQueue<T> {
 
     /// Blocking pop. None = closed and drained.
     pub fn pop(&self) -> Option<T> {
+        perturb::maybe_yield(u64::MAX - 2);
         let mut st = self.inner.lock().unwrap();
         loop {
             if let Some(item) = st.items.pop_front() {
@@ -234,6 +319,42 @@ mod tests {
             parallel_map_mut(&mut rngs, threads, |_, r| r.gauss())
         };
         assert_eq!(run(1), run(8));
+    }
+
+    #[test]
+    fn perturbed_parallel_map_stays_deterministic() {
+        let serial: Vec<u64> = (0..257).map(|i| (i as u64) * 3 + 1).collect();
+        for seed in [1u64, 7, 99] {
+            let par = perturb::with_seed(seed, || parallel_map(257, 8, |i| (i as u64) * 3 + 1));
+            assert_eq!(par, serial, "perturbation seed {seed}");
+        }
+        assert!(perturb::injected_yields() > 0, "harness must actually inject yields");
+    }
+
+    #[test]
+    fn perturbed_parallel_map_mut_stays_deterministic() {
+        let want: Vec<u64> = (0..200u64).map(|i| i + 5).collect();
+        for seed in [2u64, 13] {
+            let mut items: Vec<u64> = (0..200).collect();
+            let got =
+                perturb::with_seed(seed, || parallel_map_mut(&mut items, 6, |_, v| *v + 5));
+            assert_eq!(got, want, "perturbation seed {seed}");
+        }
+    }
+
+    #[test]
+    fn perturb_disarms_after_section() {
+        let before = perturb::injected_yields();
+        perturb::with_seed(5, || parallel_map(64, 4, |i| i));
+        assert!(perturb::injected_yields() > before);
+        // Holding the gate with seed 0 (disarmed) keeps concurrently
+        // running armed tests from advancing the counter mid-check.
+        let (start, end) = perturb::with_seed(0, || {
+            let start = perturb::injected_yields();
+            parallel_map(64, 4, |i| i);
+            (start, perturb::injected_yields())
+        });
+        assert_eq!(start, end, "disarmed runs must inject nothing");
     }
 
     #[test]

@@ -100,6 +100,16 @@ pub fn percentile(xs: &[f64], q: f64) -> f64 {
     }
 }
 
+/// Fixed-order (left-to-right) float accumulation: the approved digital
+/// accumulator for compute modules (detlint rule `float-reduction`).
+/// Identical operation order to `Iterator::sum` on a sequential
+/// iterator — the value of the chokepoint is that a parallel refactor
+/// cannot silently change the reduction order without changing the call
+/// site away from this named helper.
+pub fn sum_ordered(xs: impl IntoIterator<Item = f64>) -> f64 {
+    xs.into_iter().fold(0.0, |acc, x| acc + x)
+}
+
 pub fn mean(xs: &[f64]) -> f64 {
     if xs.is_empty() { 0.0 } else { xs.iter().sum::<f64>() / xs.len() as f64 }
 }
@@ -213,6 +223,15 @@ pub fn power_ratio_from_db(db: f64) -> f64 {
 mod tests {
     use super::*;
     use crate::util::rng::Rng;
+
+    #[test]
+    fn sum_ordered_matches_sequential_sum_bitwise() {
+        let mut r = Rng::new(17);
+        let xs: Vec<f64> = (0..1000).map(|_| r.gauss() * 1e3).collect();
+        let reference: f64 = xs.iter().sum();
+        assert_eq!(sum_ordered(xs.iter().copied()).to_bits(), reference.to_bits());
+        assert_eq!(sum_ordered(std::iter::empty()), 0.0);
+    }
 
     #[test]
     fn moments_match_direct_computation() {

@@ -1,0 +1,78 @@
+//! `crcim lint` acceptance: the analyzer runs clean over this repo's
+//! own sources, and actually fails when a violation is planted.
+//!
+//! The clean run is the load-bearing half: it is what keeps the
+//! determinism contract enforced on every future change, because any
+//! new unordered map, ad-hoc RNG, stray wall-clock read, lock-order
+//! inversion, or raw float reduction in the compute tiers turns this
+//! test (and the CI lint job) red.
+
+use std::path::Path;
+
+use cr_cim::analysis;
+
+#[test]
+fn lint_runs_clean_on_the_full_source_tree() {
+    // cargo runs integration tests from the workspace root.
+    let report = analysis::run_path(Path::new("rust/src")).expect("source tree is readable");
+    assert!(
+        report.is_clean(),
+        "determinism lint must pass on the shipped tree:\n{}",
+        report.to_text()
+    );
+    assert!(
+        report.files_scanned > 40,
+        "the walk should cover the whole crate, saw {} files",
+        report.files_scanned
+    );
+}
+
+#[test]
+fn lint_fails_on_an_injected_violation() {
+    // Plant a compute-scope file with an unordered map in a scratch tree
+    // shaped like the real one (rule scope keys off the `cim/` prefix).
+    let root = std::env::temp_dir().join(format!("detlint_selftest_{}", std::process::id()));
+    let dir = root.join("cim");
+    std::fs::create_dir_all(&dir).unwrap();
+    std::fs::write(
+        dir.join("bad.rs"),
+        "use std::collections::HashMap;\npub fn f() -> HashMap<u32, u32> { HashMap::new() }\n",
+    )
+    .unwrap();
+    let report = analysis::run_path(&root).expect("scratch tree is readable");
+    std::fs::remove_dir_all(&root).ok();
+    assert!(!report.is_clean(), "planted HashMap must be flagged");
+    assert!(
+        report.findings.iter().any(|f| f.rule == "unordered-iter" && f.path == "cim/bad.rs"),
+        "expected an unordered-iter finding, got:\n{}",
+        report.to_text()
+    );
+}
+
+#[test]
+fn lint_respects_a_justified_allow_in_the_scratch_tree() {
+    let root = std::env::temp_dir().join(format!("detlint_allow_{}", std::process::id()));
+    let dir = root.join("cim");
+    std::fs::create_dir_all(&dir).unwrap();
+    std::fs::write(
+        dir.join("annotated.rs"),
+        "// detlint: allow(unordered-iter) -- scratch fixture, order never observed\n\
+         use std::collections::HashMap;\n\
+         pub fn f() -> usize { HashMap::<u32, u32>::new().len() }\n",
+    )
+    .unwrap();
+    let report = analysis::run_path(&root).expect("scratch tree is readable");
+    std::fs::remove_dir_all(&root).ok();
+    // The annotation suppresses the next line's finding but not the
+    // second, unannotated HashMap use two lines below.
+    assert!(
+        report.findings.iter().all(|f| f.line != 2),
+        "annotated line must be suppressed:\n{}",
+        report.to_text()
+    );
+    assert!(
+        report.findings.iter().any(|f| f.rule == "unordered-iter" && f.line == 3),
+        "unannotated use must still fire:\n{}",
+        report.to_text()
+    );
+}

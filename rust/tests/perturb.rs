@@ -1,0 +1,164 @@
+//! Schedule-perturbation acceptance tests: the dynamic half of the
+//! determinism contract.
+//!
+//! The static analyzer (`crcim lint`) rules out the *sources* of
+//! schedule sensitivity (unordered maps, ad-hoc RNG, raw float
+//! reductions, lock-order inversions); these tests attack the *effect*
+//! directly. `util::pool::perturb` injects seeded bursts of
+//! `thread::yield_now()` at every worker-pool task boundary and queue
+//! transfer, forcing worker interleavings the OS scheduler would only
+//! produce under rare load. Under every perturbation seed and every
+//! thread-grid point, the zero-noise pipeline and the streaming server
+//! must reproduce the exact reference walk bit-for-bit.
+
+use std::time::Duration;
+
+use cr_cim::cim::params::{CbMode, MacroParams};
+use cr_cim::coordinator::pipeline::{ModelExecutor, PipelineConfig};
+use cr_cim::coordinator::server::{BatchExecutor, Server, ServerConfig};
+use cr_cim::coordinator::stream::{pool_tokens, split_tokens};
+use cr_cim::util::json::{self, Json};
+use cr_cim::util::pool::perturb;
+use cr_cim::vit::graph::ModelGraph;
+use cr_cim::vit::plan::{OperatingPoint, PrecisionPlan};
+use cr_cim::vit::VitConfig;
+
+fn tiny_params() -> MacroParams {
+    let mut p = MacroParams::default();
+    p.adc_bits = 6;
+    p.active_rows = 64;
+    p.rows = 64;
+    p.cols = 12;
+    p.sigma_cu_rel = 0.0;
+    p.nonlin_cubic_lsb = 0.0;
+    p.sigma_cmp_lsb = 0.0;
+    p.sigma_cmp_offset_lsb = 0.0;
+    p.temperature_k = 0.0;
+    p
+}
+
+fn plan(a_bits: u32, w_bits: u32) -> PrecisionPlan {
+    let op = OperatingPoint { a_bits, w_bits, cb: CbMode::Off };
+    PrecisionPlan { name: "perturb probe", attention: op, mlp: op }
+}
+
+/// d_ff = 96 > 64 active rows: fc2 row-tiles even on the tiny geometry.
+fn tiny_cfg() -> VitConfig {
+    VitConfig { image: 16, patch: 4, dim: 48, depth: 2, heads: 4, mlp_ratio: 2, num_classes: 4 }
+}
+
+fn image(seed: usize, floats: usize) -> Vec<f32> {
+    (0..floats).map(|j| ((seed * 31 + j * 7) % 13) as f32 / 13.0 - 0.5).collect()
+}
+
+fn images(n: usize, floats: usize) -> Vec<Vec<f32>> {
+    (0..n).map(|i| image(i + 11, floats)).collect()
+}
+
+#[test]
+fn perturbed_pipeline_matches_reference_across_seeds_and_threads() {
+    let base = tiny_params();
+    let graph = ModelGraph::encoder(&tiny_cfg(), 2, &plan(2, 2));
+    let imgs = images(3, 32);
+    // The reference walk is schedule-free by construction.
+    let reference = {
+        let exec = ModelExecutor::new(&base, graph.clone(), PipelineConfig::default()).unwrap();
+        exec.reference_ints(&exec.featurize_images(&imgs))
+    };
+    let before = perturb::injected_yields();
+    for seed in [1u64, 7, 99] {
+        for threads in [2usize, 4] {
+            let p = base.clone().with_threads(threads);
+            let cfg = PipelineConfig { shards: 2, attention_dies: 2, mlp_dies: 1 };
+            let mut exec = ModelExecutor::new(&p, graph.clone(), cfg).unwrap();
+            let xs = exec.featurize_images(&imgs);
+            let got = perturb::with_seed(seed, || exec.forward_ints(&xs).unwrap());
+            assert_eq!(got, reference, "perturb seed {seed}, threads {threads}");
+        }
+    }
+    // The harness actually fired: yields were injected at task boundaries.
+    assert!(
+        perturb::injected_yields() > before,
+        "perturbation sections must inject at least one yield"
+    );
+}
+
+fn stream_line(id: usize, tokens: usize, img: &[f32]) -> String {
+    let body: Vec<String> = img.iter().map(|v| format!("{v}")).collect();
+    format!(
+        r#"{{"id": {id}, "kind": "stream", "tokens": {tokens}, "image": [{}]}}"#,
+        body.join(", ")
+    )
+}
+
+/// Drain the server: step until every expected response is staged.
+fn drain_responses(
+    srv: &Server,
+    exec: &mut dyn BatchExecutor,
+    conn: u64,
+    want: usize,
+) -> Vec<Json> {
+    let mut out = Vec::new();
+    for _ in 0..200 {
+        srv.executor_step(exec);
+        for line in srv.take_responses(conn) {
+            out.push(json::parse(&line).unwrap());
+        }
+        if out.len() >= want {
+            return out;
+        }
+        std::thread::sleep(Duration::from_millis(2));
+    }
+    panic!("server drained only {} of {want} responses", out.len());
+}
+
+fn logits_of(j: &Json) -> Vec<f64> {
+    j.get_path("logits").unwrap().as_arr().unwrap().iter().map(|v| v.as_f64().unwrap()).collect()
+}
+
+#[test]
+fn perturbed_stream_matches_reference_across_seeds_and_threads() {
+    let base = tiny_params();
+    let graph = ModelGraph::encoder(&tiny_cfg(), 1, &plan(2, 2));
+    // 3 + 3 tokens over 2-token waves: every wave closes full, by size,
+    // so the wave partition is a pure function of the request trace and
+    // the generous max_wait keeps the deadline/aging paths switched off.
+    let img_a = image(1, 48); // 3 tokens
+    let img_b = image(2, 48); // 3 tokens
+    // Ground truth: the exact reference walk, mean-pooled per request.
+    let (want_a, want_b) = {
+        let exec = ModelExecutor::new(&base, graph.clone(), PipelineConfig::default()).unwrap();
+        let a = pool_tokens(&exec.reference_logits(&split_tokens(&img_a, 3)));
+        let b = pool_tokens(&exec.reference_logits(&split_tokens(&img_b, 3)));
+        (a, b)
+    };
+    // Seed 0 is the disarmed control: the same code path with no
+    // injected yields must agree with every armed run.
+    for seed in [0u64, 1, 2, 3] {
+        for threads in [2usize, 4] {
+            let p = base.clone().with_threads(threads);
+            let cfg = PipelineConfig { shards: 2, attention_dies: 1, mlp_dies: 1 };
+            let mut exec = ModelExecutor::new(&p, graph.clone(), cfg).unwrap();
+            let srv = Server::new(&ServerConfig {
+                addr: "unused".into(),
+                batch_sizes: vec![1, 4],
+                max_wait: Duration::from_millis(60_000),
+                wave_tokens: 2,
+            })
+            .unwrap();
+            let conn = srv.open_conn();
+            let resps = perturb::with_seed(seed, || {
+                srv.handle_line(&stream_line(10, 3, &img_a), conn).unwrap();
+                srv.handle_line(&stream_line(20, 3, &img_b), conn).unwrap();
+                drain_responses(&srv, &mut exec, conn, 2)
+            });
+            assert_eq!(resps.len(), 2, "seed {seed}, threads {threads}");
+            for j in &resps {
+                let id = j.get_path("id").unwrap().as_f64().unwrap() as u64;
+                let want = if id == 10 { &want_a } else { &want_b };
+                let want_f64: Vec<f64> = want.iter().map(|&x| x as f64).collect();
+                assert_eq!(logits_of(j), want_f64, "seed {seed}, threads {threads}, id {id}");
+            }
+        }
+    }
+}

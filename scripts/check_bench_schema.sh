@@ -40,6 +40,19 @@ for key in "${required_keys[@]}"; do
   if ! grep -q "\"$key\"" "$report"; then
     echo "FAIL: $report is missing key \"$key\"" >&2
     fail=1
+    continue
+  fi
+  # Value sanity: presence alone would pass a report full of nulls.
+  # `model` must be a JSON string; every other key a (possibly negative)
+  # number. A refactor that starts emitting null/"NaN"/strings fails here.
+  if [[ "$key" == "model" ]]; then
+    if ! grep -Eq "\"model\"[[:space:]]*:[[:space:]]*\"[^\"]+\"" "$report"; then
+      echo "FAIL: $report key \"model\" is not a non-empty JSON string" >&2
+      fail=1
+    fi
+  elif ! grep -Eq "\"$key\"[[:space:]]*:[[:space:]]*-?[0-9]" "$report"; then
+    echo "FAIL: $report key \"$key\" is not numeric" >&2
+    fail=1
   fi
 done
 
@@ -47,4 +60,4 @@ if [[ $fail -ne 0 ]]; then
   exit 1
 fi
 
-echo "OK: $report carries all ${#required_keys[@]} required keys (incl. cold/warm pass + streaming wave)"
+echo "OK: $report carries all ${#required_keys[@]} required keys with typed values (incl. cold/warm pass + streaming wave)"

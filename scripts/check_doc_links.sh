@@ -33,6 +33,15 @@ for required in README.md ROADMAP.md docs/ARCHITECTURE.md docs/SERVING.md; do
     fi
 done
 
+# The determinism contract is enforced by `crcim lint`; its rule catalog
+# and annotation syntax must stay documented alongside the architecture,
+# or the lint's failure messages point nowhere.
+if [ -f docs/ARCHITECTURE.md ] && \
+   ! grep -q '^## Determinism enforcement' docs/ARCHITECTURE.md; then
+    echo "MISSING SECTION: docs/ARCHITECTURE.md '## Determinism enforcement'"
+    fail=1
+fi
+
 for f in $files; do
     dir=$(dirname "$f")
     # Extract inline markdown link targets: [text](target)
