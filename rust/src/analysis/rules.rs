@@ -39,14 +39,18 @@ pub const RULES: [&str; 6] = [
 ///
 /// `PERTURB_GATE` (the schedule-perturbation serialization gate in
 /// `util::pool::perturb`) wraps entire perturbed sections, so it orders
-/// before everything; `inner` (the `WorkQueue` mutex) is a leaf.
-pub const LOCK_ORDER: [&str; 7] = [
+/// before everything; the staged wavefront engine's per-wave state
+/// (`wave`) and per-bank cache slots (`slot`) nest inside the serving
+/// tiers but above the pool; `inner` (the `WorkQueue` mutex) is a leaf.
+pub const LOCK_ORDER: [&str; 9] = [
     "PERTURB_GATE", // perturbation harness gate — held around whole sections
     "live_conns",   // server connection registry
     "outbox",       // server response outbox
     "pending",      // server batch queue
     "stream",       // streaming tier state
     "ledger",       // power/latency ledger
+    "wave",         // wavefront engine per-wave activations/error state
+    "slot",         // wavefront engine per-bank cache slot (programmed die)
     "inner",        // WorkQueue state — leaf, never holds another lock
 ];
 

@@ -35,16 +35,43 @@
 //! reference walk ([`ModelExecutor::reference_ints`]) stay comparable
 //! bit for bit.
 //!
+//! # Staged wavefront execution
+//!
+//! Execution is **actually pipelined**, not just priced that way. A
+//! pass over `W` waves (input batches) of an `L`-layer graph runs as
+//! `W + L` barrier-separated **stages**: stage `s` executes, in
+//! parallel, every *program* task on diagonal `w + l = s` (layer `l`'s
+//! weights loading onto its pool for wave `w`'s first use) and every
+//! *convert* task on diagonal `w + l = s - 1` (wave `w`'s conversions
+//! through layer `l`). With `W = 1` this is exactly the planner's
+//! double-buffered fold — layer `i+1`'s die programming overlaps layer
+//! `i`'s conversion waves; with `W > 1`, consecutive waves run
+//! different layers simultaneously, so attention-pool and MLP-pool
+//! conversions are in flight at once on their disjoint silicon. A
+//! stage's tasks are claimed by worker threads stealing from a
+//! [`WorkQueue`](crate::util::pool::WorkQueue); `PipelineConfig::overlap
+//! = false` runs the *same* decision and stage structure inline, which
+//! is why the toggle cannot change any output bit (see below).
+//!
 //! # Determinism contract
 //!
 //! The substream hierarchy extends to
 //! `seed → class pool → die → row tile → global column → conversion
-//! counter`. Consequences (test-enforced in `rust/tests/pipeline.rs`):
-//! full-pass outputs are **bit-identical at any worker-thread count and
-//! any column-shard count** even with noise; at zero noise any
-//! (threads × shards × per-class dies) decomposition equals the exact
-//! reference walk — **whether a pass is cold or warm**: cache state may
-//! change *when* reloads are priced, never *what* a conversion computes.
+//! counter`. Consequences (test-enforced in `rust/tests/pipeline.rs`
+//! and the `rust/tests/perturb.rs` schedule-perturbation campaign):
+//! full-pass outputs are **bit-identical at any worker-thread count,
+//! any column-shard count, and with overlap on or off** even with
+//! noise; at zero noise any (threads × shards × per-class dies ×
+//! overlap) decomposition equals the exact reference walk — **whether
+//! a pass is cold or warm**: cache state may change *when* reloads are
+//! priced, never *what* a conversion computes. Concurrency cannot
+//! reorder conversion semantics because (a) all cache decisions (which
+//! wave/layer hits, misses, evicts) happen in a serial wave-major
+//! decision pass before any task runs, (b) tasks sharing a programmed
+//! bank always sit on *different* stage diagonals, so the barrier
+//! serializes them in wave order, and (c) tasks within one stage touch
+//! disjoint banks and disjoint wave states — completion order inside a
+//! stage is free, the per-bank conversion-counter sequence is not.
 //! Changing a pool's die count re-routes vectors onto different
 //! physical silicon, which legitimately changes noisy outputs —
 //! per-class pools make that re-mapping *local to the class*. A
@@ -56,11 +83,14 @@
 //! exactly as a real reload rewrites the array.
 
 use std::collections::BTreeMap;
+use std::sync::{Arc, Mutex};
 
 use crate::cim::macro_::matvec_exact;
 use crate::cim::netstats::LayerClass;
 use crate::cim::MacroParams;
+use crate::util::pool::{default_threads, perturb, WorkQueue};
 use crate::util::rng::Rng;
+use crate::util::stats;
 use crate::vit::graph::{GraphLayer, ModelGraph};
 use crate::vit::plan::OperatingPoint;
 
@@ -90,11 +120,18 @@ pub struct PipelineConfig {
     pub attention_dies: usize,
     /// Dies in the MLP-class pool (also serves `CnnConv` layers).
     pub mlp_dies: usize,
+    /// Run the staged wavefront engine with real worker threads
+    /// (`true`) or execute the identical stage structure inline
+    /// (`false`). The toggle affects wall-clock only: outputs, stats
+    /// and cache state are bit-identical either way — the
+    /// schedule-perturbation campaign in `rust/tests/perturb.rs`
+    /// enforces this across seeds × thread counts.
+    pub overlap: bool,
 }
 
 impl Default for PipelineConfig {
     fn default() -> Self {
-        PipelineConfig { shards: 1, attention_dies: 1, mlp_dies: 1 }
+        PipelineConfig { shards: 1, attention_dies: 1, mlp_dies: 1, overlap: true }
     }
 }
 
@@ -112,7 +149,7 @@ impl PipelineConfig {
     ) -> Self {
         let router = Router::new(params, total_dies.max(1));
         let (attention_dies, mlp_dies) = router.class_pool_split(graph, total_dies);
-        PipelineConfig { shards: shards.max(1), attention_dies, mlp_dies }
+        PipelineConfig { shards: shards.max(1), attention_dies, mlp_dies, overlap: true }
     }
 
     /// Pool size serving `class`.
@@ -122,6 +159,52 @@ impl PipelineConfig {
             LayerClass::TransformerMlp | LayerClass::CnnConv => self.mlp_dies.max(1),
         }
     }
+}
+
+/// One resident-cache entry of the staged engine: the programmed pool
+/// bank (or the programming error), filled in by its *program* task and
+/// consumed by the *convert* tasks of every wave that hit on it. The
+/// `Arc` keeps a bank alive for in-flight converts even if a later
+/// decision evicts its cache entry — exactly the serial semantics where
+/// an eviction takes effect on the *next* miss, never mid-use. `None`
+/// only before the program task ran; the stage barrier guarantees
+/// converts never observe it.
+type BankSlot = Arc<Mutex<Option<Result<DieBank, String>>>>;
+
+/// What a stage task does: load a layer's weights onto its pool, or
+/// stream one wave's activations through a programmed bank.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum TaskKind {
+    Program,
+    Convert,
+}
+
+/// One unit of stage work, pinned to diagonal `stage` of the wavefront:
+/// program tasks run at `wave + layer`, convert tasks one stage later.
+struct StageTask {
+    kind: TaskKind,
+    wave: usize,
+    li: usize,
+    stage: usize,
+    slot: BankSlot,
+}
+
+/// Mutable per-wave execution state, shared with the stage workers.
+/// Tasks of the same wave sit on distinct diagonals, so the lock is
+/// never contended *within* a wave — it exists because different
+/// waves' convert tasks run concurrently in one stage and the borrow
+/// checker cannot see the diagonal disjointness.
+struct WaveState {
+    /// Activations entering the next un-run layer.
+    acts: Vec<Vec<i32>>,
+    /// Last layer's raw outputs once the wave's final convert lands.
+    out: Vec<Vec<i64>>,
+    /// First error in layer order; set once, converts after it no-op —
+    /// the wave fails as a unit without touching other waves.
+    err: Option<String>,
+    /// Per-layer (conversions, energy_pj) deltas, folded into the
+    /// executor's stats after the pass in fixed wave-major order.
+    deltas: Vec<Option<(u64, f64)>>,
 }
 
 /// Cumulative per-layer simulation counters.
@@ -195,13 +278,24 @@ pub struct ModelExecutor {
     /// [`Scheduler::pool_capacity_bits`]. The *same*
     /// [`ResidentLru`] policy drives the planner's
     /// [`Scheduler::steady_residency`] simulation, so planned warm-pass
-    /// hit flags and measured hits agree structurally.
-    cache: ResidentLru<DieBank>,
+    /// hit flags and measured hits agree structurally. Values are
+    /// [`BankSlot`]s so the staged engine can program a missed layer
+    /// concurrently with earlier layers' conversions: the slot is
+    /// inserted at decision time, filled by its program task.
+    cache: ResidentLru<BankSlot>,
     /// Modeled reload latency actually paid so far [ns] (missed layers
     /// only; the amortization numerator).
     paid_reload_ns: f64,
     /// Forward passes executed.
     passes: u64,
+    /// Modeled latency of the most recent engine pass [ns]: the staged
+    /// fold (widest task per stage), with only the layers that actually
+    /// missed paying their reload. On a steady warm pass this equals
+    /// the plan's `warm_pipelined_ns`; cold, its `pipelined_ns`.
+    last_pass_ns: f64,
+    /// The same pass priced fully serially [ns]: Σ (paid reload +
+    /// compute) over every executed (wave, layer).
+    last_serial_ns: f64,
 }
 
 impl ModelExecutor {
@@ -291,6 +385,8 @@ impl ModelExecutor {
             cache,
             paid_reload_ns: 0.0,
             passes: 0,
+            last_pass_ns: 0.0,
+            last_serial_ns: 0.0,
         })
     }
 
@@ -304,10 +400,28 @@ impl ModelExecutor {
         self.passes
     }
 
+    /// Modeled latency of the most recent engine pass [ns]: the staged
+    /// fold — each stage as wide as its widest task — with only the
+    /// layers that actually missed paying their reload. Warm steady
+    /// passes land on [`PipelinePlan::warm_pipelined_ns`], cold ones on
+    /// `pipelined_ns`; `rust/tests/overlap.rs` anchors both.
+    pub fn last_pass_ns(&self) -> f64 {
+        self.last_pass_ns
+    }
+
+    /// The most recent pass priced fully serially [ns] — every executed
+    /// (wave, layer)'s compute plus each paid reload, no overlap. The
+    /// staged fold can never exceed this.
+    pub fn last_serial_ns(&self) -> f64 {
+        self.last_serial_ns
+    }
+
     /// The deterministic stand-in weight matrix of one graph layer
-    /// (same draw for the macro walk and the reference walk).
-    fn layer_weights(&self, layer: &GraphLayer) -> Vec<Vec<i32>> {
-        let root = Rng::salted(self.params.seed, WEIGHT_SEED_SALT);
+    /// (same draw for the macro walk and the reference walk). An
+    /// associated fn so program tasks can draw weights while the
+    /// executor's cache is mid-decision.
+    fn layer_weights(params: &MacroParams, layer: &GraphLayer) -> Vec<Vec<i32>> {
+        let root = Rng::salted(params.seed, WEIGHT_SEED_SALT);
         let mut rng = root.substream(0x0057_E167, layer.index as u64);
         let (lo, _) = layer.op.w_range();
         let span = 1u64 << layer.op.w_bits;
@@ -352,51 +466,221 @@ impl ModelExecutor {
     /// (reload *miss*, paying the modeled reload latency) and the fresh
     /// bank is retained LRU-bounded by the pool's SRAM budget. Memory
     /// stays O(cache budget + largest layer) even at ViT-Base scale.
+    /// One wave of the staged engine
+    /// ([`forward_ints_many`](Self::forward_ints_many)): with overlap
+    /// on, layer `i+1`'s die programming runs concurrently with layer
+    /// `i`'s conversions.
     pub fn forward_ints(&mut self, xs: &[Vec<i32>]) -> Result<Vec<Vec<i64>>, String> {
+        let waves = [xs.to_vec()];
+        self.forward_ints_many(&waves).pop().expect("one wave in, one result out")
+    }
+
+    /// The staged wavefront engine: run `W` independent waves of
+    /// activation vectors through the `L`-layer graph as `W + L`
+    /// barrier-separated stages (see the module docs). Returns one
+    /// result per wave; a failing wave fails as a unit without
+    /// poisoning the others.
+    ///
+    /// **Decision pass** (serial, wave-major): every cache touch,
+    /// insert and eviction happens here, in exactly the order a serial
+    /// wave-by-wave walk would produce — so hit/miss flags, eviction
+    /// victims and therefore *which silicon converts what* are
+    /// independent of how the stage tasks later interleave.
+    ///
+    /// **Stage execution**: stage `s` runs all program tasks on
+    /// diagonal `w + l = s` and all convert tasks on diagonal
+    /// `w + l = s - 1`. Same-stage tasks always touch distinct banks
+    /// and distinct waves (equal diagonal + distinct layer ⇒ distinct
+    /// cache key), so their completion order is free; tasks sharing a
+    /// bank sit on different diagonals and the barrier serializes them
+    /// in wave order — the per-bank conversion-counter sequence, and
+    /// hence every noise draw, is fixed by construction.
+    pub fn forward_ints_many(
+        &mut self,
+        waves_in: &[Vec<Vec<i32>>],
+    ) -> Vec<Result<Vec<Vec<i64>>, String>> {
+        if waves_in.is_empty() {
+            return Vec::new();
+        }
         let graph = self.graph.clone();
-        let last = Self::walk_graph(&graph, xs, |li, layer, acts| {
-            let key = (layer.index, class_pool(layer.shape.class));
-            let hit = self.cache.touch(key);
-            let mut fresh = if hit {
-                None
-            } else {
-                let w = self.layer_weights(layer);
-                Some(DieBank::in_pool(
-                    &self.params,
+        let layer_count = graph.layers.len();
+        let wave_count = waves_in.len();
+        let stage_count = wave_count + layer_count;
+        let wave_states: Vec<Mutex<WaveState>> = waves_in
+            .iter()
+            .map(|xs| {
+                Mutex::new(WaveState {
+                    acts: xs.clone(),
+                    out: Vec::new(),
+                    err: None,
+                    deltas: vec![None; layer_count],
+                })
+            })
+            .collect();
+        // Decision pass. Reload hit/miss bookkeeping happens here (it
+        // is a property of the decision, not of task timing); the
+        // conversion/energy deltas are folded in after the stages run.
+        let mut tasks: Vec<StageTask> = Vec::new();
+        let mut serial_ns = 0.0f64;
+        for w in 0..wave_count {
+            for (li, layer) in graph.layers.iter().enumerate() {
+                let key = (layer.index, class_pool(layer.shape.class));
+                let hit = self.cache.touch(key);
+                let slot = if hit {
+                    self.cache.value_mut(key).clone()
+                } else {
+                    let slot: BankSlot = Arc::new(Mutex::new(None));
+                    let footprint = Scheduler::layer_weight_bits(&layer.shape, layer.op);
+                    self.cache.insert(key, slot.clone(), footprint);
+                    tasks.push(StageTask {
+                        kind: TaskKind::Program,
+                        wave: w,
+                        li,
+                        stage: w + li,
+                        slot: slot.clone(),
+                    });
+                    slot
+                };
+                let st = &mut self.stats[li];
+                if hit {
+                    st.reload_hits += 1;
+                } else {
+                    st.reload_misses += 1;
+                    self.paid_reload_ns += self.pipeline.layers[li].reload_ns;
+                    serial_ns += self.pipeline.layers[li].reload_ns;
+                }
+                serial_ns += self.pipeline.layers[li].compute_ns;
+                tasks.push(StageTask { kind: TaskKind::Convert, wave: w, li, stage: w + li + 1, slot });
+            }
+        }
+        // Measured-modeled pass latency: each barrier-separated stage
+        // is as wide as its widest task (program = the layer's reload,
+        // convert = its conversions) — the staged analogue of the
+        // planner's double-buffer fold, with only real misses paying.
+        let mut stage_ns = vec![0.0f64; stage_count];
+        let mut by_stage: Vec<Vec<usize>> = vec![Vec::new(); stage_count];
+        for (i, t) in tasks.iter().enumerate() {
+            let width = match t.kind {
+                TaskKind::Program => self.pipeline.layers[t.li].reload_ns,
+                TaskKind::Convert => self.pipeline.layers[t.li].compute_ns,
+            };
+            stage_ns[t.stage] = stage_ns[t.stage].max(width);
+            by_stage[t.stage].push(i);
+        }
+        let staged_ns = stats::sum_ordered(stage_ns.iter().copied());
+
+        let params = &self.params;
+        let config = self.config;
+        let run_task = |t: &StageTask| match t.kind {
+            TaskKind::Program => {
+                perturb::maybe_yield(perturb::TASK_PROGRAM);
+                let layer = &graph.layers[t.li];
+                let w = Self::layer_weights(params, layer);
+                let built = DieBank::in_pool(
+                    params,
                     &w,
                     layer.op,
-                    self.config.shards.max(1),
-                    self.config.dies_for(layer.shape.class),
-                    key.1,
-                )?)
-            };
-            let bank: &mut DieBank = match fresh.as_mut() {
-                Some(b) => b,
-                None => self.cache.value_mut(key),
-            };
-            let c0 = bank.total_conversions();
-            let e0 = bank.total_energy_pj();
-            let ys = bank.matvec_batch(acts).map_err(|e| format!("{}: {e}", layer.name()))?;
-            let conversions = bank.total_conversions() - c0;
-            let energy_pj = bank.total_energy_pj() - e0;
-            let st = &mut self.stats[li];
-            st.calls += 1;
-            st.conversions += conversions;
-            st.energy_pj += energy_pj;
-            if hit {
-                st.reload_hits += 1;
-            } else {
-                st.reload_misses += 1;
-                self.paid_reload_ns += self.pipeline.layers[li].reload_ns;
-                if let Some(bank) = fresh {
-                    let footprint = bank.weight_footprint_bits();
-                    self.cache.insert(key, bank, footprint);
+                    config.shards.max(1),
+                    config.dies_for(layer.shape.class),
+                    class_pool(layer.shape.class),
+                );
+                let slot = &t.slot;
+                let mut sg = slot.lock().expect("bank slot lock");
+                *sg = Some(built);
+            }
+            TaskKind::Convert => {
+                perturb::maybe_yield(perturb::TASK_CONVERT);
+                let layer = &graph.layers[t.li];
+                let wave = &wave_states[t.wave];
+                let mut wg = wave.lock().expect("wave state lock");
+                if wg.err.is_some() {
+                    return;
+                }
+                let slot = &t.slot;
+                let mut sg = slot.lock().expect("bank slot lock");
+                let bank = match sg.as_mut() {
+                    Some(Ok(bank)) => bank,
+                    Some(Err(e)) => {
+                        wg.err = Some(format!("{}: {e}", layer.name()));
+                        return;
+                    }
+                    None => {
+                        wg.err = Some(format!("{}: die bank never programmed", layer.name()));
+                        return;
+                    }
+                };
+                let c0 = bank.total_conversions();
+                let e0 = bank.total_energy_pj();
+                let ys = match bank.matvec_batch(&wg.acts) {
+                    Ok(ys) => ys,
+                    Err(e) => {
+                        wg.err = Some(format!("{}: {e}", layer.name()));
+                        return;
+                    }
+                };
+                wg.deltas[t.li] =
+                    Some((bank.total_conversions() - c0, bank.total_energy_pj() - e0));
+                drop(sg);
+                if t.li + 1 < layer_count {
+                    let next = &graph.layers[t.li + 1];
+                    wg.acts =
+                        ys.iter().map(|y| requantize(y, next.shape.k, next.op.a_bits)).collect();
+                } else {
+                    wg.out = ys;
                 }
             }
-            Ok(ys)
-        })?;
-        self.passes += 1;
-        Ok(last)
+        };
+        let threads = default_threads();
+        for ids in &by_stage {
+            if ids.is_empty() {
+                continue;
+            }
+            if self.config.overlap && threads > 1 && ids.len() > 1 {
+                // Work stealing: stage tasks are claimed from a shared
+                // queue by whichever worker frees up first.
+                let queue = WorkQueue::new();
+                for &i in ids {
+                    let _accepted = queue.push(i);
+                }
+                queue.close();
+                std::thread::scope(|scope| {
+                    for _ in 0..threads.min(ids.len()) {
+                        scope.spawn(|| {
+                            while let Some(i) = queue.pop() {
+                                run_task(&tasks[i]);
+                            }
+                        });
+                    }
+                });
+            } else {
+                for &i in ids {
+                    run_task(&tasks[i]);
+                }
+            }
+        }
+        drop(run_task);
+        // Fold per-task deltas into the cumulative stats in fixed
+        // wave-major order, then emit per-wave results.
+        let mut results = Vec::with_capacity(wave_count);
+        for ws in wave_states {
+            let ws = ws.into_inner().expect("wave state lock");
+            for (li, d) in ws.deltas.iter().enumerate() {
+                if let Some((conversions, energy_pj)) = d {
+                    let st = &mut self.stats[li];
+                    st.calls += 1;
+                    st.conversions += conversions;
+                    st.energy_pj += energy_pj;
+                }
+            }
+            self.passes += 1;
+            results.push(match ws.err {
+                Some(e) => Err(e),
+                None => Ok(ws.out),
+            });
+        }
+        self.last_pass_ns = staged_ns;
+        self.last_serial_ns = serial_ns;
+        results
     }
 
     /// Resident-weight cache counters: measured reload hits/misses,
@@ -423,7 +707,7 @@ impl ModelExecutor {
     /// equal this for any (threads × shards × dies) decomposition.
     pub fn reference_ints(&self, xs: &[Vec<i32>]) -> Vec<Vec<i64>> {
         Self::walk_graph(&self.graph, xs, |_, layer, acts| {
-            let w = self.layer_weights(layer);
+            let w = Self::layer_weights(&self.params, layer);
             Ok(acts.iter().map(|x| matvec_exact(&w, x)).collect())
         })
         .expect("exact reference walk is infallible")
@@ -493,6 +777,31 @@ impl BatchExecutor for ModelExecutor {
 
     fn forward(&mut self, images: &[Vec<f32>]) -> Result<Vec<Vec<f32>>, String> {
         self.execute(images)
+    }
+
+    /// Multiple stream waves in one staged engine pass: wave `w`'s
+    /// layer-`l` conversions overlap wave `w+1`'s layer-`l-1` work on
+    /// disjoint pools. Bit-identical to calling
+    /// [`forward`](BatchExecutor::forward) per wave in order — the
+    /// decision pass is wave-major — so the server can batch waves
+    /// freely without changing any served logit.
+    fn forward_many(&mut self, batches: &[Vec<Vec<f32>>]) -> Vec<Result<Vec<Vec<f32>>, String>> {
+        let mut results: Vec<Option<Result<Vec<Vec<f32>>, String>>> =
+            batches.iter().map(|b| if b.is_empty() { Some(Ok(Vec::new())) } else { None }).collect();
+        let waves: Vec<Vec<Vec<i32>>> = batches
+            .iter()
+            .filter(|b| !b.is_empty())
+            .map(|b| self.featurize_images(b))
+            .collect();
+        let outs = self.forward_ints_many(&waves);
+        let mut it = outs.into_iter();
+        for r in results.iter_mut() {
+            if r.is_none() {
+                let wave = it.next().expect("engine returns one result per wave");
+                *r = Some(wave.map(|ys| self.scale_outputs(ys)));
+            }
+        }
+        results.into_iter().map(|r| r.expect("every wave slot filled")).collect()
     }
 
     fn graph_layers(&self) -> usize {
@@ -648,6 +957,59 @@ mod tests {
         let mut bad = ModelGraph::encoder(&tiny_cfg(), 1, &plan_2b());
         bad.layers[0].op.a_bits = 0;
         assert!(ModelExecutor::new(&p, bad, PipelineConfig::default()).is_err());
+    }
+
+    #[test]
+    fn overlap_toggle_and_multi_wave_are_bit_identical_even_with_noise() {
+        // The strong engine contract: threading (overlap on/off) and
+        // wave batching (forward_ints_many vs one-by-one) change
+        // wall-clock only — every output bit, every cache decision and
+        // every noise draw is identical, because conversion order is
+        // fixed by the decision pass + stage diagonals, not by timing.
+        let mut p = MacroParams::default(); // noise stays ON
+        p.adc_bits = 6;
+        p.active_rows = 64;
+        p.rows = 64;
+        p.cols = 12;
+        let graph = ModelGraph::encoder(&tiny_cfg(), 2, &plan_2b());
+        let mk = |overlap: bool| {
+            ModelExecutor::new(
+                &p,
+                graph.clone(),
+                PipelineConfig { shards: 2, attention_dies: 2, mlp_dies: 1, overlap },
+            )
+            .unwrap()
+        };
+        let mut on = mk(true);
+        let mut off = mk(false);
+        let w1 = on.featurize_images(&images(3, 32));
+        let w2 = on.featurize_images(&images(2, 32));
+        // Cold pass then warm pass: on == off bit for bit.
+        for pass in 0..2 {
+            let a = on.forward_ints(&w1).unwrap();
+            let b = off.forward_ints(&w1).unwrap();
+            assert_eq!(a, b, "pass {pass}");
+            assert!(on.last_pass_ns() <= on.last_serial_ns() + 1e-9);
+        }
+        // Multi-wave == the same waves run one by one, stats included.
+        let mut seq = mk(true);
+        let mut many = mk(true);
+        let got: Vec<_> = many
+            .forward_ints_many(&[w1.clone(), w2.clone(), w1.clone()])
+            .into_iter()
+            .map(|r| r.unwrap())
+            .collect();
+        let r1 = seq.forward_ints(&w1).unwrap();
+        let r2 = seq.forward_ints(&w2).unwrap();
+        let r3 = seq.forward_ints(&w1).unwrap();
+        assert_eq!(got, vec![r1, r2, r3]);
+        assert_eq!(many.passes(), 3);
+        let (sm, ss) = (many.residency_stats(), seq.residency_stats());
+        assert_eq!(
+            (sm.reload_hits, sm.reload_misses, sm.evictions),
+            (ss.reload_hits, ss.reload_misses, ss.evictions)
+        );
+        assert!((sm.paid_reload_ns - ss.paid_reload_ns).abs() < 1e-9);
     }
 
     #[test]

@@ -316,6 +316,23 @@ impl PipelinePlan {
         }
     }
 
+    /// The steady-state **per-stage bound** of the staged
+    /// program/convert pipeline [ns]: the widest single stage — the max
+    /// over layers of `max(compute, warm reload)`. The pipelined
+    /// executor advances in barrier-separated stages (stage `s` programs
+    /// layer `s+1` while converting layer `s`), so no stage can finish
+    /// faster than its widest task, and a measured warm overlapped pass
+    /// is bounded below by `warm_pipelined_ns` — which is exactly the
+    /// sum of these per-stage maxima plus the exposed first reload.
+    /// `rust/tests/overlap.rs` anchors the executor's measured pass
+    /// against this bound.
+    pub fn stage_period_ns(&self) -> f64 {
+        self.layers
+            .iter()
+            .map(|t| t.compute_ns.max(t.warm_reload_ns()))
+            .fold(0.0f64, f64::max)
+    }
+
     /// Modeled full-pass latency amortized over `passes` inferences of
     /// the same graph: one cold pass, the rest warm.
     pub fn amortized_pass_ns(&self, passes: u64) -> f64 {
@@ -735,6 +752,9 @@ mod tests {
         // pipelined: 10 + max(100, 80) + max(50, 20) + 70 = 230
         assert!((pp.pipelined_ns - 230.0).abs() < 1e-12);
         assert!((pp.overlap_saving() - (1.0 - 230.0 / 330.0)).abs() < 1e-12);
+        // Stage period: widest of max(compute, warm reload) per layer —
+        // max(max(100,10), max(50,0: b resident), max(70,20)) = 100.
+        assert!((pp.stage_period_ns() - 100.0).abs() < 1e-12);
         // warm (only b resident): 10 + max(100, 0) + max(50, 20) + 70 =
         // 230 — b's reload was fully hidden anyway, so skipping it saves
         // nothing here.
@@ -765,6 +785,7 @@ mod tests {
         assert_eq!(empty.pipelined_ns, 0.0);
         assert_eq!(empty.warm_pipelined_ns, 0.0);
         assert_eq!(empty.overlap_saving(), 0.0);
+        assert_eq!(empty.stage_period_ns(), 0.0);
         let one = PipelinePlan::from_layers(vec![("x".into(), mk(40.0), 5.0, false)]);
         assert!((one.serial_ns - one.pipelined_ns).abs() < 1e-12);
     }

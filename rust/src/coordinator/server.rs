@@ -83,6 +83,14 @@ pub trait BatchExecutor {
     fn forward(&mut self, _images: &[Vec<f32>]) -> Result<Vec<Vec<f32>>, String> {
         Err("this executor does not serve model-graph forward passes".to_string())
     }
+    /// Run several forward batches (one per conversion wave), returning
+    /// one result per batch in order. The default runs them serially;
+    /// the pipelined model-graph executor overlaps the waves' die
+    /// programming and conversion stages while keeping every batch's
+    /// outputs bit-identical to a serial run.
+    fn forward_many(&mut self, batches: &[Vec<Vec<f32>>]) -> Vec<Result<Vec<Vec<f32>>, String>> {
+        batches.iter().map(|b| self.forward(b)).collect()
+    }
     /// Layers in the executor's model graph (0 = not a graph executor).
     fn graph_layers(&self) -> usize {
         0
@@ -113,6 +121,12 @@ pub struct ServerConfig {
     /// "stream"` requests); the wave closes early on `max_wait` like a
     /// fixed batch. Must be ≥ 1.
     pub wave_tokens: usize,
+    /// Streaming conversion waves the executor keeps in flight per
+    /// step (≥ 1). Waves are *formed* under one stream-lock session and
+    /// *completed in formation order*, so serving semantics match a
+    /// one-wave server; a pipelined executor overlaps the in-flight
+    /// waves' die programming and conversions for wall-clock speedup.
+    pub max_waves: usize,
 }
 
 /// Shared server state.
@@ -139,13 +153,18 @@ pub struct Server {
     /// threads enqueue under this lock; the executor loop forms and
     /// completes waves.
     stream: Mutex<TokenStream>,
+    /// Conversion waves kept in flight per executor step (≥ 1).
+    max_waves: usize,
 }
 
 impl Server {
     /// Build a server; fails on an invalid batching config (empty or
-    /// zero batch sizes, zero wave size) instead of panicking the
-    /// serving thread later.
+    /// zero batch sizes, zero wave size, zero wave concurrency) instead
+    /// of panicking the serving thread later.
     pub fn new(cfg: &ServerConfig) -> Result<Self, String> {
+        if cfg.max_waves == 0 {
+            return Err("max_waves must be at least 1".to_string());
+        }
         Ok(Server {
             pending: Arc::new(Mutex::new(VecDeque::new())),
             outbox: Arc::new(Mutex::new(BTreeMap::new())),
@@ -159,6 +178,7 @@ impl Server {
                 wave_tokens: cfg.wave_tokens,
                 max_wait: cfg.max_wait,
             })?),
+            max_waves: cfg.max_waves,
         })
     }
 
@@ -207,8 +227,9 @@ impl Server {
     }
 
     /// One executor step: form a fixed batch if policy allows, execute,
-    /// account and stage responses; then form at most one streaming
-    /// token wave and do the same through the streaming tier. A formed
+    /// account and stage responses; then form up to `max_waves`
+    /// streaming token waves and do the same through the streaming
+    /// tier (completions land in wave order). A formed
     /// batch can mix request kinds; each kind runs as its own sub-batch
     /// through the matching executor entry point (`execute` vs
     /// `forward`; `stream` requests never enter the batch queue).
@@ -235,8 +256,10 @@ impl Server {
             served += batch.requests.len();
             self.run_batch(exec, &batch);
         }
-        // Streaming tier: at most one conversion wave per step, so batch
-        // and stream traffic interleave fairly on the executor thread.
+        // Streaming tier: up to `max_waves` conversion waves per step
+        // (executed together so a pipelined executor can overlap them),
+        // so batch and stream traffic interleave fairly on the executor
+        // thread.
         let (completed, wave_ran) = self.stream_step(exec);
         served += completed;
         if batch_ran || wave_ran {
@@ -347,53 +370,91 @@ impl Server {
         }
     }
 
-    /// One streaming admission step: form at most one token wave,
-    /// execute it as a single batch through the executor's model-graph
-    /// path (pools and the resident-weight cache included), feed
-    /// completions back to the reassembly buffer and stage finished
-    /// requests' responses. A wave-execution error fails every request
-    /// with a token in the wave. Returns (completed stream requests,
-    /// whether a wave ran).
+    /// One streaming admission step: form up to `max_waves` token waves
+    /// under a single stream-lock session (wave composition stays a
+    /// pure function of the queue), execute them together through the
+    /// executor's model-graph path (pools and the resident-weight cache
+    /// included — a pipelined executor overlaps the waves' programming
+    /// and conversion stages), then feed completions back **in wave
+    /// order**, so reassembly and accounting are identical to a
+    /// one-wave-at-a-time server. A wave-execution error (or a
+    /// result-count mismatch) fails every request with a token in that
+    /// wave without touching the other in-flight waves. Returns
+    /// (completed stream requests, whether any wave ran).
     fn stream_step(&self, exec: &mut dyn BatchExecutor) -> (usize, bool) {
-        let wave = self.stream.lock().unwrap().form_wave(Instant::now());
-        let Some(mut wave) = wave else { return (0, false) };
+        let mut waves = Vec::new();
+        {
+            let mut stream = self.stream.lock().unwrap();
+            while waves.len() < self.max_waves {
+                match stream.form_wave(Instant::now()) {
+                    Some(w) => waves.push(w),
+                    None => break,
+                }
+            }
+        }
+        if waves.is_empty() {
+            return (0, false);
+        }
         // Completion/failure only read the items' identities, so the
         // activation chunks move out instead of being cloned per wave.
-        let chunks: Vec<Vec<f32>> =
-            wave.items.iter_mut().map(|t| std::mem::take(&mut t.chunk)).collect();
-        let finished = match exec.forward(&chunks) {
-            Ok(logits) => {
-                self.stream.lock().unwrap().complete_wave(&wave, &logits, Instant::now())
-            }
-            Err(e) => self.stream.lock().unwrap().fail_wave(&wave, &e),
-        };
-        let completed = finished.iter().filter(|f| f.result.is_ok()).count();
-        self.stage_responses(finished.iter().map(|f| {
-            let mut o = Json::obj();
-            o.set("id", Self::id_json(f.client_req_id));
-            match &f.result {
-                Ok(out) => {
-                    let pred = if out.logits.is_empty() {
-                        0
-                    } else {
-                        crate::util::stats::argmax_rows(&out.logits, out.logits.len())[0]
-                    };
-                    o.set("pred", Json::num(pred as f64));
-                    o.set(
-                        "logits",
-                        Json::arr_f64(&out.logits.iter().map(|&x| x as f64).collect::<Vec<_>>()),
-                    );
-                    o.set("tokens", Json::num(out.tokens as f64));
-                    o.set("waves", Json::num(out.waves as f64));
-                    o.set("first_token_us", Json::num(out.first_token_us));
-                    o.set("last_token_us", Json::num(out.last_token_us));
+        let batches: Vec<Vec<Vec<f32>>> = waves
+            .iter_mut()
+            .map(|w| w.items.iter_mut().map(|t| std::mem::take(&mut t.chunk)).collect())
+            .collect();
+        let mut results = exec.forward_many(&batches);
+        // A well-behaved executor returns one result per wave; pad any
+        // shortfall with errors so no wave's tokens leak in flight.
+        while results.len() < waves.len() {
+            results.push(Err("executor returned too few wave results".to_string()));
+        }
+        let mut completed = 0usize;
+        let mut responses: Vec<(u64, String)> = Vec::new();
+        for (wave, result) in waves.iter().zip(&results) {
+            let finished = match result {
+                Ok(logits) if logits.len() == wave.items.len() => {
+                    self.stream.lock().unwrap().complete_wave(wave, logits, Instant::now())
                 }
-                Err(e) => {
-                    o.set("error", Json::str(e));
+                Ok(logits) => self.stream.lock().unwrap().fail_wave(
+                    wave,
+                    &format!(
+                        "executor returned {} outputs for a {}-token wave",
+                        logits.len(),
+                        wave.items.len()
+                    ),
+                ),
+                Err(e) => self.stream.lock().unwrap().fail_wave(wave, e),
+            };
+            completed += finished.iter().filter(|f| f.result.is_ok()).count();
+            responses.extend(finished.iter().map(|f| {
+                let mut o = Json::obj();
+                o.set("id", Self::id_json(f.client_req_id));
+                match &f.result {
+                    Ok(out) => {
+                        let pred = if out.logits.is_empty() {
+                            0
+                        } else {
+                            crate::util::stats::argmax_rows(&out.logits, out.logits.len())[0]
+                        };
+                        o.set("pred", Json::num(pred as f64));
+                        o.set(
+                            "logits",
+                            Json::arr_f64(
+                                &out.logits.iter().map(|&x| x as f64).collect::<Vec<_>>(),
+                            ),
+                        );
+                        o.set("tokens", Json::num(out.tokens as f64));
+                        o.set("waves", Json::num(out.waves as f64));
+                        o.set("first_token_us", Json::num(out.first_token_us));
+                        o.set("last_token_us", Json::num(out.last_token_us));
+                    }
+                    Err(e) => {
+                        o.set("error", Json::str(e));
+                    }
                 }
-            }
-            (f.conn_id, Json::Obj(o).to_string())
-        }));
+                (f.conn_id, Json::Obj(o).to_string())
+            }));
+        }
+        self.stage_responses(responses.into_iter());
         (completed, true)
     }
 
@@ -676,6 +737,7 @@ mod tests {
             batch_sizes: vec![1, 4],
             max_wait: Duration::from_millis(1),
             wave_tokens: 2,
+            max_waves: 2,
         })
         .unwrap()
     }
@@ -902,6 +964,7 @@ mod tests {
             batch_sizes: vec![],
             max_wait: Duration::from_millis(1),
             wave_tokens: 2,
+            max_waves: 1,
         };
         assert!(Server::new(&bad).is_err());
         // A zero wave size is equally a config error, not a later panic.
@@ -910,8 +973,18 @@ mod tests {
             batch_sizes: vec![1, 4],
             max_wait: Duration::from_millis(1),
             wave_tokens: 0,
+            max_waves: 1,
         };
         assert!(Server::new(&bad_wave).is_err());
+        // Zero in-flight waves would make the streaming tier a no-op.
+        let bad_concurrency = ServerConfig {
+            addr: "unused".into(),
+            batch_sizes: vec![1, 4],
+            max_wait: Duration::from_millis(1),
+            wave_tokens: 2,
+            max_waves: 0,
+        };
+        assert!(Server::new(&bad_concurrency).is_err());
     }
 
     #[test]
@@ -1167,6 +1240,7 @@ mod tests {
             batch_sizes: vec![1, 4],
             max_wait: Duration::from_millis(1),
             wave_tokens: 2,
+            max_waves: 2,
         };
         // Bind manually to learn the port, then serve on it.
         let listener = TcpListener::bind("127.0.0.1:0").unwrap();

@@ -49,7 +49,19 @@
 //!   returning, so the conversion-counter sequence is a pure function of
 //!   the wave's *composition*, never of scheduler timing;
 //! - waves are serialized by the single executor loop, and each wave
-//!   runs through the ordinary deterministic graph walk.
+//!   runs through the ordinary deterministic graph walk. With the
+//!   pipelined executor the server keeps **multiple waves in flight**
+//!   per step: they are *formed* under one lock session (so their
+//!   composition is a pure function of the queue) and *completed in
+//!   wave order*, so the reassembly and accounting sequence is the same
+//!   as if they had run one at a time.
+//!
+//! A request that dies while its tokens ride a wave — its connection
+//! closed ([`TokenStream::purge_conn`]) or a sibling wave failed
+//! ([`TokenStream::fail_wave`]) — becomes **defunct**: its in-flight
+//! tokens are remembered and settled when their waves land, *without*
+//! counting toward served-token or latency stats and without disturbing
+//! the other requests sharing those waves.
 //!
 //! Consequences (test-enforced in `rust/tests/stream.rs`): at zero noise
 //! streamed token outputs are bit-identical to the fixed-batch forward
@@ -202,6 +214,13 @@ pub struct TokenStream {
     next_seq: u64,
     /// Tokens admitted to a wave and not yet completed/failed.
     executing: usize,
+    /// Requests that died with tokens still riding in-flight waves
+    /// (`req_seq` → tokens outstanding): the connection closed mid-wave
+    /// or a sibling wave failed the request. Their completions settle
+    /// the count without touching served-token/latency stats, so a dead
+    /// request cannot poison a shared wave's accounting. Entries drop at
+    /// zero, so the map stays wave-sized.
+    defunct: BTreeMap<u64, usize>,
     waves: u64,
     occupancy_sum: f64,
     completed_requests: u64,
@@ -224,6 +243,7 @@ impl TokenStream {
             requests: BTreeMap::new(),
             next_seq: 1,
             executing: 0,
+            defunct: BTreeMap::new(),
             waves: 0,
             occupancy_sum: 0.0,
             completed_requests: 0,
@@ -311,6 +331,20 @@ impl TokenStream {
         Some(Wave { items, occupancy })
     }
 
+    /// Settle one in-flight token of a defunct request. Returns whether
+    /// `req_seq` was defunct (the caller then skips all stats and
+    /// reassembly for the token — the request already left the tier).
+    fn settle_defunct(&mut self, req_seq: u64) -> bool {
+        let Some(left) = self.defunct.get_mut(&req_seq) else {
+            return false;
+        };
+        *left = left.saturating_sub(1);
+        if *left == 0 {
+            self.defunct.remove(&req_seq);
+        }
+        true
+    }
+
     fn push_latency(&mut self, us: f64) {
         if self.latencies_us.len() < LATENCY_SAMPLE_CAP {
             self.latencies_us.push(us);
@@ -334,10 +368,16 @@ impl TokenStream {
         let mut seen: Vec<u64> = Vec::new();
         for (item, lg) in wave.items.iter().zip(outputs) {
             self.executing = self.executing.saturating_sub(1);
+            // A token of a defunct request (connection closed mid-wave,
+            // or a sibling wave failed it): settle the in-flight count
+            // and skip the stats — counting a dead request's tokens as
+            // served poisoned the wave's accounting for everyone else.
+            if self.settle_defunct(item.req_seq) {
+                continue;
+            }
             self.tokens_served += 1;
             let us = now.duration_since(item.arrived).as_secs_f64() * 1e6;
             self.push_latency(us);
-            // The owning request may be gone (connection closed mid-wave).
             let Some(req) = self.requests.get_mut(&item.req_seq) else {
                 continue;
             };
@@ -378,13 +418,23 @@ impl TokenStream {
     /// A wave's execution failed: every request with a token in the
     /// wave fails as a unit — its reassembly state and any still-queued
     /// tokens are purged, and one error response per request is emitted.
+    /// A failed request's tokens riding *other* in-flight waves become
+    /// defunct, so those waves settle them silently instead of counting
+    /// a dead request's tokens as served.
     pub fn fail_wave(&mut self, wave: &Wave, error: &str) -> Vec<FinishedRequest> {
         let mut finished = Vec::new();
-        let mut failed: Vec<u64> = Vec::new();
+        // (req_seq, unfinished token count) per newly failed request.
+        let mut failed: Vec<(u64, usize)> = Vec::new();
         for item in &wave.items {
             self.executing = self.executing.saturating_sub(1);
+            // Already-defunct tokens riding the failing wave settle as
+            // on the success path; their request emitted its response
+            // (or error) long ago.
+            if self.settle_defunct(item.req_seq) {
+                continue;
+            }
             if let Some(req) = self.requests.remove(&item.req_seq) {
-                failed.push(item.req_seq);
+                failed.push((item.req_seq, req.logits.len() - req.done));
                 finished.push(FinishedRequest {
                     conn_id: req.conn_id,
                     client_req_id: req.client_req_id,
@@ -394,19 +444,50 @@ impl TokenStream {
         }
         // One queue sweep for the whole wave (not one per failed
         // request); `failed` is at most wave-sized, so the lookup stays
-        // cheap.
+        // cheap. unfinished = this wave's tokens + queued tokens +
+        // tokens riding other waves; the last group goes defunct.
         if !failed.is_empty() {
-            self.queue.retain(|t| !failed.contains(&t.req_seq));
+            for &(seq, unfinished) in &failed {
+                let in_this_wave = wave.items.iter().filter(|t| t.req_seq == seq).count();
+                let queued = self.queue.iter().filter(|t| t.req_seq == seq).count();
+                let elsewhere = unfinished.saturating_sub(in_this_wave + queued);
+                if elsewhere > 0 {
+                    self.defunct.insert(seq, elsewhere);
+                }
+            }
+            self.queue.retain(|t| !failed.iter().any(|&(seq, _)| seq == t.req_seq));
         }
         finished
     }
 
-    /// Drop a closed connection's queued tokens and reassembly state
-    /// (tokens already admitted to a wave finish executing; their
-    /// completions find no request and are dropped).
+    /// Drop a closed connection's queued tokens and reassembly state.
+    /// Tokens already admitted to a wave finish executing — the macro
+    /// cannot recall a conversion — but they are recorded as defunct so
+    /// their completions settle without polluting served-token stats or
+    /// the wave they share with live requests.
     pub fn purge_conn(&mut self, conn_id: u64) {
+        // Queued tokens per request of this connection, counted before
+        // the sweep: the in-flight remainder (total − done − queued) is
+        // what rides waves right now and must settle later.
+        let mut queued: BTreeMap<u64, usize> = BTreeMap::new();
+        for t in &self.queue {
+            if t.conn_id == conn_id {
+                *queued.entry(t.req_seq).or_insert(0) += 1;
+            }
+        }
         self.queue.retain(|t| t.conn_id != conn_id);
-        self.requests.retain(|_, r| r.conn_id != conn_id);
+        let defunct = &mut self.defunct;
+        self.requests.retain(|seq, r| {
+            if r.conn_id != conn_id {
+                return true;
+            }
+            let unfinished = r.logits.len() - r.done;
+            let in_waves = unfinished.saturating_sub(*queued.get(seq).unwrap_or(&0));
+            if in_waves > 0 {
+                defunct.insert(*seq, in_waves);
+            }
+            false
+        });
     }
 
     /// Whether any stream request was ever admitted. Drives the
@@ -638,6 +719,8 @@ mod tests {
         let done = ts.complete_wave(&wave, &[vec![1.0], vec![2.0]], now);
         assert!(done.is_empty());
         assert_eq!(ts.tokens_in_flight(), 0);
+        // The dead request's settled tokens never count as served.
+        assert_eq!(ts.snapshot().tokens_served, 0);
     }
 
     #[test]

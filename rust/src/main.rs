@@ -276,7 +276,8 @@ mod pjrt_cli {
                 .opt("artifacts", "artifacts", "artifacts directory")
                 .opt("batch", "16", "execution batch artifact (1 or 16)")
                 .opt("max-wait-ms", "2", "batching window")
-                .opt("wave-tokens", "16", "streaming conversion-wave size (tokens)"),
+                .opt("wave-tokens", "16", "streaming conversion-wave size (tokens)")
+                .opt("max-waves", "2", "streaming conversion waves kept in flight per step"),
             argv,
         )?;
         let batch: usize = args.get_parse("batch")?;
@@ -298,6 +299,7 @@ mod pjrt_cli {
             batch_sizes: vec![1, batch],
             max_wait: Duration::from_millis(args.get_parse::<u64>("max-wait-ms")?),
             wave_tokens: args.get_parse::<usize>("wave-tokens")?,
+            max_waves: args.get_parse::<usize>("max-waves")?,
         };
         println!(
             "serving ViT-CIM on {} (batch {batch}, σ_attn={sa:.2}, σ_mlp={sm:.2} LSB)",

@@ -38,6 +38,16 @@ pub mod perturb {
     use std::sync::atomic::{AtomicU64, Ordering};
     use std::sync::Mutex;
 
+    /// Task-id for [`maybe_yield`] at a pipelined executor **program**
+    /// (die weight-load) stage boundary, so perturbation seeds skew the
+    /// program/convert overlap specifically. `u64::MAX - 1` and
+    /// `u64::MAX - 2` are the [`WorkQueue`](super::WorkQueue)
+    /// push/pop boundaries; data-parallel task indices count up from 0.
+    pub const TASK_PROGRAM: u64 = u64::MAX - 3;
+    /// Task-id for [`maybe_yield`] at a pipelined executor **convert**
+    /// (conversion-wave) stage boundary.
+    pub const TASK_CONVERT: u64 = u64::MAX - 4;
+
     /// Active perturbation seed; 0 = harness off.
     static SEED: AtomicU64 = AtomicU64::new(0);
     /// Total yields injected since process start (monotonic), so tests

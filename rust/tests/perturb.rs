@@ -7,9 +7,12 @@
 //! directly. `util::pool::perturb` injects seeded bursts of
 //! `thread::yield_now()` at every worker-pool task boundary and queue
 //! transfer, forcing worker interleavings the OS scheduler would only
-//! produce under rare load. Under every perturbation seed and every
-//! thread-grid point, the zero-noise pipeline and the streaming server
-//! must reproduce the exact reference walk bit-for-bit.
+//! produce under rare load. Under every perturbation seed, every
+//! thread-grid point and **both overlap settings** (the staged
+//! wavefront engine on and off), the zero-noise pipeline and the
+//! streaming server must reproduce the exact reference walk
+//! bit-for-bit — with yield bursts injected at the pipelined engine's
+//! program/convert stage boundaries and at every queue transfer.
 
 use std::time::Duration;
 
@@ -66,20 +69,50 @@ fn perturbed_pipeline_matches_reference_across_seeds_and_threads() {
         exec.reference_ints(&exec.featurize_images(&imgs))
     };
     let before = perturb::injected_yields();
+    let mut overlapped_yields = 0u64;
     for seed in [1u64, 7, 99] {
         for threads in [2usize, 4] {
-            let p = base.clone().with_threads(threads);
-            let cfg = PipelineConfig { shards: 2, attention_dies: 2, mlp_dies: 1 };
-            let mut exec = ModelExecutor::new(&p, graph.clone(), cfg).unwrap();
-            let xs = exec.featurize_images(&imgs);
-            let got = perturb::with_seed(seed, || exec.forward_ints(&xs).unwrap());
-            assert_eq!(got, reference, "perturb seed {seed}, threads {threads}");
+            for overlap in [false, true] {
+                let p = base.clone().with_threads(threads);
+                let cfg =
+                    PipelineConfig { shards: 2, attention_dies: 2, mlp_dies: 1, overlap };
+                let mut exec = ModelExecutor::new(&p, graph.clone(), cfg).unwrap();
+                let xs = exec.featurize_images(&imgs);
+                let at = perturb::injected_yields();
+                let got = perturb::with_seed(seed, || exec.forward_ints(&xs).unwrap());
+                if overlap {
+                    overlapped_yields += perturb::injected_yields() - at;
+                }
+                assert_eq!(
+                    got, reference,
+                    "perturb seed {seed}, threads {threads}, overlap {overlap}"
+                );
+                // Multi-wave submission through the same engine: two
+                // waves in flight must equal two sequential passes.
+                let many = perturb::with_seed(seed, || {
+                    exec.forward_ints_many(&[xs.clone(), xs.clone()])
+                });
+                for got in many {
+                    assert_eq!(
+                        got.unwrap(),
+                        reference,
+                        "multi-wave, seed {seed}, threads {threads}, overlap {overlap}"
+                    );
+                }
+            }
         }
     }
     // The harness actually fired: yields were injected at task boundaries.
     assert!(
         perturb::injected_yields() > before,
         "perturbation sections must inject at least one yield"
+    );
+    // The pipelined engine's only perturbation hooks are the program /
+    // convert stage boundaries and the work-queue transfers, so armed
+    // overlapped runs prove the new boundaries are exercised.
+    assert!(
+        overlapped_yields > 0,
+        "overlapped runs must inject yields at program/convert stage boundaries"
     );
 }
 
@@ -133,31 +166,41 @@ fn perturbed_stream_matches_reference_across_seeds_and_threads() {
         (a, b)
     };
     // Seed 0 is the disarmed control: the same code path with no
-    // injected yields must agree with every armed run.
+    // injected yields must agree with every armed run. `max_waves: 2`
+    // keeps both conversion waves of the trace in flight at once, so
+    // the campaign also covers multi-wave pipelined serving.
     for seed in [0u64, 1, 2, 3] {
         for threads in [2usize, 4] {
-            let p = base.clone().with_threads(threads);
-            let cfg = PipelineConfig { shards: 2, attention_dies: 1, mlp_dies: 1 };
-            let mut exec = ModelExecutor::new(&p, graph.clone(), cfg).unwrap();
-            let srv = Server::new(&ServerConfig {
-                addr: "unused".into(),
-                batch_sizes: vec![1, 4],
-                max_wait: Duration::from_millis(60_000),
-                wave_tokens: 2,
-            })
-            .unwrap();
-            let conn = srv.open_conn();
-            let resps = perturb::with_seed(seed, || {
-                srv.handle_line(&stream_line(10, 3, &img_a), conn).unwrap();
-                srv.handle_line(&stream_line(20, 3, &img_b), conn).unwrap();
-                drain_responses(&srv, &mut exec, conn, 2)
-            });
-            assert_eq!(resps.len(), 2, "seed {seed}, threads {threads}");
-            for j in &resps {
-                let id = j.get_path("id").unwrap().as_f64().unwrap() as u64;
-                let want = if id == 10 { &want_a } else { &want_b };
-                let want_f64: Vec<f64> = want.iter().map(|&x| x as f64).collect();
-                assert_eq!(logits_of(j), want_f64, "seed {seed}, threads {threads}, id {id}");
+            for overlap in [false, true] {
+                let p = base.clone().with_threads(threads);
+                let cfg =
+                    PipelineConfig { shards: 2, attention_dies: 1, mlp_dies: 1, overlap };
+                let mut exec = ModelExecutor::new(&p, graph.clone(), cfg).unwrap();
+                let srv = Server::new(&ServerConfig {
+                    addr: "unused".into(),
+                    batch_sizes: vec![1, 4],
+                    max_wait: Duration::from_millis(60_000),
+                    wave_tokens: 2,
+                    max_waves: 2,
+                })
+                .unwrap();
+                let conn = srv.open_conn();
+                let resps = perturb::with_seed(seed, || {
+                    srv.handle_line(&stream_line(10, 3, &img_a), conn).unwrap();
+                    srv.handle_line(&stream_line(20, 3, &img_b), conn).unwrap();
+                    drain_responses(&srv, &mut exec, conn, 2)
+                });
+                assert_eq!(resps.len(), 2, "seed {seed}, threads {threads}, overlap {overlap}");
+                for j in &resps {
+                    let id = j.get_path("id").unwrap().as_f64().unwrap() as u64;
+                    let want = if id == 10 { &want_a } else { &want_b };
+                    let want_f64: Vec<f64> = want.iter().map(|&x| x as f64).collect();
+                    assert_eq!(
+                        logits_of(j),
+                        want_f64,
+                        "seed {seed}, threads {threads}, overlap {overlap}, id {id}"
+                    );
+                }
             }
         }
     }

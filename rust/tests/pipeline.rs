@@ -67,7 +67,8 @@ fn zero_noise_full_pass_equals_reference_for_any_decomposition() {
         for shards in [1usize, 40] {
             for (att, mlp) in [(1usize, 1usize), (2, 1), (1, 2), (2, 2)] {
                 let p = base.clone().with_threads(threads);
-                let cfg = PipelineConfig { shards, attention_dies: att, mlp_dies: mlp };
+                let cfg =
+                    PipelineConfig { shards, attention_dies: att, mlp_dies: mlp, overlap: true };
                 let mut exec = ModelExecutor::new(&p, graph.clone(), cfg).unwrap();
                 let xs = exec.featurize_images(&imgs);
                 let got = exec.forward_ints(&xs).unwrap();
@@ -118,7 +119,7 @@ fn warm_pass_beats_cold_when_model_fits_and_matches_cold_when_evicted() {
     let exec = ModelExecutor::new(
         &zero_noise(fits),
         graph,
-        PipelineConfig { shards: 4, attention_dies: 2, mlp_dies: 2 },
+        PipelineConfig { shards: 4, attention_dies: 2, mlp_dies: 2, overlap: true },
     )
     .unwrap();
     let px = exec.pipeline();
@@ -217,7 +218,7 @@ fn noisy_full_pass_is_bit_identical_across_threads_and_shards() {
     let graph = ModelGraph::encoder(&tiny_cfg(), 1, &plan(2, 2));
     let imgs = images(2, 32);
     let run = |threads: usize, shards: usize| {
-        let cfg = PipelineConfig { shards, attention_dies: 1, mlp_dies: 1 };
+        let cfg = PipelineConfig { shards, attention_dies: 1, mlp_dies: 1, overlap: true };
         let mut exec =
             ModelExecutor::new(&p.clone().with_threads(threads), graph.clone(), cfg).unwrap();
         let xs = exec.featurize_images(&imgs);
@@ -251,8 +252,8 @@ fn vit_base_zero_noise_equals_reference_across_decompositions() {
     assert_eq!(reference.len(), 2);
     assert!(reference.iter().all(|y| y.len() == 768));
     for cfg in [
-        PipelineConfig { shards: 1, attention_dies: 1, mlp_dies: 1 },
-        PipelineConfig { shards: 4, attention_dies: 2, mlp_dies: 2 },
+        PipelineConfig { shards: 1, attention_dies: 1, mlp_dies: 1, overlap: false },
+        PipelineConfig { shards: 4, attention_dies: 2, mlp_dies: 2, overlap: true },
     ] {
         let mut exec = ModelExecutor::new(&p, graph.clone(), cfg).unwrap();
         let xs = exec.featurize_images(&imgs);
@@ -274,6 +275,7 @@ fn vit_base_forward_serves_through_server_with_layer_ledger() {
         batch_sizes: vec![1, 4],
         max_wait: Duration::from_millis(1),
         wave_tokens: 2,
+        max_waves: 2,
     })
     .unwrap();
     let conn = srv.open_conn();
@@ -350,7 +352,7 @@ fn reload_overlap_beats_serial_accounting_for_vit_base_batch8() {
     let exec = ModelExecutor::new(
         &zero_noise(MacroParams::default()),
         graph,
-        PipelineConfig { shards: 4, attention_dies: 2, mlp_dies: 2 },
+        PipelineConfig { shards: 4, attention_dies: 2, mlp_dies: 2, overlap: true },
     )
     .unwrap();
     let pp2 = exec.pipeline();

@@ -11,14 +11,24 @@
 //! - Out-of-order completion: a short request admitted behind a long
 //!   one completes first, and the stats report carries the streaming
 //!   fields (tokens in flight, wave occupancy, token latency p50/p99).
+//! - Multi-wave in flight (`max_waves > 1`): several waves execute per
+//!   step and complete in wave order with unchanged results.
+//! - Mid-flight request death (disconnect or a sibling wave's failure)
+//!   settles the dead request's in-flight tokens without failing or
+//!   mis-counting the waves it shares with live requests.
+//! - Property campaign: random arrival interleavings, wave schedules,
+//!   purges and failures always reassemble every surviving request in
+//!   token-index order with no cross-request leakage.
 
-use std::time::Duration;
+use std::collections::BTreeSet;
+use std::time::{Duration, Instant};
 
 use cr_cim::cim::params::{CbMode, MacroParams};
 use cr_cim::coordinator::pipeline::{ModelExecutor, PipelineConfig};
 use cr_cim::coordinator::server::{BatchExecutor, Server, ServerConfig};
-use cr_cim::coordinator::stream::{pool_tokens, split_tokens};
+use cr_cim::coordinator::stream::{pool_tokens, split_tokens, StreamConfig, TokenStream, Wave};
 use cr_cim::util::json::{self, Json};
+use cr_cim::util::prop::assert_prop;
 use cr_cim::vit::graph::ModelGraph;
 use cr_cim::vit::plan::{OperatingPoint, PrecisionPlan};
 use cr_cim::vit::VitConfig;
@@ -55,14 +65,21 @@ fn image(seed: usize, floats: usize) -> Vec<f32> {
     (0..floats).map(|j| ((seed * 31 + j * 7) % 13) as f32 / 13.0 - 0.5).collect()
 }
 
-fn server_with(wave_tokens: usize, max_wait_ms: u64) -> Server {
+fn multiwave_server(wave_tokens: usize, max_wait_ms: u64, max_waves: usize) -> Server {
     Server::new(&ServerConfig {
         addr: "unused".into(),
         batch_sizes: vec![1, 4],
         max_wait: Duration::from_millis(max_wait_ms),
         wave_tokens,
+        max_waves,
     })
     .unwrap()
+}
+
+/// Single-wave-per-step server: the tests that count requests completed
+/// per `executor_step` depend on one wave per step.
+fn server_with(wave_tokens: usize, max_wait_ms: u64) -> Server {
+    multiwave_server(wave_tokens, max_wait_ms, 1)
 }
 
 fn test_server(wave_tokens: usize) -> Server {
@@ -223,7 +240,7 @@ fn noisy_streamed_responses_are_thread_and_shard_invariant() {
     // no deadline/aging path whose timing could vary between runs (the
     // generous max_wait keeps both switched off).
     let run = |threads: usize, shards: usize| -> Vec<(u64, Vec<f64>)> {
-        let cfg = PipelineConfig { shards, attention_dies: 1, mlp_dies: 1 };
+        let cfg = PipelineConfig { shards, attention_dies: 1, mlp_dies: 1, overlap: true };
         let mut exec =
             ModelExecutor::new(&p.clone().with_threads(threads), graph.clone(), cfg).unwrap();
         let srv = server_with(2, 60_000);
@@ -326,4 +343,268 @@ fn mixed_kinds_serve_side_by_side_with_streams() {
     let stats = srv.ledger_json();
     assert_eq!(stats.get_path("requests").unwrap().as_f64().unwrap(), 2.0);
     assert_eq!(stats.get_path("stream_requests").unwrap().as_f64().unwrap(), 1.0);
+}
+
+#[test]
+fn multi_wave_steps_complete_requests_in_one_executor_step() {
+    // max_waves = 2: a 4-token request over 2-token waves forms both
+    // waves in one stream-lock session and completes in one step —
+    // with the same logits a one-wave-at-a-time server produces.
+    let p = tiny_params();
+    let graph = ModelGraph::encoder(&tiny_cfg(), 1, &plan(2, 2));
+    let mut exec = ModelExecutor::new(&p, graph.clone(), PipelineConfig::default()).unwrap();
+    let srv = multiwave_server(2, 60_000, 2);
+    let conn = srv.open_conn();
+    srv.handle_line(&stream_line(1, 4, &image(7, 48)), conn).unwrap();
+    assert_eq!(srv.executor_step(&mut exec), 1, "both waves run in a single step");
+    let resps = srv.take_responses(conn);
+    assert_eq!(resps.len(), 1);
+    let j = json::parse(&resps[0]).unwrap();
+    assert_eq!(j.get_path("waves").unwrap().as_f64().unwrap(), 2.0);
+    assert_eq!(j.get_path("tokens").unwrap().as_f64().unwrap(), 4.0);
+    let stats = srv.ledger_json();
+    assert_eq!(stats.get_path("tokens_in_flight").unwrap().as_f64().unwrap(), 0.0);
+    // Single-wave control: identical wave partition, identical logits.
+    let mut exec1 = ModelExecutor::new(&p, graph, PipelineConfig::default()).unwrap();
+    let srv1 = server_with(2, 60_000);
+    let conn1 = srv1.open_conn();
+    srv1.handle_line(&stream_line(1, 4, &image(7, 48)), conn1).unwrap();
+    let r1 = drain_responses(&srv1, &mut exec1, conn1, 1);
+    assert_eq!(logits_of(&j), logits_of(&r1[0]));
+}
+
+#[test]
+fn mid_wave_disconnect_fails_only_that_requests_tokens_as_a_unit() {
+    // Two connections share a wave; one disconnects while the wave is
+    // in flight. The dead request's remaining tokens die as a unit —
+    // queued ones dropped, in-flight ones settled silently — and the
+    // surviving request completes with uncontaminated stats.
+    let mut ts = TokenStream::new(&StreamConfig {
+        wave_tokens: 2,
+        max_wait: Duration::from_millis(1),
+    })
+    .unwrap();
+    let t0 = Instant::now();
+    ts.enqueue_request(1, Some(1.0), &[0.0, 1.0], 2, t0); // seq 1, conn 1
+    ts.enqueue_request(2, Some(2.0), &[2.0, 3.0], 2, t0); // seq 2, conn 2
+    let w1 = ts.form_wave(t0).unwrap(); // depth-fair: {(1,0), (2,0)}
+    let keys1: Vec<(u64, usize)> = w1.items.iter().map(|t| (t.req_seq, t.token_index)).collect();
+    assert_eq!(keys1, vec![(1, 0), (2, 0)]);
+    ts.purge_conn(1); // disconnect while w1 is in flight
+    assert_eq!(ts.queued_tokens(), 1, "conn 1's queued token is dropped");
+    let done1 = ts.complete_wave(&w1, &[vec![10.0], vec![20.0]], t0);
+    assert!(done1.is_empty());
+    let w2 = ts.form_wave(t0 + Duration::from_millis(5)).unwrap();
+    let keys2: Vec<(u64, usize)> = w2.items.iter().map(|t| (t.req_seq, t.token_index)).collect();
+    assert_eq!(keys2, vec![(2, 1)]);
+    let done2 = ts.complete_wave(&w2, &[vec![30.0]], t0);
+    assert_eq!(done2.len(), 1);
+    assert_eq!(done2[0].client_req_id, Some(2.0));
+    let out = done2[0].result.as_ref().unwrap();
+    assert_eq!(out.logits, vec![25.0], "mean of the surviving request's tokens only");
+    assert_eq!(ts.tokens_in_flight(), 0);
+    let snap = ts.snapshot();
+    assert_eq!(snap.requests, 1);
+    assert_eq!(snap.tokens_served, 2, "the dead request's tokens never count as served");
+}
+
+#[test]
+fn failing_one_wave_settles_the_requests_tokens_in_other_waves() {
+    // Request A's tokens ride two concurrent waves; request B shares
+    // the second. Failing wave 1 fails A as a unit; wave 2 then settles
+    // A's stray token silently and completes B normally.
+    let mut ts = TokenStream::new(&StreamConfig {
+        wave_tokens: 2,
+        max_wait: Duration::from_millis(1),
+    })
+    .unwrap();
+    let t0 = Instant::now();
+    ts.enqueue_request(1, Some(1.0), &[0.0, 1.0, 2.0], 3, t0); // A: seq 1
+    let w1 = ts.form_wave(t0).unwrap();
+    let keys1: Vec<(u64, usize)> = w1.items.iter().map(|t| (t.req_seq, t.token_index)).collect();
+    assert_eq!(keys1, vec![(1, 0), (1, 1)]);
+    ts.enqueue_request(2, Some(2.0), &[3.0], 1, t0); // B: seq 2
+    let w2 = ts.form_wave(t0).unwrap(); // depth-fair: {(1,2), (2,0)}
+    let keys2: Vec<(u64, usize)> = w2.items.iter().map(|t| (t.req_seq, t.token_index)).collect();
+    assert_eq!(keys2, vec![(1, 2), (2, 0)]);
+    let failed = ts.fail_wave(&w1, "die bank fault");
+    assert_eq!(failed.len(), 1, "only A fails");
+    assert_eq!(failed[0].client_req_id, Some(1.0));
+    assert!(failed[0].result.is_err());
+    let done = ts.complete_wave(&w2, &[vec![50.0], vec![60.0]], t0);
+    assert_eq!(done.len(), 1, "B completes despite sharing a wave with failed A");
+    assert_eq!(done[0].client_req_id, Some(2.0));
+    assert_eq!(done[0].result.as_ref().unwrap().logits, vec![60.0]);
+    assert_eq!(ts.tokens_in_flight(), 0);
+    let snap = ts.snapshot();
+    assert_eq!(snap.requests, 1);
+    assert_eq!(snap.tokens_served, 1, "only B's token counts as served");
+}
+
+/// Synthetic wave execution for the property campaign: each token's
+/// "logits" encode its identity, so pooled responses prove reassembly
+/// order and the absence of cross-request leakage arithmetically
+/// (any foreign or duplicated token shifts the mean).
+fn identity_outputs(wave: &Wave) -> Vec<Vec<f32>> {
+    wave.items.iter().map(|t| vec![t.req_seq as f32, t.token_index as f32]).collect()
+}
+
+#[test]
+fn prop_random_interleavings_reassemble_in_token_order_without_leakage() {
+    assert_prop("stream-wave-interleaving", 60, |g| {
+        let wave_tokens = g.usize(1, 4);
+        let mut ts = TokenStream::new(&StreamConfig {
+            wave_tokens,
+            max_wait: Duration::from_millis(10),
+        })
+        .map_err(|e| e.to_string())?;
+        let t0 = Instant::now();
+        let n_req = g.usize(1, 4);
+        let tokens: Vec<usize> = (0..n_req).map(|_| g.usize(1, 5)).collect();
+        let mut next_enqueue = 0usize;
+        let mut seq_of = vec![0u64; n_req]; // filled at enqueue (1-based)
+        let mut inflight: Vec<Wave> = Vec::new();
+        let mut seen: BTreeSet<(u64, usize)> = BTreeSet::new();
+        let mut purged: BTreeSet<u64> = BTreeSet::new(); // conn ids
+        let mut finished_ok: BTreeSet<u64> = BTreeSet::new(); // conn ids
+        let mut finished_err: BTreeSet<u64> = BTreeSet::new();
+        // Validate one formed wave: sorted, in-bounds, never duplicated.
+        let check_wave = |w: &Wave, seen: &mut BTreeSet<(u64, usize)>| -> Result<(), String> {
+            for pair in w.items.windows(2) {
+                let a = (pair[0].req_seq, pair[0].token_index);
+                let b = (pair[1].req_seq, pair[1].token_index);
+                if a >= b {
+                    return Err(format!("wave not sorted by (req_seq, token_index): {a:?} {b:?}"));
+                }
+            }
+            for it in &w.items {
+                if !seen.insert((it.req_seq, it.token_index)) {
+                    return Err(format!(
+                        "token admitted twice: seq {} idx {}",
+                        it.req_seq, it.token_index
+                    ));
+                }
+            }
+            Ok(())
+        };
+        // Settle one wave's completions against the identity encoding.
+        let settle = |done: Vec<cr_cim::coordinator::stream::FinishedRequest>,
+                      seq_of: &[u64],
+                      tokens: &[usize],
+                      purged: &BTreeSet<u64>,
+                      finished_ok: &mut BTreeSet<u64>,
+                      finished_err: &mut BTreeSet<u64>|
+         -> Result<(), String> {
+            for f in done {
+                if purged.contains(&f.conn_id) {
+                    return Err(format!("purged conn {} got a response", f.conn_id));
+                }
+                match &f.result {
+                    Ok(out) => {
+                        let idx = (f.conn_id - 1) as usize;
+                        let n = tokens[idx];
+                        if out.tokens != n {
+                            return Err(format!("req {idx}: {} tokens, want {n}", out.tokens));
+                        }
+                        // Mean over exactly tokens 0..n of this request's
+                        // seq: any leaked or missing token shifts it.
+                        let want =
+                            vec![seq_of[idx] as f32, (n as f32 - 1.0) / 2.0];
+                        if out.logits != want {
+                            return Err(format!(
+                                "req {idx}: pooled {:?}, want {want:?}",
+                                out.logits
+                            ));
+                        }
+                        if !finished_ok.insert(f.conn_id) {
+                            return Err(format!("conn {} finished twice", f.conn_id));
+                        }
+                    }
+                    Err(_) => {
+                        finished_err.insert(f.conn_id);
+                    }
+                }
+            }
+            Ok(())
+        };
+        // Random phase: interleave enqueues, wave formation (fresh and
+        // deadline-aged), completion, failure and connection purges.
+        for _ in 0..40 {
+            match g.usize(0, 5) {
+                0 if next_enqueue < n_req => {
+                    let conn = next_enqueue as u64 + 1;
+                    let n = tokens[next_enqueue];
+                    let img: Vec<f32> = (0..n).map(|t| t as f32).collect();
+                    ts.enqueue_request(conn, Some(conn as f64), &img, n, t0);
+                    // Requests enqueue in index order, so the stream's
+                    // seq counter (1-based) tracks the index exactly.
+                    seq_of[next_enqueue] = next_enqueue as u64 + 1;
+                    next_enqueue += 1;
+                }
+                1 => {
+                    if let Some(w) = ts.form_wave(t0) {
+                        check_wave(&w, &mut seen)?;
+                        inflight.push(w);
+                    }
+                }
+                2 => {
+                    // Deadline-aged formation closes partial waves.
+                    if let Some(w) = ts.form_wave(t0 + Duration::from_secs(3600)) {
+                        check_wave(&w, &mut seen)?;
+                        inflight.push(w);
+                    }
+                }
+                3 if !inflight.is_empty() => {
+                    let w = inflight.remove(0);
+                    let outs = identity_outputs(&w);
+                    let done = ts.complete_wave(&w, &outs, t0 + Duration::from_millis(1));
+                    settle(done, &seq_of, &tokens, &purged, &mut finished_ok, &mut finished_err)?;
+                }
+                4 if !inflight.is_empty() && g.bool() => {
+                    let w = inflight.remove(0);
+                    let done = ts.fail_wave(&w, "injected wave fault");
+                    settle(done, &seq_of, &tokens, &purged, &mut finished_ok, &mut finished_err)?;
+                }
+                5 if next_enqueue > 0 && g.bool() => {
+                    let conn = g.usize(1, next_enqueue) as u64;
+                    ts.purge_conn(conn);
+                    purged.insert(conn);
+                }
+                _ => {}
+            }
+        }
+        // Drain phase: enqueue stragglers, close every remaining wave
+        // and complete all in-flight work.
+        while next_enqueue < n_req {
+            let conn = next_enqueue as u64 + 1;
+            let n = tokens[next_enqueue];
+            let img: Vec<f32> = (0..n).map(|t| t as f32).collect();
+            ts.enqueue_request(conn, Some(conn as f64), &img, n, t0);
+            seq_of[next_enqueue] = next_enqueue as u64 + 1;
+            next_enqueue += 1;
+        }
+        while let Some(w) = ts.form_wave(t0 + Duration::from_secs(3600)) {
+            check_wave(&w, &mut seen)?;
+            inflight.push(w);
+        }
+        for w in inflight.drain(..) {
+            let outs = identity_outputs(&w);
+            let done = ts.complete_wave(&w, &outs, t0 + Duration::from_millis(2));
+            settle(done, &seq_of, &tokens, &purged, &mut finished_ok, &mut finished_err)?;
+        }
+        if ts.tokens_in_flight() != 0 {
+            return Err(format!("{} tokens leaked in flight", ts.tokens_in_flight()));
+        }
+        // Every admitted request is accounted for exactly one way.
+        for idx in 0..n_req {
+            let conn = idx as u64 + 1;
+            let settled = finished_ok.contains(&conn)
+                || finished_err.contains(&conn)
+                || purged.contains(&conn);
+            if !settled {
+                return Err(format!("request {idx} (conn {conn}) vanished unanswered"));
+            }
+        }
+        Ok(())
+    });
 }

@@ -33,6 +33,9 @@ required_keys=(
   stream_wave_occupancy
   stream_token_latency_p50_us
   stream_token_latency_p99_us
+  serial_pass_us
+  overlapped_pass_us
+  pipeline_speedup
 )
 
 fail=0
@@ -60,4 +63,4 @@ if [[ $fail -ne 0 ]]; then
   exit 1
 fi
 
-echo "OK: $report carries all ${#required_keys[@]} required keys with typed values (incl. cold/warm pass + streaming wave)"
+echo "OK: $report carries all ${#required_keys[@]} required keys with typed values (incl. cold/warm pass, streaming wave + measured overlap)"

@@ -42,6 +42,15 @@ if [ -f docs/ARCHITECTURE.md ] && \
     fail=1
 fi
 
+# The staged wavefront engine (program/convert overlap, multi-wave
+# serving) is only safe because its free vs fixed orders are written
+# down; the perturbation campaign's assertions reference this section.
+if [ -f docs/ARCHITECTURE.md ] && \
+   ! grep -q '^## Pipelined execution' docs/ARCHITECTURE.md; then
+    echo "MISSING SECTION: docs/ARCHITECTURE.md '## Pipelined execution'"
+    fail=1
+fi
+
 for f in $files; do
     dir=$(dirname "$f")
     # Extract inline markdown link targets: [text](target)
