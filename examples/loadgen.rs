@@ -1,0 +1,286 @@
+//! Load generator for the event-driven connection tier: sustained mixed
+//! classify/forward/stream traffic over real TCP through the reactor, at
+//! a swept series of offered loads. Prints one table row per point
+//! (offered vs achieved rate, p50/p99 latency, shed rate) and finishes
+//! with a `stats` probe and a graceful-drain shutdown, so a run doubles
+//! as an end-to-end smoke of admission, backpressure, per-token push and
+//! drain semantics.
+//!
+//! The executor is a deterministic stand-in (no PJRT, no artifacts):
+//! this example measures the *serving tier* — reactor wakeups, admission
+//! permits, wave formation — not model math. Saturation numbers anchored
+//! to the silicon model live in the hotpath bench's saturation curve
+//! (`target/bench-reports/BENCH_pipeline.json`).
+//!
+//! Usage:
+//!   cargo run --release --example loadgen            # full sweep
+//!   cargo run --release --example loadgen -- --smoke # CI-sized run
+
+use std::collections::HashMap;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use cr_cim::cim::params::MacroParams;
+use cr_cim::coordinator::sac::{evaluate_plan, PlanCost};
+use cr_cim::coordinator::scheduler::Scheduler;
+use cr_cim::coordinator::server::{
+    BatchExecutor, Server, ServerConfig, SHED_DRAINING, SHED_INFLIGHT, SHED_QUEUE_FULL,
+};
+use cr_cim::util::json;
+use cr_cim::vit::plan::PrecisionPlan;
+use cr_cim::vit::VitConfig;
+
+/// Deterministic executor: logits[c] = mean(image) + c, for both the
+/// fixed-batch and the streaming (forward) paths.
+struct LoadExec {
+    cost: PlanCost,
+}
+
+impl LoadExec {
+    fn new() -> Self {
+        let sched = Scheduler::new(&MacroParams::default());
+        LoadExec {
+            cost: evaluate_plan(&sched, &VitConfig::default(), 1, &PrecisionPlan::paper_sac()),
+        }
+    }
+
+    fn logits(images: &[Vec<f32>]) -> Vec<Vec<f32>> {
+        images
+            .iter()
+            .map(|img| {
+                let m: f32 = img.iter().sum::<f32>() / img.len().max(1) as f32;
+                (0..10).map(|c| m + c as f32).collect()
+            })
+            .collect()
+    }
+}
+
+impl BatchExecutor for LoadExec {
+    fn execute(&mut self, images: &[Vec<f32>]) -> Result<Vec<Vec<f32>>, String> {
+        Ok(Self::logits(images))
+    }
+    fn forward(&mut self, images: &[Vec<f32>]) -> Result<Vec<Vec<f32>>, String> {
+        Ok(Self::logits(images))
+    }
+    fn cost(&self) -> &PlanCost {
+        &self.cost
+    }
+    fn num_classes(&self) -> usize {
+        10
+    }
+}
+
+/// One request line of the mixed workload: round-robin
+/// classify / forward / stream, with every third stream request opting
+/// into per-token push events.
+fn request_line(id: u64) -> String {
+    let px: Vec<String> =
+        (0..16).map(|j| format!("{:.3}", ((id * 7 + j) % 13) as f64 / 13.0 - 0.5)).collect();
+    let image = format!("[{}]", px.join(", "));
+    match id % 3 {
+        0 => format!("{{\"id\": {id}, \"kind\": \"classify\", \"image\": {image}}}"),
+        1 => format!("{{\"id\": {id}, \"kind\": \"forward\", \"image\": {image}}}"),
+        _ => {
+            let push = if id % 9 == 2 { ", \"push\": true" } else { "" };
+            let kind = "\"kind\": \"stream\", \"tokens\": 4";
+            format!("{{\"id\": {id}, {kind}{push}, \"image\": {image}}}")
+        }
+    }
+}
+
+#[derive(Default)]
+struct PointStats {
+    sent: u64,
+    ok: u64,
+    shed: u64,
+    errors: u64,
+    progress: u64,
+    lat_us: Vec<f64>,
+}
+
+impl PointStats {
+    fn merge(&mut self, other: PointStats) {
+        self.sent += other.sent;
+        self.ok += other.ok;
+        self.shed += other.shed;
+        self.errors += other.errors;
+        self.progress += other.progress;
+        self.lat_us.extend(other.lat_us);
+    }
+
+    fn pct_us(&mut self, q: f64) -> f64 {
+        if self.lat_us.is_empty() {
+            return 0.0;
+        }
+        self.lat_us.sort_by(f64::total_cmp);
+        let idx = ((self.lat_us.len() as f64 - 1.0) * q).round() as usize;
+        self.lat_us[idx.min(self.lat_us.len() - 1)]
+    }
+}
+
+/// One client connection: a writer pacing `n` requests at the offered
+/// inter-arrival gap (open loop — the schedule never waits for
+/// responses), with a reader thread draining final lines concurrently so
+/// a full server write queue can never deadlock the sender.
+fn run_conn(addr: &str, ids: Vec<u64>, gap: Duration) -> std::io::Result<PointStats> {
+    let sock = TcpStream::connect(addr)?;
+    sock.set_read_timeout(Some(Duration::from_secs(10)))?;
+    sock.set_nodelay(true)?;
+    let mut wr = sock.try_clone()?;
+    let sends: Arc<Mutex<HashMap<u64, Instant>>> = Arc::new(Mutex::new(HashMap::new()));
+    let sends_rd = sends.clone();
+    let expect = ids.len() as u64;
+    let reader = std::thread::spawn(move || {
+        let mut stats = PointStats::default();
+        let mut lines = BufReader::new(sock);
+        let mut buf = String::new();
+        let mut finals = 0u64;
+        while finals < expect {
+            buf.clear();
+            match lines.read_line(&mut buf) {
+                Ok(0) | Err(_) => break,
+                Ok(_) => {}
+            }
+            let Ok(j) = json::parse(buf.trim()) else { continue };
+            if j.get_path("event").is_some() {
+                stats.progress += 1;
+                continue;
+            }
+            let err = j.get_path("error").and_then(|e| e.as_str());
+            match err {
+                None => stats.ok += 1,
+                Some(SHED_DRAINING) | Some(SHED_INFLIGHT) | Some(SHED_QUEUE_FULL) => {
+                    stats.shed += 1
+                }
+                Some(_) => stats.errors += 1,
+            }
+            finals += 1;
+            if let Some(id) = j.get_path("id").and_then(|v| v.as_f64()) {
+                if let Some(t0) = sends_rd.lock().unwrap().remove(&(id as u64)) {
+                    stats.lat_us.push(t0.elapsed().as_secs_f64() * 1e6);
+                }
+            }
+        }
+        stats
+    });
+    let start = Instant::now();
+    let mut sent = 0u64;
+    for (i, id) in ids.iter().enumerate() {
+        let due = start + gap * i as u32;
+        if let Some(wait) = due.checked_duration_since(Instant::now()) {
+            std::thread::sleep(wait);
+        }
+        sends.lock().unwrap().insert(*id, Instant::now());
+        writeln!(wr, "{}", request_line(*id))?;
+        sent += 1;
+    }
+    wr.flush()?;
+    let mut stats = reader.join().unwrap_or_default();
+    stats.sent = sent;
+    Ok(stats)
+}
+
+fn run_point(addr: &str, offered_rps: f64, total: u64, conns: u64) -> PointStats {
+    let gap = Duration::from_secs_f64(conns as f64 / offered_rps);
+    let mut handles = Vec::new();
+    for c in 0..conns {
+        let ids: Vec<u64> = (0..total).filter(|i| i % conns == c).collect();
+        let addr = addr.to_string();
+        handles.push(std::thread::spawn(move || run_conn(&addr, ids, gap)));
+    }
+    let mut stats = PointStats::default();
+    for h in handles {
+        match h.join() {
+            Ok(Ok(s)) => stats.merge(s),
+            Ok(Err(e)) => eprintln!("loadgen conn error: {e}"),
+            Err(_) => eprintln!("loadgen conn panicked"),
+        }
+    }
+    stats
+}
+
+fn main() -> std::io::Result<()> {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let (points, total, conns): (&[f64], u64, u64) =
+        if smoke { (&[500.0], 120, 4) } else { (&[1000.0, 4000.0, 16000.0], 600, 4) };
+
+    // Bind first to learn the ephemeral port, then serve on it.
+    let listener = TcpListener::bind("127.0.0.1:0")?;
+    let addr = listener.local_addr()?.to_string();
+    drop(listener);
+    let cfg = ServerConfig {
+        addr: addr.clone(),
+        batch_sizes: vec![1, 8],
+        max_wait: Duration::from_millis(1),
+        wave_tokens: 8,
+        max_waves: 2,
+        // Small admission bounds on purpose: the sweep should cross the
+        // shed knee, demonstrating bounded queues instead of unbounded
+        // latency growth.
+        max_inflight: 64,
+        queue_depth: 48,
+        drain_timeout: Duration::from_secs(5),
+        ..ServerConfig::default()
+    };
+    let srv = Arc::new(
+        Server::new(&cfg).map_err(|e| std::io::Error::new(std::io::ErrorKind::Other, e))?,
+    );
+    let srv2 = srv.clone();
+    let scfg = ServerConfig { addr: addr.clone(), ..cfg };
+    let server = std::thread::spawn(move || srv2.serve(&scfg, Box::new(LoadExec::new())));
+    std::thread::sleep(Duration::from_millis(50));
+
+    println!("loadgen against {addr} ({} points, {total} reqs/point, {conns} conns)", points.len());
+    println!(
+        "{:>12} {:>12} {:>9} {:>9} {:>7} {:>9}",
+        "offered r/s", "achieved r/s", "p50 us", "p99 us", "shed %", "progress"
+    );
+    for &rps in points {
+        let t0 = Instant::now();
+        let mut s = run_point(&addr, rps, total, conns);
+        let wall = t0.elapsed().as_secs_f64().max(1e-9);
+        let finals = s.ok + s.shed + s.errors;
+        println!(
+            "{:>12.0} {:>12.0} {:>9.0} {:>9.0} {:>7.2} {:>9}",
+            rps,
+            finals as f64 / wall,
+            s.pct_us(0.50),
+            s.pct_us(0.99),
+            100.0 * s.shed as f64 / s.sent.max(1) as f64,
+            s.progress
+        );
+        if s.errors > 0 {
+            eprintln!("warn: {} non-shed error responses at {rps} r/s", s.errors);
+        }
+    }
+
+    // Final stats probe + graceful drain over the same wire.
+    let sock = TcpStream::connect(&addr)?;
+    sock.set_read_timeout(Some(Duration::from_secs(10)))?;
+    let mut wr = sock.try_clone()?;
+    let mut rd = BufReader::new(sock);
+    let mut line = String::new();
+    writeln!(wr, "{{\"cmd\": \"stats\"}}")?;
+    rd.read_line(&mut line)?;
+    let stats = json::parse(line.trim())
+        .map_err(|e| std::io::Error::new(std::io::ErrorKind::Other, e))?;
+    for key in ["requests", "shed_requests", "rejected_total", "inflight_permits", "queue_depth"] {
+        if let Some(v) = stats.get_path(key).and_then(|v| v.as_f64()) {
+            println!("stats {key}: {v}");
+        }
+    }
+    line.clear();
+    writeln!(wr, "{{\"cmd\": \"shutdown\"}}")?;
+    rd.read_line(&mut line)?;
+    if !line.contains("ok") {
+        eprintln!("warn: unexpected shutdown ack: {}", line.trim());
+    }
+    match server.join() {
+        Ok(r) => r?,
+        Err(_) => eprintln!("warn: server thread panicked"),
+    }
+    println!("loadgen done: server drained cleanly");
+    Ok(())
+}

@@ -235,6 +235,7 @@ fn main() -> Result<(), String> {
         batch_sizes: vec![1, 2],
         max_wait: std::time::Duration::from_millis(1),
         wave_tokens: 2,
+        ..ServerConfig::default()
     })?;
     let conn = srv.open_conn();
     let body: Vec<String> = imgs[0].iter().map(|v| format!("{v}")).collect();

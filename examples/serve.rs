@@ -154,6 +154,7 @@ fn main() -> Result<()> {
                 Some(next2 as f64),
                 eval.image_slice(events[next2].image_index),
                 1,
+                false,
                 Instant::now(),
             );
             next2 += 1;

@@ -10,10 +10,11 @@ use cr_cim::cim::sar::SarAdc;
 use cr_cim::cim::{CimMacro, Column};
 use cr_cim::coordinator::pipeline::{ModelExecutor, PipelineConfig};
 use cr_cim::coordinator::sac::evaluate_plan;
+use cr_cim::coordinator::server::{Server, ServerConfig};
 use cr_cim::coordinator::Scheduler;
 use cr_cim::metrics::{characterize, CharacterizeOpts};
 use cr_cim::util::bench::{black_box, BenchSuite};
-use cr_cim::util::json::Json;
+use cr_cim::util::json::{self, Json};
 use cr_cim::util::pool::default_threads;
 use cr_cim::util::rng::Rng;
 use cr_cim::vit::graph::ModelGraph;
@@ -222,6 +223,170 @@ fn main() {
         wp.warm_pipelined_ns * 1e-3,
         wp.residency_saving() * 100.0
     );
+    // Saturation curve: the event-driven serving tier (admission,
+    // wave formation, completion staging — the exact code path the
+    // reactor drives) swept across offered loads, measured in *modeled*
+    // silicon time. Arrivals are scheduled on a modeled clock that
+    // advances by the engine's `last_pass_ns` per executed wave, so the
+    // curve is a property of the admission policy and the staged
+    // wavefront model, not of host wall-clock jitter — and therefore
+    // anchorable against `Scheduler::plan_stream`.
+    //
+    // Anchor construction: the engine prices every wave at the
+    // construction-time plan's per-layer `compute_ns` (a warm wave's
+    // staged fold is exactly the plan's warm fold), so the server is
+    // run with `max_waves: 1` — the plan's saturation model is one
+    // wave in flight; letting the staged engine overlap two waves
+    // would double the measured modeled rate against a one-wave plan.
+    // Only *full* warm waves enter the anchor numerator/denominator
+    // (partial drain-tail waves deliver fewer tokens at the same
+    // modeled cost). The documented acceptance tolerance on
+    // `saturation_anchor_rel_err` is 15% (docs/ARCHITECTURE.md); the
+    // expected value is ~0 since both sides reduce to the same
+    // conversion sum on a fully resident deployment.
+    use std::time::Duration;
+    let sat_wave_imgs = 2usize;
+    let graph_w = ModelGraph::encoder(&vitb, sat_wave_imgs, &probe_plan);
+    let wave_m = graph_w.layers[0].shape.m;
+    let seq_per_img = (wave_m / sat_wave_imgs).max(1);
+    let sat_sched = Scheduler::with_topology(&exec_params, 4, 2);
+    let sat_plan = sat_sched.plan_stream(&graph_w, wave_m);
+    let fast = std::env::var("CRCIM_BENCH_FAST").ok().as_deref() == Some("1");
+    let offered_factors: &[f64] = if fast { &[0.5, 1.5, 4.0] } else { &[0.5, 0.9, 1.5, 4.0] };
+    let point_imgs: usize = if fast { 8 } else { 16 };
+    let sat_cfg = || ServerConfig {
+        batch_sizes: vec![1],
+        max_wait: Duration::ZERO,
+        wave_tokens: sat_wave_imgs,
+        max_waves: 1,
+        max_inflight: 64,
+        queue_depth: 4 * sat_wave_imgs,
+        drain_timeout: Duration::from_secs(1),
+        ..ServerConfig::default()
+    };
+    let stream_line = |id: usize| {
+        let img = &imgs[id % imgs.len()];
+        format!(
+            "{{\"id\": {id}, \"kind\": \"stream\", \"tokens\": 1, \"image\": {}}}",
+            Json::arr_f64(&img.iter().map(|&x| x as f64).collect::<Vec<_>>())
+        )
+    };
+    let sat_pipe_cfg = PipelineConfig { shards: 4, attention_dies: 2, mlp_dies: 2, overlap: true };
+    let mut sat_exec = ModelExecutor::new(&exec_params, graph_w, sat_pipe_cfg).unwrap();
+    // One throwaway wave programs every layer so the measured sweep is
+    // all warm passes (the plan's saturation model is the warm steady
+    // state; the banked deployment keeps the 1b graph fully resident).
+    {
+        let warm = Server::new(&sat_cfg()).unwrap();
+        let c = warm.open_conn();
+        warm.handle_line(&stream_line(0), c).unwrap();
+        warm.executor_step(&mut sat_exec);
+    }
+    let mut curve: Vec<Json> = Vec::new();
+    let mut anchor_tokens = 0.0f64;
+    let mut anchor_busy_ns = 0.0f64;
+    for &f in offered_factors {
+        let srv = Server::new(&sat_cfg()).unwrap();
+        let conn = srv.open_conn();
+        // Offered load f: images arrive at f × the planned saturation
+        // rate, uniformly spaced on the modeled clock.
+        let rate_imgs_per_ns = f * sat_wave_imgs as f64 / sat_plan.warm_wave_ns;
+        let mut model_ns = 0.0f64;
+        let mut injected = 0usize;
+        let mut sheds = 0usize;
+        let mut done = 0usize;
+        let mut arrivals: std::collections::BTreeMap<i64, f64> = std::collections::BTreeMap::new();
+        let mut lats_ns: Vec<f64> = Vec::new();
+        while done + sheds < point_imgs {
+            // Release every arrival due at the current modeled instant;
+            // if the tier is idle with arrivals still to come, jump the
+            // clock to the next one.
+            loop {
+                if injected >= point_imgs {
+                    break;
+                }
+                let due_ns = injected as f64 / rate_imgs_per_ns;
+                if due_ns <= model_ns {
+                    match srv.handle_line(&stream_line(injected), conn).unwrap() {
+                        Some(_) => sheds += 1,
+                        None => {
+                            arrivals.insert(injected as i64, model_ns);
+                        }
+                    }
+                    injected += 1;
+                } else if injected == sheds + done {
+                    model_ns = due_ns;
+                } else {
+                    break;
+                }
+            }
+            let queued = injected - sheds - done;
+            if queued == 0 {
+                continue;
+            }
+            srv.executor_step(&mut sat_exec);
+            let pass_ns = sat_exec.last_pass_ns();
+            if queued >= sat_wave_imgs {
+                anchor_tokens += sat_wave_imgs as f64;
+                anchor_busy_ns += pass_ns;
+            }
+            model_ns += pass_ns;
+            for line in srv.take_responses(conn) {
+                let j = json::parse(&line).unwrap();
+                if j.get_path("pred").is_some() || j.get_path("error").is_some() {
+                    done += 1;
+                    let id = j.get_path("id").and_then(|v| v.as_f64()).unwrap_or(-1.0);
+                    if let Some(t0) = arrivals.remove(&(id as i64)) {
+                        lats_ns.push(model_ns - t0);
+                    }
+                }
+            }
+        }
+        lats_ns.sort_by(f64::total_cmp);
+        let pct = |q: f64| -> f64 {
+            if lats_ns.is_empty() {
+                return 0.0;
+            }
+            let idx = ((lats_ns.len() as f64 - 1.0) * q).round() as usize;
+            lats_ns[idx.min(lats_ns.len() - 1)]
+        };
+        // Shed accounting comes from the ledger (the contract clients
+        // see over `stats`), cross-checked against the synchronous shed
+        // lines counted above.
+        let ledger_sheds = srv
+            .ledger_json()
+            .get_path("shed_requests")
+            .and_then(|v| v.as_f64())
+            .unwrap_or(sheds as f64);
+        let served_tps = done as f64 * seq_per_img as f64 / model_ns.max(1e-9) * 1e9;
+        let shed_rate = ledger_sheds / injected.max(1) as f64;
+        let mut pt = Json::obj();
+        pt.set("offered_factor", Json::num(f));
+        pt.set("offered_tokens_per_s", Json::num(f * sat_plan.tokens_per_s));
+        pt.set("tokens_per_s", Json::num(served_tps));
+        pt.set("p50_us", Json::num(pct(0.50) * 1e-3));
+        pt.set("p99_us", Json::num(pct(0.99) * 1e-3));
+        pt.set("shed_rate", Json::num(shed_rate));
+        curve.push(Json::Obj(pt));
+        println!(
+            "saturation f={f:.2}: {served_tps:.3e} tok/s, p50 {:.1} us, p99 {:.1} us, shed {:.0}%",
+            pct(0.50) * 1e-3,
+            pct(0.99) * 1e-3,
+            shed_rate * 100.0
+        );
+    }
+    let saturated_tps = anchor_tokens * seq_per_img as f64 / anchor_busy_ns.max(1e-9) * 1e9;
+    let anchor_rel_err = (saturated_tps - sat_plan.tokens_per_s).abs() / sat_plan.tokens_per_s;
+    pipe.set("saturation_curve", Json::arr(curve));
+    pipe.set("saturation_wave_tokens", Json::num(wave_m as f64));
+    pipe.set("saturated_tokens_per_s_modeled", Json::num(saturated_tps));
+    pipe.set("plan_stream_tokens_per_s", Json::num(sat_plan.tokens_per_s));
+    pipe.set("saturation_anchor_rel_err", Json::num(anchor_rel_err));
+    println!(
+        "saturation anchor: measured {saturated_tps:.3e} vs plan {:.3e} tok/s (rel err {:.2e})",
+        sat_plan.tokens_per_s, anchor_rel_err
+    );
+
     let pipe = Json::Obj(pipe);
     suite.note("pipeline_reload_overlap", pipe.clone());
     let report_dir = std::path::Path::new("target/bench-reports");

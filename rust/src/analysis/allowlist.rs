@@ -17,9 +17,10 @@ use super::scanner::Scanned;
 
 /// Modules (paths relative to the scan root, `/`-separated) allowed to
 /// read the wall clock. Keep this list sorted and short.
-pub const WALLCLOCK_TIER: [&str; 5] = [
+pub const WALLCLOCK_TIER: [&str; 6] = [
     "coordinator/batcher.rs",
     "coordinator/ledger.rs",
+    "coordinator/reactor.rs",
     "coordinator/server.rs",
     "coordinator/stream.rs",
     "util/bench.rs",

@@ -10,7 +10,7 @@
 //! - [`scanner`] lexes each file into per-line code/comment/depth facts
 //!   (so rules never fire inside strings or comments, and test code is
 //!   excluded),
-//! - [`rules`] implements the six contract rules and the declared
+//! - [`rules`] implements the seven contract rules and the declared
 //!   lock-order table,
 //! - [`allowlist`] holds the wall-clock tier and parses
 //!   `// detlint: allow(<rule>) -- <why>` suppressions,

@@ -12,6 +12,7 @@
 //! | `lock-order`      | nested `.lock()`s follow the declared total order  |
 //! | `float-reduction` | float accumulation goes through named helpers      |
 //! | `unsafe-justified`| every `unsafe` carries a `// SAFETY:` argument     |
+//! | `hotpath-blocking`| no sleeps or thread spawns in the connection tier  |
 //!
 //! The pass is line-based by design: a violating construct split across
 //! lines in an unusual way can evade it, but every idiom the repo
@@ -23,13 +24,14 @@ use super::report::Finding;
 use super::scanner::Scanned;
 
 /// All rule names, in documentation order.
-pub const RULES: [&str; 6] = [
+pub const RULES: [&str; 7] = [
     "rng-discipline",
     "unordered-iter",
     "wallclock",
     "lock-order",
     "float-reduction",
     "unsafe-justified",
+    "hotpath-blocking",
 ];
 
 /// The declared lock-order table: a nested `.lock()` may only acquire a
@@ -42,7 +44,7 @@ pub const RULES: [&str; 6] = [
 /// before everything; the staged wavefront engine's per-wave state
 /// (`wave`) and per-bank cache slots (`slot`) nest inside the serving
 /// tiers but above the pool; `inner` (the `WorkQueue` mutex) is a leaf.
-pub const LOCK_ORDER: [&str; 9] = [
+pub const LOCK_ORDER: [&str; 10] = [
     "PERTURB_GATE", // perturbation harness gate — held around whole sections
     "live_conns",   // server connection registry
     "outbox",       // server response outbox
@@ -52,6 +54,7 @@ pub const LOCK_ORDER: [&str; 9] = [
     "wave",         // wavefront engine per-wave activations/error state
     "slot",         // wavefront engine per-bank cache slot (programmed die)
     "inner",        // WorkQueue state — leaf, never holds another lock
+    "signal",       // Notify wakeup flag — leaf, acquired standalone only
 ];
 
 /// Modules whose compute can reach conversion order, output assembly, or
@@ -71,6 +74,7 @@ pub fn check_file(rel: &str, scanned: &Scanned) -> Vec<Finding> {
     lock_order(rel, scanned, &mut out);
     float_reduction(rel, scanned, &mut out);
     unsafe_justified(rel, scanned, &mut out);
+    hotpath_blocking(rel, scanned, &mut out);
     out
 }
 
@@ -359,6 +363,42 @@ fn unsafe_justified(rel: &str, scanned: &Scanned, out: &mut Vec<Finding>) {
                 rel,
                 line.number,
                 "unsafe without a `// SAFETY:` justification".to_string(),
+            ));
+        }
+    }
+}
+
+/// Rule 7: the serving hot path (`coordinator/`) must stay event-driven.
+/// `thread::sleep` there is a sleep-poll — idle waits belong on a poll
+/// timeout or condvar wakeup — and `thread::spawn` there is a
+/// per-connection-thread regression; the single reactor spawn carries a
+/// `// detlint: allow(hotpath-blocking) -- <why>` annotation.
+fn hotpath_blocking(rel: &str, scanned: &Scanned, out: &mut Vec<Finding>) {
+    if !rel.starts_with("coordinator/") {
+        return;
+    }
+    for line in &scanned.lines {
+        if line.in_test {
+            continue;
+        }
+        if line.code.contains("thread::sleep") || line.code.contains("thread :: sleep") {
+            out.push(Finding::new(
+                "hotpath-blocking",
+                rel,
+                line.number,
+                "sleep-polling on the serving hot path; \
+                 use a poll timeout or condvar wakeup"
+                    .to_string(),
+            ));
+        }
+        if line.code.contains("thread::spawn") || line.code.contains("thread :: spawn") {
+            out.push(Finding::new(
+                "hotpath-blocking",
+                rel,
+                line.number,
+                "thread spawn in the connection tier; \
+                 connections are served by the single reactor, not per-connection threads"
+                    .to_string(),
             ));
         }
     }

@@ -132,12 +132,36 @@ impl StreamSnapshot {
     }
 }
 
+/// Admission-control gauges pushed by the server (the server owns the
+/// permits and queues; the ledger only reports them). `None` = the
+/// serving path never refreshed them (e.g. a bare ledger in tests).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct AdmissionSnapshot {
+    /// Admission permits currently held (in-flight requests).
+    pub inflight_permits: u64,
+    /// The concurrency bound those permits are drawn from.
+    pub max_inflight: u64,
+    /// Work currently queued: pending fixed-batch requests plus queued
+    /// stream tokens.
+    pub queued_work: u64,
+    /// The per-tier queue bound (`--queue-depth`).
+    pub queue_depth_limit: u64,
+}
+
 /// Running serving statistics.
 #[derive(Clone, Debug, Default)]
 pub struct Ledger {
     inferences: u64,
     requests: u64,
     batches: u64,
+    /// Well-formed requests refused admission (backpressure): answered
+    /// with a documented shed error instead of queueing.
+    shed: u64,
+    /// Malformed requests rejected at parse/validation time.
+    rejected_other: u64,
+    /// Latest admission gauges from the server (refreshed after each
+    /// executor step and on every `stats` request).
+    admission: Option<AdmissionSnapshot>,
     macro_energy_pj: f64,
     macro_latency_ns: f64,
     host_latency: Moments,
@@ -248,6 +272,39 @@ impl Ledger {
         self.stream.as_ref()
     }
 
+    /// Count one load-shed response (admission refused a well-formed
+    /// request). Sheds also count into `rejected_total`.
+    pub fn record_shed(&mut self) {
+        self.shed += 1;
+    }
+
+    /// Count one malformed-request rejection (parse/validation error).
+    pub fn record_rejected(&mut self) {
+        self.rejected_other += 1;
+    }
+
+    /// Requests shed by admission control.
+    pub fn shed_requests(&self) -> u64 {
+        self.shed
+    }
+
+    /// Every request that got an error instead of service: sheds plus
+    /// malformed rejections.
+    pub fn rejected_total(&self) -> u64 {
+        self.shed + self.rejected_other
+    }
+
+    /// Replace the admission gauges with the server's latest (the
+    /// server owns permits and queues; the ledger only reports them).
+    pub fn set_admission(&mut self, admission: AdmissionSnapshot) {
+        self.admission = Some(admission);
+    }
+
+    /// Latest admission gauges, if the serving path refreshed them.
+    pub fn admission(&self) -> Option<&AdmissionSnapshot> {
+        self.admission.as_ref()
+    }
+
     pub fn to_json(&self) -> Json {
         let mut o = Json::obj();
         o.set("requests", Json::num(self.requests as f64));
@@ -259,6 +316,16 @@ impl Ledger {
         o.set("effective_tops_per_watt", Json::num(self.effective_tops_per_watt()));
         o.set("mean_host_latency_us", Json::num(self.mean_host_latency_us()));
         o.set("mean_occupancy", Json::num(self.mean_occupancy()));
+        // Rejection accounting is always emitted (zero is informative:
+        // it distinguishes "no shedding" from "not measured").
+        o.set("shed_requests", Json::num(self.shed as f64));
+        o.set("rejected_total", Json::num(self.rejected_total() as f64));
+        if let Some(a) = &self.admission {
+            o.set("inflight_permits", Json::num(a.inflight_permits as f64));
+            o.set("max_inflight", Json::num(a.max_inflight as f64));
+            o.set("queue_depth", Json::num(a.queued_work as f64));
+            o.set("queue_depth_limit", Json::num(a.queue_depth_limit as f64));
+        }
         if let Some(r) = &self.residency {
             o.set("reload_hits", Json::num(r.reload_hits as f64));
             o.set("reload_misses", Json::num(r.reload_misses as f64));
@@ -469,5 +536,37 @@ mod tests {
         assert_eq!(l.stream().unwrap().waves, 5);
         // The empty snapshot reports nothing worth including.
         assert!(!StreamSnapshot::default().is_active());
+    }
+
+    #[test]
+    fn rejection_accounting_is_reported_in_json() {
+        let mut l = Ledger::new();
+        // The counters are always present — zero distinguishes "no
+        // shedding" from "not measured" — but the gauges only appear
+        // once the serving path refreshes them.
+        let j = l.to_json();
+        assert_eq!(j.get_path("shed_requests").unwrap().as_f64().unwrap(), 0.0);
+        assert_eq!(j.get_path("rejected_total").unwrap().as_f64().unwrap(), 0.0);
+        assert!(j.get_path("inflight_permits").is_none());
+        l.record_shed();
+        l.record_shed();
+        l.record_rejected();
+        l.set_admission(AdmissionSnapshot {
+            inflight_permits: 3,
+            max_inflight: 8,
+            queued_work: 5,
+            queue_depth_limit: 16,
+        });
+        let j = l.to_json();
+        assert_eq!(j.get_path("shed_requests").unwrap().as_f64().unwrap(), 2.0);
+        // rejected_total = sheds + malformed rejections.
+        assert_eq!(j.get_path("rejected_total").unwrap().as_f64().unwrap(), 3.0);
+        assert_eq!(j.get_path("inflight_permits").unwrap().as_f64().unwrap(), 3.0);
+        assert_eq!(j.get_path("max_inflight").unwrap().as_f64().unwrap(), 8.0);
+        assert_eq!(j.get_path("queue_depth").unwrap().as_f64().unwrap(), 5.0);
+        assert_eq!(j.get_path("queue_depth_limit").unwrap().as_f64().unwrap(), 16.0);
+        assert_eq!(l.shed_requests(), 2);
+        assert_eq!(l.rejected_total(), 3);
+        assert_eq!(l.admission().unwrap().max_inflight, 8);
     }
 }

@@ -14,7 +14,11 @@
 //!                   per-layer breakdown when a graph executor serves
 //! - [`server`]    — std-TCP line-JSON inference service (request path;
 //!                   `classify`, whole-graph `forward` and token-level
-//!                   `stream` kinds)
+//!                   `stream` kinds; bounded admission + graceful drain)
+//! - [`reactor`]   — the connection tier's readiness poll loop: one
+//!                   thread, nonblocking sockets, buffered partial-line
+//!                   reads and write-queue flushing (no per-connection
+//!                   threads, no sleep-polling)
 //! - [`shard`]     — 2-D tiled macro execution (row tiles × column
 //!                   shards) + the macro-simulator batch executor for
 //!                   the serving path
@@ -37,6 +41,7 @@ pub mod batcher;
 pub mod ledger;
 pub mod multidie;
 pub mod pipeline;
+pub(crate) mod reactor;
 pub mod router;
 pub mod sac;
 pub mod scheduler;

@@ -1,0 +1,253 @@
+//! The connection-tier reactor: a `std`-only readiness poll loop over
+//! nonblocking sockets (tokio stays out of the dependency-free build).
+//!
+//! One thread owns the listener and every connection. Each pass it
+//! accepts pending connections (until the server drains), flushes each
+//! connection's write queue (staged responses append to a per-connection
+//! buffer; partial writes keep their tail for the next pass), reads
+//! whatever bytes are ready into a per-connection line buffer, and
+//! dispatches every complete newline-terminated line through
+//! [`Server::handle_line`]. There are **no per-connection threads** and
+//! **no sleep-polling**: a pass that makes no progress parks on the
+//! server's I/O condvar ([`Server::io_wait`]) with a bounded timeout, so
+//! the loop wakes the instant the executor stages a response.
+//!
+//! Fairness: reads are budgeted per connection per pass, so a client
+//! firehosing partial lines — or one that never drains its responses
+//! (slow writer; its buffer just grows until it reads) — cannot stall
+//! dispatch for other connections.
+//!
+//! Shutdown: while the server drains, accepting stops but existing
+//! connections still read (admission sheds inference requests with the
+//! documented errors; control commands still answer). Once the server
+//! stops, reads stop too and the reactor exits as soon as every staged
+//! response has flushed, bounded by [`FINAL_FLUSH_TIMEOUT`] so one
+//! stalled writer cannot hold the process open.
+
+use std::collections::BTreeMap;
+use std::io::{ErrorKind, Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::coordinator::server::Server;
+
+/// Upper bound on one request line; a connection that exceeds it
+/// without a newline is answered with an error and closed (an unbounded
+/// line buffer would let one client exhaust memory).
+const MAX_LINE_BYTES: usize = 8 * 1024 * 1024;
+
+/// Bytes read per connection per pass before yielding to the next
+/// connection (fairness under a firehosing client).
+const READ_BUDGET: usize = 64 * 1024;
+
+/// Idle park between passes when nothing progressed; the executor's
+/// staging notify cuts this short, so it only bounds wakeup latency
+/// for socket readiness (accept/read/write), not for responses.
+const POLL_INTERVAL: Duration = Duration::from_millis(1);
+
+/// After the server stops, how long the reactor keeps trying to flush
+/// remaining response bytes to slow writers before giving up.
+const FINAL_FLUSH_TIMEOUT: Duration = Duration::from_secs(1);
+
+/// Per-connection state: the nonblocking socket plus its partial-line
+/// read buffer and pending-write tail.
+struct Conn {
+    stream: TcpStream,
+    read_buf: Vec<u8>,
+    write_buf: Vec<u8>,
+    /// Peer half-closed (EOF) or errored: stop reading, flush what
+    /// remains, then close.
+    closing: bool,
+}
+
+/// What one service pass did to a connection.
+enum ConnFate {
+    /// Keep polling it.
+    Keep { progressed: bool },
+    /// Remove it (EOF with nothing left to write, or a socket error).
+    Close,
+}
+
+/// Run the reactor until the server stops and every staged response
+/// has been flushed (or the final-flush bound expires). Takes ownership
+/// of the (already nonblocking) listener.
+pub(crate) fn run(server: Arc<Server>, listener: TcpListener) {
+    let mut conns: BTreeMap<u64, Conn> = BTreeMap::new();
+    let mut flush_deadline: Option<Instant> = None;
+    loop {
+        let stopped = server.is_shutdown();
+        let mut progressed = false;
+        // Accept everything pending, unless the server is winding down.
+        if !stopped && !server.is_draining() {
+            loop {
+                match listener.accept() {
+                    Ok((stream, _)) => {
+                        if stream.set_nonblocking(true).is_err() {
+                            continue;
+                        }
+                        let conn_id = server.open_conn();
+                        conns.insert(
+                            conn_id,
+                            Conn {
+                                stream,
+                                read_buf: Vec::new(),
+                                write_buf: Vec::new(),
+                                closing: false,
+                            },
+                        );
+                        progressed = true;
+                    }
+                    Err(ref e) if e.kind() == ErrorKind::WouldBlock => break,
+                    Err(ref e) if e.kind() == ErrorKind::Interrupted => continue,
+                    Err(_) => break,
+                }
+            }
+        }
+        // Service every connection: flush, then read + dispatch.
+        let mut dead: Vec<u64> = Vec::new();
+        for (&conn_id, conn) in conns.iter_mut() {
+            match service_conn(&server, conn_id, conn, stopped) {
+                ConnFate::Keep { progressed: p } => progressed |= p,
+                ConnFate::Close => dead.push(conn_id),
+            }
+        }
+        for conn_id in dead {
+            if let Some(conn) = conns.remove(&conn_id) {
+                // Best effort: hand the kernel whatever was still
+                // queued before unregistering the connection.
+                let mut stream = conn.stream;
+                let _ = stream.write_all(&conn.write_buf);
+                server.close_conn(conn_id);
+                progressed = true;
+            }
+        }
+        if stopped {
+            let all_flushed =
+                conns.values().all(|c| c.write_buf.is_empty()) && server.staged_connections() == 0;
+            let deadline = *flush_deadline.get_or_insert(Instant::now() + FINAL_FLUSH_TIMEOUT);
+            if all_flushed || Instant::now() >= deadline {
+                for (conn_id, _) in conns {
+                    server.close_conn(conn_id);
+                }
+                return;
+            }
+        }
+        if !progressed {
+            server.io_wait(POLL_INTERVAL);
+        }
+    }
+}
+
+/// One pass over one connection: move staged responses into the write
+/// buffer, flush as much as the socket accepts, then (until the server
+/// stops or the peer half-closes) read ready bytes and dispatch every
+/// complete line.
+fn service_conn(server: &Arc<Server>, conn_id: u64, conn: &mut Conn, stopped: bool) -> ConnFate {
+    let mut progressed = false;
+    // Stage → write buffer. Responses drain even while closing: a peer
+    // that half-closed its write side may still be reading ours.
+    for resp in server.take_responses(conn_id) {
+        conn.write_buf.extend_from_slice(resp.as_bytes());
+        conn.write_buf.push(b'\n');
+        progressed = true;
+    }
+    // Flush the write buffer without blocking; keep the tail on
+    // WouldBlock (slow writer) for the next pass.
+    let mut written = 0usize;
+    while written < conn.write_buf.len() {
+        match conn.stream.write(&conn.write_buf[written..]) {
+            Ok(0) => {
+                conn.closing = true;
+                break;
+            }
+            Ok(n) => {
+                written += n;
+                progressed = true;
+            }
+            Err(ref e) if e.kind() == ErrorKind::WouldBlock => break,
+            Err(ref e) if e.kind() == ErrorKind::Interrupted => continue,
+            Err(_) => {
+                conn.closing = true;
+                break;
+            }
+        }
+    }
+    conn.write_buf.drain(..written);
+    if conn.closing {
+        return if conn.write_buf.is_empty() {
+            ConnFate::Close
+        } else {
+            ConnFate::Keep { progressed }
+        };
+    }
+    if stopped {
+        // Wind-down: no new reads, just keep flushing.
+        return ConnFate::Keep { progressed };
+    }
+    // Read ready bytes (bounded per pass for fairness) and dispatch
+    // complete lines.
+    let mut scratch = [0u8; 4096];
+    let mut taken = 0usize;
+    loop {
+        if taken >= READ_BUDGET {
+            // More may be ready; the next pass continues here. Count it
+            // as progress so the loop does not park with data pending.
+            progressed = true;
+            break;
+        }
+        match conn.stream.read(&mut scratch) {
+            Ok(0) => {
+                conn.closing = true;
+                break;
+            }
+            Ok(n) => {
+                conn.read_buf.extend_from_slice(&scratch[..n]);
+                taken += n;
+                progressed = true;
+            }
+            Err(ref e) if e.kind() == ErrorKind::WouldBlock => break,
+            Err(ref e) if e.kind() == ErrorKind::Interrupted => continue,
+            Err(_) => {
+                conn.closing = true;
+                break;
+            }
+        }
+    }
+    // Dispatch every complete line in the buffer.
+    while let Some(pos) = conn.read_buf.iter().position(|&b| b == b'\n') {
+        let line_bytes: Vec<u8> = conn.read_buf.drain(..=pos).collect();
+        let line = String::from_utf8_lossy(&line_bytes);
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        progressed = true;
+        match server.handle_line(line, conn_id) {
+            Ok(Some(imm)) => {
+                conn.write_buf.extend_from_slice(imm.as_bytes());
+                conn.write_buf.push(b'\n');
+            }
+            Ok(None) => {}
+            Err(e) => {
+                let err = Server::error_line(&e);
+                conn.write_buf.extend_from_slice(err.as_bytes());
+                conn.write_buf.push(b'\n');
+            }
+        }
+    }
+    // A partial line beyond the cap will never complete within bounds:
+    // answer with an error and close.
+    if conn.read_buf.len() > MAX_LINE_BYTES {
+        let err = Server::error_line("request line exceeds the 8 MiB limit");
+        conn.write_buf.extend_from_slice(err.as_bytes());
+        conn.write_buf.push(b'\n');
+        conn.closing = true;
+        progressed = true;
+    }
+    if conn.closing && conn.write_buf.is_empty() {
+        ConnFate::Close
+    } else {
+        ConnFate::Keep { progressed }
+    }
+}

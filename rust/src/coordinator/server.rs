@@ -1,5 +1,6 @@
 //! Request server: a std-TCP, line-delimited-JSON inference service
-//! (tokio is not in the vendored crate set; blocking I/O + threads).
+//! (tokio is not in the vendored crate set; nonblocking sockets + a
+//! readiness poll loop).
 //!
 //! Protocol (one JSON object per line; the full wire contract — every
 //! request kind, response schema, `stats` field and error string — is
@@ -10,9 +11,12 @@
 //!   ← {"id": 2, "pred": ..., "logits": [...], "layers": 48, ...}
 //!   → {"id": 3, "kind": "stream", "tokens": 4, "image": [...]}
 //!   ← {"id": 3, "pred": ..., "logits": [...], "tokens": 4, "waves": 2, ...}
+//!   → {"id": 4, "kind": "stream", "tokens": 4, "push": true, "image": [...]}
+//!   ← {"id": 4, "event": "tokens", "done": 2, "tokens": 4}   (per wave)
+//!   ← {"id": 4, "pred": ..., "logits": [...], ...}           (final)
 //!   → {"cmd": "stats"}   ← the ledger report (incl. per-layer breakdown
 //!                          and streaming fields when applicable)
-//!   → {"cmd": "shutdown"}
+//!   → {"cmd": "shutdown"}   ← {"ok": true}; begins a graceful drain
 //!
 //! The `"forward"` kind runs a whole encoder pass through a model-graph
 //! executor (`coordinator::pipeline::ModelExecutor`); the default kind
@@ -22,18 +26,28 @@
 //! chunks that coalesce with other requests' tokens into macro
 //! conversion waves, complete out of order, and reassemble per request.
 //!
-//! Architecture: acceptor threads push classify/forward requests into a
-//! shared queue and stream requests into the token stream; a single
-//! executor thread forms batches (Batcher policy) and conversion waves
+//! Architecture — the event-driven connection tier: a single **reactor**
+//! thread ([`super::reactor`]) owns the nonblocking listener and every
+//! connection (buffered partial-line reads, write-queue flushing — no
+//! per-connection threads, no sleep-polling). It parses request lines and
+//! pushes classify/forward requests into a shared queue and stream
+//! requests into the token stream, gated by **bounded admission**
+//! (`max_inflight` concurrency permits + `queue_depth` bounds; over
+//! either limit the request is answered with a documented load-shed
+//! error instead of queueing unboundedly). A single **executor** loop
+//! (on the thread that called [`Server::serve`] — PJRT executables are
+//! not `Send`) forms batches (Batcher policy) and conversion waves
 //! (TokenStream policy), runs the PJRT executable or the macro-simulator
-//! pipeline, accounts costs in the Ledger, and writes responses back
-//! through per-connection response channels.
+//! pipeline, accounts costs in the Ledger, and stages responses in
+//! per-connection outboxes the reactor flushes. Idle waits on both
+//! threads are condvar wakeups with a bounded poll timeout, never sleep
+//! loops. `{"cmd": "shutdown"}` starts a **graceful drain**: accepting
+//! stops, new inference requests shed, in-flight waves finish (partial
+//! batches close immediately), outboxes flush, then the server stops.
 
 use std::collections::{BTreeMap, BTreeSet, VecDeque};
-use std::io::{BufRead, BufReader, Write};
-use std::net::{TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::atomic::{AtomicU64, AtomicU8, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
 use crate::coordinator::batcher::{Batch, Batcher, Request};
@@ -127,6 +141,104 @@ pub struct ServerConfig {
     /// one-wave server; a pipelined executor overlaps the in-flight
     /// waves' die programming and conversions for wall-clock speedup.
     pub max_waves: usize,
+    /// Admission: inference requests allowed in flight at once (queued
+    /// or executing, across both tiers). Request `max_inflight + 1`
+    /// sheds with the documented overload error. Must be ≥ 1.
+    pub max_inflight: usize,
+    /// Admission: upper bound on queued work per tier — pending
+    /// requests in the fixed-batch queue, and queued-plus-in-flight
+    /// tokens in the streaming tier. Over the bound the request sheds
+    /// with the documented queue-full error. Must be ≥ 1.
+    pub queue_depth: usize,
+    /// Graceful-drain bound: after `{"cmd": "shutdown"}` the server
+    /// finishes in-flight work for at most this long, then force-stops
+    /// (outboxes still flush). Must be nonzero.
+    pub drain_timeout: Duration,
+}
+
+impl ServerConfig {
+    /// Check the wave/admission knobs the CLI exposes (`--max-waves`,
+    /// `--max-inflight`, `--queue-depth`, `--drain-timeout-ms`): zero is
+    /// a config error, reported before any artifact loads or sockets
+    /// bind. [`Server::new`] calls this, so programmatic construction
+    /// gets the same checks. (Batch sizes and wave size are validated by
+    /// the `Batcher`/`TokenStream` constructors.)
+    pub fn validate(&self) -> Result<(), String> {
+        if self.max_waves == 0 {
+            return Err("max_waves must be at least 1".to_string());
+        }
+        if self.max_inflight == 0 {
+            return Err("max_inflight must be at least 1".to_string());
+        }
+        if self.queue_depth == 0 {
+            return Err("queue_depth must be at least 1".to_string());
+        }
+        if self.drain_timeout.is_zero() {
+            return Err("drain_timeout must be nonzero".to_string());
+        }
+        Ok(())
+    }
+}
+
+impl Default for ServerConfig {
+    /// Paper-benchmark defaults; every field can be overridden with
+    /// struct-update syntax (`..Default::default()`).
+    fn default() -> Self {
+        ServerConfig {
+            addr: "127.0.0.1:7878".to_string(),
+            batch_sizes: vec![1, 16],
+            max_wait: Duration::from_millis(2),
+            wave_tokens: 16,
+            max_waves: 2,
+            max_inflight: 256,
+            queue_depth: 1024,
+            drain_timeout: Duration::from_secs(5),
+        }
+    }
+}
+
+/// Lifecycle states for the drain machine ([`Server::state`]).
+const STATE_RUNNING: u8 = 0;
+const STATE_DRAINING: u8 = 1;
+const STATE_STOPPED: u8 = 2;
+
+/// Documented load-shed error strings (`docs/SERVING.md` quotes these
+/// verbatim; changing one is a wire-contract change).
+pub const SHED_DRAINING: &str = "server draining: not accepting new requests";
+pub const SHED_INFLIGHT: &str = "server overloaded: too many requests in flight";
+pub const SHED_QUEUE_FULL: &str = "server overloaded: request queue is full";
+
+/// A condvar-backed wakeup: waiters park with a bounded timeout and
+/// are woken as soon as work (or a state change) arrives, replacing
+/// the old sleep-poll loops. The flag is sticky until consumed by a
+/// wait, so a notify that races ahead of the wait is never lost.
+struct Notify {
+    signal: Mutex<bool>,
+    cv: Condvar,
+}
+
+impl Notify {
+    fn new() -> Self {
+        Notify { signal: Mutex::new(false), cv: Condvar::new() }
+    }
+
+    /// Wake every current waiter and mark the signal for the next one.
+    fn notify(&self) {
+        let mut signal = self.signal.lock().unwrap();
+        *signal = true;
+        self.cv.notify_all();
+    }
+
+    /// Park until notified or `timeout`, whichever first; consumes the
+    /// pending signal (if any) so the next wait parks again.
+    fn wait_timeout(&self, timeout: Duration) {
+        let mut signal = self.signal.lock().unwrap();
+        if !*signal {
+            let (guard, _) = self.cv.wait_timeout(signal, timeout).unwrap();
+            signal = guard;
+        }
+        *signal = false;
+    }
 }
 
 /// Shared server state.
@@ -137,7 +249,27 @@ pub struct Server {
     pending: Arc<Mutex<VecDeque<Request<InferencePayload>>>>,
     outbox: Outbox,
     ledger: Arc<Mutex<Ledger>>,
-    shutdown: Arc<AtomicBool>,
+    /// Lifecycle: `STATE_RUNNING` → (`{"cmd": "shutdown"}`)
+    /// `STATE_DRAINING` → (in-flight work finishes, or the drain
+    /// timeout fires) `STATE_STOPPED`. Draining sheds new inference
+    /// requests but keeps serving staged responses and control
+    /// commands until the queues run dry.
+    state: AtomicU8,
+    /// Admission permits currently held: one per in-flight inference
+    /// request (queued or executing, both tiers). Compared against
+    /// `max_inflight` at admission; released when the request's
+    /// response is staged or its connection is purged.
+    inflight: AtomicUsize,
+    /// Concurrency bound for `inflight` (≥ 1).
+    max_inflight: usize,
+    /// Queued-work bound per tier (≥ 1); see [`ServerConfig::queue_depth`].
+    queue_depth: usize,
+    /// Upper bound on the graceful-drain phase.
+    drain_timeout: Duration,
+    /// Wakes the executor loop when work arrives or state changes.
+    exec_notify: Notify,
+    /// Wakes the reactor when responses are staged or state changes.
+    io_notify: Notify,
     /// Connection ids (outbox keys). Separate from `next_req`: sharing one
     /// counter let request ids collide with another connection's id range.
     next_conn: AtomicU64,
@@ -158,18 +290,23 @@ pub struct Server {
 }
 
 impl Server {
-    /// Build a server; fails on an invalid batching config (empty or
-    /// zero batch sizes, zero wave size, zero wave concurrency) instead
+    /// Build a server; fails on an invalid batching or admission config
+    /// (empty or zero batch sizes, zero wave size, zero wave
+    /// concurrency, zero admission bounds, zero drain timeout) instead
     /// of panicking the serving thread later.
     pub fn new(cfg: &ServerConfig) -> Result<Self, String> {
-        if cfg.max_waves == 0 {
-            return Err("max_waves must be at least 1".to_string());
-        }
+        cfg.validate()?;
         Ok(Server {
             pending: Arc::new(Mutex::new(VecDeque::new())),
             outbox: Arc::new(Mutex::new(BTreeMap::new())),
             ledger: Arc::new(Mutex::new(Ledger::new())),
-            shutdown: Arc::new(AtomicBool::new(false)),
+            state: AtomicU8::new(STATE_RUNNING),
+            inflight: AtomicUsize::new(0),
+            max_inflight: cfg.max_inflight,
+            queue_depth: cfg.queue_depth,
+            drain_timeout: cfg.drain_timeout,
+            exec_notify: Notify::new(),
+            io_notify: Notify::new(),
             next_conn: AtomicU64::new(1),
             next_req: AtomicU64::new(1),
             live_conns: Mutex::new(BTreeSet::new()),
@@ -202,28 +339,111 @@ impl Server {
             let mut outbox = self.outbox.lock().unwrap();
             outbox.remove(&conn_id);
         }
-        self.pending.lock().unwrap().retain(|r| r.payload.conn_id != conn_id);
-        self.stream.lock().unwrap().purge_conn(conn_id);
+        let mut purged = 0usize;
+        {
+            let mut pending = self.pending.lock().unwrap();
+            pending.retain(|r| {
+                let keep = r.payload.conn_id != conn_id;
+                if !keep {
+                    purged += 1;
+                }
+                keep
+            });
+        }
+        purged += self.stream.lock().unwrap().purge_conn(conn_id);
+        // Purged requests will never stage a response, so their
+        // admission permits return here.
+        self.release_permits(purged);
     }
 
     pub fn ledger_json(&self) -> Json {
+        self.refresh_admission();
         self.ledger.lock().unwrap().to_json()
     }
 
+    /// The server has fully stopped (drain finished or timed out).
     pub fn is_shutdown(&self) -> bool {
-        self.shutdown.load(Ordering::SeqCst)
+        self.state.load(Ordering::SeqCst) == STATE_STOPPED
     }
 
-    /// Enqueue a request (used by the connection handler and by tests).
-    /// Responses are staged only while `payload.conn_id` is a live
-    /// connection (see [`open_conn`](Self::open_conn)).
+    /// The server is draining: no longer accepting connections or new
+    /// inference requests, still finishing in-flight work.
+    pub fn is_draining(&self) -> bool {
+        self.state.load(Ordering::SeqCst) == STATE_DRAINING
+    }
+
+    /// Begin a graceful drain (idempotent; a no-op once stopped).
+    /// Accepting stops, new inference requests shed, in-flight waves
+    /// finish, then the executor transitions to stopped.
+    pub fn begin_drain(&self) {
+        let _ = self.state.compare_exchange(
+            STATE_RUNNING,
+            STATE_DRAINING,
+            Ordering::SeqCst,
+            Ordering::SeqCst,
+        );
+        self.exec_notify.notify();
+        self.io_notify.notify();
+    }
+
+    /// Force the stopped state (drain finished or timed out).
+    fn force_stop(&self) {
+        self.state.store(STATE_STOPPED, Ordering::SeqCst);
+        self.exec_notify.notify();
+        self.io_notify.notify();
+    }
+
+    /// Try to take one admission permit; `false` means the concurrency
+    /// bound is reached and the request must shed.
+    fn try_acquire_permit(&self) -> bool {
+        self.inflight
+            .fetch_update(Ordering::SeqCst, Ordering::SeqCst, |n| {
+                if n < self.max_inflight {
+                    Some(n + 1)
+                } else {
+                    None
+                }
+            })
+            .is_ok()
+    }
+
+    /// Return `n` admission permits (saturating: a test that enqueues
+    /// through the public API and purges twice must not underflow).
+    fn release_permits(&self, n: usize) {
+        if n == 0 {
+            return;
+        }
+        let _ = self
+            .inflight
+            .fetch_update(Ordering::SeqCst, Ordering::SeqCst, |cur| Some(cur.saturating_sub(n)));
+    }
+
+    /// Block the reactor until responses are staged (or `timeout`).
+    pub(crate) fn io_wait(&self, timeout: Duration) {
+        self.io_notify.wait_timeout(timeout);
+    }
+
+    /// Enqueue a request (used by the connection tier and by tests).
+    /// Takes an admission permit unconditionally — callers wanting
+    /// bounded admission go through `handle_line`, which sheds *before*
+    /// enqueueing — so release accounting stays uniform. Responses are
+    /// staged only while `payload.conn_id` is a live connection (see
+    /// [`open_conn`](Self::open_conn)).
     pub fn enqueue(&self, payload: InferencePayload) {
+        self.inflight.fetch_add(1, Ordering::SeqCst);
+        self.enqueue_admitted(payload);
+    }
+
+    /// Enqueue a request whose admission permit is already held
+    /// (`handle_line` acquires before the queue-depth check).
+    fn enqueue_admitted(&self, payload: InferencePayload) {
         let id = self.next_req.fetch_add(1, Ordering::Relaxed);
         self.pending.lock().unwrap().push_back(Request {
             id,
             payload,
             arrived: Instant::now(),
         });
+        self.exec_notify.notify();
     }
 
     /// One executor step: form a fixed batch if policy allows, execute,
@@ -246,9 +466,20 @@ impl Server {
     /// is real work, and sleeping after it would throttle back-to-back
     /// waves of a multi-token backlog.
     fn step(&self, exec: &mut dyn BatchExecutor) -> (usize, bool) {
+        // During a drain, partial batches and waves must close *now*
+        // rather than wait out `max_wait` — advance the policy clock
+        // past every deadline. The horizon changes only *when* work is
+        // released, never its composition or order, so drained output
+        // is bit-identical to what a longer-lived server would produce.
+        let draining = self.is_draining();
+        let horizon = if draining {
+            Instant::now() + self.batcher.max_wait
+        } else {
+            Instant::now()
+        };
         let batch = {
             let mut pending = self.pending.lock().unwrap();
-            self.batcher.form_batch(&mut pending, Instant::now())
+            self.batcher.form_batch(&mut pending, horizon)
         };
         let mut served = 0usize;
         let batch_ran = batch.is_some();
@@ -260,8 +491,20 @@ impl Server {
         // (executed together so a pipelined executor can overlap them),
         // so batch and stream traffic interleave fairly on the executor
         // thread.
-        let (completed, wave_ran) = self.stream_step(exec);
+        let (completed, wave_ran) = self.stream_step(exec, horizon);
         served += completed;
+        if draining {
+            // Drain completes when both tiers are empty; everything
+            // already staged flushes in the reactor before it exits.
+            let pending_empty = self.pending.lock().unwrap().is_empty();
+            let stream_empty = {
+                let stream = self.stream.lock().unwrap();
+                stream.queued_tokens() == 0 && stream.tokens_in_flight() == 0
+            };
+            if pending_empty && stream_empty {
+                self.force_stop();
+            }
+        }
         if batch_ran || wave_ran {
             // Graph executors keep cumulative per-layer counters; refresh
             // the ledger's breakdown + residency + streaming snapshots
@@ -278,8 +521,24 @@ impl Server {
                 }
             }
             self.refresh_stream_stats();
+            self.refresh_admission();
         }
         (served, batch_ran || wave_ran)
+    }
+
+    /// Push the admission gauges (permits held, queued work) into the
+    /// ledger. The two queue locks are taken one after the other, never
+    /// simultaneously, so this respects the server's lock order.
+    fn refresh_admission(&self) {
+        let inflight = self.inflight.load(Ordering::SeqCst);
+        let queued_batch = self.pending.lock().unwrap().len();
+        let queued_tokens = self.stream.lock().unwrap().queued_tokens();
+        self.ledger.lock().unwrap().set_admission(crate::coordinator::ledger::AdmissionSnapshot {
+            inflight_permits: inflight as u64,
+            max_inflight: self.max_inflight as u64,
+            queued_work: (queued_batch + queued_tokens) as u64,
+            queue_depth_limit: self.queue_depth as u64,
+        });
     }
 
     /// Push the streaming tier's current snapshot into the ledger.
@@ -367,6 +626,9 @@ impl Server {
                     }));
                 }
             }
+            // Every request in the sub-batch got a response (result or
+            // error) — its admission permit returns.
+            self.release_permits(reqs.len());
         }
     }
 
@@ -380,13 +642,15 @@ impl Server {
     /// one-wave-at-a-time server. A wave-execution error (or a
     /// result-count mismatch) fails every request with a token in that
     /// wave without touching the other in-flight waves. Returns
-    /// (completed stream requests, whether any wave ran).
-    fn stream_step(&self, exec: &mut dyn BatchExecutor) -> (usize, bool) {
+    /// (completed stream requests, whether any wave ran). `horizon` is
+    /// the policy clock for wave formation (advanced past the deadline
+    /// during a drain so partial waves close immediately).
+    fn stream_step(&self, exec: &mut dyn BatchExecutor, horizon: Instant) -> (usize, bool) {
         let mut waves = Vec::new();
         {
             let mut stream = self.stream.lock().unwrap();
             while waves.len() < self.max_waves {
-                match stream.form_wave(Instant::now()) {
+                match stream.form_wave(horizon) {
                     Some(w) => waves.push(w),
                     None => break,
                 }
@@ -410,21 +674,40 @@ impl Server {
         let mut completed = 0usize;
         let mut responses: Vec<(u64, String)> = Vec::new();
         for (wave, result) in waves.iter().zip(&results) {
-            let finished = match result {
-                Ok(logits) if logits.len() == wave.items.len() => {
-                    self.stream.lock().unwrap().complete_wave(wave, logits, Instant::now())
-                }
-                Ok(logits) => self.stream.lock().unwrap().fail_wave(
-                    wave,
-                    &format!(
-                        "executor returned {} outputs for a {}-token wave",
-                        logits.len(),
-                        wave.items.len()
+            let (finished, progress) = {
+                let mut stream = self.stream.lock().unwrap();
+                let finished = match result {
+                    Ok(logits) if logits.len() == wave.items.len() => {
+                        stream.complete_wave(wave, logits, Instant::now())
+                    }
+                    Ok(logits) => stream.fail_wave(
+                        wave,
+                        &format!(
+                            "executor returned {} outputs for a {}-token wave",
+                            logits.len(),
+                            wave.items.len()
+                        ),
                     ),
-                ),
-                Err(e) => self.stream.lock().unwrap().fail_wave(wave, e),
+                    Err(e) => stream.fail_wave(wave, e),
+                };
+                (finished, stream.take_progress())
             };
+            // Per-token push: progress events for requests this wave
+            // advanced but did not finish, staged *before* the wave's
+            // final responses so a push client always observes
+            // monotonically increasing `done` then the final line.
+            responses.extend(progress.iter().map(|p| {
+                let mut o = Json::obj();
+                o.set("id", Self::id_json(p.client_req_id));
+                o.set("event", Json::str("tokens"));
+                o.set("done", Json::num(p.done as f64));
+                o.set("tokens", Json::num(p.tokens as f64));
+                (p.conn_id, Json::Obj(o).to_string())
+            }));
             completed += finished.iter().filter(|f| f.result.is_ok()).count();
+            // Every finished request (ok or error) got its final
+            // response — its admission permit returns.
+            self.release_permits(finished.len());
             responses.extend(finished.iter().map(|f| {
                 let mut o = Json::obj();
                 o.set("id", Self::id_json(f.client_req_id));
@@ -475,12 +758,19 @@ impl Server {
     /// response construction.
     fn stage_responses(&self, responses: impl Iterator<Item = (u64, String)>) {
         let responses: Vec<(u64, String)> = responses.collect();
-        let live = self.live_conns.lock().unwrap();
-        let mut outbox = self.outbox.lock().unwrap();
-        for (conn_id, line) in responses {
-            if live.contains(&conn_id) {
-                outbox.entry(conn_id).or_default().push(line);
+        let mut staged = false;
+        {
+            let live = self.live_conns.lock().unwrap();
+            let mut outbox = self.outbox.lock().unwrap();
+            for (conn_id, line) in responses {
+                if live.contains(&conn_id) {
+                    outbox.entry(conn_id).or_default().push(line);
+                    staged = true;
+                }
             }
+        }
+        if staged {
+            self.io_notify.notify();
         }
     }
 
@@ -497,15 +787,38 @@ impl Server {
 
     /// One line of error JSON with the message properly escaped (raw
     /// interpolation let a quote in the error break the wire protocol).
-    fn error_line(e: &str) -> String {
+    pub(crate) fn error_line(e: &str) -> String {
         let mut o = Json::obj();
         o.set("error", Json::str(e));
         Json::Obj(o).to_string()
     }
 
-    /// Parse one request line. Returns Ok(None) for control commands that
-    /// were handled inline (stats/shutdown get an immediate response).
+    /// A load-shed response: the client's id echoed back with one of
+    /// the documented backpressure error strings (`docs/SERVING.md`).
+    /// Shed is an *answered* outcome — the request was well-formed but
+    /// refused admission — so it returns `Ok(Some(..))`, unlike the
+    /// `Err(..)` malformed-request path.
+    fn shed_line(&self, client_req_id: Option<f64>, why: &str) -> String {
+        self.ledger.lock().unwrap().record_shed();
+        let mut o = Json::obj();
+        o.set("id", Self::id_json(client_req_id));
+        o.set("error", Json::str(why));
+        Json::Obj(o).to_string()
+    }
+
+    /// Parse one request line. Returns Ok(None) for requests admitted to
+    /// a queue, Ok(Some(..)) for immediate responses (control commands
+    /// and load-shed errors), Err(..) for malformed requests. The `Err`
+    /// path also counts into the ledger's `rejected_total`.
     pub fn handle_line(&self, line: &str, conn_id: u64) -> Result<Option<String>, String> {
+        let r = self.handle_line_inner(line, conn_id);
+        if r.is_err() {
+            self.ledger.lock().unwrap().record_rejected();
+        }
+        r
+    }
+
+    fn handle_line_inner(&self, line: &str, conn_id: u64) -> Result<Option<String>, String> {
         let j = json::parse(line).map_err(|e| format!("bad json: {e}"))?;
         if let Some(cmd) = j.get_path("cmd").and_then(|c| c.as_str()) {
             return match cmd {
@@ -517,7 +830,7 @@ impl Server {
                     Ok(Some(self.ledger_json().to_string()))
                 }
                 "shutdown" => {
-                    self.shutdown.store(true, Ordering::SeqCst);
+                    self.begin_drain();
                     Ok(Some(r#"{"ok": true}"#.to_string()))
                 }
                 other => Err(format!("unknown cmd '{other}'")),
@@ -576,123 +889,99 @@ impl Server {
             if tokens > image.len() {
                 return Err("'tokens' must not exceed the image length".to_string());
             }
-            self.stream.lock().unwrap().enqueue_request(
-                conn_id,
-                client_req_id,
-                &image,
-                tokens,
-                Instant::now(),
-            );
+            // `"push"` (stream only, optional): opt into per-token
+            // progress events (`"event": "tokens"` lines) as each wave
+            // completes, before the final response.
+            let push = match j.get_path("push") {
+                None => false,
+                Some(v) => v.as_bool().ok_or("'push' must be a boolean")?,
+            };
+            // Admission runs *after* validation: a malformed request is
+            // a parse error even under overload, never a shed.
+            if self.is_draining() || self.is_shutdown() {
+                return Ok(Some(self.shed_line(client_req_id, SHED_DRAINING)));
+            }
+            if !self.try_acquire_permit() {
+                return Ok(Some(self.shed_line(client_req_id, SHED_INFLIGHT)));
+            }
+            {
+                let mut stream = self.stream.lock().unwrap();
+                if stream.queued_tokens() + stream.tokens_in_flight() as usize + tokens
+                    > self.queue_depth
+                {
+                    drop(stream);
+                    self.release_permits(1);
+                    return Ok(Some(self.shed_line(client_req_id, SHED_QUEUE_FULL)));
+                }
+                let now = Instant::now();
+                stream.enqueue_request(conn_id, client_req_id, &image, tokens, push, now);
+            }
+            self.exec_notify.notify();
             return Ok(None);
         }
-        self.enqueue(InferencePayload { image, conn_id, client_req_id, kind });
+        if self.is_draining() || self.is_shutdown() {
+            return Ok(Some(self.shed_line(client_req_id, SHED_DRAINING)));
+        }
+        if !self.try_acquire_permit() {
+            return Ok(Some(self.shed_line(client_req_id, SHED_INFLIGHT)));
+        }
+        if self.pending.lock().unwrap().len() >= self.queue_depth {
+            self.release_permits(1);
+            return Ok(Some(self.shed_line(client_req_id, SHED_QUEUE_FULL)));
+        }
+        self.enqueue_admitted(InferencePayload { image, conn_id, client_req_id, kind });
         Ok(None)
     }
 
     /// Serve until shutdown. The executor loop runs on *this* thread
-    /// (PJRT executables are not Send); the acceptor and per-connection
-    /// handlers run on spawned threads.
+    /// (PJRT executables are not `Send`); all connection I/O — accept,
+    /// reads, writes — runs on one reactor thread
+    /// ([`super::reactor`]), never on per-connection threads. Both
+    /// loops idle on condvar wakeups with bounded timeouts; neither
+    /// sleep-polls.
     pub fn serve(
         self: Arc<Self>,
         cfg: &ServerConfig,
         mut exec: Box<dyn BatchExecutor>,
     ) -> std::io::Result<()> {
-        let listener = TcpListener::bind(&cfg.addr)?;
+        let listener = std::net::TcpListener::bind(&cfg.addr)?;
         listener.set_nonblocking(true)?;
         let srv = self.clone();
-        let accept_handle = std::thread::spawn(move || {
-            let mut handles = Vec::new();
-            while !srv.is_shutdown() {
-                match listener.accept() {
-                    Ok((stream, _)) => {
-                        let srv2 = srv.clone();
-                        handles.push(std::thread::spawn(move || srv2.handle_conn(stream)));
-                    }
-                    Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
-                        std::thread::sleep(Duration::from_millis(2));
-                    }
-                    Err(_) => break,
-                }
-            }
-            for h in handles {
-                h.join().ok();
-            }
-        });
-        // Executor loop on the current thread. Idle (sleep) only when
-        // neither a batch nor a conversion wave ran — a wave completing
-        // zero requests is still work, and more full waves may be ready.
+        // The one intentional thread in the connection tier: the
+        // reactor that owns the listener and every connection.
+        // detlint: allow(hotpath-blocking) -- the single reactor spawn, not a per-connection thread
+        let reactor = std::thread::spawn(move || crate::coordinator::reactor::run(srv, listener));
+        // Executor loop on the current thread. Idle only when neither a
+        // batch nor a wave ran, parked on the work condvar with a
+        // timeout that bounds how late a batcher deadline can fire.
+        let idle =
+            self.batcher.max_wait.clamp(Duration::from_micros(100), Duration::from_millis(5));
+        let mut drain_deadline: Option<Instant> = None;
         while !self.is_shutdown() {
+            if self.is_draining() {
+                let d = *drain_deadline.get_or_insert(Instant::now() + self.drain_timeout);
+                if Instant::now() >= d {
+                    // Drain bound exceeded: stop executing; whatever is
+                    // already staged still flushes in the reactor.
+                    self.force_stop();
+                    break;
+                }
+            }
             if !self.step(exec.as_mut()).1 {
-                std::thread::sleep(Duration::from_micros(200));
+                self.exec_notify.wait_timeout(idle);
             }
         }
-        accept_handle.join().ok();
+        reactor.join().ok();
         Ok(())
-    }
-
-    fn handle_conn(self: Arc<Self>, stream: TcpStream) {
-        let conn_id = self.open_conn();
-        self.conn_loop(conn_id, stream);
-        // Whatever path exited the loop (EOF, write error, shutdown):
-        // unregister so the executor stops staging for this connection and
-        // no outbox entry can outlive it.
-        self.close_conn(conn_id);
-    }
-
-    fn conn_loop(&self, conn_id: u64, stream: TcpStream) {
-        stream.set_read_timeout(Some(Duration::from_millis(5))).ok();
-        let mut writer = match stream.try_clone() {
-            Ok(w) => w,
-            Err(_) => return,
-        };
-        let mut reader = BufReader::new(stream);
-        let mut line = String::new();
-        loop {
-            if self.is_shutdown() {
-                break;
-            }
-            // Flush any staged responses.
-            for resp in self.take_responses(conn_id) {
-                if writeln!(writer, "{resp}").is_err() {
-                    return;
-                }
-            }
-            line.clear();
-            match reader.read_line(&mut line) {
-                Ok(0) => break, // EOF
-                Ok(_) => {
-                    let trimmed = line.trim();
-                    if trimmed.is_empty() {
-                        continue;
-                    }
-                    match self.handle_line(trimmed, conn_id) {
-                        Ok(Some(imm)) => {
-                            if writeln!(writer, "{imm}").is_err() {
-                                return;
-                            }
-                        }
-                        Ok(None) => {}
-                        Err(e) => {
-                            let _ = writeln!(writer, "{}", Self::error_line(&e));
-                        }
-                    }
-                }
-                Err(ref e)
-                    if e.kind() == std::io::ErrorKind::WouldBlock
-                        || e.kind() == std::io::ErrorKind::TimedOut => {}
-                Err(_) => break,
-            }
-        }
-        // Final flush; the caller closes the connection afterwards.
-        for resp in self.take_responses(conn_id) {
-            let _ = writeln!(writer, "{resp}");
-        }
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use std::io::{BufRead, BufReader, Write};
+    use std::net::{TcpListener, TcpStream};
+
     use crate::cim::params::MacroParams;
     use crate::coordinator::sac::evaluate_plan;
     use crate::coordinator::scheduler::Scheduler;
@@ -738,6 +1027,7 @@ mod tests {
             max_wait: Duration::from_millis(1),
             wave_tokens: 2,
             max_waves: 2,
+            ..ServerConfig::default()
         })
         .unwrap()
     }
@@ -780,7 +1070,14 @@ mod tests {
         let stats = srv.handle_line(r#"{"cmd": "stats"}"#, 1).unwrap().unwrap();
         assert!(stats.contains("requests"));
         assert!(!srv.is_shutdown());
-        srv.handle_line(r#"{"cmd": "shutdown"}"#, 1).unwrap();
+        let ack = srv.handle_line(r#"{"cmd": "shutdown"}"#, 1).unwrap().unwrap();
+        assert!(ack.contains("ok"));
+        // Shutdown begins a graceful drain, not an instant stop …
+        assert!(srv.is_draining());
+        assert!(!srv.is_shutdown());
+        // … and with nothing in flight the next executor step stops.
+        let mut exec = FakeExec::new();
+        srv.executor_step(&mut exec);
         assert!(srv.is_shutdown());
     }
 
@@ -959,32 +1256,28 @@ mod tests {
 
     #[test]
     fn bad_batch_config_is_rejected_at_construction() {
-        let bad = ServerConfig {
-            addr: "unused".into(),
-            batch_sizes: vec![],
-            max_wait: Duration::from_millis(1),
-            wave_tokens: 2,
-            max_waves: 1,
-        };
+        let bad = ServerConfig { batch_sizes: vec![], ..ServerConfig::default() };
         assert!(Server::new(&bad).is_err());
         // A zero wave size is equally a config error, not a later panic.
-        let bad_wave = ServerConfig {
-            addr: "unused".into(),
-            batch_sizes: vec![1, 4],
-            max_wait: Duration::from_millis(1),
-            wave_tokens: 0,
-            max_waves: 1,
-        };
+        let bad_wave = ServerConfig { wave_tokens: 0, ..ServerConfig::default() };
         assert!(Server::new(&bad_wave).is_err());
         // Zero in-flight waves would make the streaming tier a no-op.
-        let bad_concurrency = ServerConfig {
-            addr: "unused".into(),
-            batch_sizes: vec![1, 4],
-            max_wait: Duration::from_millis(1),
-            wave_tokens: 2,
-            max_waves: 0,
-        };
+        let bad_concurrency = ServerConfig { max_waves: 0, ..ServerConfig::default() };
         assert!(Server::new(&bad_concurrency).is_err());
+    }
+
+    #[test]
+    fn bad_admission_config_is_rejected_at_construction() {
+        // The admission knobs are validated like --max-waves: zero is a
+        // construction error, never a later panic or a wedged server.
+        let no_permits = ServerConfig { max_inflight: 0, ..ServerConfig::default() };
+        assert!(Server::new(&no_permits).is_err());
+        let no_queue = ServerConfig { queue_depth: 0, ..ServerConfig::default() };
+        assert!(Server::new(&no_queue).is_err());
+        let no_drain = ServerConfig { drain_timeout: Duration::ZERO, ..ServerConfig::default() };
+        assert!(Server::new(&no_drain).is_err());
+        // The defaults themselves construct.
+        assert!(Server::new(&ServerConfig::default()).is_ok());
     }
 
     #[test]
@@ -1241,6 +1534,7 @@ mod tests {
             max_wait: Duration::from_millis(1),
             wave_tokens: 2,
             max_waves: 2,
+            ..ServerConfig::default()
         };
         // Bind manually to learn the port, then serve on it.
         let listener = TcpListener::bind("127.0.0.1:0").unwrap();
@@ -1269,5 +1563,318 @@ mod tests {
         reader.read_line(&mut ack).unwrap();
         assert!(ack.contains("ok"));
         handle.join().unwrap();
+    }
+
+    /// The tiny 2-block zero-noise graph executor used by the streaming
+    /// tests (the only executor kind that serves `"stream"` requests).
+    fn tiny_graph_exec() -> crate::coordinator::pipeline::ModelExecutor {
+        use crate::coordinator::pipeline::{ModelExecutor, PipelineConfig};
+        use crate::vit::graph::ModelGraph;
+        use crate::vit::plan::OperatingPoint;
+        let mut p = MacroParams::default();
+        p.adc_bits = 6;
+        p.active_rows = 64;
+        p.rows = 64;
+        p.cols = 12;
+        p.sigma_cu_rel = 0.0;
+        p.nonlin_cubic_lsb = 0.0;
+        p.sigma_cmp_lsb = 0.0;
+        p.sigma_cmp_offset_lsb = 0.0;
+        p.temperature_k = 0.0;
+        let op = OperatingPoint { a_bits: 2, w_bits: 2, cb: crate::cim::params::CbMode::Off };
+        let plan = PrecisionPlan { name: "test 2b", attention: op, mlp: op };
+        let mut cfg = VitConfig::default();
+        cfg.image = 16;
+        cfg.dim = 48;
+        cfg.depth = 2;
+        cfg.mlp_ratio = 2;
+        cfg.num_classes = 4;
+        let graph = ModelGraph::encoder(&cfg, 2, &plan);
+        ModelExecutor::new(&p, graph, PipelineConfig::default()).unwrap()
+    }
+
+    /// A 16-float image payload for the tiny graph.
+    fn img16_payload() -> String {
+        let img: Vec<String> =
+            (0..16).map(|j| format!("{}", (j % 7) as f32 / 7.0 - 0.4)).collect();
+        img.join(", ")
+    }
+
+    #[test]
+    fn overload_sheds_with_documented_errors_and_never_enqueues() {
+        let srv = Server::new(&ServerConfig {
+            addr: "unused".into(),
+            batch_sizes: vec![1, 4],
+            max_wait: Duration::from_millis(1),
+            wave_tokens: 2,
+            max_waves: 2,
+            max_inflight: 2,
+            ..ServerConfig::default()
+        })
+        .unwrap();
+        let conn = srv.open_conn();
+        // Fill both permits.
+        assert!(srv.handle_line(r#"{"id": 1, "image": [1.0]}"#, conn).unwrap().is_none());
+        assert!(srv.handle_line(r#"{"id": 2, "image": [1.0]}"#, conn).unwrap().is_none());
+        // The third request sheds with the documented overload error,
+        // echoing the client id, without enqueueing anything.
+        let resp = srv.handle_line(r#"{"id": 3, "image": [1.0]}"#, conn).unwrap().unwrap();
+        let j = json::parse(&resp).unwrap();
+        assert_eq!(j.get_path("id").unwrap().as_f64().unwrap(), 3.0);
+        assert_eq!(j.get_path("error").unwrap().as_str().unwrap(), SHED_INFLIGHT);
+        assert_eq!(srv.pending.lock().unwrap().len(), 2);
+        // Stream requests draw from the same permit pool.
+        let resp = srv
+            .handle_line(r#"{"id": 4, "kind": "stream", "image": [1.0]}"#, conn)
+            .unwrap()
+            .unwrap();
+        let j = json::parse(&resp).unwrap();
+        assert_eq!(j.get_path("error").unwrap().as_str().unwrap(), SHED_INFLIGHT);
+        assert_eq!(srv.stream.lock().unwrap().queued_tokens(), 0);
+        // Serving the backlog frees the permits; admission resumes.
+        let mut exec = FakeExec::new();
+        std::thread::sleep(Duration::from_millis(3));
+        assert_eq!(srv.executor_step(&mut exec), 2);
+        assert_eq!(srv.inflight.load(Ordering::SeqCst), 0);
+        assert!(srv.handle_line(r#"{"id": 5, "image": [1.0]}"#, conn).unwrap().is_none());
+        // Shed accounting is observable in the stats report.
+        let stats = srv.ledger_json();
+        assert_eq!(stats.get_path("shed_requests").unwrap().as_f64().unwrap(), 2.0);
+        assert_eq!(stats.get_path("rejected_total").unwrap().as_f64().unwrap(), 2.0);
+        assert_eq!(stats.get_path("inflight_permits").unwrap().as_f64().unwrap(), 1.0);
+        assert_eq!(stats.get_path("max_inflight").unwrap().as_f64().unwrap(), 2.0);
+    }
+
+    #[test]
+    fn full_queues_shed_with_the_documented_error() {
+        let cfg = ServerConfig {
+            addr: "unused".into(),
+            batch_sizes: vec![1, 4],
+            max_wait: Duration::from_millis(1),
+            wave_tokens: 2,
+            max_waves: 2,
+            queue_depth: 2,
+            ..ServerConfig::default()
+        };
+        // Fixed-batch tier: the queue bound is in requests.
+        let srv = Server::new(&cfg).unwrap();
+        let conn = srv.open_conn();
+        srv.handle_line(r#"{"id": 1, "image": [1.0]}"#, conn).unwrap();
+        srv.handle_line(r#"{"id": 2, "image": [1.0]}"#, conn).unwrap();
+        let resp = srv.handle_line(r#"{"id": 3, "image": [1.0]}"#, conn).unwrap().unwrap();
+        let j = json::parse(&resp).unwrap();
+        assert_eq!(j.get_path("error").unwrap().as_str().unwrap(), SHED_QUEUE_FULL);
+        assert_eq!(srv.pending.lock().unwrap().len(), 2);
+        // The shed returned its permit: only the two queued requests hold one.
+        assert_eq!(srv.inflight.load(Ordering::SeqCst), 2);
+        // Streaming tier: the bound is in tokens (queued + in flight).
+        let srv = Server::new(&cfg).unwrap();
+        let conn = srv.open_conn();
+        srv.handle_line(r#"{"id": 1, "kind": "stream", "tokens": 2, "image": [1.0, 2.0]}"#, conn)
+            .unwrap();
+        let resp = srv
+            .handle_line(r#"{"id": 2, "kind": "stream", "image": [1.0]}"#, conn)
+            .unwrap()
+            .unwrap();
+        let j = json::parse(&resp).unwrap();
+        assert_eq!(j.get_path("error").unwrap().as_str().unwrap(), SHED_QUEUE_FULL);
+        assert_eq!(srv.stream.lock().unwrap().queued_tokens(), 2);
+        assert_eq!(srv.inflight.load(Ordering::SeqCst), 1);
+    }
+
+    #[test]
+    fn purged_connections_return_their_admission_permits() {
+        let srv = test_server();
+        let conn = srv.open_conn();
+        srv.handle_line(r#"{"id": 1, "image": [1.0]}"#, conn).unwrap();
+        srv.handle_line(r#"{"id": 2, "kind": "stream", "tokens": 2, "image": [1.0, 2.0]}"#, conn)
+            .unwrap();
+        assert_eq!(srv.inflight.load(Ordering::SeqCst), 2);
+        srv.close_conn(conn);
+        assert_eq!(srv.inflight.load(Ordering::SeqCst), 0, "purged requests must free permits");
+    }
+
+    #[test]
+    fn graceful_drain_completes_in_flight_stream_requests() {
+        let mut exec = tiny_graph_exec();
+        // A 60s batching deadline: the partial remainder wave can only
+        // close through the drain horizon, never by waiting it out.
+        let srv = Server::new(&ServerConfig {
+            addr: "unused".into(),
+            batch_sizes: vec![1, 4],
+            max_wait: Duration::from_secs(60),
+            wave_tokens: 2,
+            max_waves: 2,
+            ..ServerConfig::default()
+        })
+        .unwrap();
+        let conn = srv.open_conn();
+        let line = format!(
+            r#"{{"id": 1, "kind": "stream", "tokens": 3, "image": [{}]}}"#,
+            img16_payload()
+        );
+        srv.handle_line(&line, conn).unwrap();
+        // The full 2-token wave runs; the 1-token remainder stays queued
+        // behind the (far-future) deadline.
+        assert_eq!(srv.executor_step(&mut exec), 0);
+        assert_eq!(srv.stream.lock().unwrap().queued_tokens(), 1);
+        // Begin the drain. New inference requests shed...
+        let ack = srv.handle_line(r#"{"cmd": "shutdown"}"#, conn).unwrap().unwrap();
+        assert!(ack.contains("ok"));
+        assert!(srv.is_draining());
+        let resp = srv.handle_line(r#"{"id": 2, "image": [1.0]}"#, conn).unwrap().unwrap();
+        let j = json::parse(&resp).unwrap();
+        assert_eq!(j.get_path("error").unwrap().as_str().unwrap(), SHED_DRAINING);
+        // ...but the in-flight stream request completes — the drain
+        // horizon closes its partial wave immediately — and only then
+        // does the server stop.
+        assert_eq!(srv.executor_step(&mut exec), 1);
+        assert!(srv.is_shutdown());
+        let resps = srv.take_responses(conn);
+        assert_eq!(resps.len(), 1, "the staged final response must survive the drain");
+        let j = json::parse(&resps[0]).unwrap();
+        assert_eq!(j.get_path("id").unwrap().as_f64().unwrap(), 1.0);
+        assert_eq!(j.get_path("tokens").unwrap().as_f64().unwrap(), 3.0);
+        assert_eq!(j.get_path("waves").unwrap().as_f64().unwrap(), 2.0);
+        assert_eq!(srv.inflight.load(Ordering::SeqCst), 0);
+    }
+
+    #[test]
+    fn push_stream_requests_emit_progress_events_in_wave_order() {
+        let mut exec = tiny_graph_exec();
+        let srv = test_server();
+        let conn = srv.open_conn();
+        let line = format!(
+            r#"{{"id": 7, "kind": "stream", "tokens": 3, "push": true, "image": [{}]}}"#,
+            img16_payload()
+        );
+        srv.handle_line(&line, conn).unwrap();
+        // Wave 1 (2 of 3 tokens) advances but does not finish the
+        // request: one progress event, no final line.
+        assert_eq!(srv.executor_step(&mut exec), 0);
+        let resps = srv.take_responses(conn);
+        assert_eq!(resps.len(), 1);
+        let j = json::parse(&resps[0]).unwrap();
+        assert_eq!(j.get_path("id").unwrap().as_f64().unwrap(), 7.0);
+        assert_eq!(j.get_path("event").unwrap().as_str().unwrap(), "tokens");
+        assert_eq!(j.get_path("done").unwrap().as_f64().unwrap(), 2.0);
+        assert_eq!(j.get_path("tokens").unwrap().as_f64().unwrap(), 3.0);
+        assert!(j.get_path("logits").is_none());
+        // Wave 2 (the deadline-closed remainder) finishes the request:
+        // the final response only — a finishing wave never emits a
+        // trailing progress event.
+        std::thread::sleep(Duration::from_millis(3));
+        assert_eq!(srv.executor_step(&mut exec), 1);
+        let resps = srv.take_responses(conn);
+        assert_eq!(resps.len(), 1);
+        let j = json::parse(&resps[0]).unwrap();
+        assert!(j.get_path("pred").is_some());
+        assert_eq!(j.get_path("waves").unwrap().as_f64().unwrap(), 2.0);
+        // Without "push" no progress events appear (the existing stream
+        // tests cover that shape); a non-boolean "push" is rejected.
+        assert!(srv
+            .handle_line(r#"{"id": 1, "kind": "stream", "push": 1, "image": [1.0]}"#, conn)
+            .is_err());
+    }
+
+    #[test]
+    fn partial_line_and_slow_writer_clients_cannot_stall_others() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        drop(listener);
+        let cfg = ServerConfig {
+            addr: addr.to_string(),
+            batch_sizes: vec![1, 4],
+            max_wait: Duration::from_millis(1),
+            wave_tokens: 2,
+            max_waves: 2,
+            ..ServerConfig::default()
+        };
+        let srv = Arc::new(Server::new(&cfg).unwrap());
+        let srv2 = srv.clone();
+        let handle = std::thread::spawn(move || {
+            srv2.serve(&cfg, Box::new(FakeExec::new())).unwrap();
+        });
+        std::thread::sleep(Duration::from_millis(50));
+        // Client A writes half a request line — no newline — and stalls.
+        let mut stall = TcpStream::connect(addr).unwrap();
+        stall.write_all(br#"{"id": 99, "image": [1.0"#).unwrap();
+        stall.flush().unwrap();
+        std::thread::sleep(Duration::from_millis(20));
+        // Client B is served normally in the meantime.
+        let mut sock = TcpStream::connect(addr).unwrap();
+        writeln!(sock, r#"{{"id": 5, "image": [1.0, 1.0]}}"#).unwrap();
+        sock.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+        let mut reader = BufReader::new(sock.try_clone().unwrap());
+        let mut resp = String::new();
+        reader.read_line(&mut resp).unwrap();
+        let j = json::parse(resp.trim()).unwrap();
+        assert_eq!(j.get_path("id").unwrap().as_f64().unwrap(), 5.0);
+        assert_eq!(j.get_path("pred").unwrap().as_f64().unwrap(), 9.0);
+        // Client A completes its line and is served too — the buffered
+        // partial line survived the other client's traffic.
+        stall.write_all(b", 2.0]}\n").unwrap();
+        stall.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+        let mut sreader = BufReader::new(stall.try_clone().unwrap());
+        let mut sresp = String::new();
+        sreader.read_line(&mut sresp).unwrap();
+        let j = json::parse(sresp.trim()).unwrap();
+        assert_eq!(j.get_path("id").unwrap().as_f64().unwrap(), 99.0);
+        assert!(j.get_path("pred").is_some());
+        writeln!(sock, r#"{{"cmd": "shutdown"}}"#).unwrap();
+        let mut ack = String::new();
+        reader.read_line(&mut ack).unwrap();
+        assert!(ack.contains("ok"));
+        handle.join().unwrap();
+    }
+
+    #[test]
+    fn tcp_drain_flushes_in_flight_responses_before_exit() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        drop(listener);
+        let cfg = ServerConfig {
+            addr: addr.to_string(),
+            batch_sizes: vec![1, 4],
+            max_wait: Duration::from_millis(1),
+            wave_tokens: 2,
+            max_waves: 2,
+            ..ServerConfig::default()
+        };
+        let srv = Arc::new(Server::new(&cfg).unwrap());
+        let srv2 = srv.clone();
+        let handle = std::thread::spawn(move || {
+            srv2.serve(&cfg, Box::new(FakeExec::new())).unwrap();
+        });
+        std::thread::sleep(Duration::from_millis(50));
+        // A request and the shutdown command back-to-back: the drain
+        // must still serve the in-flight request and flush its response
+        // before the server exits.
+        let mut sock = TcpStream::connect(addr).unwrap();
+        writeln!(sock, r#"{{"id": 6, "image": [2.0, 2.0]}}"#).unwrap();
+        writeln!(sock, r#"{{"cmd": "shutdown"}}"#).unwrap();
+        sock.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+        let mut reader = BufReader::new(sock.try_clone().unwrap());
+        let mut lines = Vec::new();
+        for _ in 0..2 {
+            let mut l = String::new();
+            reader.read_line(&mut l).unwrap();
+            lines.push(l.trim().to_string());
+        }
+        handle.join().unwrap();
+        let mut saw_ack = false;
+        let mut saw_resp = false;
+        for l in &lines {
+            let j = json::parse(l).unwrap();
+            if j.get_path("ok").is_some() {
+                saw_ack = true;
+            }
+            if j.get_path("pred").is_some() {
+                assert_eq!(j.get_path("id").unwrap().as_f64().unwrap(), 6.0);
+                saw_resp = true;
+            }
+        }
+        assert!(saw_ack, "shutdown ack must flush: {lines:?}");
+        assert!(saw_resp, "the drained request's response must flush: {lines:?}");
     }
 }

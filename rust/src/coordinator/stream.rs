@@ -151,6 +151,22 @@ pub struct FinishedRequest {
     pub result: Result<StreamOutput, String>,
 }
 
+/// An incremental progress event for a push-enabled (`"push": true`)
+/// stream request: emitted when a wave completes some of the request's
+/// tokens but the request is not yet finished (the final wave's event is
+/// the response itself). Drained in wave order by
+/// [`TokenStream::take_progress`], so the event sequence per request is
+/// monotone in `done` and as deterministic as the wave schedule.
+#[derive(Clone, Debug)]
+pub struct StreamProgress {
+    pub conn_id: u64,
+    pub client_req_id: Option<f64>,
+    /// Tokens completed so far (strictly less than `tokens`).
+    pub done: usize,
+    /// Total tokens the request was split into.
+    pub tokens: usize,
+}
+
 /// Reassembly state of one in-flight request.
 struct StreamRequest {
     conn_id: u64,
@@ -164,6 +180,10 @@ struct StreamRequest {
     waves: u64,
     first_token_us: Option<f64>,
     last_token_us: f64,
+    /// Whether the client opted into per-token progress events
+    /// (`"push": true`): each wave that advances the request emits a
+    /// [`StreamProgress`] until the final response supersedes them.
+    push: bool,
 }
 
 /// Split a request's image floats into `tokens` contiguous patch
@@ -229,6 +249,10 @@ pub struct TokenStream {
     /// Next ring slot to overwrite once `latencies_us` is full; always
     /// points at the oldest sample.
     latency_cursor: usize,
+    /// Progress events for push-enabled requests, appended in wave
+    /// order by [`complete_wave`](Self::complete_wave) and drained by
+    /// [`take_progress`](Self::take_progress).
+    progress: Vec<StreamProgress>,
 }
 
 impl TokenStream {
@@ -250,17 +274,21 @@ impl TokenStream {
             tokens_served: 0,
             latencies_us: Vec::new(),
             latency_cursor: 0,
+            progress: Vec::new(),
         })
     }
 
     /// Admit a request: split its image into `tokens` patch chunks and
-    /// enqueue them as per-token work items. Returns the token count.
+    /// enqueue them as per-token work items. `push` opts the request
+    /// into per-token progress events ([`StreamProgress`]). Returns the
+    /// token count.
     pub fn enqueue_request(
         &mut self,
         conn_id: u64,
         client_req_id: Option<f64>,
         image: &[f32],
         tokens: usize,
+        push: bool,
         now: Instant,
     ) -> usize {
         let chunks = split_tokens(image, tokens);
@@ -278,6 +306,7 @@ impl TokenStream {
                 waves: 0,
                 first_token_us: None,
                 last_token_us: 0.0,
+                push,
             },
         );
         for (token_index, chunk) in chunks.into_iter().enumerate() {
@@ -412,7 +441,31 @@ impl TokenStream {
                 });
             }
         }
+        // Push-enabled requests the wave advanced but did not finish
+        // emit one progress event each, in `seen` order (= first-touch
+        // order within the wave = ascending req_seq, since wave items
+        // are sorted) — the event stream is a pure function of the wave
+        // schedule, like everything else in this tier.
+        for seq in &seen {
+            if let Some(req) = self.requests.get(seq) {
+                if req.push {
+                    self.progress.push(StreamProgress {
+                        conn_id: req.conn_id,
+                        client_req_id: req.client_req_id,
+                        done: req.done,
+                        tokens: req.logits.len(),
+                    });
+                }
+            }
+        }
         finished
+    }
+
+    /// Drain the progress events accumulated by completed waves (push
+    /// requests only), in wave order. The server stages these as
+    /// incremental `"event": "tokens"` lines between waves.
+    pub fn take_progress(&mut self) -> Vec<StreamProgress> {
+        std::mem::take(&mut self.progress)
     }
 
     /// A wave's execution failed: every request with a token in the
@@ -464,8 +517,10 @@ impl TokenStream {
     /// Tokens already admitted to a wave finish executing — the macro
     /// cannot recall a conversion — but they are recorded as defunct so
     /// their completions settle without polluting served-token stats or
-    /// the wave they share with live requests.
-    pub fn purge_conn(&mut self, conn_id: u64) {
+    /// the wave they share with live requests. Returns how many
+    /// requests were dropped unanswered (the server releases their
+    /// admission permits).
+    pub fn purge_conn(&mut self, conn_id: u64) -> usize {
         // Queued tokens per request of this connection, counted before
         // the sweep: the in-flight remainder (total − done − queued) is
         // what rides waves right now and must settle later.
@@ -477,6 +532,7 @@ impl TokenStream {
         }
         self.queue.retain(|t| t.conn_id != conn_id);
         let defunct = &mut self.defunct;
+        let mut dropped = 0usize;
         self.requests.retain(|seq, r| {
             if r.conn_id != conn_id {
                 return true;
@@ -486,8 +542,10 @@ impl TokenStream {
             if in_waves > 0 {
                 defunct.insert(*seq, in_waves);
             }
+            dropped += 1;
             false
         });
+        dropped
     }
 
     /// Whether any stream request was ever admitted. Drives the
@@ -567,10 +625,10 @@ mod tests {
     fn wave_forms_on_size_or_deadline() {
         let mut ts = TokenStream::new(&cfg(4, 50)).unwrap();
         let now = Instant::now();
-        ts.enqueue_request(1, Some(1.0), &img(6), 3, now);
+        ts.enqueue_request(1, Some(1.0), &img(6), 3, false, now);
         // 3 < 4 queued and the deadline has not passed: keep waiting.
         assert!(ts.form_wave(now).is_none());
-        ts.enqueue_request(1, Some(2.0), &img(4), 2, now);
+        ts.enqueue_request(1, Some(2.0), &img(4), 2, false, now);
         // 5 ≥ 4: a full wave closes immediately, one token stays queued.
         let wave = ts.form_wave(now).unwrap();
         assert_eq!(wave.items.len(), 4);
@@ -595,8 +653,8 @@ mod tests {
     fn waves_execute_in_request_then_token_order() {
         let mut ts = TokenStream::new(&cfg(8, 1)).unwrap();
         let now = Instant::now();
-        ts.enqueue_request(1, Some(10.0), &img(6), 3, now); // seq 1
-        ts.enqueue_request(2, Some(20.0), &img(4), 2, now); // seq 2
+        ts.enqueue_request(1, Some(10.0), &img(6), 3, false, now); // seq 1
+        ts.enqueue_request(2, Some(20.0), &img(4), 2, false, now); // seq 2
         let wave = ts.form_wave(now + Duration::from_millis(5)).unwrap();
         let order: Vec<(u64, usize)> =
             wave.items.iter().map(|t| (t.req_seq, t.token_index)).collect();
@@ -611,8 +669,8 @@ mod tests {
         // one finishes in wave 3. Out-of-order completion by design.
         let mut ts = TokenStream::new(&cfg(2, 1)).unwrap();
         let now = Instant::now();
-        ts.enqueue_request(7, Some(1.0), &img(8), 4, now); // seq 1
-        ts.enqueue_request(8, Some(2.0), &img(4), 2, now); // seq 2
+        ts.enqueue_request(7, Some(1.0), &img(8), 4, false, now); // seq 1
+        ts.enqueue_request(8, Some(2.0), &img(4), 2, false, now); // seq 2
         let outs: Vec<Vec<f32>> = vec![vec![1.0, 2.0], vec![3.0, 4.0]];
         let w1 = ts.form_wave(now).unwrap();
         let keys1: Vec<(u64, usize)> =
@@ -659,8 +717,8 @@ mod tests {
         // tokens of old requests cannot starve behind new first tokens.
         let mut ts = TokenStream::new(&cfg(2, 50)).unwrap();
         let now = Instant::now();
-        ts.enqueue_request(1, Some(1.0), &img(4), 2, now); // seq 1
-        ts.enqueue_request(2, Some(2.0), &img(4), 2, now); // seq 2
+        ts.enqueue_request(1, Some(1.0), &img(4), 2, false, now); // seq 1
+        ts.enqueue_request(2, Some(2.0), &img(4), 2, false, now); // seq 2
         let aged = now + Duration::from_millis(60);
         let wave = ts.form_wave(aged).unwrap();
         let keys: Vec<(u64, usize)> =
@@ -673,7 +731,7 @@ mod tests {
     fn a_request_spanning_waves_counts_them() {
         let mut ts = TokenStream::new(&cfg(2, 1)).unwrap();
         let now = Instant::now();
-        ts.enqueue_request(1, None, &img(8), 4, now);
+        ts.enqueue_request(1, None, &img(8), 4, false, now);
         let outs = vec![vec![1.0f32], vec![2.0]];
         let w1 = ts.form_wave(now).unwrap();
         assert!(ts.complete_wave(&w1, &outs, now).is_empty());
@@ -690,7 +748,7 @@ mod tests {
     fn fail_wave_purges_the_whole_request() {
         let mut ts = TokenStream::new(&cfg(2, 1)).unwrap();
         let now = Instant::now();
-        ts.enqueue_request(3, Some(5.0), &img(6), 3, now);
+        ts.enqueue_request(3, Some(5.0), &img(6), 3, false, now);
         let wave = ts.form_wave(now).unwrap();
         assert_eq!(wave.items.len(), 2);
         assert_eq!(ts.queued_tokens(), 1);
@@ -709,8 +767,8 @@ mod tests {
     fn purge_conn_drops_queue_and_reassembly() {
         let mut ts = TokenStream::new(&cfg(2, 1)).unwrap();
         let now = Instant::now();
-        ts.enqueue_request(1, Some(1.0), &img(4), 2, now);
-        ts.enqueue_request(2, Some(2.0), &img(4), 2, now);
+        ts.enqueue_request(1, Some(1.0), &img(4), 2, false, now);
+        ts.enqueue_request(2, Some(2.0), &img(4), 2, false, now);
         ts.purge_conn(1);
         assert_eq!(ts.queued_tokens(), 2);
         // Mid-wave purge: completions for the dead request are dropped.

@@ -277,10 +277,27 @@ mod pjrt_cli {
                 .opt("batch", "16", "execution batch artifact (1 or 16)")
                 .opt("max-wait-ms", "2", "batching window")
                 .opt("wave-tokens", "16", "streaming conversion-wave size (tokens)")
-                .opt("max-waves", "2", "streaming conversion waves kept in flight per step"),
+                .opt("max-waves", "2", "streaming conversion waves kept in flight per step")
+                .opt("max-inflight", "256", "admission: cap on in-flight requests")
+                .opt("queue-depth", "1024", "admission: max queued work per tier")
+                .opt("drain-timeout-ms", "5000", "graceful-drain bound after shutdown cmd"),
             argv,
         )?;
         let batch: usize = args.get_parse("batch")?;
+        // Build and validate the serving config before any artifact
+        // loads or runtime setup: a zero admission knob is an immediate
+        // usage error, exactly like a zero --max-waves.
+        let cfg = ServerConfig {
+            addr: args.get("addr").unwrap().to_string(),
+            batch_sizes: vec![1, batch],
+            max_wait: Duration::from_millis(args.get_parse::<u64>("max-wait-ms")?),
+            wave_tokens: args.get_parse::<usize>("wave-tokens")?,
+            max_waves: args.get_parse::<usize>("max-waves")?,
+            max_inflight: args.get_parse::<usize>("max-inflight")?,
+            queue_depth: args.get_parse::<usize>("queue-depth")?,
+            drain_timeout: Duration::from_millis(args.get_parse::<u64>("drain-timeout-ms")?),
+        };
+        cfg.validate()?;
         let (exe, _manifest) =
             load_vit(args.get("artifacts").unwrap(), &format!("vit_cim_b{batch}"))?;
         let calib = NoiseCalibration::measure(&MacroParams::default(), default_threads())?;
@@ -293,13 +310,6 @@ mod pjrt_cli {
             sigma_mlp: sm as f32,
             seed: 0,
             image_floats,
-        };
-        let cfg = ServerConfig {
-            addr: args.get("addr").unwrap().to_string(),
-            batch_sizes: vec![1, batch],
-            max_wait: Duration::from_millis(args.get_parse::<u64>("max-wait-ms")?),
-            wave_tokens: args.get_parse::<usize>("wave-tokens")?,
-            max_waves: args.get_parse::<usize>("max-waves")?,
         };
         println!(
             "serving ViT-CIM on {} (batch {batch}, σ_attn={sa:.2}, σ_mlp={sm:.2} LSB)",

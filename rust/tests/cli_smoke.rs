@@ -72,3 +72,19 @@ fn bad_option_reports_usage() {
     assert!(!ok);
     assert!(text.contains("unknown option"), "{text}");
 }
+
+#[test]
+fn serve_rejects_zero_admission_knobs() {
+    // The admission knobs are validated before any artifact loads, so
+    // these fail fast with the knob's name even without `make artifacts`.
+    for (flag, msg) in [
+        ("--max-waves", "max_waves"),
+        ("--max-inflight", "max_inflight"),
+        ("--queue-depth", "queue_depth"),
+        ("--drain-timeout-ms", "drain_timeout"),
+    ] {
+        let (ok, text) = crcim(&["serve", flag, "0"]);
+        assert!(!ok, "serve {flag} 0 must fail");
+        assert!(text.contains(msg), "serve {flag} 0: {text}");
+    }
+}

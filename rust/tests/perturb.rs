@@ -182,6 +182,7 @@ fn perturbed_stream_matches_reference_across_seeds_and_threads() {
                     max_wait: Duration::from_millis(60_000),
                     wave_tokens: 2,
                     max_waves: 2,
+                    ..ServerConfig::default()
                 })
                 .unwrap();
                 let conn = srv.open_conn();

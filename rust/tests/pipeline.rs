@@ -276,6 +276,7 @@ fn vit_base_forward_serves_through_server_with_layer_ledger() {
         max_wait: Duration::from_millis(1),
         wave_tokens: 2,
         max_waves: 2,
+        ..ServerConfig::default()
     })
     .unwrap();
     let conn = srv.open_conn();

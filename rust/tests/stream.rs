@@ -72,6 +72,7 @@ fn multiwave_server(wave_tokens: usize, max_wait_ms: u64, max_waves: usize) -> S
         max_wait: Duration::from_millis(max_wait_ms),
         wave_tokens,
         max_waves,
+        ..ServerConfig::default()
     })
     .unwrap()
 }
@@ -385,8 +386,8 @@ fn mid_wave_disconnect_fails_only_that_requests_tokens_as_a_unit() {
     })
     .unwrap();
     let t0 = Instant::now();
-    ts.enqueue_request(1, Some(1.0), &[0.0, 1.0], 2, t0); // seq 1, conn 1
-    ts.enqueue_request(2, Some(2.0), &[2.0, 3.0], 2, t0); // seq 2, conn 2
+    ts.enqueue_request(1, Some(1.0), &[0.0, 1.0], 2, false, t0); // seq 1, conn 1
+    ts.enqueue_request(2, Some(2.0), &[2.0, 3.0], 2, false, t0); // seq 2, conn 2
     let w1 = ts.form_wave(t0).unwrap(); // depth-fair: {(1,0), (2,0)}
     let keys1: Vec<(u64, usize)> = w1.items.iter().map(|t| (t.req_seq, t.token_index)).collect();
     assert_eq!(keys1, vec![(1, 0), (2, 0)]);
@@ -419,11 +420,11 @@ fn failing_one_wave_settles_the_requests_tokens_in_other_waves() {
     })
     .unwrap();
     let t0 = Instant::now();
-    ts.enqueue_request(1, Some(1.0), &[0.0, 1.0, 2.0], 3, t0); // A: seq 1
+    ts.enqueue_request(1, Some(1.0), &[0.0, 1.0, 2.0], 3, false, t0); // A: seq 1
     let w1 = ts.form_wave(t0).unwrap();
     let keys1: Vec<(u64, usize)> = w1.items.iter().map(|t| (t.req_seq, t.token_index)).collect();
     assert_eq!(keys1, vec![(1, 0), (1, 1)]);
-    ts.enqueue_request(2, Some(2.0), &[3.0], 1, t0); // B: seq 2
+    ts.enqueue_request(2, Some(2.0), &[3.0], 1, false, t0); // B: seq 2
     let w2 = ts.form_wave(t0).unwrap(); // depth-fair: {(1,2), (2,0)}
     let keys2: Vec<(u64, usize)> = w2.items.iter().map(|t| (t.req_seq, t.token_index)).collect();
     assert_eq!(keys2, vec![(1, 2), (2, 0)]);
@@ -535,7 +536,7 @@ fn prop_random_interleavings_reassemble_in_token_order_without_leakage() {
                     let conn = next_enqueue as u64 + 1;
                     let n = tokens[next_enqueue];
                     let img: Vec<f32> = (0..n).map(|t| t as f32).collect();
-                    ts.enqueue_request(conn, Some(conn as f64), &img, n, t0);
+                    ts.enqueue_request(conn, Some(conn as f64), &img, n, false, t0);
                     // Requests enqueue in index order, so the stream's
                     // seq counter (1-based) tracks the index exactly.
                     seq_of[next_enqueue] = next_enqueue as u64 + 1;
@@ -579,7 +580,7 @@ fn prop_random_interleavings_reassemble_in_token_order_without_leakage() {
             let conn = next_enqueue as u64 + 1;
             let n = tokens[next_enqueue];
             let img: Vec<f32> = (0..n).map(|t| t as f32).collect();
-            ts.enqueue_request(conn, Some(conn as f64), &img, n, t0);
+            ts.enqueue_request(conn, Some(conn as f64), &img, n, false, t0);
             seq_of[next_enqueue] = next_enqueue as u64 + 1;
             next_enqueue += 1;
         }

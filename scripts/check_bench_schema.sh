@@ -36,6 +36,10 @@ required_keys=(
   serial_pass_us
   overlapped_pass_us
   pipeline_speedup
+  saturation_wave_tokens
+  saturated_tokens_per_s_modeled
+  plan_stream_tokens_per_s
+  saturation_anchor_rel_err
 )
 
 fail=0
@@ -59,8 +63,29 @@ for key in "${required_keys[@]}"; do
   fi
 done
 
+# Saturation curve: a non-empty array of per-offered-load points, each
+# carrying the load-shed acceptance fields. Grep-based like the rest —
+# the curve keys only ever appear inside curve points, so a per-key
+# presence + numeric check over the whole report is sufficient.
+if ! grep -Eq '"saturation_curve"[[:space:]]*:[[:space:]]*\[' "$report"; then
+  echo "FAIL: $report is missing the \"saturation_curve\" array" >&2
+  fail=1
+else
+  points=$(grep -c '"offered_factor"' "$report" || true)
+  if [[ "$points" -lt 2 ]]; then
+    echo "FAIL: saturation_curve has $points points; need >= 2 for a curve" >&2
+    fail=1
+  fi
+  for key in offered_factor offered_tokens_per_s tokens_per_s p50_us p99_us shed_rate; do
+    if ! grep -Eq "\"$key\"[[:space:]]*:[[:space:]]*-?[0-9]" "$report"; then
+      echo "FAIL: saturation_curve points are missing numeric \"$key\"" >&2
+      fail=1
+    fi
+  done
+fi
+
 if [[ $fail -ne 0 ]]; then
   exit 1
 fi
 
-echo "OK: $report carries all ${#required_keys[@]} required keys with typed values (incl. cold/warm pass, streaming wave + measured overlap)"
+echo "OK: $report carries all ${#required_keys[@]} required keys with typed values (incl. cold/warm pass, streaming wave, measured overlap + saturation curve)"

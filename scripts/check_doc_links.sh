@@ -51,6 +51,15 @@ if [ -f docs/ARCHITECTURE.md ] && \
     fail=1
 fi
 
+# The event-driven serving front end (reactor, bounded admission, drain
+# machine, saturation anchor) — SERVING.md's backpressure contract and
+# the bench's saturation-curve tolerance both point here.
+if [ -f docs/ARCHITECTURE.md ] && \
+   ! grep -q '^## Connection tier' docs/ARCHITECTURE.md; then
+    echo "MISSING SECTION: docs/ARCHITECTURE.md '## Connection tier'"
+    fail=1
+fi
+
 for f in $files; do
     dir=$(dirname "$f")
     # Extract inline markdown link targets: [text](target)
