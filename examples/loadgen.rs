@@ -1,6 +1,6 @@
 //! Load generator for the event-driven connection tier: sustained mixed
-//! classify/forward/stream traffic over real TCP through the reactor, at
-//! a swept series of offered loads. Prints one table row per point
+//! classify/forward/stream/generate traffic over real TCP through the
+//! reactor, at a swept series of offered loads. Prints one table row per point
 //! (offered vs achieved rate, p50/p99 latency, shed rate) and finishes
 //! with a `stats` probe and a graceful-drain shutdown, so a run doubles
 //! as an end-to-end smoke of admission, backpressure, per-token push and
@@ -23,6 +23,7 @@ use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use cr_cim::cim::params::MacroParams;
+use cr_cim::coordinator::decode::GenStep;
 use cr_cim::coordinator::sac::{evaluate_plan, PlanCost};
 use cr_cim::coordinator::scheduler::Scheduler;
 use cr_cim::coordinator::server::{
@@ -64,6 +65,23 @@ impl BatchExecutor for LoadExec {
     fn forward(&mut self, images: &[Vec<f32>]) -> Result<Vec<Vec<f32>>, String> {
         Ok(Self::logits(images))
     }
+    fn decode_many(&mut self, waves: &[Vec<GenStep>]) -> Vec<Result<Vec<Vec<f32>>, String>> {
+        // Deterministic per-step logits keyed on (token, position), so
+        // the generate path exercises wave coalescing and per-token push
+        // without model math.
+        waves
+            .iter()
+            .map(|w| {
+                Ok(w.iter()
+                    .map(|s| {
+                        let m =
+                            ((s.tok as u64 * 7 + s.pos as u64) % 13) as f32 / 13.0 - 0.5;
+                        (0..10).map(|c| m + c as f32).collect()
+                    })
+                    .collect())
+            })
+            .collect()
+    }
     fn cost(&self) -> &PlanCost {
         &self.cost
     }
@@ -73,19 +91,30 @@ impl BatchExecutor for LoadExec {
 }
 
 /// One request line of the mixed workload: round-robin
-/// classify / forward / stream, with every third stream request opting
-/// into per-token push events.
+/// classify / forward / stream / generate, with a fraction of the
+/// stream and generate requests opting into per-token push events.
 fn request_line(id: u64) -> String {
     let px: Vec<String> =
         (0..16).map(|j| format!("{:.3}", ((id * 7 + j) % 13) as f64 / 13.0 - 0.5)).collect();
     let image = format!("[{}]", px.join(", "));
-    match id % 3 {
+    match id % 4 {
         0 => format!("{{\"id\": {id}, \"kind\": \"classify\", \"image\": {image}}}"),
         1 => format!("{{\"id\": {id}, \"kind\": \"forward\", \"image\": {image}}}"),
-        _ => {
-            let push = if id % 9 == 2 { ", \"push\": true" } else { "" };
+        2 => {
+            let push = if id % 8 == 2 { ", \"push\": true" } else { "" };
             let kind = "\"kind\": \"stream\", \"tokens\": 4";
             format!("{{\"id\": {id}, {kind}{push}, \"image\": {image}}}")
+        }
+        _ => {
+            // Autoregressive generation: a short prompt keyed on the id
+            // plus a couple of decode steps that self-schedule through
+            // the continuous-batching tier.
+            let toks: Vec<String> = (0..3).map(|j| format!("{}", (id * 5 + j) % 32)).collect();
+            let push = if id % 8 == 3 { ", \"push\": true" } else { "" };
+            format!(
+                "{{\"id\": {id}, \"kind\": \"generate\", \"prompt\": [{}], \"max_new_tokens\": 2{push}}}",
+                toks.join(", ")
+            )
         }
     }
 }

@@ -17,7 +17,7 @@ use cr_cim::util::bench::{black_box, BenchSuite};
 use cr_cim::util::json::{self, Json};
 use cr_cim::util::pool::default_threads;
 use cr_cim::util::rng::Rng;
-use cr_cim::vit::graph::ModelGraph;
+use cr_cim::vit::graph::{GraphConfig, ModelGraph};
 use cr_cim::vit::plan::{OperatingPoint, PrecisionPlan};
 use cr_cim::vit::VitConfig;
 
@@ -201,6 +201,30 @@ fn main() {
     pipe.set("stream_wave_occupancy", Json::num(sp.die_utilization));
     pipe.set("stream_token_latency_p50_us", Json::num(sp.p50_token_latency_ns * 1e-3));
     pipe.set("stream_token_latency_p99_us", Json::num(sp.p99_token_latency_ns * 1e-3));
+    // Autoregressive decode pricing on the banked deployment: one
+    // sequence's prefill pass vs the steady-state decode step with 4
+    // live sequences, plus the KV residency replay over the canonical
+    // serving trace (`Scheduler::plan_decode`). The KV budget reuses
+    // the resident-SRAM figure so hit rate reflects the same silicon.
+    let dec_graph = ModelGraph::decoder(
+        &GraphConfig { vit: vitb, context: GraphConfig::decoder_base().context },
+        &PrecisionPlan::paper_sac(),
+    );
+    let dp = banked.plan_decode(&dec_graph, 4, 32, 32, resident_sram_bits);
+    suite.bench("plan_decode ViT-Base decoder (48 layers)", || {
+        black_box(banked.plan_decode(black_box(&dec_graph), 4, 32, 32, resident_sram_bits));
+    });
+    pipe.set("prefill_pass_us", Json::num(dp.prefill_pass_ns * 1e-3));
+    pipe.set("decode_step_us", Json::num(dp.decode_step_ns * 1e-3));
+    pipe.set("decode_tokens_per_s", Json::num(dp.decode_tokens_per_s));
+    pipe.set("kv_hit_rate", Json::num(dp.kv_hit_rate));
+    println!(
+        "decoder live=4 prompt=32: prefill {:.1} µs, decode step {:.2} µs, {:.3e} tok/s, kv hit {:.2}",
+        dp.prefill_pass_ns * 1e-3,
+        dp.decode_step_ns * 1e-3,
+        dp.decode_tokens_per_s,
+        dp.kv_hit_rate
+    );
     pipe.set("serial_pass_us", Json::num(serial_wall_ns * 1e-3));
     pipe.set("overlapped_pass_us", Json::num(overlapped_wall_ns * 1e-3));
     pipe.set("pipeline_speedup", Json::num(pipeline_speedup));

@@ -44,7 +44,7 @@ pub const RULES: [&str; 7] = [
 /// before everything; the staged wavefront engine's per-wave state
 /// (`wave`) and per-bank cache slots (`slot`) nest inside the serving
 /// tiers but above the pool; `inner` (the `WorkQueue` mutex) is a leaf.
-pub const LOCK_ORDER: [&str; 10] = [
+pub const LOCK_ORDER: [&str; 11] = [
     "PERTURB_GATE", // perturbation harness gate — held around whole sections
     "live_conns",   // server connection registry
     "outbox",       // server response outbox
@@ -53,6 +53,7 @@ pub const LOCK_ORDER: [&str; 10] = [
     "ledger",       // power/latency ledger
     "wave",         // wavefront engine per-wave activations/error state
     "slot",         // wavefront engine per-bank cache slot (programmed die)
+    "kv",           // die-resident KV fold state (decode tier)
     "inner",        // WorkQueue state — leaf, never holds another lock
     "signal",       // Notify wakeup flag — leaf, acquired standalone only
 ];

@@ -1,0 +1,488 @@
+//! Autoregressive decode primitives shared by the executor, the
+//! scheduler and the reference walk.
+//!
+//! Generation turns the linear-chain graph into a stateful workload:
+//! every sequence folds per-block **KV state** into its attention
+//! outputs, position after position. Three things must agree bit-for-bit
+//! for the determinism contract to survive — the token embedding, the KV
+//! fold, and next-token selection — so all three live here as pure
+//! functions called by both `ModelExecutor` (inside the staged wavefront
+//! engine) and `ModelExecutor::reference_decode` (the schedule-free
+//! walk).
+//!
+//! The residency half mirrors PR 4's weight cache: [`SeqStateCache`] is
+//! the capacity-bounded LRU *policy* for which sequences' KV state stays
+//! pinned on dies. The executor runs it live during its serial decision
+//! pass (so measured hits are schedule-independent), and
+//! `Scheduler::plan_decode` replays the identical struct over the
+//! canonical lockstep trace — planned KV hits equal measured hits by
+//! construction, not by parallel implementations kept in sync by prose.
+//! Like the weight cache, eviction is a *pricing* event (a restore the
+//! planner charges), never a correctness event: the state values
+//! themselves live in the executor's host-side map and survive eviction.
+
+use std::collections::BTreeMap;
+
+/// Mix constant for the token embedding and the KV fold (the same
+/// golden-ratio multiplier the digital requantize glue uses).
+const MIX: i64 = 0x9E37_79B9_7F4A_7C15_u64 as i64;
+
+/// One generation token inside a conversion wave: which sequence, which
+/// position, which token id, and which phase (prefill positions carry
+/// prompt tokens; decode positions carry tokens the model produced).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct GenStep {
+    /// Sequence id (the stream tier's request sequence number).
+    pub seq: u64,
+    /// 0-based position across prompt + generated tokens.
+    pub pos: usize,
+    /// Token id fed at this position.
+    pub tok: u32,
+    /// `true` for decode-phase steps (one token per wave per sequence),
+    /// `false` for prefill positions (prompt tokens, many per wave).
+    pub decode: bool,
+}
+
+/// Deterministic token embedding into the activation domain: the decode
+/// counterpart of `pipeline::featurize`. Each token id hashes to `k`
+/// two's-complement activations at `a_bits`, so the executor and the
+/// reference walk feed bit-identical inputs from the same token.
+pub fn embed_token(tok: u32, k: usize, a_bits: u32) -> Vec<i32> {
+    let span = 1i64 << a_bits;
+    let half = span / 2;
+    (0..k)
+        .map(|i| {
+            let h = (tok as i64 + 1)
+                .wrapping_mul(MIX)
+                .wrapping_add((i as i64).wrapping_mul(0x00C2_B2AE_3D27_D29Fu64 as i64));
+            (h.rem_euclid(span) - half) as i32
+        })
+        .collect()
+}
+
+/// Fold one position's raw attention output into the sequence's per-block
+/// KV state, **in place on both sides**: `state` accumulates the wrapped
+/// digest of every position seen so far, and `y` is replaced by that
+/// digest — so the values flowing into the downstream requantize glue
+/// genuinely depend on the whole sequence history, exactly like
+/// attention over a KV cache. Pure wrapping-integer arithmetic: applied
+/// at the same (sequence, block, position) points, the executor and the
+/// reference walk produce bit-identical digests.
+pub fn fold_kv(state: &mut Vec<i64>, y: &mut [i64]) {
+    if state.len() != y.len() {
+        state.clear();
+        state.resize(y.len(), 0);
+    }
+    for (s, v) in state.iter_mut().zip(y.iter_mut()) {
+        *s = s.wrapping_mul(MIX).wrapping_add(*v);
+        *v = *s;
+    }
+}
+
+/// KV-state footprint of one sequence resident on a die [bits]: the K
+/// and V vectors of every position seen so far (capped at the context
+/// window), at the attention activation precision. Shared by the
+/// executor's live cache accounting and `Scheduler::plan_decode`'s
+/// replay, so planned and measured footprints agree by construction.
+pub fn kv_footprint_bits(dim: usize, a_bits: u32, pos: usize, context: usize) -> u64 {
+    let positions = (pos + 1).min(context.max(1)) as u64;
+    positions * 2 * dim as u64 * a_bits as u64
+}
+
+/// Next-token selection: argmax over the scaled logits, with the same
+/// NaN-safe total-order tie-break the serving tier's `pred` field uses
+/// (`util::stats::argmax_rows`). One shared chokepoint so the pipeline
+/// path and the reference walk cannot disagree on ties.
+pub fn argmax(logits: &[f32]) -> u32 {
+    if logits.is_empty() {
+        return 0;
+    }
+    crate::util::stats::argmax_rows(logits, logits.len())[0] as u32
+}
+
+/// Cumulative generation counters the executor reports to the ledger.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct GenStats {
+    /// KV residency hits across all (sequence, block) accesses.
+    pub kv_hits: u64,
+    /// KV residency misses (state restored/re-pinned).
+    pub kv_misses: u64,
+    /// Sequences' state evicted by the capacity bound.
+    pub kv_evictions: u64,
+    /// Prefill positions executed (prompt tokens).
+    pub prefill_tokens: u64,
+    /// Decode steps executed (generated tokens).
+    pub decode_tokens: u64,
+}
+
+impl GenStats {
+    /// Hit fraction of all KV accesses (0 when nothing ran).
+    pub fn kv_hit_rate(&self) -> f64 {
+        let total = self.kv_hits + self.kv_misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.kv_hits as f64 / total as f64
+        }
+    }
+}
+
+/// One resident entry of the [`SeqStateCache`].
+struct SeqEntry {
+    footprint_bits: u64,
+    last_used: u64,
+}
+
+/// Capacity-bounded LRU residency policy for per-sequence KV state,
+/// keyed `(sequence id, block)` — the decode sibling of
+/// `scheduler::ResidentLru`. Metadata only: it decides and counts which
+/// state is die-resident; the state *values* live in the executor's
+/// host-side map regardless, so eviction is a pricing event, never a
+/// correctness event.
+///
+/// Policy per access (identical to the weight cache): [`touch`]
+/// (Self::touch) a cached key → hit, LRU position refreshed, footprint
+/// updated in place (KV state grows with position). On a miss,
+/// [`insert`](Self::insert) retains the entry only if its footprint fits
+/// the capacity at all (an oversized sequence is dropped and evicts
+/// nothing), evicting least-recently-used entries until it fits.
+pub struct SeqStateCache {
+    // BTreeMap, not a hash map: victim selection iterates `entries`, so
+    // the tie-break order must be deterministic (detlint: unordered-iter).
+    entries: BTreeMap<(u64, usize), SeqEntry>,
+    resident_bits: u64,
+    capacity_bits: u64,
+    tick: u64,
+    hits: u64,
+    misses: u64,
+    evictions: u64,
+}
+
+impl SeqStateCache {
+    /// A cache with the given total KV capacity [bits]; 0 disables
+    /// residency (every access is a miss, nothing is retained).
+    pub fn new(capacity_bits: u64) -> Self {
+        SeqStateCache {
+            entries: BTreeMap::new(),
+            resident_bits: 0,
+            capacity_bits,
+            tick: 0,
+            hits: 0,
+            misses: 0,
+            evictions: 0,
+        }
+    }
+
+    /// Advance the LRU clock and report whether `key`'s state is
+    /// resident, refreshing its LRU position and growing its footprint
+    /// to `footprint_bits` if so (KV state grows with every position).
+    /// A grown footprint that overflows capacity evicts other entries —
+    /// never the touched one.
+    pub fn touch(&mut self, key: (u64, usize), footprint_bits: u64) -> bool {
+        self.tick += 1;
+        let tick = self.tick;
+        match self.entries.get_mut(&key) {
+            Some(e) => {
+                e.last_used = tick;
+                let grown = footprint_bits.saturating_sub(e.footprint_bits);
+                e.footprint_bits = e.footprint_bits.max(footprint_bits);
+                self.resident_bits += grown;
+                self.evict_over_budget(Some(key));
+                self.hits += 1;
+                true
+            }
+            None => {
+                self.misses += 1;
+                false
+            }
+        }
+    }
+
+    /// Retain a missed key if the capacity allows, evicting
+    /// least-recently-used entries to make room. A footprint bigger than
+    /// the whole capacity is never retained (and evicts nothing).
+    pub fn insert(&mut self, key: (u64, usize), footprint_bits: u64) {
+        if footprint_bits > self.capacity_bits {
+            return;
+        }
+        self.resident_bits += footprint_bits;
+        self.entries.insert(key, SeqEntry { footprint_bits, last_used: self.tick });
+        self.evict_over_budget(Some(key));
+    }
+
+    /// Evict LRU entries until the budget fits, never touching `keep`.
+    fn evict_over_budget(&mut self, keep: Option<(u64, usize)>) {
+        while self.resident_bits > self.capacity_bits {
+            let victim = self
+                .entries
+                .iter()
+                .filter(|(k, _)| Some(**k) != keep)
+                .min_by_key(|(_, e)| e.last_used)
+                .map(|(k, _)| *k);
+            let Some(victim) = victim else {
+                // Only the protected entry remains: drop the overflow on
+                // it (its own growth can never evict itself).
+                break;
+            };
+            let gone = self.entries.remove(&victim).expect("victim is resident");
+            self.resident_bits -= gone.footprint_bits;
+            self.evictions += 1;
+        }
+    }
+
+    /// Drop every block of a finished sequence (frees its residency).
+    pub fn remove_seq(&mut self, seq: u64) {
+        let keys: Vec<(u64, usize)> =
+            self.entries.range((seq, 0)..=(seq, usize::MAX)).map(|(k, _)| *k).collect();
+        for k in keys {
+            if let Some(e) = self.entries.remove(&k) {
+                self.resident_bits -= e.footprint_bits;
+            }
+        }
+    }
+
+    pub fn resident_bits(&self) -> u64 {
+        self.resident_bits
+    }
+    pub fn capacity_bits(&self) -> u64 {
+        self.capacity_bits
+    }
+    pub fn hits(&self) -> u64 {
+        self.hits
+    }
+    pub fn misses(&self) -> u64 {
+        self.misses
+    }
+    pub fn evictions(&self) -> u64 {
+        self.evictions
+    }
+
+    /// Record one (sequence, block) access: touch, insert on miss.
+    /// The single chokepoint both the executor's decision pass and the
+    /// planner's replay call, so their counter streams are the same
+    /// function of the same trace.
+    pub fn access(&mut self, key: (u64, usize), footprint_bits: u64) -> bool {
+        let hit = self.touch(key, footprint_bits);
+        if !hit {
+            self.insert(key, footprint_bits);
+        }
+        hit
+    }
+}
+
+/// Geometry of the canonical KV residency replay: what the planner needs
+/// to reproduce the executor's decision-pass access stream.
+#[derive(Clone, Copy, Debug)]
+pub struct ReplayShape {
+    /// Live sequences (ids 1..=live, matching the stream tier's 1-based
+    /// sequence numbering).
+    pub live: usize,
+    /// Attention blocks folding KV state (one `Qkv` layer each).
+    pub blocks: usize,
+    /// Model dimension (the attention reduction width `k`).
+    pub dim: usize,
+    /// Attention activation precision [bits].
+    pub a_bits: u32,
+    /// Context window (footprints saturate here).
+    pub context: usize,
+}
+
+/// Replay the canonical **prefill trace**: each sequence's whole prompt
+/// arrives as its own wave, so the executor's serial decision pass
+/// touches, per wave (= per sequence), every block in layer order and
+/// every prompt position in item order. `Scheduler::plan_decode` runs
+/// this against a fresh cache before the decode replay; the acceptance
+/// test drives the live executor with the identical arrival pattern, so
+/// planned and measured counters see the same access stream.
+pub fn replay_prefill(cache: &mut SeqStateCache, shape: &ReplayShape, prompt_tokens: usize) {
+    for seq in 1..=shape.live as u64 {
+        for block in 0..shape.blocks {
+            for pos in 0..prompt_tokens {
+                let fp = kv_footprint_bits(shape.dim, shape.a_bits, pos, shape.context);
+                cache.access((seq, block), fp);
+            }
+        }
+    }
+}
+
+/// Replay the canonical **lockstep decode trace**: `live` sequences
+/// advance one position per step for `steps` steps, starting at position
+/// `start_pos` (i.e. after a `start_pos`-token prefill), touching every
+/// block's KV entry in (step → block → sequence) order — exactly the
+/// access order of the executor's serial decision pass over lockstep
+/// decode waves.
+pub fn replay_lockstep(
+    cache: &mut SeqStateCache,
+    shape: &ReplayShape,
+    start_pos: usize,
+    steps: usize,
+) {
+    for step in 0..steps {
+        let pos = start_pos + step;
+        let fp = kv_footprint_bits(shape.dim, shape.a_bits, pos, shape.context);
+        for block in 0..shape.blocks {
+            for seq in 1..=shape.live as u64 {
+                cache.access((seq, block), fp);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn embed_token_is_deterministic_and_in_range() {
+        let a = embed_token(7, 48, 4);
+        let b = embed_token(7, 48, 4);
+        assert_eq!(a, b);
+        assert_eq!(a.len(), 48);
+        assert!(a.iter().all(|&v| (-8..8).contains(&v)), "{a:?}");
+        // Different tokens embed differently.
+        assert_ne!(embed_token(7, 48, 4), embed_token(8, 48, 4));
+        // Position 0 vs 1 of the same token differ elementwise somewhere.
+        let c = embed_token(0, 4, 6);
+        assert!(c.iter().all(|&v| (-32..32).contains(&v)));
+    }
+
+    #[test]
+    fn fold_kv_accumulates_history() {
+        let mut state = Vec::new();
+        let mut y0 = vec![3i64, -5];
+        fold_kv(&mut state, &mut y0);
+        assert_eq!(state, vec![3, -5]);
+        assert_eq!(y0, vec![3, -5]);
+        let mut y1 = vec![1i64, 1];
+        fold_kv(&mut state, &mut y1);
+        // Digest depends on the prior state, not just this position.
+        assert_eq!(y1[0], 3i64.wrapping_mul(0x9E37_79B9_7F4A_7C15_u64 as i64).wrapping_add(1));
+        assert_eq!(state, y1);
+        // A fresh state over the same inputs replays bit-identically.
+        let mut s2 = Vec::new();
+        let mut a = vec![3i64, -5];
+        let mut b = vec![1i64, 1];
+        fold_kv(&mut s2, &mut a);
+        fold_kv(&mut s2, &mut b);
+        assert_eq!(s2, state);
+    }
+
+    #[test]
+    fn kv_footprint_grows_with_position_and_caps_at_context() {
+        assert_eq!(kv_footprint_bits(48, 4, 0, 8), 2 * 48 * 4);
+        assert_eq!(kv_footprint_bits(48, 4, 3, 8), 4 * 2 * 48 * 4);
+        assert_eq!(kv_footprint_bits(48, 4, 100, 8), 8 * 2 * 48 * 4);
+        // Zero context clamps to one position.
+        assert_eq!(kv_footprint_bits(48, 4, 100, 0), 2 * 48 * 4);
+    }
+
+    #[test]
+    fn argmax_matches_serving_tiebreak() {
+        assert_eq!(argmax(&[0.1, 0.9, 0.3]), 1);
+        assert_eq!(argmax(&[]), 0);
+        // Shared chokepoint with the serving tier's pred field.
+        let row = [0.5f32, 0.5, 0.1];
+        assert_eq!(argmax(&row) as usize, crate::util::stats::argmax_rows(&row, 3)[0]);
+    }
+
+    #[test]
+    fn cache_all_fits_hits_after_first_touch() {
+        let mut c = SeqStateCache::new(10_000);
+        assert!(!c.access((1, 0), 100));
+        assert!(c.access((1, 0), 200)); // grown footprint, still resident
+        assert_eq!(c.resident_bits(), 200);
+        assert_eq!((c.hits(), c.misses(), c.evictions()), (1, 1, 0));
+    }
+
+    #[test]
+    fn cache_evicts_lru_when_over_budget() {
+        let mut c = SeqStateCache::new(300);
+        c.access((1, 0), 100);
+        c.access((2, 0), 100);
+        c.access((3, 0), 100);
+        assert_eq!(c.resident_bits(), 300);
+        // Fourth sequence evicts the least-recently-used (seq 1).
+        c.access((4, 0), 100);
+        assert_eq!(c.evictions(), 1);
+        assert!(!c.access((1, 0), 100), "seq 1 was evicted");
+        // Touching seq 3 then inserting keeps it resident over seq 2/4.
+        assert!(c.access((3, 0), 100));
+    }
+
+    #[test]
+    fn oversized_entry_is_dropped_without_eviction() {
+        let mut c = SeqStateCache::new(100);
+        c.access((1, 0), 80);
+        c.access((2, 0), 500); // bigger than the whole capacity
+        assert_eq!(c.evictions(), 0);
+        assert!(c.access((1, 0), 80), "resident entry survives an oversized miss");
+        assert!(!c.access((2, 0), 500));
+    }
+
+    #[test]
+    fn grown_footprint_evicts_others_never_itself() {
+        let mut c = SeqStateCache::new(100);
+        c.access((1, 0), 40);
+        c.access((2, 0), 40);
+        // Seq 2 grows past the combined budget: seq 1 is evicted.
+        assert!(c.access((2, 0), 90));
+        assert_eq!(c.evictions(), 1);
+        assert!(!c.access((1, 0), 40));
+        // A single entry growing past the whole capacity survives (its
+        // own growth cannot evict itself).
+        let mut solo = SeqStateCache::new(50);
+        solo.access((1, 0), 40);
+        assert!(solo.access((1, 0), 80));
+    }
+
+    #[test]
+    fn remove_seq_frees_every_block() {
+        let mut c = SeqStateCache::new(1000);
+        c.access((1, 0), 100);
+        c.access((1, 1), 100);
+        c.access((2, 0), 100);
+        c.remove_seq(1);
+        assert_eq!(c.resident_bits(), 100);
+        assert!(!c.access((1, 0), 100));
+        assert!(c.access((2, 0), 100));
+    }
+
+    #[test]
+    fn lockstep_replay_is_deterministic_and_capacity_sensitive() {
+        let shape = ReplayShape { live: 4, blocks: 2, dim: 48, a_bits: 4, context: 64 };
+        // Capacity for all live sequences: steady state is all-hit after
+        // the first touch of each (seq, block).
+        let mut big = SeqStateCache::new(1 << 30);
+        replay_lockstep(&mut big, &shape, 1, 8);
+        assert_eq!(big.misses(), 4 * 2);
+        assert_eq!(big.hits(), 4 * 2 * 7);
+        assert_eq!(big.evictions(), 0);
+        // Tiny capacity: the round-robin trace thrashes (classic LRU
+        // zero-hit cycling once footprints exceed the budget).
+        let mut tiny = SeqStateCache::new(2 * 48 * 4 * 3);
+        replay_lockstep(&mut tiny, &shape, 1, 8);
+        assert!(tiny.evictions() > 0);
+        assert!(tiny.hits() < big.hits());
+        // Identical parameters replay identical counters.
+        let mut again = SeqStateCache::new(2 * 48 * 4 * 3);
+        replay_lockstep(&mut again, &shape, 1, 8);
+        assert_eq!(
+            (tiny.hits(), tiny.misses(), tiny.evictions()),
+            (again.hits(), again.misses(), again.evictions())
+        );
+    }
+
+    #[test]
+    fn prefill_replay_counts_one_miss_per_block_then_hits() {
+        let shape = ReplayShape { live: 2, blocks: 3, dim: 48, a_bits: 4, context: 64 };
+        let mut c = SeqStateCache::new(1 << 30);
+        replay_prefill(&mut c, &shape, 5);
+        // Each (seq, block) misses once (position 0) then hits 4 times.
+        assert_eq!(c.misses(), 2 * 3);
+        assert_eq!(c.hits(), 2 * 3 * 4);
+        // Decode steps after the prefill are all hits at this capacity.
+        replay_lockstep(&mut c, &shape, 5, 3);
+        assert_eq!(c.misses(), 2 * 3);
+        assert_eq!(c.hits(), 2 * 3 * 4 + 3 * 3 * 2);
+    }
+}

@@ -132,6 +132,46 @@ impl StreamSnapshot {
     }
 }
 
+/// Generation-tier gauges for autoregressive (`"kind": "generate"`)
+/// serving, composed by the server from two owners: the stream tier's
+/// cadence counters (`coordinator::stream::TokenStream::gen_snapshot`)
+/// and the executor's KV residency counters
+/// (`coordinator::decode::GenStats`). `None` on the ledger = no
+/// generate sequence was ever admitted.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct GenSnapshot {
+    /// Sequences currently mid-generation.
+    pub sequences_active: u64,
+    /// KV residency hits across all (sequence, block) accesses.
+    pub kv_hits: u64,
+    /// KV residency misses.
+    pub kv_misses: u64,
+    /// Sequence state evicted by the KV capacity bound.
+    pub kv_evictions: u64,
+    /// Prefill token items served.
+    pub prefill_tokens: u64,
+    /// Decode token items served.
+    pub decode_tokens: u64,
+    /// Produced-token throughput from the inter-token latency samples.
+    pub decode_tokens_per_s: f64,
+    /// p50 gap between consecutive produced tokens of a sequence [µs].
+    pub intertoken_p50_us: f64,
+    /// p99 inter-token gap [µs].
+    pub intertoken_p99_us: f64,
+}
+
+impl GenSnapshot {
+    /// Hit fraction of all KV residency accesses (0 when nothing ran).
+    pub fn kv_hit_rate(&self) -> f64 {
+        let total = self.kv_hits + self.kv_misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.kv_hits as f64 / total as f64
+        }
+    }
+}
+
 /// Admission-control gauges pushed by the server (the server owns the
 /// permits and queues; the ledger only reports them). `None` = the
 /// serving path never refreshed them (e.g. a bare ledger in tests).
@@ -179,6 +219,9 @@ pub struct Ledger {
     /// wave and on every `stats` request; `None` = no streaming request
     /// was ever admitted).
     stream: Option<StreamSnapshot>,
+    /// Latest generation-tier gauges (refreshed like `stream`; `None` =
+    /// no generate sequence was ever admitted).
+    generation: Option<GenSnapshot>,
 }
 
 impl Ledger {
@@ -272,6 +315,17 @@ impl Ledger {
         self.stream.as_ref()
     }
 
+    /// Replace the generation gauges with the serving path's latest
+    /// (stream tier + executor own the counters; the ledger reports).
+    pub fn set_generation(&mut self, generation: GenSnapshot) {
+        self.generation = Some(generation);
+    }
+
+    /// Latest generation gauges, if any generate sequence was admitted.
+    pub fn generation(&self) -> Option<&GenSnapshot> {
+        self.generation.as_ref()
+    }
+
     /// Count one load-shed response (admission refused a well-formed
     /// request). Sheds also count into `rejected_total`.
     pub fn record_shed(&mut self) {
@@ -345,6 +399,16 @@ impl Ledger {
             o.set("mean_wave_occupancy", Json::num(s.mean_wave_occupancy));
             o.set("token_latency_p50_us", Json::num(s.token_latency_p50_us));
             o.set("token_latency_p99_us", Json::num(s.token_latency_p99_us));
+        }
+        if let Some(g) = &self.generation {
+            o.set("sequences_active", Json::num(g.sequences_active as f64));
+            o.set("kv_hit_rate", Json::num(g.kv_hit_rate()));
+            o.set("kv_evictions", Json::num(g.kv_evictions as f64));
+            o.set("prefill_tokens", Json::num(g.prefill_tokens as f64));
+            o.set("decode_tokens", Json::num(g.decode_tokens as f64));
+            o.set("decode_tokens_per_s", Json::num(g.decode_tokens_per_s));
+            o.set("intertoken_latency_p50_us", Json::num(g.intertoken_p50_us));
+            o.set("intertoken_latency_p99_us", Json::num(g.intertoken_p99_us));
         }
         if !self.layers.is_empty() {
             let rows = self
@@ -536,6 +600,39 @@ mod tests {
         assert_eq!(l.stream().unwrap().waves, 5);
         // The empty snapshot reports nothing worth including.
         assert!(!StreamSnapshot::default().is_active());
+    }
+
+    #[test]
+    fn generation_snapshot_is_reported_in_json() {
+        let mut l = Ledger::new();
+        // No generate sequence was ever admitted: no generation keys.
+        assert!(l.to_json().get_path("kv_hit_rate").is_none());
+        assert!(l.to_json().get_path("sequences_active").is_none());
+        let g = GenSnapshot {
+            sequences_active: 2,
+            kv_hits: 30,
+            kv_misses: 10,
+            kv_evictions: 4,
+            prefill_tokens: 12,
+            decode_tokens: 7,
+            decode_tokens_per_s: 2_500.0,
+            intertoken_p50_us: 350.0,
+            intertoken_p99_us: 900.0,
+        };
+        assert!((g.kv_hit_rate() - 0.75).abs() < 1e-12);
+        l.set_generation(g);
+        let j = l.to_json();
+        assert_eq!(j.get_path("sequences_active").unwrap().as_f64().unwrap(), 2.0);
+        assert!((j.get_path("kv_hit_rate").unwrap().as_f64().unwrap() - 0.75).abs() < 1e-12);
+        assert_eq!(j.get_path("kv_evictions").unwrap().as_f64().unwrap(), 4.0);
+        assert_eq!(j.get_path("prefill_tokens").unwrap().as_f64().unwrap(), 12.0);
+        assert_eq!(j.get_path("decode_tokens").unwrap().as_f64().unwrap(), 7.0);
+        assert_eq!(j.get_path("decode_tokens_per_s").unwrap().as_f64().unwrap(), 2500.0);
+        assert_eq!(j.get_path("intertoken_latency_p50_us").unwrap().as_f64().unwrap(), 350.0);
+        assert_eq!(j.get_path("intertoken_latency_p99_us").unwrap().as_f64().unwrap(), 900.0);
+        assert_eq!(l.generation().unwrap().kv_misses, 10);
+        // Degenerate gauges divide by nothing.
+        assert_eq!(GenSnapshot::default().kv_hit_rate(), 0.0);
     }
 
     #[test]

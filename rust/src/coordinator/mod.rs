@@ -31,6 +31,11 @@
 //!                   admission of per-token work items into macro
 //!                   conversion waves, with out-of-order per-request
 //!                   reassembly
+//! - [`decode`]    — autoregressive generation primitives: token
+//!                   embedding, the per-sequence KV fold, next-token
+//!                   selection, and the capacity-bounded
+//!                   [`decode::SeqStateCache`] residency policy the
+//!                   executor runs live and the scheduler replays
 //!
 //! See `docs/ARCHITECTURE.md` for the layer map, the 2-D tiling model,
 //! the pipeline/pool model, the streaming-admission model and the
@@ -38,6 +43,7 @@
 //! protocol end to end.
 
 pub mod batcher;
+pub mod decode;
 pub mod ledger;
 pub mod multidie;
 pub mod pipeline;
@@ -49,10 +55,11 @@ pub mod server;
 pub mod shard;
 pub mod stream;
 
+pub use decode::{GenStats, GenStep, SeqStateCache};
 pub use multidie::DieBank;
 pub use pipeline::{ModelExecutor, PipelineConfig};
 pub use router::Router;
 pub use sac::{NoiseCalibration, PlanCost};
-pub use scheduler::{PipelinePlan, Scheduler, StreamPlan, TilePlan};
+pub use scheduler::{DecodePlan, PipelinePlan, Scheduler, StreamPlan, TilePlan};
 pub use shard::{MacroShards, SimExecutor};
 pub use stream::{StreamConfig, TokenStream};

@@ -91,9 +91,10 @@ use crate::cim::MacroParams;
 use crate::util::pool::{default_threads, perturb, WorkQueue};
 use crate::util::rng::Rng;
 use crate::util::stats;
-use crate::vit::graph::{GraphLayer, ModelGraph};
+use crate::vit::graph::{GraphLayer, LayerRole, ModelGraph};
 use crate::vit::plan::OperatingPoint;
 
+use super::decode::{self, GenStats, GenStep, SeqStateCache};
 use super::ledger::{LayerCost, ResidencyStats};
 use super::multidie::DieBank;
 use super::router::Router;
@@ -296,6 +297,23 @@ pub struct ModelExecutor {
     /// The same pass priced fully serially [ns]: Σ (paid reload +
     /// compute) over every executed (wave, layer).
     last_serial_ns: f64,
+    /// Host-side per-sequence KV state *values*: the fold digest of
+    /// every `(sequence id, block)` a generate wave has touched. Always
+    /// kept (correctness), regardless of what the residency policy says
+    /// is die-pinned — eviction is a pricing event. Locked after the
+    /// wave/slot locks inside convert tasks (lock rank `kv`, see
+    /// `analysis::rules::LOCK_ORDER`).
+    kv: Arc<Mutex<BTreeMap<(u64, usize), Vec<i64>>>>,
+    /// The KV residency *policy* (metadata): which sequences' state is
+    /// die-pinned, run live during the serial decision pass so measured
+    /// hit/miss/eviction counters are schedule-independent — the decode
+    /// sibling of the weight `cache`, replayed identically by
+    /// `Scheduler::plan_decode`.
+    seq_cache: SeqStateCache,
+    /// Prefill positions executed (prompt tokens through the graph).
+    prefill_tokens: u64,
+    /// Decode steps executed (generated tokens through the graph).
+    decode_tokens: u64,
 }
 
 impl ModelExecutor {
@@ -374,6 +392,10 @@ impl ModelExecutor {
             .map(|pool| (pool, att.pool_capacity_bits(&graph, pool)))
             .collect();
         let cache = ResidentLru::new(pool_capacity);
+        // KV state shares the attention pool's weight-SRAM budget: the
+        // same banked capacity that pins weights pins per-sequence state.
+        let kv_capacity =
+            att.pool_capacity_bits(&graph, class_pool(LayerClass::TransformerAttention));
         let params = params.clone();
         Ok(ModelExecutor {
             params,
@@ -387,6 +409,10 @@ impl ModelExecutor {
             passes: 0,
             last_pass_ns: 0.0,
             last_serial_ns: 0.0,
+            kv: Arc::new(Mutex::new(BTreeMap::new())),
+            seq_cache: SeqStateCache::new(kv_capacity),
+            prefill_tokens: 0,
+            decode_tokens: 0,
         })
     }
 
@@ -499,6 +525,29 @@ impl ModelExecutor {
         &mut self,
         waves_in: &[Vec<Vec<i32>>],
     ) -> Vec<Result<Vec<Vec<i64>>, String>> {
+        self.run_waves(waves_in, None)
+    }
+
+    /// The engine body shared by the encoder path
+    /// ([`forward_ints_many`](Self::forward_ints_many), `meta = None`)
+    /// and the generate path ([`decode_many`](Self::decode_many), one
+    /// [`GenStep`] per wave item). With metadata, each wave item is one
+    /// (sequence, position) of a generating sequence: at every
+    /// attention-context `qkv` layer the item's raw outputs fold into
+    /// the sequence's per-block KV state ([`decode::fold_kv`]), and the
+    /// serial decision pass runs the KV residency policy
+    /// ([`SeqStateCache::access`]) in (wave → block → item) order —
+    /// which is why planner-replayed counters can equal measured ones
+    /// exactly. Fold determinism mirrors the conversion-counter
+    /// argument: folds of one `(sequence, block)` always happen at the
+    /// same layer index, so cross-wave folds sit on distinct stage
+    /// diagonals (barrier-ordered in wave order) and within-wave folds
+    /// follow item order, which the stream tier fixes to position order.
+    fn run_waves(
+        &mut self,
+        waves_in: &[Vec<Vec<i32>>],
+        meta: Option<&[Vec<GenStep>]>,
+    ) -> Vec<Result<Vec<Vec<i64>>, String>> {
         if waves_in.is_empty() {
             return Vec::new();
         }
@@ -523,7 +572,34 @@ impl ModelExecutor {
         let mut tasks: Vec<StageTask> = Vec::new();
         let mut serial_ns = 0.0f64;
         for w in 0..wave_count {
+            if let Some(meta) = meta {
+                for g in &meta[w] {
+                    if g.decode {
+                        self.decode_tokens += 1;
+                    } else {
+                        self.prefill_tokens += 1;
+                    }
+                }
+            }
             for (li, layer) in graph.layers.iter().enumerate() {
+                // KV residency decisions ride the same serial pass as
+                // the weight-cache decisions: per wave, per qkv layer
+                // (blocks ascending), per item in wave order — the
+                // exact access stream `decode::replay_prefill` /
+                // `replay_lockstep` reproduce for the planner.
+                if let Some(meta) = meta {
+                    if layer.context > 0 && layer.role == LayerRole::Qkv {
+                        for g in &meta[w] {
+                            let fp = decode::kv_footprint_bits(
+                                layer.shape.k,
+                                layer.op.a_bits,
+                                g.pos,
+                                layer.context,
+                            );
+                            self.seq_cache.access((g.seq, layer.block), fp);
+                        }
+                    }
+                }
                 let key = (layer.index, class_pool(layer.shape.class));
                 let hit = self.cache.touch(key);
                 let slot = if hit {
@@ -571,6 +647,7 @@ impl ModelExecutor {
 
         let params = &self.params;
         let config = self.config;
+        let kv = self.kv.clone();
         let run_task = |t: &StageTask| match t.kind {
             TaskKind::Program => {
                 perturb::maybe_yield(perturb::TASK_PROGRAM);
@@ -611,7 +688,7 @@ impl ModelExecutor {
                 };
                 let c0 = bank.total_conversions();
                 let e0 = bank.total_energy_pj();
-                let ys = match bank.matvec_batch(&wg.acts) {
+                let mut ys = match bank.matvec_batch(&wg.acts) {
                     Ok(ys) => ys,
                     Err(e) => {
                         wg.err = Some(format!("{}: {e}", layer.name()));
@@ -621,6 +698,20 @@ impl ModelExecutor {
                 wg.deltas[t.li] =
                     Some((bank.total_conversions() - c0, bank.total_energy_pj() - e0));
                 drop(sg);
+                // Generate waves: fold each item's raw qkv outputs into
+                // its sequence's per-block KV state (wave lock held,
+                // bank slot released — lock order wave → kv).
+                if let Some(meta) = meta {
+                    if layer.context > 0 && layer.role == LayerRole::Qkv {
+                        let mut states = kv.lock().expect("kv state lock");
+                        for (i, g) in meta[t.wave].iter().enumerate() {
+                            decode::fold_kv(
+                                states.entry((g.seq, layer.block)).or_default(),
+                                &mut ys[i],
+                            );
+                        }
+                    }
+                }
                 if t.li + 1 < layer_count {
                     let next = &graph.layers[t.li + 1];
                     wg.acts =
@@ -699,6 +790,117 @@ impl ModelExecutor {
             cold_pass_ns: self.pipeline.pipelined_ns,
             warm_pass_ns: self.pipeline.warm_pipelined_ns,
         }
+    }
+
+    /// Run generation waves through the staged engine: one
+    /// [`GenStep`] per wave item, each embedded deterministically
+    /// ([`decode::embed_token`]) and folded through its sequence's KV
+    /// state at every attention-context `qkv` layer. Returns the scaled
+    /// logits per wave item — the serving tier picks next tokens from
+    /// them via [`decode::argmax`]. Prefill positions and decode steps
+    /// ride the same waves; the caller (the stream tier) fixes item
+    /// order to (sequence, position).
+    pub fn decode_many(&mut self, waves: &[Vec<GenStep>]) -> Vec<Result<Vec<Vec<f32>>, String>> {
+        let first = &self.graph.layers[0];
+        let (k0, a0) = (first.shape.k, first.op.a_bits);
+        let acts: Vec<Vec<Vec<i32>>> = waves
+            .iter()
+            .map(|w| w.iter().map(|g| decode::embed_token(g.tok, k0, a0)).collect())
+            .collect();
+        let outs = self.run_waves(&acts, Some(waves));
+        outs.into_iter().map(|r| r.map(|ys| self.scale_outputs(ys))).collect()
+    }
+
+    /// Drop a finished sequence's KV state: its host-side fold digests
+    /// and its residency entries (freeing die capacity for live ones).
+    pub fn release_seq(&mut self, seq: u64) {
+        self.seq_cache.remove_seq(seq);
+        let mut states = self.kv.lock().expect("kv state lock");
+        let keys: Vec<(u64, usize)> =
+            states.range((seq, 0)..=(seq, usize::MAX)).map(|(key, _)| *key).collect();
+        for key in keys {
+            states.remove(&key);
+        }
+    }
+
+    /// Measured generation counters: the live [`SeqStateCache`]'s
+    /// hit/miss/eviction stream plus the executed prefill/decode token
+    /// counts. The KV counters are decided in the serial decision pass,
+    /// so they are identical across thread counts and overlap settings
+    /// — and equal to `Scheduler::plan_decode`'s replay over the same
+    /// trace.
+    pub fn gen_stats(&self) -> GenStats {
+        GenStats {
+            kv_hits: self.seq_cache.hits(),
+            kv_misses: self.seq_cache.misses(),
+            kv_evictions: self.seq_cache.evictions(),
+            prefill_tokens: self.prefill_tokens,
+            decode_tokens: self.decode_tokens,
+        }
+    }
+
+    /// Replace the KV residency budget (e.g. to mirror a planner
+    /// scenario). Resets the policy's entries and counters; the
+    /// host-side state values — and therefore served outputs — are
+    /// untouched, because residency is pricing, not correctness.
+    pub fn set_kv_capacity_bits(&mut self, capacity_bits: u64) {
+        self.seq_cache = SeqStateCache::new(capacity_bits);
+    }
+
+    /// The exact reference **decode walk**: schedule-free greedy
+    /// generation with `matvec_exact`, the same deterministic embedding,
+    /// per-block KV folds, requantize glue, output scaling and argmax
+    /// tie-break as the staged engine's generate path. Returns the
+    /// produced tokens and the scaled logits at each producing position
+    /// (the last entry is the finished sequence's final logits). At zero
+    /// noise, serving `"kind": "generate"` must reproduce this exactly
+    /// for any arrival interleaving × thread count × overlap setting.
+    pub fn reference_decode(
+        &self,
+        prompt: &[u32],
+        max_new_tokens: usize,
+    ) -> (Vec<u32>, Vec<Vec<f32>>) {
+        if prompt.is_empty() || max_new_tokens == 0 {
+            return (Vec::new(), Vec::new());
+        }
+        let first = &self.graph.layers[0];
+        let (k0, a0) = (first.shape.k, first.op.a_bits);
+        let layer_count = self.graph.layers.len();
+        let mut states: BTreeMap<usize, Vec<i64>> = BTreeMap::new();
+        let mut tokens: Vec<u32> = prompt.to_vec();
+        let mut produced: Vec<u32> = Vec::new();
+        let mut logits_trace: Vec<Vec<f32>> = Vec::new();
+        let positions = prompt.len() + max_new_tokens - 1;
+        for pos in 0..positions {
+            let mut acts = vec![decode::embed_token(tokens[pos], k0, a0)];
+            let mut last: Vec<Vec<i64>> = Vec::new();
+            for li in 0..layer_count {
+                let layer = &self.graph.layers[li];
+                let w = Self::layer_weights(&self.params, layer);
+                let mut ys: Vec<Vec<i64>> = acts.iter().map(|x| matvec_exact(&w, x)).collect();
+                if layer.context > 0 && layer.role == LayerRole::Qkv {
+                    decode::fold_kv(states.entry(layer.block).or_default(), &mut ys[0]);
+                }
+                if li + 1 < layer_count {
+                    let next = &self.graph.layers[li + 1];
+                    acts =
+                        ys.iter().map(|y| requantize(y, next.shape.k, next.op.a_bits)).collect();
+                } else {
+                    last = ys;
+                }
+            }
+            if pos + 1 >= prompt.len() {
+                let lg = self
+                    .scale_outputs(last)
+                    .pop()
+                    .expect("reference decode emits one vector per position");
+                let next = decode::argmax(&lg);
+                logits_trace.push(lg);
+                produced.push(next);
+                tokens.push(next);
+            }
+        }
+        (produced, logits_trace)
     }
 
     /// The exact digital reference: the same walk (same weights, same
@@ -802,6 +1004,18 @@ impl BatchExecutor for ModelExecutor {
             }
         }
         results.into_iter().map(|r| r.expect("every wave slot filled")).collect()
+    }
+
+    fn decode_many(&mut self, waves: &[Vec<GenStep>]) -> Vec<Result<Vec<Vec<f32>>, String>> {
+        ModelExecutor::decode_many(self, waves)
+    }
+
+    fn release_seq(&mut self, seq: u64) {
+        ModelExecutor::release_seq(self, seq);
+    }
+
+    fn gen_stats(&self) -> Option<GenStats> {
+        Some(ModelExecutor::gen_stats(self))
     }
 
     fn graph_layers(&self) -> usize {
@@ -1010,6 +1224,118 @@ mod tests {
             (ss.reload_hits, ss.reload_misses, ss.evictions)
         );
         assert!((sm.paid_reload_ns - ss.paid_reload_ns).abs() < 1e-9);
+    }
+
+    fn decoder_exec(context: usize) -> ModelExecutor {
+        use crate::vit::graph::GraphConfig;
+        let gc = GraphConfig { vit: tiny_cfg(), context };
+        let graph = ModelGraph::decoder(&gc, &plan_2b());
+        ModelExecutor::new(&quiet_params(), graph, PipelineConfig::default()).unwrap()
+    }
+
+    fn prefill_wave(seq: u64, prompt: &[u32]) -> Vec<GenStep> {
+        prompt
+            .iter()
+            .enumerate()
+            .map(|(pos, &tok)| GenStep { seq, pos, tok, decode: false })
+            .collect()
+    }
+
+    #[test]
+    fn zero_noise_decode_matches_reference_walk() {
+        let prompt = [3u32, 1, 4];
+        let max_new = 3usize;
+        let exec = decoder_exec(8);
+        let (want_toks, want_logits) = exec.reference_decode(&prompt, max_new);
+        assert_eq!(want_toks.len(), max_new);
+        assert_eq!(want_logits.len(), max_new);
+        // The same walk through the staged engine: the prompt as one
+        // prefill wave, then one decode step per produced token.
+        let mut engine = decoder_exec(8);
+        let mut wave = prefill_wave(1, &prompt);
+        let mut got_toks = Vec::new();
+        let mut got_logits = Vec::new();
+        let mut next_pos = prompt.len();
+        loop {
+            let out = engine.decode_many(&[wave.clone()]).pop().unwrap().unwrap();
+            let lg = out.last().unwrap().clone();
+            let tok = decode::argmax(&lg);
+            got_logits.push(lg);
+            got_toks.push(tok);
+            if got_toks.len() == max_new {
+                break;
+            }
+            wave = vec![GenStep { seq: 1, pos: next_pos, tok, decode: true }];
+            next_pos += 1;
+        }
+        assert_eq!(got_toks, want_toks);
+        assert_eq!(got_logits, want_logits);
+        let gs = engine.gen_stats();
+        assert_eq!(gs.prefill_tokens, prompt.len() as u64);
+        assert_eq!(gs.decode_tokens, (max_new - 1) as u64);
+    }
+
+    #[test]
+    fn release_seq_resets_kv_state_and_state_accumulates_without_it() {
+        let mut exec = decoder_exec(8);
+        let wave = prefill_wave(1, &[5, 2]);
+        let a = exec.decode_many(&[wave.clone()]);
+        // Releasing the sequence clears its fold state: the same prompt
+        // replays bit-identically.
+        exec.release_seq(1);
+        let b = exec.decode_many(&[wave.clone()]);
+        assert_eq!(
+            a.iter().map(|r| r.as_ref().unwrap()).collect::<Vec<_>>(),
+            b.iter().map(|r| r.as_ref().unwrap()).collect::<Vec<_>>()
+        );
+        // Without a release, the per-block state keeps accumulating, so
+        // re-folding the same positions yields different digests.
+        let c = exec.decode_many(&[wave]);
+        assert_ne!(
+            b.iter().map(|r| r.as_ref().unwrap()).collect::<Vec<_>>(),
+            c.iter().map(|r| r.as_ref().unwrap()).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn measured_kv_counters_equal_planner_replay_over_canonical_trace() {
+        // The acceptance-criterion chokepoint, at the unit level: drive
+        // the executor with the canonical serving trace (per-sequence
+        // prefill waves, then lockstep decode waves) and compare its
+        // measured KV counters to the planner-side replay of the same
+        // trace at the same capacity.
+        let prompt = [7u32, 7, 7];
+        // Tight enough that grown footprints force evictions mid-trace.
+        let (live, steps, cap) = (2usize, 4usize, 2_500u64);
+        let mut exec = decoder_exec(8);
+        exec.set_kv_capacity_bits(cap);
+        let prefills: Vec<Vec<GenStep>> =
+            (1..=live as u64).map(|seq| prefill_wave(seq, &prompt)).collect();
+        exec.decode_many(&prefills);
+        for step in 0..steps {
+            let wave: Vec<GenStep> = (1..=live as u64)
+                .map(|seq| GenStep { seq, pos: prompt.len() + step, tok: 1, decode: true })
+                .collect();
+            exec.decode_many(&[wave]);
+        }
+        let gs = exec.gen_stats();
+        let shape = decode::ReplayShape {
+            live,
+            blocks: exec.graph.cfg.depth,
+            dim: exec.graph.cfg.dim,
+            a_bits: plan_2b().attention.a_bits,
+            context: 8,
+        };
+        let mut cache = SeqStateCache::new(cap);
+        decode::replay_prefill(&mut cache, &shape, prompt.len());
+        decode::replay_lockstep(&mut cache, &shape, prompt.len(), steps);
+        assert_eq!(
+            (gs.kv_hits, gs.kv_misses, gs.kv_evictions),
+            (cache.hits(), cache.misses(), cache.evictions())
+        );
+        assert!(gs.kv_hits + gs.kv_misses > 0);
+        assert_eq!(gs.prefill_tokens, (live * prompt.len()) as u64);
+        assert_eq!(gs.decode_tokens, (live * steps) as u64);
     }
 
     #[test]

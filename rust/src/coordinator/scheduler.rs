@@ -24,6 +24,7 @@
 
 use std::collections::BTreeMap;
 
+use super::decode;
 use crate::cim::energy::EnergyModel;
 use crate::cim::netstats::LayerClass;
 use crate::cim::params::MacroParams;
@@ -384,6 +385,38 @@ pub struct StreamPlan {
     pub p99_token_latency_ns: f64,
 }
 
+/// Generation-serving price: prefill vs steady-state decode throughput
+/// for a decoder graph under continuous batching, plus the planner's
+/// replay of the KV residency policy ([`decode::SeqStateCache`]) over
+/// the canonical serving trace. The raw hit/miss/eviction counters are
+/// exposed (not just the rate) so the acceptance test can compare them
+/// to the live executor's measured counters for exact equality.
+#[derive(Clone, Copy, Debug)]
+pub struct DecodePlan {
+    /// Concurrently live sequences the plan prices.
+    pub live: usize,
+    /// Prompt length per sequence.
+    pub prompt_tokens: usize,
+    /// One sequence's prefill latency [ns]: its whole prompt as one warm
+    /// conversion wave.
+    pub prefill_pass_ns: f64,
+    /// Steady-state decode step latency [ns]: one wave carrying one
+    /// token from every live sequence, attention layers priced at their
+    /// position-dependent effective stream (`GraphLayer::shape_at`).
+    pub decode_step_ns: f64,
+    /// Sustained generation throughput: `live` tokens per decode step.
+    pub decode_tokens_per_s: f64,
+    /// KV residency hits over the replayed serving trace.
+    pub kv_hits: u64,
+    /// KV residency misses (state restored/re-pinned).
+    pub kv_misses: u64,
+    /// KV entries evicted by the capacity bound.
+    pub kv_evictions: u64,
+    /// Hit fraction of all KV accesses (0 when the graph has no
+    /// attention context, i.e. is not a decoder).
+    pub kv_hit_rate: f64,
+}
+
 /// The scheduler: stateless; all methods derive from macro parameters
 /// plus the serving topology (how many macros and dies run in parallel).
 #[derive(Clone, Debug)]
@@ -546,6 +579,81 @@ impl Scheduler {
             die_utilization,
             p50_token_latency_ns: 1.5 * warm,
             p99_token_latency_ns: 1.99 * warm,
+        }
+    }
+
+    /// Price autoregressive generation over a decoder graph: the
+    /// **prefill phase** (each sequence's `prompt_tokens`-token prompt
+    /// as one warm conversion wave) against the **steady-state decode
+    /// phase** (one wave per step carrying one token from each of `live`
+    /// sequences, with attention layers priced at their
+    /// position-dependent effective stream via `GraphLayer::shape_at`
+    /// at the trace's mid-decode position).
+    ///
+    /// The KV counters replay the executor's residency policy — the
+    /// *same* [`decode::SeqStateCache`] struct, fed the canonical
+    /// serving trace ([`decode::replay_prefill`] then
+    /// [`decode::replay_lockstep`]) whose access order matches the
+    /// executor's serial decision pass — so planned KV hits equal
+    /// measured hits by construction when the server runs that trace.
+    pub fn plan_decode(
+        &self,
+        graph: &ModelGraph,
+        live: usize,
+        prompt_tokens: usize,
+        decode_steps: usize,
+        kv_capacity_bits: u64,
+    ) -> DecodePlan {
+        let live = live.max(1);
+        let prompt = prompt_tokens.max(1);
+        let steps = decode_steps.max(1);
+        // Prefill: the prompt streams through every linear once, as one
+        // warm wave (live sequences prefill in their own waves, so the
+        // per-sequence latency is a single wave of `prompt` tokens).
+        let prefill_pass_ns = self.plan_graph(&graph.with_stream_m(prompt)).warm_pipelined_ns;
+        // Decode step: one token per live sequence per wave; attention
+        // layers fold the KV window, so their effective stream at the
+        // trace's mid-decode position is shape_at(pos).m per token.
+        let pos = prompt + steps / 2;
+        let mut step_graph = graph.clone();
+        step_graph.batch = 1;
+        for l in &mut step_graph.layers {
+            l.shape.m = l.shape_at(pos).m.saturating_mul(live).max(1);
+        }
+        let decode_step_ns = self.plan_graph(&step_graph).warm_pipelined_ns;
+        let decode_tokens_per_s =
+            if decode_step_ns > 0.0 { live as f64 / (decode_step_ns * 1e-9) } else { 0.0 };
+        // KV residency replay over the canonical trace: per-sequence
+        // prefill waves, then lockstep decode steps.
+        let kv_layer = graph
+            .layers
+            .iter()
+            .find(|l| l.context > 0 && l.role == crate::vit::graph::LayerRole::Qkv);
+        let shape = decode::ReplayShape {
+            live,
+            blocks: graph
+                .layers
+                .iter()
+                .filter(|l| l.context > 0 && l.role == crate::vit::graph::LayerRole::Qkv)
+                .count(),
+            dim: kv_layer.map(|l| l.shape.k).unwrap_or(0),
+            a_bits: kv_layer.map(|l| l.op.a_bits).unwrap_or(0),
+            context: graph.context(),
+        };
+        let mut cache = decode::SeqStateCache::new(kv_capacity_bits);
+        decode::replay_prefill(&mut cache, &shape, prompt);
+        decode::replay_lockstep(&mut cache, &shape, prompt, steps);
+        let total = cache.hits() + cache.misses();
+        DecodePlan {
+            live,
+            prompt_tokens: prompt,
+            prefill_pass_ns,
+            decode_step_ns,
+            decode_tokens_per_s,
+            kv_hits: cache.hits(),
+            kv_misses: cache.misses(),
+            kv_evictions: cache.evictions(),
+            kv_hit_rate: if total == 0 { 0.0 } else { cache.hits() as f64 / total as f64 },
         }
     }
 
@@ -882,6 +990,55 @@ mod tests {
         // fc2 (3072 → 768) at 6b: 3 row tiles × ⌈768/13⌉ = 180 units.
         assert_eq!(s.layer_units(&shape(3072, 768, 1), op6), 180);
         assert_eq!(Scheduler::layer_weight_bits(&shape(3072, 768, 1), op6), 3072 * 768 * 6);
+    }
+
+    #[test]
+    fn plan_decode_prices_phases_and_replays_kv_counters() {
+        use crate::vit::graph::{GraphConfig, ModelGraph};
+        use crate::vit::VitConfig;
+        let gc = GraphConfig { vit: VitConfig::default(), context: 16 };
+        let graph = ModelGraph::decoder(&gc, &PrecisionPlan::paper_sac());
+        let sched = Scheduler::with_topology(&MacroParams::default(), 2, 2);
+        let dp = sched.plan_decode(&graph, 3, 4, 8, 1 << 30);
+        assert_eq!((dp.live, dp.prompt_tokens), (3, 4));
+        assert!(dp.prefill_pass_ns > 0.0 && dp.decode_step_ns > 0.0);
+        assert!(dp.decode_tokens_per_s > 0.0);
+        // All-fits capacity over the canonical trace: each of the
+        // live × depth (seq, block) KV entries misses once (prompt
+        // position 0) and hits for the remaining prompt positions and
+        // every decode step.
+        let blocks = gc.vit.depth as u64;
+        assert_eq!(dp.kv_misses, 3 * blocks);
+        assert_eq!(dp.kv_hits, 3 * blocks * (4 - 1 + 8));
+        assert_eq!(dp.kv_evictions, 0);
+        assert!(dp.kv_hit_rate > 0.85);
+        // A tight KV budget thrashes: evictions appear, hit rate drops,
+        // while the phase pricing is capacity-independent.
+        let tight = sched.plan_decode(&graph, 3, 4, 8, 20_000);
+        assert!(tight.kv_evictions > 0);
+        assert!(tight.kv_hit_rate < dp.kv_hit_rate);
+        assert!((tight.decode_step_ns - dp.decode_step_ns).abs() < 1e-9);
+        // The counters are exactly a replay of the shared chokepoint —
+        // the same SeqStateCache fed the same canonical trace.
+        let shape = decode::ReplayShape {
+            live: 3,
+            blocks: blocks as usize,
+            dim: gc.vit.dim,
+            a_bits: PrecisionPlan::paper_sac().attention.a_bits,
+            context: 16,
+        };
+        let mut cache = decode::SeqStateCache::new(20_000);
+        decode::replay_prefill(&mut cache, &shape, 4);
+        decode::replay_lockstep(&mut cache, &shape, 4, 8);
+        assert_eq!(
+            (tight.kv_hits, tight.kv_misses, tight.kv_evictions),
+            (cache.hits(), cache.misses(), cache.evictions())
+        );
+        // An encoder graph has no KV trace: counters stay zero.
+        let enc = ModelGraph::encoder(&VitConfig::default(), 1, &PrecisionPlan::paper_sac());
+        let ep = sched.plan_decode(&enc, 2, 4, 4, 1 << 30);
+        assert_eq!((ep.kv_hits, ep.kv_misses, ep.kv_evictions), (0, 0, 0));
+        assert_eq!(ep.kv_hit_rate, 0.0);
     }
 
     #[test]

@@ -51,6 +51,7 @@ use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
 use crate::coordinator::batcher::{Batch, Batcher, Request};
+use crate::coordinator::decode::{GenStats, GenStep};
 use crate::coordinator::ledger::{LayerCost, Ledger, ResidencyStats};
 use crate::coordinator::sac::PlanCost;
 use crate::coordinator::stream::{StreamConfig, TokenStream};
@@ -119,6 +120,25 @@ pub trait BatchExecutor {
     /// weights resident between passes). The server refreshes the
     /// ledger's snapshot from this after every executed batch.
     fn residency(&self) -> Option<ResidencyStats> {
+        None
+    }
+    /// Run generation waves (the `"kind": "generate"` request path).
+    /// Each wave is a list of token steps — prefill positions and decode
+    /// feedbacks from many live sequences coalesced padding-free — and
+    /// yields one logits row per step in wave order. Default: only
+    /// graph executors hold die-resident KV state.
+    fn decode_many(&mut self, waves: &[Vec<GenStep>]) -> Vec<Result<Vec<Vec<f32>>, String>> {
+        waves
+            .iter()
+            .map(|_| Err("this executor does not serve autoregressive generation".to_string()))
+            .collect()
+    }
+    /// Drop a finished (or failed) sequence's die-resident KV state so
+    /// the capacity budget frees up for newly admitted sequences.
+    fn release_seq(&mut self, _seq: u64) {}
+    /// KV-cache counters (`None` = this executor keeps no KV state).
+    /// The server folds these into the ledger's generation snapshot.
+    fn gen_stats(&self) -> Option<GenStats> {
         None
     }
     /// Modeled per-inference macro cost for accounting.
@@ -521,6 +541,7 @@ impl Server {
                 }
             }
             self.refresh_stream_stats();
+            self.refresh_gen_stats(&*exec);
             self.refresh_admission();
         }
         (served, batch_ran || wave_ran)
@@ -554,6 +575,23 @@ impl Server {
         };
         if touched {
             self.ledger.lock().unwrap().set_stream(snap);
+        }
+    }
+
+    /// Push the generation gauges (live sequences, KV hit/eviction
+    /// counters, phase token totals, inter-token latency) into the
+    /// ledger, folding the executor's KV counters into the stream
+    /// tier's serving-side view. Gated on *ever admitted* like the
+    /// streaming snapshot, and refreshed after every executed step so a
+    /// stats probe (which has no executor access) reads current gauges.
+    fn refresh_gen_stats(&self, exec: &dyn BatchExecutor) {
+        let kv = exec.gen_stats().unwrap_or_default();
+        let (snap, touched) = {
+            let stream = self.stream.lock().unwrap();
+            (stream.gen_snapshot(&kv), stream.gen_ever_admitted())
+        };
+        if touched {
+            self.ledger.lock().unwrap().set_generation(snap);
         }
     }
 
@@ -647,7 +685,7 @@ impl Server {
     /// during a drain so partial waves close immediately).
     fn stream_step(&self, exec: &mut dyn BatchExecutor, horizon: Instant) -> (usize, bool) {
         let mut waves = Vec::new();
-        {
+        let purged = {
             let mut stream = self.stream.lock().unwrap();
             while waves.len() < self.max_waves {
                 match stream.form_wave(horizon) {
@@ -655,21 +693,108 @@ impl Server {
                     None => break,
                 }
             }
+            stream.take_released()
+        };
+        // Sequences released outside a wave (client hung up, purge) drop
+        // their die-resident KV state even when no wave forms this step.
+        for seq in purged {
+            exec.release_seq(seq);
         }
         if waves.is_empty() {
             return (0, false);
         }
-        // Completion/failure only read the items' identities, so the
-        // activation chunks move out instead of being cloned per wave.
-        let batches: Vec<Vec<Vec<f32>>> = waves
-            .iter_mut()
-            .map(|w| w.items.iter_mut().map(|t| std::mem::take(&mut t.chunk)).collect())
-            .collect();
-        let mut results = exec.forward_many(&batches);
-        // A well-behaved executor returns one result per wave; pad any
-        // shortfall with errors so no wave's tokens leak in flight.
-        while results.len() < waves.len() {
-            results.push(Err("executor returned too few wave results".to_string()));
+        // Split each wave into its forward items (stream chunks) and its
+        // generation items (prefill/decode token steps). Completion and
+        // failure only read the items' identities, so the activation
+        // chunks move out instead of being cloned per wave. The split is
+        // positional: `splits[wi]` records which item slots each
+        // sub-batch's outputs merge back into, keeping the wave's logits
+        // in item order regardless of how the kinds interleave.
+        let mut fwd_batches: Vec<Vec<Vec<f32>>> = Vec::new();
+        let mut fwd_map: Vec<usize> = Vec::new();
+        let mut gen_waves: Vec<Vec<GenStep>> = Vec::new();
+        let mut gen_map: Vec<usize> = Vec::new();
+        let mut splits: Vec<(Vec<usize>, Vec<usize>)> = Vec::new();
+        for (wi, w) in waves.iter_mut().enumerate() {
+            let mut fwd_idx = Vec::new();
+            let mut gen_idx = Vec::new();
+            let mut chunks = Vec::new();
+            let mut steps = Vec::new();
+            for (ii, t) in w.items.iter_mut().enumerate() {
+                if let Some(gt) = t.gen {
+                    gen_idx.push(ii);
+                    steps.push(GenStep {
+                        seq: t.req_seq,
+                        pos: t.token_index,
+                        tok: gt.tok,
+                        decode: gt.decode,
+                    });
+                } else {
+                    fwd_idx.push(ii);
+                    chunks.push(std::mem::take(&mut t.chunk));
+                }
+            }
+            if !chunks.is_empty() {
+                fwd_map.push(wi);
+                fwd_batches.push(chunks);
+            }
+            if !steps.is_empty() {
+                gen_map.push(wi);
+                gen_waves.push(steps);
+            }
+            splits.push((fwd_idx, gen_idx));
+        }
+        // Fixed structural execution order — all forward sub-waves, then
+        // all generation sub-waves — so wave composition alone determines
+        // engine call order (determinism under arrival interleaving).
+        let fwd_results = if fwd_batches.is_empty() {
+            Vec::new()
+        } else {
+            exec.forward_many(&fwd_batches)
+        };
+        let gen_results = if gen_waves.is_empty() {
+            Vec::new()
+        } else {
+            exec.decode_many(&gen_waves)
+        };
+        // Merge the sub-results back into one result per wave, outputs
+        // in item order. An error on either side fails the whole wave; a
+        // well-behaved executor returns one result per sub-wave, so any
+        // shortfall also fails its waves (no tokens leak in flight).
+        let mut results: Vec<Result<Vec<Vec<f32>>, String>> =
+            waves.iter().map(|w| Ok(vec![Vec::new(); w.items.len()])).collect();
+        {
+            let mut apply = |wi: usize, idxs: &[usize], r: Result<Vec<Vec<f32>>, String>| match r {
+                Err(e) => results[wi] = Err(e),
+                Ok(outs) if outs.len() != idxs.len() => {
+                    results[wi] = Err(format!(
+                        "executor returned {} outputs for {} wave items",
+                        outs.len(),
+                        idxs.len()
+                    ));
+                }
+                Ok(outs) => {
+                    if let Ok(slots) = results[wi].as_mut() {
+                        for (i, o) in idxs.iter().zip(outs) {
+                            slots[*i] = o;
+                        }
+                    }
+                }
+            };
+            for (bi, wi) in fwd_map.iter().enumerate() {
+                let r = fwd_results
+                    .get(bi)
+                    .cloned()
+                    .unwrap_or_else(|| Err("executor returned too few wave results".to_string()));
+                apply(*wi, &splits[*wi].0, r);
+            }
+            for (bi, wi) in gen_map.iter().enumerate() {
+                let r = gen_results
+                    .get(bi)
+                    .cloned()
+                    .unwrap_or_else(|| Err("executor returned too few wave results".to_string()));
+                apply(*wi, &splits[*wi].1, r);
+            }
         }
         let mut completed = 0usize;
         let mut responses: Vec<(u64, String)> = Vec::new();
@@ -725,6 +850,14 @@ impl Server {
                                 &out.logits.iter().map(|&x| x as f64).collect::<Vec<_>>(),
                             ),
                         );
+                        // Generation finishes carry the produced token
+                        // ids; ordinary stream finishes don't.
+                        if let Some(gen) = &out.produced {
+                            o.set(
+                                "generated",
+                                Json::arr_f64(&gen.iter().map(|&t| t as f64).collect::<Vec<_>>()),
+                            );
+                        }
                         o.set("tokens", Json::num(out.tokens as f64));
                         o.set("waves", Json::num(out.waves as f64));
                         o.set("first_token_us", Json::num(out.first_token_us));
@@ -738,6 +871,13 @@ impl Server {
             }));
         }
         self.stage_responses(responses.into_iter());
+        // Sequences that finished (or failed / were purged) this step
+        // release their die-resident KV state so the capacity budget
+        // frees up for newly admitted sequences.
+        let released = self.stream.lock().unwrap().take_released();
+        for seq in released {
+            exec.release_seq(seq);
+        }
         (completed, true)
     }
 
@@ -836,6 +976,12 @@ impl Server {
                 other => Err(format!("unknown cmd '{other}'")),
             };
         }
+        // Generate requests carry a token prompt instead of an image, so
+        // they branch off *before* the image parse — otherwise every
+        // generation request would be rejected with "missing 'image'".
+        if j.get_path("kind").and_then(|k| k.as_str()) == Some("generate") {
+            return self.handle_generate(&j, conn_id);
+        }
         // Strict payload policy (matching the `'kind' must be a string`
         // rule): malformed requests are rejected, never silently coerced.
         // The old path mapped non-numeric / null entries to 0.0 pixels —
@@ -930,6 +1076,73 @@ impl Server {
             return Ok(Some(self.shed_line(client_req_id, SHED_QUEUE_FULL)));
         }
         self.enqueue_admitted(InferencePayload { image, conn_id, client_req_id, kind });
+        Ok(None)
+    }
+
+    /// Parse and admit one `"kind": "generate"` request (autoregressive
+    /// generation: prefill the prompt, then decode `max_new_tokens`
+    /// greedily). Validation error strings are documented in
+    /// `docs/SERVING.md`. Admission mirrors the stream tier — one
+    /// permit per sequence held until the final token, prompt length
+    /// priced against the token queue depth.
+    fn handle_generate(&self, j: &Json, conn_id: u64) -> Result<Option<String>, String> {
+        let arr = j
+            .get_path("prompt")
+            .ok_or("missing 'prompt'")?
+            .as_arr()
+            .ok_or("'prompt' must be an array of numbers")?;
+        if arr.is_empty() {
+            return Err("'prompt' must not be empty".to_string());
+        }
+        let mut prompt = Vec::with_capacity(arr.len());
+        for v in arr {
+            let t = v.as_f64().ok_or("'prompt' entries must be non-negative integers")?;
+            if t.fract() != 0.0 || !(0.0..=u32::MAX as f64).contains(&t) {
+                return Err("'prompt' entries must be non-negative integers".to_string());
+            }
+            prompt.push(t as u32);
+        }
+        let max_new = {
+            let v = j.get_path("max_new_tokens").ok_or("missing 'max_new_tokens'")?;
+            let t = v.as_f64().ok_or("'max_new_tokens' must be a number")?;
+            if t.fract() != 0.0 || !(1.0..=1e9).contains(&t) {
+                return Err("'max_new_tokens' must be a positive integer".to_string());
+            }
+            t as usize
+        };
+        let client_req_id = match j.get_path("id") {
+            None => None,
+            Some(v) => Some(v.as_f64().ok_or("'id' must be a number")?),
+        };
+        let push = match j.get_path("push") {
+            None => false,
+            Some(v) => v.as_bool().ok_or("'push' must be a boolean")?,
+        };
+        // Admission runs *after* validation: a malformed request is a
+        // parse error even under overload, never a shed.
+        if self.is_draining() || self.is_shutdown() {
+            return Ok(Some(self.shed_line(client_req_id, SHED_DRAINING)));
+        }
+        if !self.try_acquire_permit() {
+            return Ok(Some(self.shed_line(client_req_id, SHED_INFLIGHT)));
+        }
+        {
+            let mut stream = self.stream.lock().unwrap();
+            // The sequence occupies its prompt tokens now; decode steps
+            // later self-schedule one token at a time under the permit
+            // it already holds, so the prefill burst is what admission
+            // prices against the queue depth.
+            if stream.queued_tokens() + stream.tokens_in_flight() as usize + prompt.len()
+                > self.queue_depth
+            {
+                drop(stream);
+                self.release_permits(1);
+                return Ok(Some(self.shed_line(client_req_id, SHED_QUEUE_FULL)));
+            }
+            let now = Instant::now();
+            stream.enqueue_generate(conn_id, client_req_id, &prompt, max_new, push, now);
+        }
+        self.exec_notify.notify();
         Ok(None)
     }
 
@@ -1598,6 +1811,187 @@ mod tests {
         let img: Vec<String> =
             (0..16).map(|j| format!("{}", (j % 7) as f32 / 7.0 - 0.4)).collect();
         img.join(", ")
+    }
+
+    /// A tiny zero-noise *decoder* executor (2 blocks, dim 48, context
+    /// 8) for generate-path tests: deterministic, so served output must
+    /// be bit-identical to `reference_decode`.
+    fn tiny_decoder_exec() -> crate::coordinator::pipeline::ModelExecutor {
+        use crate::coordinator::pipeline::{ModelExecutor, PipelineConfig};
+        use crate::vit::graph::{GraphConfig, ModelGraph};
+        use crate::vit::plan::OperatingPoint;
+        let mut p = MacroParams::default();
+        p.adc_bits = 6;
+        p.active_rows = 64;
+        p.rows = 64;
+        p.cols = 12;
+        p.sigma_cu_rel = 0.0;
+        p.nonlin_cubic_lsb = 0.0;
+        p.sigma_cmp_lsb = 0.0;
+        p.sigma_cmp_offset_lsb = 0.0;
+        p.temperature_k = 0.0;
+        let op = OperatingPoint { a_bits: 2, w_bits: 2, cb: crate::cim::params::CbMode::Off };
+        let plan = PrecisionPlan { name: "test 2b", attention: op, mlp: op };
+        let mut cfg = VitConfig::default();
+        cfg.image = 16;
+        cfg.dim = 48;
+        cfg.depth = 2;
+        cfg.mlp_ratio = 2;
+        cfg.num_classes = 4;
+        let graph = ModelGraph::decoder(&GraphConfig { vit: cfg, context: 8 }, &plan);
+        ModelExecutor::new(&p, graph, PipelineConfig::default()).unwrap()
+    }
+
+    #[test]
+    fn malformed_generate_payloads_error_and_never_enqueue() {
+        // Strict-parse table for the generate wire contract: every
+        // malformed shape yields the documented error (docs/SERVING.md)
+        // and leaves the token queue untouched.
+        let srv = test_server();
+        let cases = [
+            (r#"{"id": 1, "kind": "generate"}"#, "missing 'prompt'"),
+            (r#"{"id": 1, "kind": "generate", "prompt": 3}"#, "'prompt' must be an array of numbers"),
+            (r#"{"id": 1, "kind": "generate", "prompt": []}"#, "'prompt' must not be empty"),
+            (
+                r#"{"id": 1, "kind": "generate", "prompt": [1.5], "max_new_tokens": 2}"#,
+                "'prompt' entries must be non-negative integers",
+            ),
+            (
+                r#"{"id": 1, "kind": "generate", "prompt": [-1], "max_new_tokens": 2}"#,
+                "'prompt' entries must be non-negative integers",
+            ),
+            (
+                r#"{"id": 1, "kind": "generate", "prompt": ["x"], "max_new_tokens": 2}"#,
+                "'prompt' entries must be non-negative integers",
+            ),
+            (r#"{"id": 1, "kind": "generate", "prompt": [1]}"#, "missing 'max_new_tokens'"),
+            (
+                r#"{"id": 1, "kind": "generate", "prompt": [1], "max_new_tokens": "x"}"#,
+                "'max_new_tokens' must be a number",
+            ),
+            (
+                r#"{"id": 1, "kind": "generate", "prompt": [1], "max_new_tokens": 0}"#,
+                "'max_new_tokens' must be a positive integer",
+            ),
+            (
+                r#"{"id": 1, "kind": "generate", "prompt": [1], "max_new_tokens": 2.5}"#,
+                "'max_new_tokens' must be a positive integer",
+            ),
+            (
+                r#"{"id": "x", "kind": "generate", "prompt": [1], "max_new_tokens": 2}"#,
+                "'id' must be a number",
+            ),
+            (
+                r#"{"id": 1, "kind": "generate", "prompt": [1], "max_new_tokens": 2, "push": 3}"#,
+                "'push' must be a boolean",
+            ),
+        ];
+        for (line, want) in cases {
+            let got = srv.handle_line(line, 1).unwrap_err();
+            assert_eq!(got, want, "wrong error for {line}");
+            assert_eq!(
+                srv.stream.lock().unwrap().queued_tokens(),
+                0,
+                "malformed generate must never enqueue: {line}"
+            );
+        }
+        // A well-formed generate enqueues its prompt tokens — and parses
+        // without an 'image' field (the generate branch runs before the
+        // image parse).
+        srv.handle_line(r#"{"id": 2, "kind": "generate", "prompt": [3, 1], "max_new_tokens": 2}"#, 1)
+            .unwrap();
+        assert_eq!(srv.stream.lock().unwrap().queued_tokens(), 2);
+    }
+
+    #[test]
+    fn generate_serves_end_to_end_and_matches_reference_decode() {
+        let srv = test_server();
+        let mut exec = tiny_decoder_exec();
+        let prompt = [3u32, 1, 2];
+        let max_new = 2usize;
+        let (ref_toks, _) = tiny_decoder_exec().reference_decode(&prompt, max_new);
+        let conn = srv.open_conn();
+        srv.handle_line(
+            r#"{"id": 9, "kind": "generate", "prompt": [3, 1, 2], "max_new_tokens": 2, "push": true}"#,
+            conn,
+        )
+        .unwrap();
+        let mut resps: Vec<String> = Vec::new();
+        for _ in 0..50 {
+            std::thread::sleep(Duration::from_millis(3));
+            srv.executor_step(&mut exec);
+            resps.extend(srv.take_responses(conn));
+            if resps.iter().any(|r| r.contains("generated")) {
+                break;
+            }
+        }
+        let finals: Vec<Json> = resps
+            .iter()
+            .map(|r| json::parse(r).unwrap())
+            .filter(|j| j.get_path("generated").is_some())
+            .collect();
+        assert_eq!(finals.len(), 1, "expected one final generate response: {resps:?}");
+        let j = &finals[0];
+        assert_eq!(j.get_path("id").unwrap().as_f64().unwrap(), 9.0);
+        let generated: Vec<u32> = j
+            .get_path("generated")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|v| v.as_f64().unwrap() as u32)
+            .collect();
+        // Bit-identical to the schedule-free reference walk.
+        assert_eq!(generated, ref_toks);
+        // Token positions processed = prompt + max_new - 1 (the last
+        // produced token is never fed back).
+        assert_eq!(j.get_path("tokens").unwrap().as_f64().unwrap(), 4.0);
+        // pred is the argmax of the final producing logits — i.e. the
+        // last generated token.
+        assert_eq!(
+            j.get_path("pred").unwrap().as_f64().unwrap() as u32,
+            *generated.last().unwrap()
+        );
+        // push=true: at least one per-token progress event preceded the
+        // final line.
+        let events = resps
+            .iter()
+            .map(|r| json::parse(r).unwrap())
+            .filter(|j| j.get_path("event").is_some())
+            .count();
+        assert!(events >= 1, "expected push progress events: {resps:?}");
+        // Generation gauges landed in the ledger; the sequence finished
+        // so nothing is active and its permit returned.
+        let stats = srv.ledger_json();
+        assert_eq!(stats.get_path("sequences_active").unwrap().as_f64().unwrap(), 0.0);
+        assert_eq!(stats.get_path("prefill_tokens").unwrap().as_f64().unwrap(), 3.0);
+        assert_eq!(stats.get_path("decode_tokens").unwrap().as_f64().unwrap(), 1.0);
+        assert!(stats.get_path("kv_hit_rate").unwrap().as_f64().unwrap() > 0.0);
+        assert_eq!(srv.inflight.load(Ordering::SeqCst), 0);
+    }
+
+    #[test]
+    fn generate_errors_on_non_graph_executors() {
+        // The default decode_many refuses generation; the sequence fails
+        // cleanly and its admission permit returns.
+        let srv = test_server();
+        let mut exec = FakeExec::new();
+        let conn = srv.open_conn();
+        srv.handle_line(r#"{"id": 4, "kind": "generate", "prompt": [5], "max_new_tokens": 3}"#, conn)
+            .unwrap();
+        std::thread::sleep(Duration::from_millis(3));
+        srv.executor_step(&mut exec);
+        let resps = srv.take_responses(conn);
+        assert_eq!(resps.len(), 1);
+        let j = json::parse(&resps[0]).unwrap();
+        assert_eq!(j.get_path("id").unwrap().as_f64().unwrap(), 4.0);
+        assert!(j
+            .get_path("error")
+            .unwrap()
+            .as_str()
+            .unwrap()
+            .contains("does not serve autoregressive generation"));
+        assert_eq!(srv.inflight.load(Ordering::SeqCst), 0);
     }
 
     #[test]

@@ -72,9 +72,27 @@
 //! (which tokens share a wave) — exactly as the batch composition does
 //! on real silicon.
 //!
-//! The wire protocol (`"kind": "stream"`, the `stats` fields) is
-//! documented in `docs/SERVING.md`; the occupancy/latency planning model
-//! lives in [`Scheduler::plan_stream`](super::scheduler::Scheduler::plan_stream).
+//! # Autoregressive generation
+//!
+//! `"kind": "generate"` sequences ride the same waves: a prompt admits
+//! as prefill [`TokenItem`]s in one shot, and completing a sequence's
+//! producing position selects the next token ([`decode::argmax`]) and
+//! self-enqueues it as a decode item — so decode steps of many live
+//! sequences coalesce with each other and with prefill chunks,
+//! padding-free. Admission gets one extra rule, **decode-priority
+//! aging**: a decode step that has waited half the admission window
+//! outranks everything else, so one long fresh prompt cannot starve
+//! every live sequence's token cadence (see
+//! [`form_wave`](TokenStream::form_wave)). Sequence lifecycle events
+//! surface through [`TokenStream::take_released`] so the server can
+//! drop die-resident KV state; `docs/ARCHITECTURE.md` § "Decode tier"
+//! carries the full phase-split and residency model.
+//!
+//! The wire protocol (`"kind": "stream"` / `"kind": "generate"`, the
+//! `stats` fields) is documented in `docs/SERVING.md`; the
+//! occupancy/latency planning model lives in
+//! [`Scheduler::plan_stream`](super::scheduler::Scheduler::plan_stream)
+//! and [`Scheduler::plan_decode`](super::scheduler::Scheduler::plan_decode).
 
 use std::collections::BTreeMap;
 use std::time::{Duration, Instant};
@@ -82,7 +100,8 @@ use std::time::{Duration, Instant};
 use crate::util::stats::percentile;
 
 use super::batcher::Batcher;
-use super::ledger::StreamSnapshot;
+use super::decode;
+use super::ledger::{GenSnapshot, StreamSnapshot};
 
 /// Bounded ring of token-latency samples backing the p50/p99 report
 /// (old samples are overwritten once the ring is full).
@@ -98,7 +117,23 @@ pub struct StreamConfig {
     pub max_wait: Duration,
 }
 
-/// One queued unit of work: a single token (patch chunk) of a request.
+/// The generation payload of a queued token item: autoregressive
+/// sequences queue token *ids* (embedded by the decode executor), not
+/// patch chunks, and carry their phase so admission can prioritize
+/// decode cadence and the executor can count phase tokens.
+#[derive(Clone, Copy, Debug)]
+pub struct GenTok {
+    /// Token id at this position (prompt token for prefill items, the
+    /// previously produced token for decode items).
+    pub tok: u32,
+    /// `true` for steady-state decode steps, `false` for prefill.
+    pub decode: bool,
+}
+
+/// One queued unit of work: a single token of a request — a patch chunk
+/// for `forward`-style stream requests, a generation step
+/// (`gen: Some(..)`) for autoregressive sequences. Both kinds coalesce
+/// into the same conversion waves.
 #[derive(Clone, Debug)]
 pub struct TokenItem {
     /// Admission sequence number of the owning request (assigned under
@@ -108,12 +143,19 @@ pub struct TokenItem {
     pub conn_id: u64,
     /// The client's echoed `"id"` (None = absent, echoed as null).
     pub client_req_id: Option<f64>,
-    /// Position of this token within its request.
+    /// Position of this token within its request. For generation items
+    /// this is the absolute sequence position (prompt positions first,
+    /// then one per decode step).
     pub token_index: usize,
-    /// The token's patch chunk (featurized by the executor).
+    /// The token's patch chunk (featurized by the executor). Empty for
+    /// generation items, which carry a token id in `gen` instead.
     pub chunk: Vec<f32>,
-    /// When the owning request arrived.
+    /// When this item entered the queue (request arrival for stream
+    /// tokens and prefill items; the previous step's completion for
+    /// decode items — the decode-priority aging clock).
     pub arrived: Instant,
+    /// Generation payload; `None` for ordinary stream tokens.
+    pub gen: Option<GenTok>,
 }
 
 /// A formed conversion wave: tokens sorted by `(req_seq, token_index)`,
@@ -140,6 +182,10 @@ pub struct StreamOutput {
     pub first_token_us: f64,
     /// Request arrival → last completed token [µs].
     pub last_token_us: f64,
+    /// Generated token ids, for `"kind": "generate"` sequences only
+    /// (`None` for stream requests; `logits` then holds the final
+    /// step's logits rather than a pooled mean).
+    pub produced: Option<Vec<u32>>,
 }
 
 /// A request leaving the streaming tier: either its pooled output or
@@ -183,6 +229,38 @@ struct StreamRequest {
     /// Whether the client opted into per-token progress events
     /// (`"push": true`): each wave that advances the request emits a
     /// [`StreamProgress`] until the final response supersedes them.
+    push: bool,
+}
+
+/// State of one live autoregressive sequence (`"kind": "generate"`).
+/// Unlike a stream request, a sequence grows its own work: completing
+/// the producing position selects the next token
+/// ([`decode::argmax`]) and enqueues it as the next decode item, so a
+/// sequence keeps exactly one in-flight producing item and its cadence
+/// interleaves with other sequences' steps wave by wave.
+struct GenSeq {
+    conn_id: u64,
+    client_req_id: Option<f64>,
+    arrived: Instant,
+    /// Prompt length (prefill positions `0..prompt_len`).
+    prompt_len: usize,
+    /// Tokens to generate before the sequence finishes.
+    max_new: usize,
+    /// Generated token ids so far.
+    produced: Vec<u32>,
+    /// Token items issued (prefill + decode); `issued - completed` is
+    /// what rides queues and waves when the sequence dies.
+    issued: usize,
+    /// Token items whose waves have completed.
+    completed: usize,
+    /// Waves that carried at least one of this sequence's items.
+    waves: u64,
+    first_token_us: Option<f64>,
+    last_token_us: f64,
+    /// Completion instant of the last *produced* token, the
+    /// inter-token latency reference.
+    last_emit: Option<Instant>,
+    /// Whether the client opted into per-token progress events.
     push: bool,
 }
 
@@ -253,6 +331,26 @@ pub struct TokenStream {
     /// order by [`complete_wave`](Self::complete_wave) and drained by
     /// [`take_progress`](Self::take_progress).
     progress: Vec<StreamProgress>,
+    /// Live autoregressive sequences, keyed by `req_seq` (the same
+    /// admission-order namespace stream requests use, so mixed waves
+    /// still execute in one total `(req_seq, token_index)` order).
+    gens: BTreeMap<u64, GenSeq>,
+    /// Sequences that left the tier (finished, failed, or purged) since
+    /// the last [`take_released`](Self::take_released) drain: the server
+    /// releases their die-resident KV state and admission permits.
+    released: Vec<u64>,
+    /// Prefill token items served (generation sequences only).
+    prefill_served: u64,
+    /// Decode token items served (generation sequences only).
+    decode_served: u64,
+    /// Inter-token latency ring (µs between consecutive produced
+    /// tokens of a sequence), same capacity policy as `latencies_us`.
+    intertoken_us: Vec<f64>,
+    intertoken_cursor: usize,
+    /// Whether any generate sequence was ever admitted — drives the
+    /// server's generation-gauge refresh the way
+    /// [`ever_admitted`](Self::ever_admitted) drives the stream one.
+    gen_admitted: bool,
 }
 
 impl TokenStream {
@@ -275,6 +373,13 @@ impl TokenStream {
             latencies_us: Vec::new(),
             latency_cursor: 0,
             progress: Vec::new(),
+            gens: BTreeMap::new(),
+            released: Vec::new(),
+            prefill_served: 0,
+            decode_served: 0,
+            intertoken_us: Vec::new(),
+            intertoken_cursor: 0,
+            gen_admitted: false,
         })
     }
 
@@ -317,9 +422,61 @@ impl TokenStream {
                 token_index,
                 chunk,
                 arrived: now,
+                gen: None,
             });
         }
         n
+    }
+
+    /// Admit an autoregressive sequence (`"kind": "generate"`): its
+    /// whole prompt enqueues as prefill items in one admission (so a
+    /// prompt rides as few waves as the policy allows), and the
+    /// sequence then self-schedules one decode item per produced token
+    /// from [`complete_wave`](Self::complete_wave). Returns the prompt
+    /// length (the prefill token count admitted now). The caller
+    /// guarantees a non-empty prompt and `max_new_tokens ≥ 1`.
+    pub fn enqueue_generate(
+        &mut self,
+        conn_id: u64,
+        client_req_id: Option<f64>,
+        prompt: &[u32],
+        max_new_tokens: usize,
+        push: bool,
+        now: Instant,
+    ) -> usize {
+        let req_seq = self.next_seq;
+        self.next_seq += 1;
+        self.gen_admitted = true;
+        self.gens.insert(
+            req_seq,
+            GenSeq {
+                conn_id,
+                client_req_id,
+                arrived: now,
+                prompt_len: prompt.len(),
+                max_new: max_new_tokens,
+                produced: Vec::new(),
+                issued: prompt.len(),
+                completed: 0,
+                waves: 0,
+                first_token_us: None,
+                last_token_us: 0.0,
+                last_emit: None,
+                push,
+            },
+        );
+        for (token_index, &tok) in prompt.iter().enumerate() {
+            self.queue.push(TokenItem {
+                req_seq,
+                conn_id,
+                client_req_id,
+                token_index,
+                chunk: Vec::new(),
+                arrived: now,
+                gen: Some(GenTok { tok, decode: false }),
+            });
+        }
+        prompt.len()
     }
 
     /// Form the next conversion wave if the policy allows. Admission is
@@ -345,11 +502,24 @@ impl TokenStream {
         // is near-sorted between waves (appends are per-request runs),
         // so the sort is ~linear, and a wave's cost is dominated by the
         // macro conversions it triggers, not this bookkeeping.
+        //
+        // Decode-priority aging: a *decode* step that has waited half
+        // the admission window outranks everything else, whatever the
+        // regime below. A decode token's `token_index` is its absolute
+        // sequence position — large by construction — so under pure
+        // depth-fair admission one long fresh prompt (a run of small
+        // token indices) could starve every live sequence's next token
+        // and collapse token cadence; the half-window boost bounds
+        // inter-token latency at `max_wait / 2` + one wave instead.
+        let half_wait = self.policy.max_wait / 2;
+        let starved = |t: &TokenItem| {
+            t.gen.is_some_and(|g| g.decode) && now.duration_since(t.arrived) >= half_wait
+        };
         let aged = oldest_wait.is_some_and(|w| w >= self.policy.max_wait);
         if aged {
-            self.queue.sort_by_key(|t| (t.req_seq, t.token_index));
+            self.queue.sort_by_key(|t| (!starved(t), t.req_seq, t.token_index));
         } else {
-            self.queue.sort_by_key(|t| (t.token_index, t.req_seq));
+            self.queue.sort_by_key(|t| (!starved(t), t.token_index, t.req_seq));
         }
         let mut items: Vec<TokenItem> = self.queue.drain(..take).collect();
         items.sort_by_key(|t| (t.req_seq, t.token_index));
@@ -383,6 +553,17 @@ impl TokenStream {
         self.latency_cursor = (self.latency_cursor + 1) % LATENCY_SAMPLE_CAP;
     }
 
+    /// Ring of gaps between consecutive produced tokens of a sequence
+    /// — the inter-token latency the generation gauges report.
+    fn push_intertoken(&mut self, us: f64) {
+        if self.intertoken_us.len() < LATENCY_SAMPLE_CAP {
+            self.intertoken_us.push(us);
+        } else {
+            self.intertoken_us[self.intertoken_cursor] = us;
+        }
+        self.intertoken_cursor = (self.intertoken_cursor + 1) % LATENCY_SAMPLE_CAP;
+    }
+
     /// Record a wave's outputs (one logits row per wave token, in wave
     /// order): per-token latency samples, per-request reassembly, and
     /// the finished requests whose last token just landed.
@@ -395,6 +576,7 @@ impl TokenStream {
         debug_assert_eq!(wave.items.len(), outputs.len());
         let mut finished = Vec::new();
         let mut seen: Vec<u64> = Vec::new();
+        let mut seen_gens: Vec<u64> = Vec::new();
         for (item, lg) in wave.items.iter().zip(outputs) {
             self.executing = self.executing.saturating_sub(1);
             // A token of a defunct request (connection closed mid-wave,
@@ -407,6 +589,91 @@ impl TokenStream {
             self.tokens_served += 1;
             let us = now.duration_since(item.arrived).as_secs_f64() * 1e6;
             self.push_latency(us);
+            if let Some(gt) = item.gen {
+                if gt.decode {
+                    self.decode_served += 1;
+                } else {
+                    self.prefill_served += 1;
+                }
+                // Advance the sequence under the `gens` borrow; effects
+                // that touch other `self` fields (the next decode item,
+                // the inter-token sample, the release) apply after it.
+                let mut next: Option<(usize, GenTok)> = None;
+                let mut finish = false;
+                let mut emit_gap: Option<f64> = None;
+                {
+                    let Some(g) = self.gens.get_mut(&item.req_seq) else {
+                        continue;
+                    };
+                    g.completed += 1;
+                    if !seen_gens.contains(&item.req_seq) {
+                        seen_gens.push(item.req_seq);
+                        g.waves += 1;
+                    }
+                    let rel_us = now.duration_since(g.arrived).as_secs_f64() * 1e6;
+                    if g.first_token_us.is_none() {
+                        g.first_token_us = Some(rel_us);
+                    }
+                    g.last_token_us = rel_us;
+                    // The producing position is always the deepest
+                    // issued one: position `prompt_len - 1 + produced`
+                    // (the reference walk's semantics — the last token
+                    // of `max_new` is selected but never fed back).
+                    if item.token_index + 1 == g.prompt_len + g.produced.len()
+                        && g.produced.len() < g.max_new
+                    {
+                        let tok = decode::argmax(lg);
+                        g.produced.push(tok);
+                        if let Some(prev) = g.last_emit {
+                            emit_gap = Some(now.duration_since(prev).as_secs_f64() * 1e6);
+                        }
+                        g.last_emit = Some(now);
+                        if g.produced.len() == g.max_new {
+                            finish = true;
+                        } else {
+                            let pos = g.prompt_len - 1 + g.produced.len();
+                            g.issued += 1;
+                            next = Some((pos, GenTok { tok, decode: true }));
+                        }
+                    }
+                }
+                if let Some(gap) = emit_gap {
+                    self.push_intertoken(gap);
+                }
+                if let Some((pos, gt_next)) = next {
+                    // The next decode step bypasses admission *entry*
+                    // (the sequence holds its permit until it finishes)
+                    // but not admission *policy*: it queues like any
+                    // token and rides whatever wave admits it.
+                    self.queue.push(TokenItem {
+                        req_seq: item.req_seq,
+                        conn_id: item.conn_id,
+                        client_req_id: item.client_req_id,
+                        token_index: pos,
+                        chunk: Vec::new(),
+                        arrived: now,
+                        gen: Some(gt_next),
+                    });
+                }
+                if finish {
+                    let g = self.gens.remove(&item.req_seq).expect("sequence is present");
+                    self.completed_requests += 1;
+                    self.released.push(item.req_seq);
+                    finished.push(FinishedRequest {
+                        conn_id: g.conn_id,
+                        client_req_id: g.client_req_id,
+                        result: Ok(StreamOutput {
+                            logits: lg.clone(),
+                            tokens: g.issued,
+                            waves: g.waves,
+                            first_token_us: g.first_token_us.unwrap_or(0.0),
+                            last_token_us: g.last_token_us,
+                            produced: Some(g.produced),
+                        }),
+                    });
+                }
+                continue;
+            }
             let Some(req) = self.requests.get_mut(&item.req_seq) else {
                 continue;
             };
@@ -437,6 +704,7 @@ impl TokenStream {
                         waves: req.waves,
                         first_token_us: req.first_token_us.unwrap_or(rel_us),
                         last_token_us: req.last_token_us,
+                        produced: None,
                     }),
                 });
             }
@@ -458,6 +726,22 @@ impl TokenStream {
                 }
             }
         }
+        // Push-enabled sequences report produced tokens over `max_new`
+        // — one event per producing wave (pure-prefill waves that
+        // produced nothing stay silent), the final token's event
+        // superseded by the response.
+        for seq in &seen_gens {
+            if let Some(g) = self.gens.get(seq) {
+                if g.push && !g.produced.is_empty() {
+                    self.progress.push(StreamProgress {
+                        conn_id: g.conn_id,
+                        client_req_id: g.client_req_id,
+                        done: g.produced.len(),
+                        tokens: g.max_new,
+                    });
+                }
+            }
+        }
         finished
     }
 
@@ -466,6 +750,14 @@ impl TokenStream {
     /// incremental `"event": "tokens"` lines between waves.
     pub fn take_progress(&mut self) -> Vec<StreamProgress> {
         std::mem::take(&mut self.progress)
+    }
+
+    /// Drain the sequence ids that left the tier since the last drain
+    /// (finished, failed, or purged). The server forwards each to the
+    /// executor's `release_seq`, dropping the sequence's die-resident
+    /// KV state and returning its admission permit.
+    pub fn take_released(&mut self) -> Vec<u64> {
+        std::mem::take(&mut self.released)
     }
 
     /// A wave's execution failed: every request with a token in the
@@ -484,6 +776,23 @@ impl TokenStream {
             // on the success path; their request emitted its response
             // (or error) long ago.
             if self.settle_defunct(item.req_seq) {
+                continue;
+            }
+            if item.gen.is_some() {
+                // A generation item: the whole sequence fails — and is
+                // released, so the server drops its die-resident KV
+                // state and admission permit. `issued - completed`
+                // counts this wave's items too (the fail path never
+                // increments `completed`), matching the sweep below.
+                if let Some(g) = self.gens.remove(&item.req_seq) {
+                    failed.push((item.req_seq, g.issued - g.completed));
+                    self.released.push(item.req_seq);
+                    finished.push(FinishedRequest {
+                        conn_id: g.conn_id,
+                        client_req_id: g.client_req_id,
+                        result: Err(error.to_string()),
+                    });
+                }
                 continue;
             }
             if let Some(req) = self.requests.remove(&item.req_seq) {
@@ -545,6 +854,24 @@ impl TokenStream {
             dropped += 1;
             false
         });
+        // The connection's live sequences die the same way: in-flight
+        // items settle defunct, and the sequence ids are released so the
+        // server drops their die-resident KV state without poisoning
+        // the waves they ride.
+        let released = &mut self.released;
+        self.gens.retain(|seq, g| {
+            if g.conn_id != conn_id {
+                return true;
+            }
+            let unfinished = g.issued - g.completed;
+            let in_waves = unfinished.saturating_sub(*queued.get(seq).unwrap_or(&0));
+            if in_waves > 0 {
+                defunct.insert(*seq, in_waves);
+            }
+            released.push(*seq);
+            dropped += 1;
+            false
+        });
         dropped
     }
 
@@ -586,6 +913,42 @@ impl TokenStream {
             },
             token_latency_p50_us: p50,
             token_latency_p99_us: p99,
+        }
+    }
+
+    /// Whether any generate sequence was ever admitted (the
+    /// generation-gauge analogue of [`ever_admitted`](Self::ever_admitted)).
+    pub fn gen_ever_admitted(&self) -> bool {
+        self.gen_admitted
+    }
+
+    /// Live autoregressive sequences.
+    pub fn sequences_active(&self) -> usize {
+        self.gens.len()
+    }
+
+    /// The generation-gauge snapshot for the ledger's `stats` report:
+    /// serving-side cadence counters from this tier, KV residency
+    /// counters from the executor's [`decode::GenStats`].
+    pub fn gen_snapshot(&self, kv: &decode::GenStats) -> GenSnapshot {
+        let (p50, p99) = if self.intertoken_us.is_empty() {
+            (0.0, 0.0)
+        } else {
+            (percentile(&self.intertoken_us, 0.5), percentile(&self.intertoken_us, 0.99))
+        };
+        let span_us: f64 = self.intertoken_us.iter().sum();
+        let decode_tokens_per_s =
+            if span_us > 0.0 { self.intertoken_us.len() as f64 * 1e6 / span_us } else { 0.0 };
+        GenSnapshot {
+            sequences_active: self.gens.len() as u64,
+            kv_hits: kv.kv_hits,
+            kv_misses: kv.kv_misses,
+            kv_evictions: kv.kv_evictions,
+            prefill_tokens: self.prefill_served,
+            decode_tokens: self.decode_served,
+            decode_tokens_per_s,
+            intertoken_p50_us: p50,
+            intertoken_p99_us: p99,
         }
     }
 }
@@ -787,5 +1150,128 @@ mod tests {
         assert_eq!(pool_tokens(&[vec![1.0, -2.0]]), vec![1.0, -2.0]);
         let pooled = pool_tokens(&[vec![1.0, 0.0], vec![2.0, 6.0], vec![3.0, 0.0]]);
         assert_eq!(pooled, vec![2.0, 2.0]);
+    }
+
+    #[test]
+    fn gen_sequence_self_schedules_decode_steps_and_finishes() {
+        let mut ts = TokenStream::new(&cfg(4, 50)).unwrap();
+        let now = Instant::now();
+        let admitted = ts.enqueue_generate(9, Some(1.0), &[5, 6], 3, true, now);
+        assert_eq!(admitted, 2);
+        assert_eq!(ts.sequences_active(), 1);
+        assert!(ts.gen_ever_admitted());
+        // Prefill rides one deadline-closed wave; position 1
+        // (= prompt_len − 1) is the producing position for token 1.
+        assert!(ts.form_wave(now).is_none());
+        let w1 = ts.form_wave(now + Duration::from_millis(60)).unwrap();
+        let keys: Vec<(usize, bool)> =
+            w1.items.iter().map(|t| (t.token_index, t.gen.unwrap().decode)).collect();
+        assert_eq!(keys, vec![(0, false), (1, false)]);
+        let t1 = now + Duration::from_millis(61);
+        let outs1 = vec![vec![0.0, 0.0], vec![0.0, 3.0, 1.0]];
+        assert!(ts.complete_wave(&w1, &outs1, t1).is_empty());
+        // Token 1 (argmax of the producing row) selected; the next
+        // decode step self-enqueued with it fed back.
+        assert_eq!(ts.queued_tokens(), 1);
+        let prog = ts.take_progress();
+        assert_eq!(prog.len(), 1);
+        assert_eq!((prog[0].done, prog[0].tokens), (1, 3));
+        let w2 = ts.form_wave(t1 + Duration::from_millis(60)).unwrap();
+        assert_eq!(w2.items.len(), 1);
+        let gt = w2.items[0].gen.unwrap();
+        assert!(gt.decode);
+        assert_eq!(gt.tok, 1);
+        assert_eq!(w2.items[0].token_index, 2);
+        let t2 = t1 + Duration::from_millis(90);
+        assert!(ts.complete_wave(&w2, &[vec![9.0, 0.0]], t2).is_empty());
+        // The final decode step: producing token 3 finishes the
+        // sequence (the last token is selected but never fed back).
+        let w3 = ts.form_wave(t2 + Duration::from_millis(60)).unwrap();
+        assert_eq!(w3.items[0].gen.unwrap().tok, 0);
+        assert_eq!(w3.items[0].token_index, 3);
+        let done = ts.complete_wave(&w3, &[vec![0.0, 0.0, 7.0]], t2 + Duration::from_millis(70));
+        assert_eq!(done.len(), 1);
+        let out = done[0].result.as_ref().unwrap();
+        assert_eq!(out.produced, Some(vec![1, 0, 2]));
+        assert_eq!(out.tokens, 4, "2 prefill + 2 decode items executed");
+        assert_eq!(out.waves, 3);
+        assert_eq!(out.logits, vec![0.0, 0.0, 7.0]);
+        assert_eq!(ts.take_released(), vec![1]);
+        assert_eq!(ts.sequences_active(), 0);
+        assert_eq!(ts.tokens_in_flight(), 0);
+        let snap = ts.gen_snapshot(&decode::GenStats::default());
+        assert_eq!(snap.prefill_tokens, 2);
+        assert_eq!(snap.decode_tokens, 2);
+        assert_eq!(snap.sequences_active, 0);
+        assert!(snap.intertoken_p50_us > 0.0);
+        assert!(snap.decode_tokens_per_s > 0.0);
+        assert_eq!(ts.snapshot().requests, 1);
+    }
+
+    #[test]
+    fn starved_decode_steps_outrank_fresh_prefill() {
+        // Wave size 1, window 100 ms (decode boost threshold 50 ms). A
+        // live sequence's decode step competes with a fresh prompt's
+        // first token; depth-fair admission alone would pick
+        // `token_index` 0 forever.
+        let mut ts = TokenStream::new(&cfg(1, 100)).unwrap();
+        let now = Instant::now();
+        ts.enqueue_generate(1, None, &[4], 2, false, now); // seq 1
+        let w1 = ts.form_wave(now).unwrap();
+        let t1 = now + Duration::from_millis(2);
+        assert!(ts.complete_wave(&w1, &[vec![1.0, 0.0]], t1).is_empty());
+        // The decode step (position 1) queues, clocked from t1.
+        assert_eq!(ts.queued_tokens(), 1);
+        ts.enqueue_generate(2, None, &[7, 8, 9], 1, false, t1 + Duration::from_millis(10));
+        // While the decode step is young, depth-fair admission prefers
+        // the fresh prompt's first token.
+        let young = ts.form_wave(t1 + Duration::from_millis(20)).unwrap();
+        assert_eq!((young.items[0].req_seq, young.items[0].token_index), (2, 0));
+        // Past half the window the decode step outranks everything,
+        // bounding inter-token latency under prefill pressure.
+        let starved = ts.form_wave(t1 + Duration::from_millis(60)).unwrap();
+        assert_eq!((starved.items[0].req_seq, starved.items[0].token_index), (1, 1));
+        assert!(starved.items[0].gen.unwrap().decode);
+    }
+
+    #[test]
+    fn gen_failure_and_purge_release_sequences() {
+        let mut ts = TokenStream::new(&cfg(2, 1)).unwrap();
+        let now = Instant::now();
+        ts.enqueue_generate(3, Some(7.0), &[1, 2], 2, false, now);
+        let wave = ts.form_wave(now).unwrap();
+        assert_eq!(wave.items.len(), 2);
+        let failed = ts.fail_wave(&wave, "boom");
+        assert_eq!(failed.len(), 1);
+        assert_eq!(failed[0].conn_id, 3);
+        assert!(failed[0].result.is_err());
+        assert_eq!(ts.take_released(), vec![1]);
+        assert_eq!(ts.sequences_active(), 0);
+        assert_eq!(ts.tokens_in_flight(), 0);
+
+        // Mid-wave disconnect: the sequence's in-flight items settle
+        // defunct and the id is released exactly once.
+        ts.enqueue_generate(4, None, &[1, 2], 2, false, now); // seq 2
+        let w = ts.form_wave(now).unwrap();
+        assert_eq!(ts.purge_conn(4), 1);
+        assert_eq!(ts.take_released(), vec![2]);
+        let done = ts.complete_wave(&w, &[vec![1.0], vec![2.0]], now);
+        assert!(done.is_empty());
+        assert_eq!(ts.tokens_in_flight(), 0);
+        assert_eq!(ts.sequences_active(), 0);
+        // The dead sequence's tokens never count as served.
+        assert_eq!(ts.gen_snapshot(&decode::GenStats::default()).prefill_tokens, 0);
+    }
+
+    #[test]
+    fn mixed_stream_and_gen_waves_execute_in_admission_order() {
+        let mut ts = TokenStream::new(&cfg(8, 1)).unwrap();
+        let now = Instant::now();
+        ts.enqueue_request(1, None, &img(4), 2, false, now); // seq 1
+        ts.enqueue_generate(2, None, &[3, 4], 1, false, now); // seq 2
+        let wave = ts.form_wave(now + Duration::from_millis(5)).unwrap();
+        let keys: Vec<(u64, usize, bool)> =
+            wave.items.iter().map(|t| (t.req_seq, t.token_index, t.gen.is_some())).collect();
+        assert_eq!(keys, vec![(1, 0, false), (1, 1, false), (2, 0, true), (2, 1, true)]);
     }
 }

@@ -130,7 +130,12 @@ fn cmd_plan(argv: Vec<String>) -> CliResult {
     let args = parse_or_help(
         Args::new("crcim plan", "SAC plan costs over the ViT workload")
             .opt("batch", "1", "inference batch size")
-            .flag("vit-small", "use the paper's ViT-small shapes"),
+            .flag("vit-small", "use the paper's ViT-small shapes")
+            .flag("decode", "also price the autoregressive decode workload")
+            .opt("decode-live", "4", "concurrent sequences for --decode")
+            .opt("decode-prompt", "32", "prompt tokens per sequence for --decode")
+            .opt("decode-steps", "32", "decode steps priced for --decode")
+            .opt("decode-kv-mbits", "64", "KV residency budget [megabits] for --decode"),
         argv,
     )?;
     let cfg = if args.get_flag("vit-small") { VitConfig::vit_small() } else { VitConfig::default() };
@@ -147,6 +152,30 @@ fn cmd_plan(argv: Vec<String>) -> CliResult {
         println!(
             "  {:<44} {:>9.1} µJ/inf  {:>9.1} µs  {:>7.0} TOPS/W-eff  ({gain:.2}x)",
             plan.name, cost.energy_uj, cost.latency_us, cost.tops_per_watt_effective
+        );
+    }
+    if args.get_flag("decode") {
+        use cr_cim::vit::{GraphConfig, ModelGraph};
+        let live = args.get_parse::<usize>("decode-live")?;
+        let prompt = args.get_parse::<usize>("decode-prompt")?;
+        let steps = args.get_parse::<usize>("decode-steps")?;
+        let kv_bits = args.get_parse::<u64>("decode-kv-mbits")?.saturating_mul(1_000_000);
+        let gc = GraphConfig { vit: cfg, context: GraphConfig::decoder_base().context };
+        let graph = ModelGraph::decoder(&gc, &PrecisionPlan::paper_sac());
+        let d = sched.plan_decode(&graph, live, prompt, steps, kv_bits);
+        println!(
+            "decode: {live} seqs × {prompt}-token prompts, {steps} steps, KV budget {} Mb",
+            kv_bits / 1_000_000
+        );
+        println!(
+            "  prefill pass {:>9.1} µs/seq   decode step {:>9.2} µs   {:>9.0} tok/s steady-state",
+            d.prefill_pass_ns / 1e3,
+            d.decode_step_ns / 1e3,
+            d.decode_tokens_per_s
+        );
+        println!(
+            "  kv replay: {} hits / {} misses / {} evictions (hit rate {:.2})",
+            d.kv_hits, d.kv_misses, d.kv_evictions, d.kv_hit_rate
         );
     }
     Ok(())

@@ -78,12 +78,51 @@ pub struct GraphLayer {
     pub shape: LinearShape,
     /// Operating point (bits + CB mode) resolved from the plan.
     pub op: OperatingPoint,
+    /// Maximum attention context for decoder graphs: 0 on encoder
+    /// layers (shapes are position-independent), > 0 on decoder
+    /// attention-class layers, whose effective decode-time work grows
+    /// with the sequence position up to this bound (the KV window).
+    pub context: usize,
 }
 
 impl GraphLayer {
     /// Stable display name, e.g. `block3.fc2`.
     pub fn name(&self) -> String {
         format!("block{}.{}", self.block, self.role.label())
+    }
+
+    /// Effective shape of this layer at decode position `pos` (0-based).
+    /// Encoder layers (`context == 0`) are position-independent.
+    /// Decoder attention layers fold the sequence's KV state over all
+    /// prior positions, so their effective activation stream at position
+    /// `pos` is `min(pos + 1, context)` vectors — the quantity
+    /// `Scheduler::plan_decode` prices per step. MLP layers stay one
+    /// vector per step regardless of position.
+    pub fn shape_at(&self, pos: usize) -> LinearShape {
+        if self.context == 0 {
+            return self.shape;
+        }
+        let mut s = self.shape;
+        s.m = (pos + 1).min(self.context).max(1);
+        s
+    }
+}
+
+/// Decoder graph configuration: the model hyperparameters plus the
+/// attention-context bound carried by the decoder's attention layers.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct GraphConfig {
+    pub vit: VitConfig,
+    /// Maximum sequence positions of per-sequence KV state (the window
+    /// `GraphLayer::shape_at` saturates at).
+    pub context: usize,
+}
+
+impl GraphConfig {
+    /// The canonical decoder target: ViT-Base-scale blocks repurposed as
+    /// a causal decoder with a 256-position context window.
+    pub fn decoder_base() -> Self {
+        GraphConfig { vit: VitConfig::vit_base(), context: 256 }
     }
 }
 
@@ -123,10 +162,59 @@ impl ModelGraph {
                     role,
                     shape: LinearShape { class, k, n, m },
                     op: plan.point(class),
+                    context: 0,
                 });
             }
         }
         ModelGraph { cfg: *cfg, batch, plan_name: plan.name, layers }
+    }
+
+    /// Build a causal decoder graph: the same `4 × depth` macro-mapped
+    /// linear chain as [`encoder`](Self::encoder), shaped for
+    /// autoregressive generation — every layer's baseline activation
+    /// stream is **one token** (`m = 1`, a single decode step), and the
+    /// attention-class layers carry `gc.context` so
+    /// [`GraphLayer::shape_at`] grows their effective decode work with
+    /// the sequence position. The pipeline executor runs prefill and
+    /// decode waves through this graph; `Scheduler::plan_decode` prices
+    /// them.
+    pub fn decoder(gc: &GraphConfig, plan: &PrecisionPlan) -> Self {
+        let cfg = gc.vit;
+        let d = cfg.dim;
+        let context = gc.context.max(1);
+        let mut layers = Vec::with_capacity(4 * cfg.depth);
+        for block in 0..cfg.depth {
+            for role in LayerRole::block_order() {
+                let (k, n) = match role {
+                    LayerRole::Qkv => (d, 3 * d),
+                    LayerRole::AttnProj => (d, d),
+                    LayerRole::Fc1 => (d, cfg.mlp_dim()),
+                    LayerRole::Fc2 => (cfg.mlp_dim(), d),
+                };
+                let class = role.class();
+                let attention = class == LayerClass::TransformerAttention;
+                layers.push(GraphLayer {
+                    index: layers.len(),
+                    block,
+                    role,
+                    shape: LinearShape { class, k, n, m: 1 },
+                    op: plan.point(class),
+                    context: if attention { context } else { 0 },
+                });
+            }
+        }
+        ModelGraph { cfg, batch: 1, plan_name: plan.name, layers }
+    }
+
+    /// Whether this is a decoder graph (any layer carries a context
+    /// window for position-dependent decode shapes).
+    pub fn is_decoder(&self) -> bool {
+        self.layers.iter().any(|l| l.context > 0)
+    }
+
+    /// The decoder's attention-context bound (0 on encoder graphs).
+    pub fn context(&self) -> usize {
+        self.layers.iter().map(|l| l.context).max().unwrap_or(0)
     }
 
     pub fn layer_count(&self) -> usize {
@@ -247,6 +335,47 @@ mod tests {
         }
         // Zero clamps to one.
         assert_eq!(graph.with_stream_m(0).layers[0].shape.m, 1);
+    }
+
+    #[test]
+    fn decoder_graph_is_one_token_with_position_dependent_attention() {
+        let gc = GraphConfig { vit: VitConfig::default(), context: 8 };
+        let g = ModelGraph::decoder(&gc, &PrecisionPlan::paper_sac());
+        assert!(g.is_decoder());
+        assert_eq!(g.context(), 8);
+        assert_eq!(g.layer_count(), 4 * gc.vit.depth);
+        assert_eq!(g.batch, 1);
+        for l in &g.layers {
+            // Baseline decode step: one token through every linear.
+            assert_eq!(l.shape.m, 1, "{}", l.name());
+            // Same (k, n) chain as the encoder.
+            let enc = ModelGraph::encoder(&gc.vit, 1, &PrecisionPlan::paper_sac());
+            let e = &enc.layers[l.index];
+            assert_eq!((l.shape.k, l.shape.n), (e.shape.k, e.shape.n), "{}", l.name());
+            // Attention layers carry the context window; MLP layers don't.
+            let attention = l.shape.class == crate::cim::netstats::LayerClass::TransformerAttention;
+            assert_eq!(l.context, if attention { 8 } else { 0 }, "{}", l.name());
+            // shape_at grows with position and saturates at the window.
+            assert_eq!(l.shape_at(0).m, 1, "{}", l.name());
+            if attention {
+                assert_eq!(l.shape_at(3).m, 4, "{}", l.name());
+                assert_eq!(l.shape_at(100).m, 8, "{}", l.name());
+            } else {
+                assert_eq!(l.shape_at(3).m, 1, "{}", l.name());
+                assert_eq!(l.shape_at(100).m, 1, "{}", l.name());
+            }
+        }
+        // Encoder graphs are position-independent throughout.
+        let enc = ModelGraph::encoder(&VitConfig::default(), 2, &PrecisionPlan::paper_sac());
+        assert!(!enc.is_decoder());
+        assert_eq!(enc.context(), 0);
+        for l in &enc.layers {
+            assert_eq!(l.shape_at(5), l.shape, "{}", l.name());
+        }
+        // decoder_base: ViT-Base blocks, 256-position window.
+        let base = GraphConfig::decoder_base();
+        assert_eq!(base.vit, VitConfig::vit_base());
+        assert_eq!(base.context, 256);
     }
 
     #[test]

@@ -9,7 +9,7 @@
 pub mod graph;
 pub mod plan;
 
-pub use graph::{GraphLayer, LayerRole, ModelGraph};
+pub use graph::{GraphConfig, GraphLayer, LayerRole, ModelGraph};
 
 use crate::cim::netstats::LayerClass;
 

@@ -1,0 +1,189 @@
+//! Autoregressive decode acceptance: the tentpole contract of the
+//! decode tier (docs/ARCHITECTURE.md §Decode tier).
+//!
+//! 1. **Serving determinism**: a zero-noise `generate` request served
+//!    through the continuous-batching tier is bit-identical to
+//!    `ModelExecutor::reference_decode` — the schedule-free exact
+//!    greedy walk — for every arrival interleaving × thread count ×
+//!    overlap setting. The wave partition differs across interleavings;
+//!    the produced tokens must not.
+//! 2. **KV planning = KV measurement**: the scheduler's `plan_decode`
+//!    replays the canonical KV trace on the same eviction policy the
+//!    executor runs, so planned hits/misses/evictions equal the
+//!    executor's measured counters for a warm multi-sequence run.
+
+use std::time::Duration;
+
+use cr_cim::cim::params::{CbMode, MacroParams};
+use cr_cim::coordinator::pipeline::{ModelExecutor, PipelineConfig};
+use cr_cim::coordinator::server::{BatchExecutor, Server, ServerConfig};
+use cr_cim::coordinator::Scheduler;
+use cr_cim::util::json::{self, Json};
+use cr_cim::vit::graph::{GraphConfig, ModelGraph};
+use cr_cim::vit::plan::{OperatingPoint, PrecisionPlan};
+use cr_cim::vit::VitConfig;
+
+fn tiny_params() -> MacroParams {
+    let mut p = MacroParams::default();
+    p.adc_bits = 6;
+    p.active_rows = 64;
+    p.rows = 64;
+    p.cols = 12;
+    p.sigma_cu_rel = 0.0;
+    p.nonlin_cubic_lsb = 0.0;
+    p.sigma_cmp_lsb = 0.0;
+    p.sigma_cmp_offset_lsb = 0.0;
+    p.temperature_k = 0.0;
+    p
+}
+
+fn plan_2b() -> PrecisionPlan {
+    let op = OperatingPoint { a_bits: 2, w_bits: 2, cb: CbMode::Off };
+    PrecisionPlan { name: "decode probe", attention: op, mlp: op }
+}
+
+fn tiny_cfg() -> VitConfig {
+    VitConfig { image: 16, patch: 4, dim: 48, depth: 2, heads: 4, mlp_ratio: 2, num_classes: 4 }
+}
+
+fn decoder_graph() -> ModelGraph {
+    ModelGraph::decoder(&GraphConfig { vit: tiny_cfg(), context: 8 }, &plan_2b())
+}
+
+fn generate_line(id: u64, prompt: &[u32], max_new: usize) -> String {
+    let toks: Vec<String> = prompt.iter().map(|t| t.to_string()).collect();
+    format!(
+        r#"{{"id": {id}, "kind": "generate", "prompt": [{}], "max_new_tokens": {max_new}}}"#,
+        toks.join(", ")
+    )
+}
+
+/// A server whose waves close full, by size: the huge `max_wait` keeps
+/// the deadline and aging paths switched off, so the wave partition is
+/// a pure function of the admitted trace.
+fn full_wave_server() -> Server {
+    Server::new(&ServerConfig {
+        addr: "unused".into(),
+        batch_sizes: vec![1, 4],
+        max_wait: Duration::from_millis(60_000),
+        wave_tokens: 2,
+        max_waves: 2,
+        ..ServerConfig::default()
+    })
+    .unwrap()
+}
+
+/// Step the executor until `want` responses are staged for `conn`.
+fn drain_responses(
+    srv: &Server,
+    exec: &mut dyn BatchExecutor,
+    conn: u64,
+    want: usize,
+) -> Vec<Json> {
+    let mut out = Vec::new();
+    for _ in 0..200 {
+        srv.executor_step(exec);
+        for line in srv.take_responses(conn) {
+            out.push(json::parse(&line).unwrap());
+        }
+        if out.len() >= want {
+            return out;
+        }
+        std::thread::sleep(Duration::from_millis(2));
+    }
+    panic!("server drained only {} of {want} responses", out.len());
+}
+
+fn generated_of(j: &Json) -> Vec<u32> {
+    j.get_path("generated")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|v| v.as_f64().unwrap() as u32)
+        .collect()
+}
+
+const PROMPT_A: [u32; 3] = [3, 1, 2];
+const PROMPT_B: [u32; 3] = [2, 0, 1];
+const MAX_NEW: usize = 3;
+
+#[test]
+fn zero_noise_generate_matches_reference_for_interleavings_threads_overlap() {
+    let base = tiny_params();
+    let graph = decoder_graph();
+    // Ground truth: the schedule-free exact greedy walk per prompt.
+    let (want_a, want_b) = {
+        let exec = ModelExecutor::new(&base, graph.clone(), PipelineConfig::default()).unwrap();
+        (exec.reference_decode(&PROMPT_A, MAX_NEW).0, exec.reference_decode(&PROMPT_B, MAX_NEW).0)
+    };
+    assert_eq!(want_a.len(), MAX_NEW);
+    assert_eq!(want_b.len(), MAX_NEW);
+    // Two arrival interleavings: A-then-B and B-then-A. They assign the
+    // sequences opposite stream numbers, so item order inside every
+    // shared wave flips — the produced tokens must not.
+    let orders: [[(u64, &[u32]); 2]; 2] =
+        [[(10, &PROMPT_A), (20, &PROMPT_B)], [(20, &PROMPT_B), (10, &PROMPT_A)]];
+    for (oi, order) in orders.iter().enumerate() {
+        for threads in [2usize, 4] {
+            for overlap in [false, true] {
+                let p = base.clone().with_threads(threads);
+                let cfg =
+                    PipelineConfig { shards: 2, attention_dies: 1, mlp_dies: 1, overlap };
+                let mut exec = ModelExecutor::new(&p, graph.clone(), cfg).unwrap();
+                let srv = full_wave_server();
+                let conn = srv.open_conn();
+                for (id, prompt) in order {
+                    srv.handle_line(&generate_line(*id, prompt, MAX_NEW), conn).unwrap();
+                }
+                let resps = drain_responses(&srv, &mut exec, conn, 2);
+                assert_eq!(
+                    resps.len(),
+                    2,
+                    "order {oi}, threads {threads}, overlap {overlap}"
+                );
+                for j in &resps {
+                    let id = j.get_path("id").unwrap().as_f64().unwrap() as u64;
+                    let want = if id == 10 { &want_a } else { &want_b };
+                    assert_eq!(
+                        &generated_of(j),
+                        want,
+                        "order {oi}, threads {threads}, overlap {overlap}, id {id}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn planner_kv_replay_equals_measured_counters_for_warm_multi_sequence_run() {
+    let base = tiny_params();
+    let graph = decoder_graph();
+    let capacity_bits: u64 = 1 << 20;
+    let mut exec =
+        ModelExecutor::new(&base.clone().with_threads(2), graph.clone(), PipelineConfig::default())
+            .unwrap();
+    exec.set_kv_capacity_bits(capacity_bits);
+    let srv = full_wave_server();
+    let conn = srv.open_conn();
+    srv.handle_line(&generate_line(1, &PROMPT_A, MAX_NEW), conn).unwrap();
+    srv.handle_line(&generate_line(2, &PROMPT_B, MAX_NEW), conn).unwrap();
+    let resps = drain_responses(&srv, &mut exec, conn, 2);
+    assert_eq!(resps.len(), 2);
+    let measured = exec.gen_stats();
+    // The planner replays the same trace shape (2 live sequences,
+    // 3-token prompts, max_new − 1 decode feedbacks) on a fresh cache
+    // with the identical eviction policy and capacity.
+    let sched = Scheduler::new(&base);
+    let planned = sched.plan_decode(&graph, 2, PROMPT_A.len(), MAX_NEW - 1, capacity_bits);
+    assert_eq!(measured.kv_hits, planned.kv_hits, "planned vs measured KV hits");
+    assert_eq!(measured.kv_misses, planned.kv_misses, "planned vs measured KV misses");
+    assert_eq!(measured.kv_evictions, planned.kv_evictions, "planned vs measured KV evictions");
+    assert!(measured.kv_hits > 0, "a warm run must hit the KV cache");
+    assert_eq!(measured.kv_evictions, 0, "ample capacity must not evict");
+    // Phase token accounting: both prompts prefilled in full, and each
+    // sequence fed back max_new − 1 decode steps.
+    assert_eq!(measured.prefill_tokens, (2 * PROMPT_A.len()) as u64);
+    assert_eq!(measured.decode_tokens, (2 * (MAX_NEW - 1)) as u64);
+}

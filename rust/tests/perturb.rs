@@ -13,6 +13,15 @@
 //! streaming server must reproduce the exact reference walk
 //! bit-for-bit — with yield bursts injected at the pipelined engine's
 //! program/convert stage boundaries and at every queue transfer.
+//!
+//! The decode tier rides the same harness: autoregressive `generate`
+//! serving feeds every produced token back through the wave queue, so
+//! yield injection at decode-step boundaries perturbs the prefill →
+//! decode handoff and the continuous-batching coalescer. Zero-noise
+//! generation must still be bit-identical to the schedule-free
+//! [`ModelExecutor::reference_decode`] walk, and a mid-generation
+//! disconnect must settle in-flight decode tokens without poisoning
+//! the wave the other sequences share.
 
 use std::time::Duration;
 
@@ -22,7 +31,7 @@ use cr_cim::coordinator::server::{BatchExecutor, Server, ServerConfig};
 use cr_cim::coordinator::stream::{pool_tokens, split_tokens};
 use cr_cim::util::json::{self, Json};
 use cr_cim::util::pool::perturb;
-use cr_cim::vit::graph::ModelGraph;
+use cr_cim::vit::graph::{GraphConfig, ModelGraph};
 use cr_cim::vit::plan::{OperatingPoint, PrecisionPlan};
 use cr_cim::vit::VitConfig;
 
@@ -205,4 +214,130 @@ fn perturbed_stream_matches_reference_across_seeds_and_threads() {
             }
         }
     }
+}
+
+fn generate_line(id: usize, prompt: &[u32], max_new: usize) -> String {
+    let toks: Vec<String> = prompt.iter().map(|t| t.to_string()).collect();
+    format!(
+        r#"{{"id": {id}, "kind": "generate", "prompt": [{}], "max_new_tokens": {max_new}}}"#,
+        toks.join(", ")
+    )
+}
+
+fn generated_of(j: &Json) -> Vec<u32> {
+    j.get_path("generated")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|v| v.as_f64().unwrap() as u32)
+        .collect()
+}
+
+fn decoder_graph() -> ModelGraph {
+    ModelGraph::decoder(&GraphConfig { vit: tiny_cfg(), context: 8 }, &plan(2, 2))
+}
+
+#[test]
+fn perturbed_generate_matches_reference_across_seeds_and_threads() {
+    let base = tiny_params();
+    let graph = decoder_graph();
+    let prompt_a = [3u32, 1, 2];
+    let prompt_b = [2u32, 0, 1];
+    // Ground truth: the schedule-free exact greedy walk per prompt.
+    let (want_a, want_b) = {
+        let exec = ModelExecutor::new(&base, graph.clone(), PipelineConfig::default()).unwrap();
+        (exec.reference_decode(&prompt_a, 3).0, exec.reference_decode(&prompt_b, 3).0)
+    };
+    // Equal-length prompts decode in lockstep, so every wave — prefill
+    // and decode feedback alike — closes full, by size, and the wave
+    // partition stays a pure function of the trace under perturbation.
+    // Seed 0 is the disarmed control.
+    for seed in [0u64, 5, 11] {
+        for threads in [2usize, 4] {
+            for overlap in [false, true] {
+                let p = base.clone().with_threads(threads);
+                let cfg =
+                    PipelineConfig { shards: 2, attention_dies: 1, mlp_dies: 1, overlap };
+                let mut exec = ModelExecutor::new(&p, graph.clone(), cfg).unwrap();
+                let srv = Server::new(&ServerConfig {
+                    addr: "unused".into(),
+                    batch_sizes: vec![1, 4],
+                    max_wait: Duration::from_millis(60_000),
+                    wave_tokens: 2,
+                    max_waves: 2,
+                    ..ServerConfig::default()
+                })
+                .unwrap();
+                let conn = srv.open_conn();
+                let resps = perturb::with_seed(seed, || {
+                    srv.handle_line(&generate_line(10, &prompt_a, 3), conn).unwrap();
+                    srv.handle_line(&generate_line(20, &prompt_b, 3), conn).unwrap();
+                    drain_responses(&srv, &mut exec, conn, 2)
+                });
+                assert_eq!(resps.len(), 2, "seed {seed}, threads {threads}, overlap {overlap}");
+                for j in &resps {
+                    let id = j.get_path("id").unwrap().as_f64().unwrap() as u64;
+                    let want = if id == 10 { &want_a } else { &want_b };
+                    assert_eq!(
+                        &generated_of(j),
+                        want,
+                        "seed {seed}, threads {threads}, overlap {overlap}, id {id}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn mid_generation_disconnect_settles_without_poisoning_the_wave() {
+    let base = tiny_params();
+    let graph = decoder_graph();
+    let prompt_a = [3u32, 1, 2];
+    let prompt_b = [2u32, 2, 1];
+    let want_a = {
+        let exec = ModelExecutor::new(&base, graph.clone(), PipelineConfig::default()).unwrap();
+        exec.reference_decode(&prompt_a, 3).0
+    };
+    let p = base.clone().with_threads(2);
+    let cfg = PipelineConfig { shards: 2, attention_dies: 1, mlp_dies: 1, overlap: true };
+    let mut exec = ModelExecutor::new(&p, graph, cfg).unwrap();
+    // Short deadline: once B is gone, A's solo decode feedbacks close
+    // partial waves by deadline rather than wedging behind wave_tokens.
+    let srv = Server::new(&ServerConfig {
+        addr: "unused".into(),
+        batch_sizes: vec![1, 4],
+        max_wait: Duration::from_millis(2),
+        wave_tokens: 2,
+        max_waves: 2,
+        ..ServerConfig::default()
+    })
+    .unwrap();
+    let conn_a = srv.open_conn();
+    let conn_b = srv.open_conn();
+    let resps = perturb::with_seed(7, || {
+        srv.handle_line(&generate_line(10, &prompt_a, 3), conn_a).unwrap();
+        srv.handle_line(&generate_line(20, &prompt_b, 3), conn_b).unwrap();
+        // Run one step so both sequences are mid-flight (prefill waves
+        // formed, possibly executing), then drop B's connection.
+        std::thread::sleep(Duration::from_millis(4));
+        srv.executor_step(&mut exec);
+        srv.close_conn(conn_b);
+        drain_responses(&srv, &mut exec, conn_a, 1)
+    });
+    let j = &resps[0];
+    assert_eq!(j.get_path("id").unwrap().as_f64().unwrap() as u64, 10);
+    assert!(j.get_path("error").is_none(), "survivor must finish cleanly: {:?}", j.get_path("error"));
+    assert_eq!(generated_of(j), want_a, "survivor output must match the reference walk");
+    // The purged sequence never stages output on the dead connection.
+    assert!(srv.take_responses(conn_b).is_empty());
+    // The disconnect released B's admission permit and sequence state:
+    // a fresh generate on the surviving connection is admitted and
+    // completes with the same reference output.
+    let again = perturb::with_seed(9, || {
+        srv.handle_line(&generate_line(11, &prompt_a, 3), conn_a).unwrap();
+        drain_responses(&srv, &mut exec, conn_a, 1)
+    });
+    assert_eq!(generated_of(&again[0]), want_a, "server must keep serving after a disconnect");
 }

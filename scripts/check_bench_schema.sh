@@ -40,6 +40,10 @@ required_keys=(
   saturated_tokens_per_s_modeled
   plan_stream_tokens_per_s
   saturation_anchor_rel_err
+  prefill_pass_us
+  decode_step_us
+  decode_tokens_per_s
+  kv_hit_rate
 )
 
 fail=0

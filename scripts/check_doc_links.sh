@@ -60,6 +60,15 @@ if [ -f docs/ARCHITECTURE.md ] && \
     fail=1
 fi
 
+# The autoregressive decode tier (prefill/decode phase split, die-resident
+# KV state, continuous batching) — the generate wire contract in
+# SERVING.md and the decode determinism tests both reference this section.
+if [ -f docs/ARCHITECTURE.md ] && \
+   ! grep -q '^## Decode tier' docs/ARCHITECTURE.md; then
+    echo "MISSING SECTION: docs/ARCHITECTURE.md '## Decode tier'"
+    fail=1
+fi
+
 for f in $files; do
     dir=$(dirname "$f")
     # Extract inline markdown link targets: [text](target)
