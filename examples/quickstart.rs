@@ -130,7 +130,7 @@ fn main() -> Result<(), String> {
     let w_deep: Vec<Vec<i32>> = (0..deep_k)
         .map(|_| (0..deep_n).map(|_| rng.below(15) as i32 - 7).collect())
         .collect();
-    let op4 = cr_cim::vit::plan::OperatingPoint { a_bits: 4, w_bits: 4, cb: CbMode::On };
+    let op4 = cr_cim::vit::plan::OperatingPoint::new(4, 4, CbMode::On);
     let mut dies = DieBank::new(&params, &w_deep, op4, 1, 2)?;
     let xs_deep: Vec<Vec<i32>> = (0..2)
         .map(|_| (0..deep_k).map(|_| rng.below(15) as i32 - 7).collect())

@@ -1,0 +1,56 @@
+//! Accuracy-vs-energy bench: runs the per-layer vote sweep over the
+//! workload corpus and writes `target/bench-reports/BENCH_accuracy.json`
+//! — the repo's stand-in for the paper's accuracy/power co-design
+//! figure (CIFAR accuracy vs TOPS/W across operating points). The same
+//! report is produced by `crcim sweep`; CI runs the `--smoke` sizing
+//! and checks the schema (`scripts/check_bench_schema.sh`).
+
+use cr_cim::coordinator::sweep::{run_sweep, SweepConfig};
+use cr_cim::util::bench::{black_box, BenchSuite};
+
+fn main() {
+    let mut suite = BenchSuite::new("accuracy - vote sweep and co-design");
+    let fast = std::env::var_os("CRCIM_BENCH_FAST").is_some();
+    let cfg = if fast { SweepConfig::smoke() } else { SweepConfig::full() };
+
+    // The sweep itself is the measured unit: corpus forward passes over
+    // every vote point plus the co-design search.
+    let report = run_sweep(&cfg).expect("sweep must run on the synthetic corpus");
+    suite.bench("codesign search", || {
+        black_box(cr_cim::coordinator::sweep::codesign_votes(
+            &cr_cim::coordinator::sweep::rig_params(),
+            &cr_cim::vit::graph::ModelGraph::encoder(
+                &cfg.cfg,
+                1,
+                &cr_cim::coordinator::sweep::rig_plan(),
+            ),
+            &cfg.grid,
+            cfg.mv_last_bits,
+            6,
+        ));
+    });
+
+    for p in &report.points {
+        println!(
+            "{:>12}: accuracy {:.3} | SQNR {:>5.1} dB | {:>9.1} pJ/inf",
+            p.label, p.accuracy, p.sqnr_db, p.energy_pj
+        );
+    }
+    println!(
+        "codesign: {:.3}x uniform-6 energy at modeled noise {:.1} (budget {:.1})",
+        report.codesign.energy_pj / report.codesign.uniform_energy_pj.max(1e-12),
+        report.codesign.noise,
+        report.codesign.budget
+    );
+    suite.note("accuracy_sweep", report.json.clone());
+
+    let report_dir = std::path::Path::new("target/bench-reports");
+    if std::fs::create_dir_all(report_dir).is_ok() {
+        let path = report_dir.join("BENCH_accuracy.json");
+        match std::fs::write(&path, report.json.to_string_pretty()) {
+            Ok(()) => println!("[accuracy report written to {}]", path.display()),
+            Err(e) => eprintln!("warn: failed to write {}: {e}", path.display()),
+        }
+    }
+    suite.finish();
+}

@@ -163,7 +163,7 @@ fn main() {
     // acceptance number behind `pipeline_speedup`: the overlapped
     // engine must beat its own serial schedule on real silicon time,
     // not just in the planner's model.
-    let probe = OperatingPoint { a_bits: 1, w_bits: 1, cb: CbMode::Off };
+    let probe = OperatingPoint::new(1, 1, CbMode::Off);
     let probe_plan = PrecisionPlan { name: "bench probe", attention: probe, mlp: probe };
     let graph1b = ModelGraph::encoder(&vitb, 8, &probe_plan);
     let exec_params = params.clone().with_sram_bits(resident_sram_bits).with_threads(threads);

@@ -237,6 +237,43 @@ mod tests {
     }
 
     #[test]
+    fn mv_decision_curves_match_effective_sigma_across_vote_grid() {
+        // The planner prices per-layer voting through effective_sigma_mv:
+        // anchor the analytic slope model to the sampled decide_mv
+        // behavior over the whole vote grid the sweep harness uses,
+        // including the even count (tie -> up) and the no-vote identity.
+        let c = Comparator::new(1.0, 0.0);
+        let delta = 0.2;
+        let n = 200_000;
+        for (vi, &votes) in [1usize, 2, 6, 12].iter().enumerate() {
+            let mut rng = Rng::new(0xC0DE + vi as u64);
+            let eff = c.effective_sigma_mv(votes);
+            assert!(eff > 0.0 && eff <= c.sigma_lsb + 1e-12, "votes={votes}: eff={eff}");
+            let p_pos =
+                (0..n).filter(|_| c.decide_mv(delta, votes, &mut rng)).count() as f64
+                    / n as f64;
+            let p_neg =
+                (0..n).filter(|_| c.decide_mv(-delta, votes, &mut rng)).count() as f64
+                    / n as f64;
+            // Symmetric difference cancels the tie->up bias; the slope is
+            // what sigma_eff encodes (see the test above for n = 6).
+            let slope_emp = (p_pos - p_neg) / (2.0 * delta);
+            let slope_pred = 1.0 / (eff * (2.0 * std::f64::consts::PI).sqrt());
+            assert!(
+                (slope_emp - slope_pred).abs() / slope_pred < 0.10,
+                "votes={votes}: slope emp={slope_emp} pred={slope_pred} (eff={eff})"
+            );
+        }
+        // More votes never hurt: the equivalent sigma is non-increasing
+        // over the grid (the planner's monotone pricing assumption).
+        let effs: Vec<f64> =
+            [1usize, 2, 6, 12].iter().map(|&v| c.effective_sigma_mv(v)).collect();
+        for w in effs.windows(2) {
+            assert!(w[1] <= w[0] + 1e-9, "effective sigma must not grow with votes: {effs:?}");
+        }
+    }
+
+    #[test]
     fn energy_law_quarters_when_sigma_doubles() {
         let relaxed = comparator_energy_pj(1.0, 1.0, 1.0, 2.0, 1.0);
         assert!((relaxed - 0.25).abs() < 1e-12);

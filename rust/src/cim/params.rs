@@ -283,7 +283,11 @@ impl MacroParams {
         if !(0.2..=2.0).contains(&self.supply_v) {
             return Err(format!("supply {} V out of range", self.supply_v));
         }
-        if self.mv_votes % 2 != 0 && self.mv_votes < 1 {
+        // Any vote count >= 1 is legal, including even counts: the
+        // comparator breaks even-vote ties toward "up" (`2*ups >= votes`
+        // in `Comparator::decide_mv`), matching a latch that keeps its
+        // last state. Zero votes would make boosted SAR bits undecidable.
+        if self.mv_votes < 1 {
             return Err("mv_votes must be >= 1".into());
         }
         if self.mv_last_bits as u32 > self.adc_bits {
@@ -349,6 +353,18 @@ impl MacroParams {
     /// Set the noise-keying base for logical column 0 (see `col_base`).
     pub fn with_col_base(mut self, col_base: usize) -> Self {
         self.col_base = col_base;
+        self
+    }
+
+    /// Set the majority-voting point (votes per boosted comparison and
+    /// how many trailing SAR bits are boosted). This is how a per-layer
+    /// `vit::plan::NoisePoint` reaches the macro: the shard constructor
+    /// overrides its cloned params with the layer's point, so the SAR
+    /// comparison counts *and* the energy model of that macro both price
+    /// the layer's own voting configuration.
+    pub fn with_mv(mut self, mv_votes: usize, mv_last_bits: usize) -> Self {
+        self.mv_votes = mv_votes;
+        self.mv_last_bits = mv_last_bits;
         self
     }
 
@@ -421,6 +437,33 @@ mod tests {
         let mut p = MacroParams::default();
         p.mv_last_bits = 11;
         assert!(p.validate().is_err());
+    }
+
+    #[test]
+    fn zero_votes_rejected_and_any_positive_count_accepted() {
+        // Regression: the original guard read `mv_votes % 2 != 0 &&
+        // mv_votes < 1`, which no usize satisfies, so mv_votes = 0 slipped
+        // through validation and hung boosted SAR bits.
+        let p = MacroParams::default().with_mv(0, 3);
+        assert!(p.validate().is_err());
+        // Even counts are legal (tie -> up, see Comparator::decide_mv),
+        // as is 1 (voting off) and the paper's 6.
+        for votes in [1usize, 2, 6, 12] {
+            assert!(MacroParams::default().with_mv(votes, 3).validate().is_ok());
+        }
+    }
+
+    #[test]
+    fn with_mv_changes_comparison_count_and_latency() {
+        let p = MacroParams::default().with_mv(2, 2);
+        assert_eq!(p.comparisons_per_conversion(CbMode::On), 10 - 2 + 2 * 2);
+        // CbMode::Off never votes, whatever the point says.
+        assert_eq!(p.comparisons_per_conversion(CbMode::Off), 10);
+        let base = MacroParams::default();
+        assert!(
+            p.conversion_latency_ns(CbMode::On) < base.conversion_latency_ns(CbMode::On),
+            "fewer comparisons must shorten the boosted conversion"
+        );
     }
 
     #[test]

@@ -23,8 +23,8 @@
 
 use std::collections::BTreeMap;
 
-/// Mix constant for the token embedding and the KV fold (the same
-/// golden-ratio multiplier the digital requantize glue uses).
+/// Mix constant for the token embedding and the KV fold (the
+/// golden-ratio multiplier; splitmix64's increment).
 const MIX: i64 = 0x9E37_79B9_7F4A_7C15_u64 as i64;
 
 /// One generation token inside a conversion wave: which sequence, which
@@ -63,7 +63,7 @@ pub fn embed_token(tok: u32, k: usize, a_bits: u32) -> Vec<i32> {
 /// Fold one position's raw attention output into the sequence's per-block
 /// KV state, **in place on both sides**: `state` accumulates the wrapped
 /// digest of every position seen so far, and `y` is replaced by that
-/// digest — so the values flowing into the downstream requantize glue
+/// digest — so the values flowing into the downstream periphery glue
 /// genuinely depend on the whole sequence history, exactly like
 /// attention over a KV cache. Pure wrapping-integer arithmetic: applied
 /// at the same (sequence, block, position) points, the executor and the

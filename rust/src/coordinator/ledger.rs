@@ -44,6 +44,12 @@ pub struct LayerCost {
     pub reload_hits: u64,
     /// Passes that (re)programmed this layer onto its pool.
     pub reload_misses: u64,
+    /// Majority votes per boosted comparison at this layer's operating
+    /// point (effective only when the CSNR boost is on; 1 when off).
+    pub mv_votes: u64,
+    /// Trailing SAR bits boosted at this layer's operating point
+    /// (0 when the CSNR boost is off).
+    pub mv_last_bits: u64,
 }
 
 /// Resident-weight cache counters reported by a graph executor (see
@@ -425,6 +431,8 @@ impl Ledger {
                     r.set("reload_us", Json::num(l.reload_ns * 1e-3));
                     r.set("reload_hits", Json::num(l.reload_hits as f64));
                     r.set("reload_misses", Json::num(l.reload_misses as f64));
+                    r.set("mv_votes", Json::num(l.mv_votes as f64));
+                    r.set("mv_last_bits", Json::num(l.mv_last_bits as f64));
                     Json::Obj(r)
                 })
                 .collect();
@@ -505,6 +513,8 @@ mod tests {
                 reload_ns: 4e4,
                 reload_hits: 1,
                 reload_misses: 1,
+                mv_votes: 1,
+                mv_last_bits: 0,
             },
             LayerCost {
                 name: "block0.fc2".into(),
@@ -516,6 +526,8 @@ mod tests {
                 reload_ns: 1.8e5,
                 reload_hits: 0,
                 reload_misses: 2,
+                mv_votes: 6,
+                mv_last_bits: 3,
             },
         ]);
         let j = l.to_json();
@@ -526,6 +538,9 @@ mod tests {
         assert!((rows[1].get_path("energy_uj").unwrap().as_f64().unwrap() - 20.0).abs() < 1e-9);
         assert_eq!(rows[0].get_path("reload_hits").unwrap().as_f64().unwrap(), 1.0);
         assert_eq!(rows[1].get_path("reload_misses").unwrap().as_f64().unwrap(), 2.0);
+        assert_eq!(rows[1].get_path("mv_votes").unwrap().as_f64().unwrap(), 6.0);
+        assert_eq!(rows[1].get_path("mv_last_bits").unwrap().as_f64().unwrap(), 3.0);
+        assert_eq!(rows[0].get_path("mv_votes").unwrap().as_f64().unwrap(), 1.0);
         assert_eq!(l.layer_breakdown().len(), 2);
         // Refresh replaces wholesale.
         l.set_layer_breakdown(Vec::new());

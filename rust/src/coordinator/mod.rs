@@ -36,6 +36,14 @@
 //!                   selection, and the capacity-bounded
 //!                   [`decode::SeqStateCache`] residency policy the
 //!                   executor runs live and the scheduler replays
+//! - [`periphery`] — the deterministic fixed-point digital periphery:
+//!                   integer softmax/LayerNorm/GELU kernels (Q16) and
+//!                   the role-keyed inter-layer glue both the macro walk
+//!                   and the exact reference walks share
+//! - [`sweep`]     — the accuracy-vs-energy sweep harness: per-layer
+//!                   vote grids over the workload corpus, Pareto
+//!                   frontier extraction, and the greedy vote co-design
+//!                   search (`crcim sweep`, `BENCH_accuracy.json`)
 //!
 //! See `docs/ARCHITECTURE.md` for the layer map, the 2-D tiling model,
 //! the pipeline/pool model, the streaming-admission model and the
@@ -46,6 +54,7 @@ pub mod batcher;
 pub mod decode;
 pub mod ledger;
 pub mod multidie;
+pub mod periphery;
 pub mod pipeline;
 pub(crate) mod reactor;
 pub mod router;
@@ -54,6 +63,7 @@ pub mod scheduler;
 pub mod server;
 pub mod shard;
 pub mod stream;
+pub mod sweep;
 
 pub use decode::{GenStats, GenStep, SeqStateCache};
 pub use multidie::DieBank;

@@ -173,7 +173,7 @@ mod tests {
     }
 
     fn op_2b() -> OperatingPoint {
-        OperatingPoint { a_bits: 2, w_bits: 2, cb: CbMode::Off }
+        OperatingPoint::new(2, 2, CbMode::Off)
     }
 
     fn tile(k: usize, n: usize, nvec: usize, seed: u64) -> (Vec<Vec<i32>>, Vec<Vec<i32>>) {

@@ -1,0 +1,393 @@
+//! Deterministic fixed-point digital periphery: the integer softmax,
+//! LayerNorm and GELU kernels that sit between macro-mapped linears.
+//!
+//! The CR-CIM macro only computes linear layers; everything between them
+//! — attention-score softmax, the residual-path LayerNorms, the MLP GELU
+//! — runs in the 65 nm digital periphery. This module models that tier
+//! as **pure integer** kernels so the macro walk and the exact reference
+//! walk (`matvec_exact`) apply byte-identical glue: zero-noise serving
+//! equals the reference bit-for-bit *structurally*, whatever the
+//! thread/shard/die/wave decomposition, because no kernel here ever
+//! touches a float or an iteration-order-dependent reduction.
+//!
+//! # Q-formats
+//!
+//! All fractional arithmetic is **Q16** (16 fractional bits, `i64`
+//! carriers, `i128` intermediates): `ONE_Q == 1 << 16` represents 1.0.
+//!
+//! | kernel            | input            | output                        |
+//! |-------------------|------------------|-------------------------------|
+//! | [`iexp_q`]        | Q16, `z ≤ 0`     | Q16 in `[0, ~1.0003]`         |
+//! | [`int_softmax`]   | raw `i64` logits | Q16 probabilities, `Σ ≈ 1.0`  |
+//! | [`int_layernorm`] | raw `i64`        | Q16 z-scores (σ units)        |
+//! | [`igelu_q`]       | Q16              | Q16                           |
+//!
+//! Every kernel has an `*_ref` f64 reference computed with the **same
+//! integer pre-scaling decisions** (so the comparison isolates the
+//! fixed-point rounding, not a different algorithm). The documented
+//! error bands, enforced by `rust/tests/periphery.rs` golden vectors:
+//!
+//! - `iexp_q`: ≤ 262 Q16 ULP (4e-3 absolute) vs `exp` over `[-16, 0]` —
+//!   the I-BERT-style second-order polynomial's error plus one trailing
+//!   truncation per ln2 reduction step.
+//! - `int_softmax`: ≤ 328 Q16 ULP (5e-3) per probability vs the f64
+//!   softmax at the same integer input scale.
+//! - `int_layernorm`: `|Δz| ≤ (1 + |z_ref|)/σ + 4·2⁻¹⁶` — the integer
+//!   mean is floored (≤ 1 off) and the integer σ is `isqrt`-floored
+//!   (relative error ≤ 1/σ).
+//! - `igelu_q`: ≤ 0.02 absolute over `[-4, 4]` vs the sigmoid-form f64
+//!   reference `z·σ(1.702·z)`.
+//!
+//! # Inter-layer glue
+//!
+//! [`glue`] is the one entry point the executor's walks use: it keys the
+//! kernel on the **producing** layer's [`LayerRole`] (qkv → softmax,
+//! fc1 → GELU, attn_proj/fc2 → LayerNorm), adapts the output length to
+//! the next layer's reduction dimension by cyclic replication, and maps
+//! the kernel's Q16 range into the next layer's signed `a_bits`
+//! activation range. It replaces the former `requantize` stand-in.
+
+use crate::vit::graph::LayerRole;
+
+/// Q16 fixed point: fractional bits of every kernel in this module.
+pub const Q: u32 = 16;
+/// 1.0 in Q16.
+pub const ONE_Q: i64 = 1 << Q;
+/// ln 2 in Q16 (`round(0.6931472 · 2^16)`).
+const LN2_Q: i64 = 45_426;
+/// The exp polynomial on the ln2 remainder `r ∈ (-ln2, 0]`:
+/// `exp(r) ≈ 0.3585·(r + 1.353)² + 0.344` (I-BERT's integer-friendly
+/// second-order fit). Coefficients in Q16.
+const EXP_A_Q: i64 = 23_497; // 0.3585
+const EXP_B_Q: i64 = 88_670; // 1.353
+const EXP_C_Q: i64 = 22_544; // 0.344
+/// GELU's sigmoid slope 1.702 in Q16.
+const GELU_K_Q: i64 = 111_542;
+
+/// Fixed-point `exp(z)` for non-positive Q16 `z`, clamped to `[-16, 0]`
+/// (Q16 underflows to 0 well before −16). Range reduction
+/// `z = −q·ln2 + r` with `r ∈ (−ln2, 0]`, the Q16 polynomial above on
+/// `r`, then an arithmetic right shift by `q`.
+pub fn iexp_q(z: i64) -> i64 {
+    let z = z.clamp(-(16 * ONE_Q), 0);
+    let q = ((-z) / LN2_Q) as u32;
+    let r = -((-z) % LN2_Q); // (-ln2, 0]
+    let t = r + EXP_B_Q;
+    let t2 = (t * t) >> Q; // t ≤ 1.353·2^16: t² < 2^34, no overflow
+    let poly = ((EXP_A_Q * t2) >> Q) + EXP_C_Q;
+    poly >> q.min(62)
+}
+
+/// f64 reference for [`iexp_q`] (the true exponential; the documented
+/// band covers the polynomial *and* the fixed-point truncation).
+pub fn iexp_ref(z: f64) -> f64 {
+    z.clamp(-16.0, 0.0).exp()
+}
+
+/// Integer softmax over raw accumulator outputs, returning Q16
+/// probabilities (`Σ ≈ ONE_Q`, short by at most one ULP per element
+/// from the division floor).
+///
+/// The inputs are shift-normalized against the max (`d = x − max ≤ 0`)
+/// and pre-scaled by the integer step `s = (max − min)/8 + 1` so every
+/// exponent argument lands in `(-8, 0]` — inside [`iexp_q`]'s accurate
+/// range whatever the accumulator magnitude. The scale is derived from
+/// the data by integer ops only, so it is exactly reproducible.
+pub fn int_softmax(x: &[i64]) -> Vec<i64> {
+    debug_assert!(!x.is_empty(), "softmax needs at least one logit");
+    let mx = *x.iter().max().expect("non-empty");
+    let mn = *x.iter().min().expect("non-empty");
+    let s = (mx as i128 - mn as i128) / 8 + 1;
+    let es: Vec<i64> = x
+        .iter()
+        .map(|&v| {
+            let arg = -(((mx as i128 - v as i128) * ONE_Q as i128) / s);
+            iexp_q(arg as i64)
+        })
+        .collect();
+    // Integer sum of n values ≤ ~2^17 each: overflows only beyond ~2^46
+    // elements. (Integer reductions are order-independent — the lint's
+    // float-reduction rule does not apply.)
+    let sum: i64 = es.iter().sum::<i64>().max(1);
+    es.iter().map(|&e| ((e as i128 * ONE_Q as i128) / sum as i128) as i64).collect()
+}
+
+/// f64 reference for [`int_softmax`]: the softmax of the inputs at the
+/// **same integer scale** `s` (isolating the fixed-point error from the
+/// scaling decision, which is shared).
+pub fn softmax_ref(x: &[i64]) -> Vec<f64> {
+    assert!(!x.is_empty());
+    let mx = *x.iter().max().expect("non-empty");
+    let mn = *x.iter().min().expect("non-empty");
+    let s = ((mx as i128 - mn as i128) / 8 + 1) as f64;
+    let es: Vec<f64> = x.iter().map(|&v| (-((mx - v) as f64) / s).exp()).collect();
+    let sum = crate::util::stats::sum_ordered(es.iter().copied());
+    es.iter().map(|&e| e / sum).collect()
+}
+
+/// Floor integer square root (Newton's method on integers; exact floor
+/// for any `v ≥ 0`).
+pub fn isqrt(v: i64) -> i64 {
+    debug_assert!(v >= 0, "isqrt of negative");
+    if v < 2 {
+        return v.max(0);
+    }
+    let mut x = v;
+    let mut y = (x + 1) / 2;
+    while y < x {
+        x = y;
+        y = (x + v / x) / 2;
+    }
+    x
+}
+
+/// Integer LayerNorm: per-element z-scores `(x − µ)/σ` in Q16, with the
+/// integer population mean (floored), variance accumulated in `i128`,
+/// and `σ = isqrt(var)` (floored; `σ = 0` normalizes to 0 via the
+/// `max(σ, 1)` guard). Affine scale/shift is identity — the macro's
+/// stand-in weights carry no trained γ/β.
+pub fn int_layernorm(x: &[i64]) -> Vec<i64> {
+    debug_assert!(!x.is_empty(), "layernorm needs at least one element");
+    let n = x.len() as i128;
+    let sum: i128 = x.iter().map(|&v| v as i128).sum();
+    let mean = sum.div_euclid(n) as i64;
+    let sumsq: i128 = x.iter().map(|&v| (v as i128 - mean as i128).pow(2)).sum();
+    let var = (sumsq / n).min(i64::MAX as i128) as i64;
+    let sigma = isqrt(var).max(1);
+    x.iter()
+        .map(|&v| (((v as i128 - mean as i128) * ONE_Q as i128) / sigma as i128) as i64)
+        .collect()
+}
+
+/// f64 reference for [`int_layernorm`] (population mean/σ; σ = 0 → 0).
+pub fn layernorm_ref(x: &[i64]) -> Vec<f64> {
+    assert!(!x.is_empty());
+    let n = x.len() as f64;
+    let mean = crate::util::stats::sum_ordered(x.iter().map(|&v| v as f64)) / n;
+    let var =
+        crate::util::stats::sum_ordered(x.iter().map(|&v| (v as f64 - mean).powi(2))) / n;
+    let sigma = var.sqrt();
+    if sigma == 0.0 {
+        return vec![0.0; x.len()];
+    }
+    x.iter().map(|&v| (v as f64 - mean) / sigma).collect()
+}
+
+/// Fixed-point GELU (sigmoid form `z·σ(1.702·z)`) on Q16 inputs clamped
+/// to `[-8, 8]`. The sigmoid is computed from [`iexp_q`] on the
+/// negative half and mirrored (`σ(-u) = 1 − σ(u)`), so both tails use
+/// the exponential in its accurate range.
+pub fn igelu_q(z: i64) -> i64 {
+    let z = z.clamp(-8 * ONE_Q, 8 * ONE_Q);
+    let u = ((z as i128 * GELU_K_Q as i128) >> Q) as i64;
+    let e = iexp_q(-u.abs());
+    let s_hi = ((ONE_Q as i128 * ONE_Q as i128) / ((ONE_Q + e) as i128)) as i64;
+    let sig = if u >= 0 { s_hi } else { ONE_Q - s_hi };
+    ((z as i128 * sig as i128) >> Q) as i64
+}
+
+/// f64 reference for [`igelu_q`]: the sigmoid-form GELU.
+pub fn gelu_ref(z: f64) -> f64 {
+    let z = z.clamp(-8.0, 8.0);
+    z / (1.0 + (-1.702 * z).exp())
+}
+
+/// Two's-complement activation range at `a_bits` (mirror of
+/// `OperatingPoint::a_range`, kept local so the glue stays a pure
+/// function of its arguments).
+fn a_range(a_bits: u32) -> (i64, i64) {
+    (-(1i64 << (a_bits - 1)), (1i64 << (a_bits - 1)) - 1)
+}
+
+/// Cyclic source index for adapting a kernel's `n`-long output to the
+/// next layer's `k`-long reduction dimension (the stand-in for the
+/// residual/reshape plumbing a real ViT block carries).
+#[inline]
+fn cyclic(i: usize, n: usize) -> usize {
+    i % n
+}
+
+/// The digital inter-layer glue: apply the producing layer's periphery
+/// kernel to its raw `i64` outputs and emit the next layer's `k`-long
+/// activation vector in the next layer's signed `a_bits` range.
+///
+/// Kernel dispatch is keyed on the **producing** role:
+///
+/// - `Qkv` → [`int_softmax`] (attention scores): Q16 probabilities map
+///   to `[0, a_hi]` (probabilities are non-negative).
+/// - `Fc1` → [`igelu_q`] on inputs pre-scaled into `±4` by the integer
+///   step `s = max|y|/4 + 1`; the `[-4, 4]`-ish GELU output maps to the
+///   full signed range (±4 full scale).
+/// - `AttnProj`/`Fc2` → [`int_layernorm`] (the residual-path norms):
+///   z-scores map at ±4σ full scale, clamped.
+///
+/// Pure integer end to end: byte-identical between the macro walk and
+/// the exact reference walk, at any thread/shard/die decomposition.
+pub fn glue(role: LayerRole, y: &[i64], k: usize, a_bits: u32) -> Vec<i32> {
+    debug_assert!(!y.is_empty(), "periphery glue needs at least one output");
+    debug_assert!((1..=31).contains(&a_bits));
+    let (lo, hi) = a_range(a_bits);
+    let n = y.len();
+    match role {
+        LayerRole::Qkv => {
+            let probs = int_softmax(y);
+            (0..k)
+                .map(|i| ((probs[cyclic(i, n)] as i128 * hi as i128) >> Q) as i32)
+                .collect()
+        }
+        LayerRole::Fc1 => {
+            let m = y.iter().map(|v| v.unsigned_abs()).max().expect("non-empty");
+            let s = (m as i128) / 4 + 1;
+            let g: Vec<i64> = y
+                .iter()
+                .map(|&v| igelu_q(((v as i128 * ONE_Q as i128) / s) as i64))
+                .collect();
+            (0..k)
+                .map(|i| {
+                    let v = (g[cyclic(i, n)] as i128 * hi as i128) / (4 * ONE_Q as i128);
+                    (v as i64).clamp(lo, hi) as i32
+                })
+                .collect()
+        }
+        LayerRole::AttnProj | LayerRole::Fc2 => {
+            let z = int_layernorm(y);
+            (0..k)
+                .map(|i| {
+                    let v = (z[cyclic(i, n)] as i128 * hi as i128) / (4 * ONE_Q as i128);
+                    (v as i64).clamp(lo, hi) as i32
+                })
+                .collect()
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn iexp_matches_reference_within_band() {
+        // The documented band: ≤ 262 Q16 ULP (4e-3) over [-16, 0].
+        for i in 0..=1600 {
+            let zf = -(i as f64) / 100.0;
+            let z = (zf * ONE_Q as f64).round() as i64;
+            let got = iexp_q(z) as f64 / ONE_Q as f64;
+            let want = iexp_ref(z as f64 / ONE_Q as f64);
+            assert!(
+                (got - want).abs() <= 4e-3,
+                "z={zf}: got {got} want {want}"
+            );
+        }
+        assert_eq!(iexp_q(-17 * ONE_Q), iexp_q(-16 * ONE_Q), "clamped below -16");
+        assert_eq!(iexp_q(-40 * ONE_Q), 0, "deep tail underflows to zero");
+    }
+
+    #[test]
+    fn softmax_is_a_distribution_and_tracks_reference() {
+        let x: Vec<i64> = vec![-1200, 3400, 0, 911, -77, 2600, 15];
+        let p = int_softmax(&x);
+        let r = softmax_ref(&x);
+        let total: i64 = p.iter().sum();
+        // Floor divisions lose at most one ULP per element.
+        assert!(total <= ONE_Q && total >= ONE_Q - x.len() as i64, "Σp = {total}");
+        for (pi, ri) in p.iter().zip(&r) {
+            assert!(*pi >= 0);
+            let got = *pi as f64 / ONE_Q as f64;
+            assert!((got - ri).abs() <= 5e-3, "got {got} want {ri}");
+        }
+        // Order-preserving: larger logits never get smaller probability.
+        assert!(p[1] >= p[5] && p[5] >= p[3] && p[3] >= p[0]);
+    }
+
+    #[test]
+    fn softmax_handles_degenerate_inputs() {
+        // All-equal logits: exactly uniform (identical integer path).
+        let p = int_softmax(&[42, 42, 42, 42]);
+        assert_eq!(p[0], p[1]);
+        assert_eq!(p[1], p[2]);
+        assert_eq!(p[2], p[3]);
+        // Single logit: probability ≈ 1 (one ULP of floor loss allowed).
+        let one = int_softmax(&[-5]);
+        assert!(one[0] >= ONE_Q - 1 && one[0] <= ONE_Q);
+        // Huge spread stays in range (no overflow, args clamped).
+        let wide = int_softmax(&[i64::MIN / 4, 0, i64::MAX / 4]);
+        assert!(wide.iter().all(|&v| (0..=ONE_Q).contains(&v)));
+        assert!(wide[2] > wide[1] && wide[1] >= wide[0]);
+    }
+
+    #[test]
+    fn isqrt_is_exact_floor() {
+        for v in 0..2000i64 {
+            let r = isqrt(v);
+            assert!(r * r <= v && (r + 1) * (r + 1) > v, "isqrt({v}) = {r}");
+        }
+        for &v in &[1i64 << 40, (1 << 52) + 12345, i64::MAX] {
+            let r = isqrt(v);
+            assert!(r as i128 * r as i128 <= v as i128);
+            assert!((r as i128 + 1) * (r as i128 + 1) > v as i128);
+        }
+    }
+
+    #[test]
+    fn layernorm_matches_reference_within_band() {
+        let x: Vec<i64> = (0..64i64).map(|i| (i * i * 37) % 4001 - 2000).collect();
+        let z = int_layernorm(&x);
+        let r = layernorm_ref(&x);
+        let sigma = {
+            let n = x.len() as f64;
+            let mean = x.iter().map(|&v| v as f64).fold(0.0, |a, b| a + b) / n;
+            (x.iter().map(|&v| (v as f64 - mean).powi(2)).fold(0.0, |a, b| a + b) / n).sqrt()
+        };
+        assert!(sigma > 100.0, "test vector must have healthy spread, σ = {sigma}");
+        for (zi, ri) in z.iter().zip(&r) {
+            let got = *zi as f64 / ONE_Q as f64;
+            let band = (1.0 + ri.abs()) / sigma + 4.0 / ONE_Q as f64;
+            assert!((got - ri).abs() <= band, "got {got} want {ri} band {band}");
+        }
+    }
+
+    #[test]
+    fn layernorm_degenerate_constant_vector_is_zero() {
+        assert!(int_layernorm(&[7, 7, 7]).iter().all(|&v| v == 0));
+        assert!(int_layernorm(&[0]).iter().all(|&v| v == 0));
+    }
+
+    #[test]
+    fn gelu_matches_reference_within_band() {
+        for i in -400..=400 {
+            let zf = i as f64 / 100.0;
+            let z = (zf * ONE_Q as f64).round() as i64;
+            let got = igelu_q(z) as f64 / ONE_Q as f64;
+            let want = gelu_ref(zf);
+            assert!((got - want).abs() <= 0.02, "z={zf}: got {got} want {want}");
+        }
+        // Identity-ish for large positive, ~0 for large negative.
+        assert!(igelu_q(8 * ONE_Q) > 7 * ONE_Q + ONE_Q / 2);
+        assert!(igelu_q(-8 * ONE_Q).abs() < ONE_Q / 100);
+        assert_eq!(igelu_q(0), 0);
+    }
+
+    #[test]
+    fn glue_stays_in_range_and_is_deterministic() {
+        let y: Vec<i64> = vec![120, -3400, 77, 0, 55_000, -9, 1234];
+        for role in
+            [LayerRole::Qkv, LayerRole::AttnProj, LayerRole::Fc1, LayerRole::Fc2]
+        {
+            for a_bits in [1u32, 2, 4, 8] {
+                let x = glue(role, &y, 11, a_bits);
+                assert_eq!(x.len(), 11);
+                let lo = -(1i32 << (a_bits - 1));
+                let hi = (1i32 << (a_bits - 1)) - 1;
+                assert!(
+                    x.iter().all(|&v| v >= lo && v <= hi),
+                    "{role:?} a_bits={a_bits}: {x:?}"
+                );
+                assert_eq!(x, glue(role, &y, 11, a_bits), "pure function");
+            }
+        }
+        // Softmax glue is non-negative; k > n replicates cyclically.
+        let s = glue(LayerRole::Qkv, &y, 14, 6);
+        assert!(s.iter().all(|&v| v >= 0));
+        assert_eq!(s[0], s[7], "cyclic replication across k > n");
+    }
+}

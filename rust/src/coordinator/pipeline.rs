@@ -29,11 +29,12 @@
 //!    `PipelinePlan::warm_pipelined_ns` with steady-state residency),
 //!    replacing the old fully-serial and always-reload assumptions.
 //!
-//! Between linears, the digital periphery (softmax / GELU / layernorm +
-//! requantization on silicon) is modeled as the deterministic
-//! [`requantize`] map, so the macro walk and the `matvec_exact`
-//! reference walk ([`ModelExecutor::reference_ints`]) stay comparable
-//! bit for bit.
+//! Between linears, the digital periphery (softmax / GELU / LayerNorm
+//! on 65 nm silicon) is modeled by the deterministic fixed-point
+//! kernels of [`super::periphery`], dispatched on the producing layer's
+//! role by [`periphery::glue`]; the glue is pure integer, so the macro
+//! walk and the `matvec_exact` reference walk
+//! ([`ModelExecutor::reference_ints`]) stay comparable bit for bit.
 //!
 //! # Staged wavefront execution
 //!
@@ -87,6 +88,7 @@ use std::sync::{Arc, Mutex};
 
 use crate::cim::macro_::matvec_exact;
 use crate::cim::netstats::LayerClass;
+use crate::cim::params::CbMode;
 use crate::cim::MacroParams;
 use crate::util::pool::{default_threads, perturb, WorkQueue};
 use crate::util::rng::Rng;
@@ -97,6 +99,7 @@ use crate::vit::plan::OperatingPoint;
 use super::decode::{self, GenStats, GenStep, SeqStateCache};
 use super::ledger::{LayerCost, ResidencyStats};
 use super::multidie::DieBank;
+use super::periphery;
 use super::router::Router;
 use super::sac::PlanCost;
 use super::scheduler::{PipelinePlan, ResidentLru, Scheduler};
@@ -220,26 +223,11 @@ struct LayerStats {
     reload_misses: u64,
 }
 
-/// Digital inter-layer glue: re-quantize a layer's `i64` outputs into
-/// the next layer's `k`-long `a_bits`-wide activation vector. Stands in
-/// for the digital nonlinearities between macro-mapped linears; it is a
-/// pure integer map, so the macro walk and the exact reference walk
-/// apply byte-identical glue. The position-salted multiplicative mix
-/// keeps replicated outputs (k > n) from repeating verbatim while
-/// staying exactly reproducible.
-pub fn requantize(y: &[i64], k: usize, a_bits: u32) -> Vec<i32> {
-    debug_assert!(!y.is_empty(), "requantize needs at least one output");
-    debug_assert!((1..=31).contains(&a_bits));
-    let span = 1i64 << a_bits;
-    let half = span / 2;
-    (0..k)
-        .map(|i| {
-            let v = y[i % y.len()];
-            let h = v.wrapping_mul(0x9E37_79B9_7F4A_7C15_u64 as i64).wrapping_add(i as i64);
-            (h.rem_euclid(span) - half) as i32
-        })
-        .collect()
-}
+// Digital inter-layer glue: `periphery::glue` (role-keyed integer
+// softmax/LayerNorm/GELU) replaced the former `requantize` hash-mix
+// stand-in. It stays a pure integer map applied identically by the
+// macro walk and the exact reference walks, so the zero-noise equality
+// contract is unchanged in structure.
 
 /// Quantize one image's floats into a `k`-long activation vector in the
 /// operating point's `a_bits` range (the patch-embed stand-in; mirror
@@ -458,10 +446,10 @@ impl ModelExecutor {
 
     /// The one graph walk both the macro run and the exact reference
     /// share: per layer, `run_layer` produces the outputs (banked
-    /// simulation or `matvec_exact`), then the [`requantize`] glue
-    /// derives the next layer's activations. Keeping the walk single
-    /// keeps the zero-noise equality contract structural instead of
-    /// coincidental.
+    /// simulation or `matvec_exact`), then the [`periphery::glue`]
+    /// digital periphery derives the next layer's activations. Keeping
+    /// the walk single keeps the zero-noise equality contract
+    /// structural instead of coincidental.
     fn walk_graph<F>(
         graph: &ModelGraph,
         xs: &[Vec<i32>],
@@ -474,10 +462,14 @@ impl ModelExecutor {
         let mut acts = xs.to_vec();
         let mut last = Vec::new();
         for li in 0..layer_count {
-            let ys = run_layer(li, &graph.layers[li], &acts)?;
+            let layer = &graph.layers[li];
+            let ys = run_layer(li, layer, &acts)?;
             if li + 1 < layer_count {
                 let next = &graph.layers[li + 1];
-                acts = ys.iter().map(|y| requantize(y, next.shape.k, next.op.a_bits)).collect();
+                acts = ys
+                    .iter()
+                    .map(|y| periphery::glue(layer.role, y, next.shape.k, next.op.a_bits))
+                    .collect();
             } else {
                 last = ys;
             }
@@ -714,8 +706,10 @@ impl ModelExecutor {
                 }
                 if t.li + 1 < layer_count {
                     let next = &graph.layers[t.li + 1];
-                    wg.acts =
-                        ys.iter().map(|y| requantize(y, next.shape.k, next.op.a_bits)).collect();
+                    wg.acts = ys
+                        .iter()
+                        .map(|y| periphery::glue(layer.role, y, next.shape.k, next.op.a_bits))
+                        .collect();
                 } else {
                     wg.out = ys;
                 }
@@ -849,7 +843,7 @@ impl ModelExecutor {
 
     /// The exact reference **decode walk**: schedule-free greedy
     /// generation with `matvec_exact`, the same deterministic embedding,
-    /// per-block KV folds, requantize glue, output scaling and argmax
+    /// per-block KV folds, periphery glue, output scaling and argmax
     /// tie-break as the staged engine's generate path. Returns the
     /// produced tokens and the scaled logits at each producing position
     /// (the last entry is the finished sequence's final logits). At zero
@@ -883,8 +877,10 @@ impl ModelExecutor {
                 }
                 if li + 1 < layer_count {
                     let next = &self.graph.layers[li + 1];
-                    acts =
-                        ys.iter().map(|y| requantize(y, next.shape.k, next.op.a_bits)).collect();
+                    acts = ys
+                        .iter()
+                        .map(|y| periphery::glue(layer.role, y, next.shape.k, next.op.a_bits))
+                        .collect();
                 } else {
                     last = ys;
                 }
@@ -940,16 +936,26 @@ impl ModelExecutor {
             .iter()
             .zip(&self.stats)
             .zip(&self.pipeline.layers)
-            .map(|((l, s), t)| LayerCost {
-                name: l.name(),
-                class: l.shape.class.label(),
-                calls: s.calls,
-                conversions: s.conversions,
-                energy_pj: s.energy_pj,
-                compute_ns: t.compute_ns,
-                reload_ns: t.reload_ns,
-                reload_hits: s.reload_hits,
-                reload_misses: s.reload_misses,
+            .map(|((l, s), t)| {
+                // Report the *effective* voting point: CbMode::Off never
+                // votes, whatever the plan's NoisePoint says.
+                let (votes, last_bits) = match l.op.cb {
+                    CbMode::On => (l.op.noise.mv_votes as u64, l.op.noise.mv_last_bits as u64),
+                    CbMode::Off => (1, 0),
+                };
+                LayerCost {
+                    name: l.name(),
+                    class: l.shape.class.label(),
+                    calls: s.calls,
+                    conversions: s.conversions,
+                    energy_pj: s.energy_pj,
+                    compute_ns: t.compute_ns,
+                    reload_ns: t.reload_ns,
+                    reload_hits: s.reload_hits,
+                    reload_misses: s.reload_misses,
+                    mv_votes: votes,
+                    mv_last_bits: last_bits,
+                }
             })
             .collect()
     }
@@ -1042,7 +1048,6 @@ impl BatchExecutor for ModelExecutor {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::cim::params::CbMode;
     use crate::vit::plan::PrecisionPlan;
     use crate::vit::VitConfig;
 
@@ -1063,8 +1068,8 @@ mod tests {
     fn plan_2b() -> PrecisionPlan {
         PrecisionPlan {
             name: "test 2b/2b",
-            attention: OperatingPoint { a_bits: 2, w_bits: 2, cb: CbMode::Off },
-            mlp: OperatingPoint { a_bits: 2, w_bits: 2, cb: CbMode::Off },
+            attention: OperatingPoint::new(2, 2, CbMode::Off),
+            mlp: OperatingPoint::new(2, 2, CbMode::Off),
         }
     }
 
@@ -1080,19 +1085,23 @@ mod tests {
     }
 
     #[test]
-    fn requantize_stays_in_range_and_is_deterministic() {
+    fn periphery_glue_stays_in_range_and_is_deterministic() {
         let y = vec![123_456_789i64, -987, 0, 42];
-        for a_bits in [1u32, 2, 4, 8] {
-            let lo = -(1i32 << (a_bits - 1));
-            let hi = (1i32 << (a_bits - 1)) - 1;
-            let x = requantize(&y, 11, a_bits);
-            assert_eq!(x.len(), 11);
-            assert!(x.iter().all(|&v| v >= lo && v <= hi), "a_bits {a_bits}: {x:?}");
-            assert_eq!(x, requantize(&y, 11, a_bits));
+        for role in
+            [LayerRole::Qkv, LayerRole::AttnProj, LayerRole::Fc1, LayerRole::Fc2]
+        {
+            for a_bits in [1u32, 2, 4, 8] {
+                let lo = -(1i32 << (a_bits - 1));
+                let hi = (1i32 << (a_bits - 1)) - 1;
+                let x = periphery::glue(role, &y, 11, a_bits);
+                assert_eq!(x.len(), 11);
+                assert!(
+                    x.iter().all(|&v| v >= lo && v <= hi),
+                    "{role:?} a_bits {a_bits}: {x:?}"
+                );
+                assert_eq!(x, periphery::glue(role, &y, 11, a_bits));
+            }
         }
-        // Replicated outputs must not repeat verbatim (position salt).
-        let x = requantize(&[7], 8, 8);
-        assert!(x.windows(2).any(|w| w[0] != w[1]), "{x:?}");
     }
 
     #[test]

@@ -135,11 +135,11 @@ pub fn choose_operating_point(
     let need = required_csnr_db(class, max_drop);
     // Candidates ordered by cost (cheapest first).
     let candidates = [
-        OperatingPoint { a_bits: 4, w_bits: 4, cb: CbMode::Off },
-        OperatingPoint { a_bits: 6, w_bits: 6, cb: CbMode::Off },
-        OperatingPoint { a_bits: 4, w_bits: 4, cb: CbMode::On },
-        OperatingPoint { a_bits: 6, w_bits: 6, cb: CbMode::On },
-        OperatingPoint { a_bits: 8, w_bits: 8, cb: CbMode::On },
+        OperatingPoint::new(4, 4, CbMode::Off),
+        OperatingPoint::new(6, 6, CbMode::Off),
+        OperatingPoint::new(4, 4, CbMode::On),
+        OperatingPoint::new(6, 6, CbMode::On),
+        OperatingPoint::new(8, 8, CbMode::On),
     ];
     for op in candidates {
         let analog = match op.cb {

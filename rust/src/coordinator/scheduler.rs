@@ -431,7 +431,6 @@ pub struct Scheduler {
     /// split across dies, so only `⌈m / dies⌉` of the activation stream
     /// serializes on any one die. Energy is die-independent.
     pub dies: usize,
-    energy: EnergyModel,
 }
 
 impl Scheduler {
@@ -447,12 +446,7 @@ impl Scheduler {
     /// Full serving topology: `shards` parallel macros per die, `dies`
     /// independent dies sharing the batch stream.
     pub fn with_topology(params: &MacroParams, shards: usize, dies: usize) -> Self {
-        Scheduler {
-            params: params.clone(),
-            shards: shards.max(1),
-            dies: dies.max(1),
-            energy: EnergyModel::cr_cim(params),
-        }
+        Scheduler { params: params.clone(), shards: shards.max(1), dies: dies.max(1) }
     }
 
     /// Row tiles needed for a reduction dimension `k`.
@@ -675,12 +669,22 @@ impl Scheduler {
         let ct_serial = ct.div_ceil(self.shards.max(1) as u64);
         let m_per_die = (shape.m as u64).div_ceil(self.dies.max(1) as u64);
         let cycles = rt * ct_serial * op.a_bits as u64 * m_per_die;
-        let t_cycle = self.params.conversion_latency_ns(op.cb);
+        // Price the layer's own majority-voting point, not the deployment
+        // default: `MacroShards::with_tiling` applies the same `with_mv`
+        // override to the macros it builds, so the per-comparison counts
+        // (latency) and the rebuilt energy model here equal what the
+        // executor's macros measure — planned == measured by
+        // construction, per vote point.
+        let op_params = self
+            .params
+            .clone()
+            .with_mv(op.noise.mv_votes as usize, op.noise.mv_last_bits as usize);
+        let t_cycle = op_params.conversion_latency_ns(op.cb);
         // Row-tile accumulation reduce step: each extra row tile's
         // partial sum folds into the layer accumulator with one digital
         // add per streamed vector (pipelined across columns).
         let reduce_ns = self.params.t_accum_ns * (rt.saturating_sub(1) * m_per_die) as f64;
-        let e_conv = self.energy.conversion_energy_pj(op.cb);
+        let e_conv = EnergyModel::cr_cim(&op_params).conversion_energy_pj(op.cb);
         TilePlan {
             weight_loads: rt * ct,
             conversions,
@@ -789,8 +793,8 @@ mod tests {
     fn cb_on_costs_more_energy_and_time_per_conversion() {
         let s = Scheduler::new(&MacroParams::default());
         let sh = shape(96, 13, 10);
-        let on = s.plan_linear(&sh, OperatingPoint { a_bits: 6, w_bits: 6, cb: CbMode::On });
-        let off = s.plan_linear(&sh, OperatingPoint { a_bits: 6, w_bits: 6, cb: CbMode::Off });
+        let on = s.plan_linear(&sh, OperatingPoint::new(6, 6, CbMode::On));
+        let off = s.plan_linear(&sh, OperatingPoint::new(6, 6, CbMode::Off));
         assert_eq!(on.conversions, off.conversions);
         let e_ratio = on.energy_pj / off.energy_pj;
         assert!((e_ratio - 1.9).abs() < 0.2, "CB energy ratio {e_ratio}");
@@ -801,8 +805,8 @@ mod tests {
     fn lower_bits_cost_less() {
         let s = Scheduler::new(&MacroParams::default());
         let sh = shape(96, 13, 10);
-        let b6 = s.plan_linear(&sh, OperatingPoint { a_bits: 6, w_bits: 6, cb: CbMode::Off });
-        let b4 = s.plan_linear(&sh, OperatingPoint { a_bits: 4, w_bits: 4, cb: CbMode::Off });
+        let b6 = s.plan_linear(&sh, OperatingPoint::new(6, 6, CbMode::Off));
+        let b4 = s.plan_linear(&sh, OperatingPoint::new(4, 4, CbMode::Off));
         // 4b: fewer bit-serial cycles AND fewer weight planes.
         assert!(b4.energy_pj < b6.energy_pj * 0.6);
         assert!(b4.latency_ns < b6.latency_ns);
@@ -982,11 +986,11 @@ mod tests {
     #[test]
     fn layer_units_match_router_packing_and_capacity_scales() {
         let s = Scheduler::new(&MacroParams::default());
-        let op4 = OperatingPoint { a_bits: 4, w_bits: 4, cb: CbMode::Off };
+        let op4 = OperatingPoint::new(4, 4, CbMode::Off);
         // qkv (768 → 2304) at 4b: ⌊78/4⌋ = 19 outputs per macro → 122
         // units (the router's whole-output packing, not plane packing).
         assert_eq!(s.layer_units(&shape(768, 2304, 1), op4), 122);
-        let op6 = OperatingPoint { a_bits: 6, w_bits: 6, cb: CbMode::On };
+        let op6 = OperatingPoint::new(6, 6, CbMode::On);
         // fc2 (3072 → 768) at 6b: 3 row tiles × ⌈768/13⌉ = 180 units.
         assert_eq!(s.layer_units(&shape(3072, 768, 1), op6), 180);
         assert_eq!(Scheduler::layer_weight_bits(&shape(3072, 768, 1), op6), 3072 * 768 * 6);
@@ -1048,11 +1052,11 @@ mod tests {
             let k = g.usize(1, 4096);
             let n = g.usize(1, 512);
             let m = g.usize(1, 64);
-            let op = OperatingPoint {
-                a_bits: g.usize(1, 8) as u32,
-                w_bits: g.usize(1, 8) as u32,
-                cb: if g.bool() { CbMode::On } else { CbMode::Off },
-            };
+            let op = OperatingPoint::new(
+                g.usize(1, 8) as u32,
+                g.usize(1, 8) as u32,
+                if g.bool() { CbMode::On } else { CbMode::Off },
+            );
             let a = s.plan_linear(&shape(k, n, m), op);
             let b = s.plan_linear(&shape(k, n, m + 1), op);
             if a.energy_pj <= 0.0 || a.latency_ns <= 0.0 {

@@ -1394,7 +1394,7 @@ mod tests {
         p.sigma_cmp_lsb = 0.0;
         p.sigma_cmp_offset_lsb = 0.0;
         p.temperature_k = 0.0;
-        let op = OperatingPoint { a_bits: 2, w_bits: 2, cb: crate::cim::params::CbMode::Off };
+        let op = OperatingPoint::new(2, 2, crate::cim::params::CbMode::Off);
         let plan = PrecisionPlan { name: "test 2b", attention: op, mlp: op };
         let mut cfg = VitConfig::default();
         cfg.image = 16;
@@ -1552,7 +1552,7 @@ mod tests {
         p.sigma_cmp_lsb = 0.0;
         p.sigma_cmp_offset_lsb = 0.0;
         p.temperature_k = 0.0;
-        let op = OperatingPoint { a_bits: 2, w_bits: 2, cb: crate::cim::params::CbMode::Off };
+        let op = OperatingPoint::new(2, 2, crate::cim::params::CbMode::Off);
         let plan = PrecisionPlan { name: "test 2b", attention: op, mlp: op };
         let mut cfg = VitConfig::default();
         cfg.image = 16;
@@ -1671,7 +1671,7 @@ mod tests {
         p.active_rows = 64;
         p.rows = 64;
         p.cols = 12;
-        let op = OperatingPoint { a_bits: 2, w_bits: 2, cb: crate::cim::params::CbMode::Off };
+        let op = OperatingPoint::new(2, 2, crate::cim::params::CbMode::Off);
         let mut exec = SimExecutor::new(&p, 64, 10, op, 2).unwrap();
         let srv = test_server();
         let conn = srv.open_conn();
@@ -1710,7 +1710,7 @@ mod tests {
         p.sigma_cmp_lsb = 0.0;
         p.sigma_cmp_offset_lsb = 0.0;
         p.temperature_k = 0.0;
-        let op = OperatingPoint { a_bits: 2, w_bits: 2, cb: crate::cim::params::CbMode::Off };
+        let op = OperatingPoint::new(2, 2, crate::cim::params::CbMode::Off);
         let mut exec = SimExecutor::with_dies(&p, 3072, 10, op, 2, 2).unwrap();
         assert_eq!(exec.die_count(), 2);
         let srv = test_server();
@@ -1794,7 +1794,7 @@ mod tests {
         p.sigma_cmp_lsb = 0.0;
         p.sigma_cmp_offset_lsb = 0.0;
         p.temperature_k = 0.0;
-        let op = OperatingPoint { a_bits: 2, w_bits: 2, cb: crate::cim::params::CbMode::Off };
+        let op = OperatingPoint::new(2, 2, crate::cim::params::CbMode::Off);
         let plan = PrecisionPlan { name: "test 2b", attention: op, mlp: op };
         let mut cfg = VitConfig::default();
         cfg.image = 16;
@@ -1830,7 +1830,7 @@ mod tests {
         p.sigma_cmp_lsb = 0.0;
         p.sigma_cmp_offset_lsb = 0.0;
         p.temperature_k = 0.0;
-        let op = OperatingPoint { a_bits: 2, w_bits: 2, cb: crate::cim::params::CbMode::Off };
+        let op = OperatingPoint::new(2, 2, crate::cim::params::CbMode::Off);
         let plan = PrecisionPlan { name: "test 2b", attention: op, mlp: op };
         let mut cfg = VitConfig::default();
         cfg.image = 16;

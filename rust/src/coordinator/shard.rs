@@ -124,6 +124,17 @@ impl MacroShards {
         row_tiles: usize,
     ) -> Result<Self, String> {
         op.validate()?;
+        // The operating point's per-layer voting configuration overrides
+        // the deployment default *here*, at the single point every
+        // executor path (DieBank pools, SimExecutor, direct shards)
+        // funnels through. The cloned params reach both the SAR model
+        // (comparison counts, noise draws) and each macro's EnergyModel,
+        // so behavior and measured energy price the same point the
+        // planner does (`Scheduler::plan_linear` applies the same
+        // override) — planned == measured by construction.
+        let params = &params
+            .clone()
+            .with_mv(op.noise.mv_votes as usize, op.noise.mv_last_bits as usize);
         let k = w.len();
         if k == 0 {
             return Err("empty weight matrix".to_string());
@@ -353,7 +364,7 @@ mod tests {
     }
 
     fn op_2b() -> OperatingPoint {
-        OperatingPoint { a_bits: 2, w_bits: 2, cb: CbMode::Off }
+        OperatingPoint::new(2, 2, CbMode::Off)
     }
 
     fn tile(k: usize, n: usize, bits: u32, seed: u64) -> (Vec<Vec<i32>>, Vec<Vec<i32>>) {
@@ -458,11 +469,11 @@ mod tests {
         assert!(MacroShards::new(&p, &[vec![]], op_2b(), 1).is_err());
         let ragged = vec![vec![1, 0], vec![1]];
         assert!(MacroShards::new(&p, &ragged, op_2b(), 1).is_err());
-        let wide_op = OperatingPoint { a_bits: 2, w_bits: 13, cb: CbMode::Off };
+        let wide_op = OperatingPoint::new(2, 13, CbMode::Off);
         assert!(MacroShards::new(&p, &[vec![1i32]], wide_op, 1).is_err());
         // Oversized bit widths return Err (no shift-overflow panics), and
         // SimExecutor inherits the same guard.
-        let huge_a = OperatingPoint { a_bits: 33, w_bits: 2, cb: CbMode::Off };
+        let huge_a = OperatingPoint::new(33, 2, CbMode::Off);
         assert!(MacroShards::new(&p, &[vec![1i32]], huge_a, 1).is_err());
         assert!(SimExecutor::new(&p, 4, 2, huge_a, 1).is_err());
         // Activation length must match the layer's k.

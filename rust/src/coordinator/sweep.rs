@@ -1,0 +1,603 @@
+//! Accuracy-vs-energy sweep harness: the accuracy tier's measurement
+//! loop (`crcim sweep`, `rust/benches/accuracy.rs`, `BENCH_accuracy.json`).
+//!
+//! The rig runs the workload corpus ([`EvalSet::synthetic`]) through a
+//! small noisy encoder once per **vote point** — a per-layer majority-
+//! vote assignment carried by [`OperatingPoint::noise`] — and scores
+//! every point three ways against the exact zero-noise reference walk
+//! ([`ModelExecutor::reference_ints`], which shares the executor's
+//! [`super::periphery`] glue):
+//!
+//! - **accuracy** — fraction of images whose noisy logit argmax matches
+//!   the reference argmax (the deterministic stand-in for CIFAR top-1);
+//! - **SQNR** — logit-domain `10·log10(Σ ref² / Σ (got − ref)²)` over
+//!   the whole corpus;
+//! - **energy** — measured conversion energy per inference from the
+//!   executor's bank counters, cross-checked against
+//!   [`Scheduler::plan_linear`] priced at the same per-layer vote
+//!   points (planned == measured by construction: both sides read the
+//!   macro parameter set produced by the same
+//!   `MacroParams::with_mv` override).
+//!
+//! Besides the uniform vote grid, the sweep evaluates the **co-design
+//! point**: [`codesign_votes`] searches per-layer assignments that are
+//! strictly cheaper than uniform paper voting while keeping the modeled
+//! comparator noise power (via [`Comparator::effective_sigma_mv`] and
+//! the [`super::sac`] circuit↔graph bridge) within the uniform budget.
+//! [`pareto_frontier`] then keeps the non-dominated points; sorted by
+//! energy the frontier is monotone in (accuracy, SQNR) by construction.
+
+use crate::cim::comparator::Comparator;
+use crate::cim::params::{CbMode, MacroParams};
+use crate::coordinator::pipeline::{ModelExecutor, PipelineConfig};
+use crate::coordinator::sac::kernel_noise_sigma_for_row_tiles;
+use crate::coordinator::scheduler::Scheduler;
+use crate::util::json::Json;
+use crate::util::stats::sum_ordered;
+use crate::vit::graph::ModelGraph;
+use crate::vit::plan::{OperatingPoint, PrecisionPlan};
+use crate::vit::VitConfig;
+use crate::workload::corpus::EvalSet;
+
+/// SQNR cap reported when the noisy walk reproduces the reference
+/// exactly (zero error power; cannot happen with a nonzero comparator
+/// sigma, but the report must stay finite).
+const SQNR_CAP_DB: f64 = 99.0;
+
+/// Sweep configuration: corpus size, model geometry and the vote grid.
+#[derive(Clone, Debug)]
+pub struct SweepConfig {
+    /// Corpus images (one activation vector each).
+    pub images: usize,
+    /// Synthetic-corpus image side (pixels).
+    pub image: usize,
+    /// Corpus seed.
+    pub seed: u64,
+    /// Encoder geometry.
+    pub cfg: VitConfig,
+    /// Uniform vote counts to sweep (each also a co-design move).
+    pub grid: Vec<u32>,
+    /// Boosted trailing SAR bits at every swept point.
+    pub mv_last_bits: u32,
+}
+
+impl SweepConfig {
+    /// The full sweep: the paper's vote ladder around the 6×3 point.
+    pub fn full() -> Self {
+        SweepConfig {
+            images: 32,
+            image: 16,
+            seed: 0x5EE9,
+            cfg: Self::rig_cfg(),
+            // The paper's ladder around 6×3 plus the 8-vote step: the
+            // co-design exchange pays an attention-layer cut back with
+            // a cheap fc-layer 6→8 raise, which the coarser 6→12 jump
+            // alone cannot do profitably at this geometry.
+            grid: vec![1, 2, 3, 6, 8, 12],
+            mv_last_bits: 3,
+        }
+    }
+
+    /// CI-sized smoke sweep (`crcim sweep --smoke`, CRCIM_BENCH_FAST).
+    pub fn smoke() -> Self {
+        let mut c = Self::full();
+        c.images = 8;
+        c.grid = vec![1, 6, 12];
+        c
+    }
+
+    /// The rig's encoder geometry: two blocks with `d_ff == dim`, so
+    /// the 4b MLP linears stay small enough in conversions that one
+    /// fc-layer vote raise can pay the noise bill of an attention-layer
+    /// vote cut — the heterogeneity the co-design search trades on.
+    fn rig_cfg() -> VitConfig {
+        VitConfig { image: 16, patch: 4, dim: 48, depth: 2, heads: 4, mlp_ratio: 1, num_classes: 4 }
+    }
+}
+
+/// The noisy measurement rig: the pipeline test geometry (6b ADC,
+/// 64×12 array) with every noise source quiet **except** the comparator
+/// — the one knob majority voting acts on — so accuracy/SQNR deltas
+/// across vote points are attributable to voting alone.
+pub fn rig_params() -> MacroParams {
+    let mut p = MacroParams::default();
+    p.adc_bits = 6;
+    p.active_rows = 64;
+    p.rows = 64;
+    p.cols = 12;
+    p.sigma_cu_rel = 0.0;
+    p.nonlin_cubic_lsb = 0.0;
+    p.sigma_cmp_offset_lsb = 0.0;
+    p.temperature_k = 0.0;
+    p
+}
+
+/// The rig's precision plan: CB on everywhere (votes only act on
+/// boosted bits), attention at 2b and MLP at 4b. The asymmetric bit
+/// widths split the classes' noise-gain-per-conversion ratio
+/// (`Σ4^a·Σ4^b` vs `a·w` scaling), which is what gives the co-design
+/// search genuinely different per-layer trade curves.
+pub fn rig_plan() -> PrecisionPlan {
+    PrecisionPlan {
+        name: "sweep rig: attn 2b w/CB, MLP 4b w/CB",
+        attention: OperatingPoint::new(2, 2, CbMode::On),
+        mlp: OperatingPoint::new(4, 4, CbMode::On),
+    }
+}
+
+/// Overwrite the graph's per-layer vote points (`votes[i]` applies to
+/// `graph.layers[i]`; CB-off layers keep the assignment but it has no
+/// behavioral effect — `comparisons_per_conversion(Off)` ignores it).
+pub fn set_votes(graph: &mut ModelGraph, votes: &[u32], mv_last_bits: u32) {
+    assert_eq!(votes.len(), graph.layers.len(), "one vote count per layer");
+    for (l, &v) in graph.layers.iter_mut().zip(votes) {
+        l.op = l.op.with_votes(v, mv_last_bits);
+    }
+}
+
+/// One evaluated vote point.
+#[derive(Clone, Debug)]
+pub struct SweepPoint {
+    pub label: String,
+    /// Per-layer vote counts, layer order.
+    pub votes: Vec<u32>,
+    /// Reference-argmax match rate over the corpus [0, 1].
+    pub accuracy: f64,
+    /// Logit-domain SQNR vs the exact reference walk [dB].
+    pub sqnr_db: f64,
+    /// Measured conversion energy per inference [pJ] (bank counters).
+    pub energy_pj: f64,
+    /// The same energy priced by `Scheduler::plan_linear` [pJ].
+    pub planned_energy_pj: f64,
+    /// Modeled comparator noise power (the co-design objective).
+    pub modeled_noise: f64,
+    /// SQNR figure of merit (TOPS/W · 10^(SQNR/20)).
+    pub fom: f64,
+}
+
+/// Modeled comparator noise power of one layer at `votes`: the
+/// per-output kernel sigma from the [`super::sac`] circuit↔graph bridge
+/// (row tiles × per-bit gains), squared, times the layer's output
+/// count — with the comparator sigma first collapsed through
+/// [`Comparator::effective_sigma_mv`]. CB-off layers take the raw
+/// sigma (no boosted bits to vote on).
+pub fn layer_noise_power(
+    params: &MacroParams,
+    sched: &Scheduler,
+    layer: &crate::vit::graph::GraphLayer,
+    votes: u32,
+) -> f64 {
+    let cmp = Comparator::new(params.sigma_cmp_lsb, 0.0);
+    let sigma = match layer.op.cb {
+        CbMode::On => cmp.effective_sigma_mv(votes.max(1) as usize),
+        CbMode::Off => params.sigma_cmp_lsb,
+    };
+    let tiles = sched.row_tiles(layer.shape.k) as usize;
+    let per_output =
+        kernel_noise_sigma_for_row_tiles(tiles, layer.op.a_bits, layer.op.w_bits, sigma);
+    layer.shape.n as f64 * per_output * per_output
+}
+
+/// Planner-priced conversion energy [pJ] of the whole graph with
+/// `vectors` activation vectors per layer (what one sweep pass feeds).
+pub fn planned_energy_pj(sched: &Scheduler, graph: &ModelGraph, vectors: usize) -> f64 {
+    sum_ordered(graph.layers.iter().map(|l| {
+        let mut shape = l.shape;
+        shape.m = vectors.max(1);
+        sched.plan_linear(&shape, l.op).energy_pj
+    }))
+}
+
+/// The co-design result: the chosen assignment plus the modeled
+/// quantities the selection was made under.
+#[derive(Clone, Debug)]
+pub struct Codesign {
+    /// Per-layer vote counts, layer order.
+    pub votes: Vec<u32>,
+    /// Planner energy per vector at the chosen assignment [pJ].
+    pub energy_pj: f64,
+    /// Planner energy per vector at the uniform baseline [pJ].
+    pub uniform_energy_pj: f64,
+    /// Modeled noise power at the chosen assignment.
+    pub noise: f64,
+    /// Modeled noise budget (= the uniform baseline's noise power).
+    pub budget: f64,
+}
+
+/// Greedy exchange search for a per-layer vote assignment strictly
+/// cheaper than uniform `baseline` voting at equal-or-better modeled
+/// noise power. Starting from the uniform assignment, it repeatedly
+/// applies the best feasible one- or two-layer move (cut one layer's
+/// votes, optionally raising another layer's to pay the noise back)
+/// until no move lowers energy. Energy decreases strictly every step
+/// and feasibility (noise ≤ budget) is an invariant, so the result can
+/// never be worse than the uniform baseline it starts from.
+pub fn codesign_votes(
+    params: &MacroParams,
+    graph: &ModelGraph,
+    grid: &[u32],
+    mv_last_bits: u32,
+    baseline: u32,
+) -> Codesign {
+    let sched = Scheduler::with_topology(params, 1, 1);
+    let layers = &graph.layers;
+    // Per-layer trade tables over the grid (per activation vector).
+    let energy_of = |l: &crate::vit::graph::GraphLayer, v: u32| -> f64 {
+        let mut shape = l.shape;
+        shape.m = 1;
+        sched.plan_linear(&shape, l.op.with_votes(v, mv_last_bits)).energy_pj
+    };
+    let noise_of =
+        |l: &crate::vit::graph::GraphLayer, v: u32| layer_noise_power(params, &sched, l, v);
+    // Movable layers: voting only acts where the CSNR boost is on.
+    let movable: Vec<usize> =
+        (0..layers.len()).filter(|&i| layers[i].op.cb == CbMode::On).collect();
+    let mut votes = vec![baseline; layers.len()];
+    let total_energy = |vs: &[u32]| -> f64 {
+        sum_ordered(layers.iter().zip(vs).map(|(l, &v)| energy_of(l, v)))
+    };
+    let total_noise = |vs: &[u32]| -> f64 {
+        sum_ordered(layers.iter().zip(vs).map(|(l, &v)| noise_of(l, v)))
+    };
+    let budget = total_noise(&votes);
+    let uniform_energy_pj = total_energy(&votes);
+    let mut energy = uniform_energy_pj;
+    let mut noise = budget;
+    loop {
+        // Best feasible strictly-improving move: change one movable
+        // layer's votes, optionally paired with a second layer's
+        // change to buy the noise budget back. O((L·G)²) per step on a
+        // handful of layers — exact enough to never miss an exchange.
+        let mut best: Option<(f64, Vec<(usize, u32)>)> = None;
+        let mut consider = |delta: &[(usize, u32)]| {
+            let mut vs = votes.clone();
+            for &(i, v) in delta {
+                vs[i] = v;
+            }
+            let e = total_energy(&vs);
+            let n = total_noise(&vs);
+            if n <= budget + 1e-9 && e + 1e-9 < energy {
+                let gain = energy - e;
+                if best.as_ref().map(|(g, _)| gain > *g).unwrap_or(true) {
+                    best = Some((gain, delta.to_vec()));
+                }
+            }
+        };
+        for &i in &movable {
+            for &vi in grid {
+                if vi == votes[i] {
+                    continue;
+                }
+                consider(&[(i, vi)]);
+                for &j in &movable {
+                    if j == i {
+                        continue;
+                    }
+                    for &vj in grid {
+                        if vj == votes[j] {
+                            continue;
+                        }
+                        consider(&[(i, vi), (j, vj)]);
+                    }
+                }
+            }
+        }
+        match best {
+            Some((_, delta)) => {
+                for (i, v) in delta {
+                    votes[i] = v;
+                }
+                energy = total_energy(&votes);
+                noise = total_noise(&votes);
+            }
+            None => break,
+        }
+    }
+    Codesign { votes, energy_pj: energy, uniform_energy_pj, noise, budget }
+}
+
+/// Evaluate one vote assignment on the corpus: fresh executor, one
+/// forward wave of every image, scored against the shared zero-noise
+/// reference logits.
+fn eval_point(
+    label: &str,
+    params: &MacroParams,
+    base: &ModelGraph,
+    votes: &[u32],
+    mv_last_bits: u32,
+    xs: &[Vec<i32>],
+    refs: &[Vec<i64>],
+) -> Result<SweepPoint, String> {
+    let mut graph = base.clone();
+    set_votes(&mut graph, votes, mv_last_bits);
+    let sched = Scheduler::with_topology(params, 1, 1);
+    let planned = planned_energy_pj(&sched, &graph, xs.len());
+    let modeled_noise = sum_ordered(
+        graph.layers.iter().zip(votes).map(|(l, &v)| layer_noise_power(params, &sched, l, v)),
+    );
+    let mut exec = ModelExecutor::new(params, graph, PipelineConfig::default())?;
+    let got = exec.forward_ints(xs)?;
+    let costs = exec.layer_costs();
+    let energy_total = sum_ordered(costs.iter().map(|c| c.energy_pj));
+    let mut matches = 0usize;
+    let mut sig = 0.0f64;
+    let mut err = 0.0f64;
+    for (g, r) in got.iter().zip(refs) {
+        if argmax(g) == argmax(r) {
+            matches += 1;
+        }
+        sig += sum_ordered(r.iter().map(|&v| (v as f64) * (v as f64)));
+        err += sum_ordered(g.iter().zip(r).map(|(&a, &b)| {
+            let d = (a - b) as f64;
+            d * d
+        }));
+    }
+    let sqnr_db =
+        if err > 0.0 { (10.0 * (sig / err).log10()).min(SQNR_CAP_DB) } else { SQNR_CAP_DB };
+    // 1b-normalized efficiency of this point feeds the paper's SQNR FoM.
+    let ops_1b = sum_ordered(exec.graph.layers.iter().map(|l| {
+        let mut shape = l.shape;
+        shape.m = xs.len().max(1);
+        sched.plan_linear(&shape, l.op).ops_1b
+    }));
+    let tops_per_watt = ops_1b / energy_total.max(1e-12);
+    Ok(SweepPoint {
+        label: label.to_string(),
+        votes: votes.to_vec(),
+        accuracy: matches as f64 / xs.len().max(1) as f64,
+        sqnr_db,
+        energy_pj: energy_total / xs.len().max(1) as f64,
+        planned_energy_pj: planned / xs.len().max(1) as f64,
+        modeled_noise,
+        fom: crate::metrics::fom::sqnr_fom(tops_per_watt, sqnr_db),
+    })
+}
+
+fn argmax(v: &[i64]) -> usize {
+    let mut best = 0usize;
+    for (i, &x) in v.iter().enumerate() {
+        if x > v[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+/// Non-dominated subset, sorted by energy ascending. Quality is the
+/// lexicographic pair (accuracy, SQNR): point `p` dominates `q` when
+/// `p` is no more expensive and lexicographically no worse, with at
+/// least one strict inequality. Sorting survivors by energy therefore
+/// yields a frontier whose quality is strictly increasing — the
+/// monotone accuracy-vs-energy curve the report publishes.
+pub fn pareto_frontier(points: &[SweepPoint]) -> Vec<SweepPoint> {
+    let quality_ge = |a: &SweepPoint, b: &SweepPoint| {
+        a.accuracy > b.accuracy || (a.accuracy == b.accuracy && a.sqnr_db >= b.sqnr_db)
+    };
+    let mut keep: Vec<SweepPoint> = Vec::new();
+    for (i, p) in points.iter().enumerate() {
+        let dominated = points.iter().enumerate().any(|(j, q)| {
+            if j == i {
+                return false;
+            }
+            // Exact triple ties break by index so exactly one survives.
+            let tie = q.energy_pj == p.energy_pj
+                && q.accuracy == p.accuracy
+                && q.sqnr_db == p.sqnr_db;
+            q.energy_pj <= p.energy_pj && quality_ge(q, p) && (!tie || j < i)
+        });
+        if !dominated {
+            keep.push(p.clone());
+        }
+    }
+    keep.sort_by(|a, b| a.energy_pj.partial_cmp(&b.energy_pj).unwrap());
+    keep
+}
+
+/// The whole sweep: grid points + the co-design point, frontier, JSON.
+pub struct SweepReport {
+    pub points: Vec<SweepPoint>,
+    pub pareto: Vec<SweepPoint>,
+    pub codesign: Codesign,
+    pub json: Json,
+}
+
+/// Run the sweep end to end (the `crcim sweep` / bench entry point).
+pub fn run_sweep(cfg: &SweepConfig) -> Result<SweepReport, String> {
+    let params = rig_params();
+    let plan = rig_plan();
+    let base = ModelGraph::encoder(&cfg.cfg, 1, &plan);
+    let set = EvalSet::synthetic(cfg.images, cfg.image, cfg.seed);
+    let images: Vec<Vec<f32>> =
+        (0..set.n).map(|i| set.image_slice(i).to_vec()).collect();
+    // Featurization and the zero-noise reference are vote-independent:
+    // compute both once, against the baseline graph.
+    let probe = ModelExecutor::new(&params, base.clone(), PipelineConfig::default())?;
+    let xs = probe.featurize_images(&images);
+    let refs = probe.reference_ints(&xs);
+    let layer_count = base.layers.len();
+    let mut points = Vec::new();
+    for &v in &cfg.grid {
+        let votes = vec![v; layer_count];
+        points.push(eval_point(
+            &format!("uniform-{v}"),
+            &params,
+            &base,
+            &votes,
+            cfg.mv_last_bits,
+            &xs,
+            &refs,
+        )?);
+    }
+    let codesign = codesign_votes(&params, &base, &cfg.grid, cfg.mv_last_bits, 6);
+    points.push(eval_point(
+        "codesign",
+        &params,
+        &base,
+        &codesign.votes,
+        cfg.mv_last_bits,
+        &xs,
+        &refs,
+    )?);
+    let pareto = pareto_frontier(&points);
+    let json = report_json(cfg, &params, &points, &pareto, &codesign);
+    Ok(SweepReport { points, pareto, codesign, json })
+}
+
+fn point_json(p: &SweepPoint) -> Json {
+    let mut o = Json::obj();
+    o.set("label", Json::str(p.label.clone()));
+    o.set("votes", Json::arr(p.votes.iter().map(|&v| Json::num(v as f64))));
+    o.set("accuracy", Json::num(p.accuracy));
+    o.set("sqnr_db", Json::num(p.sqnr_db));
+    o.set("energy_pj_per_inference", Json::num(p.energy_pj));
+    o.set("planned_energy_pj_per_inference", Json::num(p.planned_energy_pj));
+    let rel = (p.energy_pj - p.planned_energy_pj).abs() / p.planned_energy_pj.max(1e-12);
+    o.set("planned_rel_err", Json::num(rel));
+    o.set("modeled_noise", Json::num(p.modeled_noise));
+    o.set("sqnr_fom", Json::num(p.fom));
+    Json::Obj(o)
+}
+
+fn report_json(
+    cfg: &SweepConfig,
+    params: &MacroParams,
+    points: &[SweepPoint],
+    pareto: &[SweepPoint],
+    codesign: &Codesign,
+) -> Json {
+    let mut root = Json::obj();
+    root.set("title", Json::str("accuracy-vs-energy vote sweep"));
+    root.set("model", Json::str(rig_plan().name));
+    root.set("images", Json::num(cfg.images as f64));
+    root.set("layers", Json::num(4.0 * cfg.cfg.depth as f64));
+    root.set("sigma_cmp_lsb", Json::num(params.sigma_cmp_lsb));
+    root.set("mv_last_bits", Json::num(cfg.mv_last_bits as f64));
+    root.set("vote_grid", Json::arr(cfg.grid.iter().map(|&v| Json::num(v as f64))));
+    root.set("points", Json::arr(points.iter().map(point_json)));
+    root.set("pareto_points", Json::arr(pareto.iter().map(point_json)));
+    // Scalar mirror of pareto_points.len() so the grep-based schema
+    // guard (scripts/check_bench_schema.sh) can assert frontier size
+    // without parsing nested JSON.
+    root.set("pareto_count", Json::num(pareto.len() as f64));
+    let mut cd = Json::obj();
+    cd.set("votes", Json::arr(codesign.votes.iter().map(|&v| Json::num(v as f64))));
+    cd.set("energy_pj_per_vector", Json::num(codesign.energy_pj));
+    cd.set("uniform6_energy_pj_per_vector", Json::num(codesign.uniform_energy_pj));
+    cd.set(
+        "energy_vs_uniform6",
+        Json::num(codesign.energy_pj / codesign.uniform_energy_pj.max(1e-12)),
+    );
+    cd.set("modeled_noise", Json::num(codesign.noise));
+    cd.set("noise_budget", Json::num(codesign.budget));
+    root.set("codesign", Json::Obj(cd));
+    Json::Obj(root)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_sweep() -> SweepConfig {
+        let mut c = SweepConfig::smoke();
+        c.images = 4;
+        c
+    }
+
+    #[test]
+    fn codesign_is_strictly_cheaper_than_uniform_six_within_budget() {
+        let params = rig_params();
+        let graph = ModelGraph::encoder(&SweepConfig::full().cfg, 1, &rig_plan());
+        let cd = codesign_votes(&params, &graph, &[1, 2, 3, 6, 8, 12], 3, 6);
+        assert!(
+            cd.energy_pj < cd.uniform_energy_pj - 1e-9,
+            "co-design must beat uniform-6: {} vs {}",
+            cd.energy_pj,
+            cd.uniform_energy_pj
+        );
+        assert!(cd.noise <= cd.budget + 1e-9, "noise {} over budget {}", cd.noise, cd.budget);
+        assert!(cd.votes.iter().any(|&v| v != 6), "assignment must be non-uniform");
+        assert_eq!(cd.votes.len(), graph.layers.len());
+    }
+
+    #[test]
+    fn codesign_search_is_deterministic() {
+        let params = rig_params();
+        let graph = ModelGraph::encoder(&SweepConfig::full().cfg, 1, &rig_plan());
+        let a = codesign_votes(&params, &graph, &[1, 2, 3, 6, 8, 12], 3, 6);
+        let b = codesign_votes(&params, &graph, &[1, 2, 3, 6, 8, 12], 3, 6);
+        assert_eq!(a.votes, b.votes);
+        assert_eq!(a.energy_pj, b.energy_pj);
+    }
+
+    #[test]
+    fn pareto_frontier_is_monotone_and_nondominated() {
+        let mk = |e: f64, acc: f64, s: f64| SweepPoint {
+            label: String::new(),
+            votes: vec![],
+            accuracy: acc,
+            sqnr_db: s,
+            energy_pj: e,
+            planned_energy_pj: e,
+            modeled_noise: 0.0,
+            fom: 0.0,
+        };
+        let pts = vec![
+            mk(1.0, 0.5, 10.0),
+            mk(2.0, 0.5, 9.0),  // dominated: dearer, worse sqnr
+            mk(3.0, 0.7, 12.0),
+            mk(2.5, 0.7, 12.0), // dominates the 3.0 twin
+            mk(4.0, 0.9, 8.0),  // frontier: best accuracy
+        ];
+        let front = pareto_frontier(&pts);
+        let labels: Vec<f64> = front.iter().map(|p| p.energy_pj).collect();
+        assert_eq!(labels, vec![1.0, 2.5, 4.0]);
+        for w in front.windows(2) {
+            assert!(w[1].energy_pj > w[0].energy_pj);
+            assert!(
+                w[1].accuracy > w[0].accuracy
+                    || (w[1].accuracy == w[0].accuracy && w[1].sqnr_db > w[0].sqnr_db)
+            );
+        }
+    }
+
+    #[test]
+    fn sweep_runs_and_prices_planned_equal_to_measured() {
+        let report = run_sweep(&tiny_sweep()).unwrap();
+        assert!(report.pareto.len() >= 2, "expected >= 2 frontier points");
+        for p in &report.points {
+            let rel = (p.energy_pj - p.planned_energy_pj).abs() / p.planned_energy_pj;
+            assert!(
+                rel < 1e-9,
+                "{}: measured {} != planned {}",
+                p.label,
+                p.energy_pj,
+                p.planned_energy_pj
+            );
+            assert!((0.0..=1.0).contains(&p.accuracy));
+            assert!(p.sqnr_db.is_finite());
+        }
+        // The report carries the schema-checked keys.
+        for key in ["points", "pareto_points", "codesign", "vote_grid", "images"] {
+            assert!(report.json.get_path(key).is_some(), "missing report key {key}");
+        }
+        assert!(
+            report.json.get_path("codesign.energy_vs_uniform6").and_then(|v| v.as_f64()).unwrap()
+                < 1.0
+        );
+    }
+
+    #[test]
+    fn more_votes_never_increase_modeled_noise() {
+        let params = rig_params();
+        let graph = ModelGraph::encoder(&SweepConfig::full().cfg, 1, &rig_plan());
+        let sched = Scheduler::with_topology(&params, 1, 1);
+        for l in &graph.layers {
+            let mut last = f64::INFINITY;
+            for &v in &[1u32, 2, 3, 6, 8, 12] {
+                let n = layer_noise_power(&params, &sched, l, v);
+                assert!(n <= last + 1e-12, "{}: noise grew {last} -> {n} at v={v}", l.name());
+                last = n;
+            }
+        }
+    }
+}

@@ -4,6 +4,7 @@
 //!   characterize   Fig. 5-style column characterization (INL/noise/SQNR/CSNR)
 //!   summary        Fig. 6-style performance summary vs baselines
 //!   plan           SAC plan costs over the ViT workload (Fig. 4)
+//!   sweep          accuracy-vs-energy sweep over per-layer vote points
 //!   lint           determinism-contract static analysis over the sources
 //!   serve          TCP inference server over the AOT ViT artifacts (pjrt)
 //!   infer          one-shot batch inference over the eval set (pjrt)
@@ -32,7 +33,9 @@ fn main() {
     let (cmd, rest) = match argv.split_first() {
         Some((c, r)) => (c.clone(), r.to_vec()),
         None => {
-            eprintln!("usage: crcim <characterize|summary|plan|lint|serve|infer> [options]");
+            eprintln!(
+                "usage: crcim <characterize|summary|plan|sweep|lint|serve|infer> [options]"
+            );
             std::process::exit(2);
         }
     };
@@ -40,6 +43,7 @@ fn main() {
         "characterize" => cmd_characterize(rest),
         "summary" => cmd_summary(rest),
         "plan" => cmd_plan(rest),
+        "sweep" => cmd_sweep(rest),
         "lint" => cmd_lint(rest),
         "serve" => cmd_serve(rest),
         "infer" => cmd_infer(rest),
@@ -178,6 +182,47 @@ fn cmd_plan(argv: Vec<String>) -> CliResult {
             d.kv_hits, d.kv_misses, d.kv_evictions, d.kv_hit_rate
         );
     }
+    Ok(())
+}
+
+fn cmd_sweep(argv: Vec<String>) -> CliResult {
+    use cr_cim::coordinator::sweep::{run_sweep, SweepConfig};
+    let args = parse_or_help(
+        Args::new("crcim sweep", "accuracy-vs-energy sweep over per-layer vote points")
+            .opt("out", "target/bench-reports/BENCH_accuracy.json", "report path")
+            .opt("images", "", "override corpus size")
+            .flag("smoke", "CI-sized sweep (fewer images, coarser grid)"),
+        argv,
+    )?;
+    let mut cfg = if args.get_flag("smoke") || std::env::var_os("CRCIM_BENCH_FAST").is_some() {
+        SweepConfig::smoke()
+    } else {
+        SweepConfig::full()
+    };
+    let images = args.get("images").unwrap_or_default();
+    if !images.is_empty() {
+        cfg.images = images.parse::<usize>().map_err(|e| format!("--images: {e}"))?;
+    }
+    let report = run_sweep(&cfg)?;
+    for p in &report.points {
+        println!(
+            "{:>12}: accuracy {:.3} | SQNR {:>5.1} dB | {:>9.1} pJ/inf | votes {:?}",
+            p.label, p.accuracy, p.sqnr_db, p.energy_pj, p.votes
+        );
+    }
+    println!(
+        "pareto frontier: {} of {} points | codesign energy {:.3}x uniform-6 (budget kept: {})",
+        report.pareto.len(),
+        report.points.len(),
+        report.codesign.energy_pj / report.codesign.uniform_energy_pj.max(1e-12),
+        report.codesign.noise <= report.codesign.budget + 1e-9
+    );
+    let out = std::path::PathBuf::from(args.get("out").unwrap());
+    if let Some(dir) = out.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    std::fs::write(&out, report.json.to_string_pretty())?;
+    println!("[accuracy report written to {}]", out.display());
     Ok(())
 }
 

@@ -5,6 +5,40 @@
 use crate::cim::netstats::LayerClass;
 use crate::cim::params::CbMode;
 
+/// Per-layer majority-voting point: how hard the SAR ADC votes on its
+/// noise-critical LSB decisions when the CSNR boost (`CbMode::On`) is
+/// active. The paper's co-design thesis is that this is a *per-layer*
+/// knob: noise-tolerant layers take cheap (low-vote) points while
+/// noise-critical layers pay for more comparisons. `Default` is the
+/// paper's 6×-MV-on-last-3-bits point, matching
+/// `MacroParams::default()`, so a plan that never mentions voting is
+/// byte-for-byte the pre-NoisePoint behavior.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct NoisePoint {
+    /// Majority votes per boosted comparison (≥ 1; 1 = no voting).
+    pub mv_votes: u32,
+    /// How many trailing (LSB) SAR bits are boosted.
+    pub mv_last_bits: u32,
+}
+
+impl Default for NoisePoint {
+    fn default() -> Self {
+        NoisePoint { mv_votes: 6, mv_last_bits: 3 }
+    }
+}
+
+impl NoisePoint {
+    /// The paper's Fig. 5 point: 6 votes on the last 3 bits.
+    pub fn paper() -> Self {
+        Self::default()
+    }
+
+    /// A voting point at `votes` keeping the paper's 3 boosted bits.
+    pub fn votes(mv_votes: u32) -> Self {
+        NoisePoint { mv_votes, mv_last_bits: 3 }
+    }
+}
+
 /// Per-class operating point.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct OperatingPoint {
@@ -14,9 +48,22 @@ pub struct OperatingPoint {
     pub w_bits: u32,
     /// Whether the CSNR boost (majority voting) is active.
     pub cb: CbMode,
+    /// Majority-voting point used when `cb` is `On` (ignored when `Off`).
+    pub noise: NoisePoint,
 }
 
 impl OperatingPoint {
+    /// Operating point at the default (paper) voting point.
+    pub fn new(a_bits: u32, w_bits: u32, cb: CbMode) -> Self {
+        OperatingPoint { a_bits, w_bits, cb, noise: NoisePoint::default() }
+    }
+
+    /// Same point with an explicit voting configuration.
+    pub fn with_votes(mut self, mv_votes: u32, mv_last_bits: u32) -> Self {
+        self.noise = NoisePoint { mv_votes, mv_last_bits };
+        self
+    }
+
     /// Check the bit widths fit the integer datapath (two's complement
     /// operands in `i32`, shift-safe reconstruction in `i64`). Every
     /// executor that accepts a caller-supplied operating point routes
@@ -28,6 +75,9 @@ impl OperatingPoint {
                 "operating point bits out of range 1..=31 (a_bits {}, w_bits {})",
                 self.a_bits, self.w_bits
             ));
+        }
+        if self.noise.mv_votes < 1 {
+            return Err("operating point mv_votes must be >= 1".into());
         }
         Ok(())
     }
@@ -57,8 +107,8 @@ impl PrecisionPlan {
     pub fn paper_sac() -> Self {
         PrecisionPlan {
             name: "SAC (paper): attn 4b wo/CB, MLP 6b w/CB",
-            attention: OperatingPoint { a_bits: 4, w_bits: 4, cb: CbMode::Off },
-            mlp: OperatingPoint { a_bits: 6, w_bits: 6, cb: CbMode::On },
+            attention: OperatingPoint::new(4, 4, CbMode::Off),
+            mlp: OperatingPoint::new(6, 6, CbMode::On),
         }
     }
 
@@ -68,8 +118,8 @@ impl PrecisionPlan {
     pub fn uniform_safe() -> Self {
         PrecisionPlan {
             name: "None: all 8b w/CB (no co-design)",
-            attention: OperatingPoint { a_bits: 8, w_bits: 8, cb: CbMode::On },
-            mlp: OperatingPoint { a_bits: 8, w_bits: 8, cb: CbMode::On },
+            attention: OperatingPoint::new(8, 8, CbMode::On),
+            mlp: OperatingPoint::new(8, 8, CbMode::On),
         }
     }
 
@@ -78,8 +128,8 @@ impl PrecisionPlan {
     pub fn cb_only() -> Self {
         PrecisionPlan {
             name: "w/CB: attn 8b wo/CB, MLP 8b w/CB",
-            attention: OperatingPoint { a_bits: 8, w_bits: 8, cb: CbMode::Off },
-            mlp: OperatingPoint { a_bits: 8, w_bits: 8, cb: CbMode::On },
+            attention: OperatingPoint::new(8, 8, CbMode::Off),
+            mlp: OperatingPoint::new(8, 8, CbMode::On),
         }
     }
 
@@ -87,8 +137,8 @@ impl PrecisionPlan {
     pub fn uniform_fast() -> Self {
         PrecisionPlan {
             name: "all 4b wo/CB",
-            attention: OperatingPoint { a_bits: 4, w_bits: 4, cb: CbMode::Off },
-            mlp: OperatingPoint { a_bits: 4, w_bits: 4, cb: CbMode::Off },
+            attention: OperatingPoint::new(4, 4, CbMode::Off),
+            mlp: OperatingPoint::new(4, 4, CbMode::Off),
         }
     }
 
@@ -129,24 +179,39 @@ mod tests {
 
     #[test]
     fn operating_point_bit_guard() {
-        assert!(OperatingPoint { a_bits: 4, w_bits: 4, cb: CbMode::Off }.validate().is_ok());
-        assert!(OperatingPoint { a_bits: 31, w_bits: 1, cb: CbMode::On }.validate().is_ok());
+        assert!(OperatingPoint::new(4, 4, CbMode::Off).validate().is_ok());
+        assert!(OperatingPoint::new(31, 1, CbMode::On).validate().is_ok());
         for bad in [
-            OperatingPoint { a_bits: 0, w_bits: 4, cb: CbMode::Off },
-            OperatingPoint { a_bits: 4, w_bits: 0, cb: CbMode::Off },
-            OperatingPoint { a_bits: 32, w_bits: 4, cb: CbMode::Off },
-            OperatingPoint { a_bits: 4, w_bits: 33, cb: CbMode::Off },
+            OperatingPoint::new(0, 4, CbMode::Off),
+            OperatingPoint::new(4, 0, CbMode::Off),
+            OperatingPoint::new(32, 4, CbMode::Off),
+            OperatingPoint::new(4, 33, CbMode::Off),
         ] {
             assert!(bad.validate().is_err(), "{bad:?}");
         }
     }
 
     #[test]
+    fn default_noise_point_is_the_paper_point() {
+        let op = OperatingPoint::new(6, 6, CbMode::On);
+        assert_eq!(op.noise, NoisePoint { mv_votes: 6, mv_last_bits: 3 });
+        assert_eq!(NoisePoint::paper(), NoisePoint::default());
+        assert_eq!(NoisePoint::votes(12), NoisePoint { mv_votes: 12, mv_last_bits: 3 });
+    }
+
+    #[test]
+    fn zero_vote_operating_point_is_rejected() {
+        let op = OperatingPoint::new(6, 6, CbMode::On).with_votes(0, 3);
+        assert!(op.validate().is_err());
+        assert!(OperatingPoint::new(6, 6, CbMode::On).with_votes(1, 3).validate().is_ok());
+    }
+
+    #[test]
     fn operand_ranges_are_twos_complement() {
-        let op = OperatingPoint { a_bits: 4, w_bits: 6, cb: CbMode::Off };
+        let op = OperatingPoint::new(4, 6, CbMode::Off);
         assert_eq!(op.a_range(), (-8, 7));
         assert_eq!(op.w_range(), (-32, 31));
-        let one = OperatingPoint { a_bits: 1, w_bits: 1, cb: CbMode::Off };
+        let one = OperatingPoint::new(1, 1, CbMode::Off);
         assert_eq!(one.a_range(), (-1, 0));
         assert_eq!(one.w_range(), (-1, 0));
     }

@@ -38,7 +38,7 @@ fn tiny_params() -> MacroParams {
 }
 
 fn plan_2b() -> PrecisionPlan {
-    let op = OperatingPoint { a_bits: 2, w_bits: 2, cb: CbMode::Off };
+    let op = OperatingPoint::new(2, 2, CbMode::Off);
     PrecisionPlan { name: "decode probe", attention: op, mlp: op }
 }
 

@@ -27,7 +27,7 @@ fn zero_noise(mut p: MacroParams) -> MacroParams {
 }
 
 fn plan(a_bits: u32, w_bits: u32) -> PrecisionPlan {
-    let op = OperatingPoint { a_bits, w_bits, cb: CbMode::Off };
+    let op = OperatingPoint::new(a_bits, w_bits, CbMode::Off);
     PrecisionPlan { name: "probe plan", attention: op, mlp: op }
 }
 

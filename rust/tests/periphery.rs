@@ -1,0 +1,253 @@
+//! Accuracy-tier integration tests for the deterministic digital
+//! periphery (`coordinator::periphery`) and the per-layer vote points:
+//!
+//! - golden vectors per kernel — exact integer outputs pinned, plus the
+//!   documented ULP bands against the f64 references;
+//! - thread/shard determinism — kernels and glue are pure integer maps,
+//!   byte-identical from any thread, and the zero-noise executor equals
+//!   the exact reference walk across shard/thread configurations;
+//! - planner/executor energy agreement — a heterogeneous per-layer vote
+//!   assignment is priced by `Scheduler::plan_linear` exactly as the
+//!   executor's bank counters measure it, per vote point.
+
+use cr_cim::cim::params::{CbMode, MacroParams};
+use cr_cim::coordinator::periphery::{
+    gelu_ref, glue, iexp_q, iexp_ref, igelu_q, int_layernorm, int_softmax, isqrt, layernorm_ref,
+    softmax_ref, ONE_Q,
+};
+use cr_cim::coordinator::pipeline::{ModelExecutor, PipelineConfig};
+use cr_cim::coordinator::scheduler::Scheduler;
+use cr_cim::coordinator::sweep::{planned_energy_pj, rig_params, rig_plan, set_votes, SweepConfig};
+use cr_cim::util::stats::sum_ordered;
+use cr_cim::vit::graph::{LayerRole, ModelGraph};
+use cr_cim::vit::plan::{OperatingPoint, PrecisionPlan};
+use cr_cim::vit::VitConfig;
+
+// ---------------------------------------------------------------- golden
+
+#[test]
+fn iexp_golden_vectors_and_ulp_band() {
+    // Exact pinned outputs (any change to constants or rounding shows
+    // up here first, not as a downstream serving diff).
+    for (z, want) in [
+        (0i64, 65_557i64),
+        (-ONE_Q, 24_129),
+        (-2 * ONE_Q, 8_846),
+        (-5 * ONE_Q, 442),
+        (-8 * ONE_Q, 21),
+        (-15 * ONE_Q, 0),
+        (-ONE_Q / 2, 39_640),
+        (-3 * ONE_Q / 4, 31_009),
+    ] {
+        assert_eq!(iexp_q(z), want, "iexp_q({z})");
+    }
+    // Documented band: ≤ 262 Q16 ULP vs the true exponential.
+    for i in 0..=3200 {
+        let z = -(i * ONE_Q) / 200; // [-16, 0] in half-percent steps
+        let want = (iexp_ref(z as f64 / ONE_Q as f64) * ONE_Q as f64).round() as i64;
+        assert!(
+            (iexp_q(z) - want).abs() <= 262,
+            "z={z}: {} vs {want}",
+            iexp_q(z)
+        );
+    }
+}
+
+#[test]
+fn softmax_golden_vector_and_ulp_band() {
+    let x: Vec<i64> = vec![-1200, 3400, 0, 911, -77, 2600, 15];
+    assert_eq!(int_softmax(&x), vec![17, 51_566, 140, 685, 122, 12_859, 143]);
+    // ≤ 328 Q16 ULP per probability vs the f64 softmax at the same
+    // integer scale.
+    for (pi, ri) in int_softmax(&x).iter().zip(softmax_ref(&x)) {
+        let want = (ri * ONE_Q as f64).round() as i64;
+        assert!((pi - want).abs() <= 328, "{pi} vs {want}");
+    }
+}
+
+#[test]
+fn layernorm_golden_vector_and_band() {
+    let x: Vec<i64> = vec![900, -150, 42, -2044, 512, 7, -333, 1200];
+    assert_eq!(
+        int_layernorm(&x),
+        vec![62_766, -11_786, 1_846, -146_266, 35_217, -639, -24_780, 84_067]
+    );
+    // Band: |Δz| ≤ (1 + |z_ref|)/σ + 4·2⁻¹⁶ (floored mean + floored σ).
+    let n = x.len() as f64;
+    let mean = sum_ordered(x.iter().map(|&v| v as f64)) / n;
+    let sigma =
+        (sum_ordered(x.iter().map(|&v| (v as f64 - mean).powi(2))) / n).sqrt();
+    for (zi, ri) in int_layernorm(&x).iter().zip(layernorm_ref(&x)) {
+        let got = *zi as f64 / ONE_Q as f64;
+        let band = (1.0 + ri.abs()) / sigma + 4.0 / ONE_Q as f64;
+        assert!((got - ri).abs() <= band, "got {got} want {ri} band {band}");
+    }
+}
+
+#[test]
+fn gelu_golden_vectors_and_band() {
+    for (z, want) in [
+        (ONE_Q, 55_424i64),
+        (-ONE_Q, -10_112),
+        (2 * ONE_Q, 126_864),
+        (-2 * ONE_Q, -4_208),
+        (ONE_Q / 2, 22_945),
+        (-ONE_Q / 2, -9_823),
+        (4 * ONE_Q, 261_856),
+        (-4 * ONE_Q, -288),
+    ] {
+        assert_eq!(igelu_q(z), want, "igelu_q({z})");
+    }
+    for i in -800..=800 {
+        let z = (i * ONE_Q) / 200; // [-4, 4]
+        let got = igelu_q(z) as f64 / ONE_Q as f64;
+        let want = gelu_ref(z as f64 / ONE_Q as f64);
+        assert!((got - want).abs() <= 0.02, "z={z}: {got} vs {want}");
+    }
+}
+
+#[test]
+fn glue_golden_vectors() {
+    let y: Vec<i64> = vec![120, -3400, 77, 0, 55_000, -9, 1234];
+    assert_eq!(glue(LayerRole::Qkv, &y, 9, 6), vec![0, 0, 0, 0, 30, 0, 0, 0, 0]);
+    assert_eq!(glue(LayerRole::Fc1, &y, 9, 6), vec![0, 0, 0, 0, 30, 0, 0, 0, 0]);
+    let ln = vec![-2, -4, -2, -3, 18, -3, -2, -2, -4];
+    assert_eq!(glue(LayerRole::AttnProj, &y, 9, 6), ln);
+    assert_eq!(glue(LayerRole::Fc2, &y, 9, 6), ln);
+}
+
+#[test]
+fn isqrt_floor_holds_on_probe_points() {
+    for &v in &[0i64, 1, 2, 3, 4, 99, 10_000, (1 << 40) + 17, i64::MAX] {
+        let r = isqrt(v);
+        assert!(r as i128 * r as i128 <= v as i128);
+        assert!((r as i128 + 1) * (r as i128 + 1) > v as i128);
+    }
+}
+
+// --------------------------------------------------------- determinism
+
+#[test]
+fn kernels_are_byte_identical_across_threads() {
+    let y: Vec<i64> = (0..96i64).map(|i| (i * 9973) % 7001 - 3500).collect();
+    let golden = (
+        int_softmax(&y),
+        int_layernorm(&y),
+        y.iter().map(|&v| igelu_q(v)).collect::<Vec<i64>>(),
+        glue(LayerRole::Qkv, &y, 48, 4),
+        glue(LayerRole::Fc1, &y, 48, 4),
+        glue(LayerRole::Fc2, &y, 48, 4),
+    );
+    let results: Vec<_> = (0..8)
+        .map(|_| {
+            let y = y.clone();
+            std::thread::spawn(move || {
+                (
+                    int_softmax(&y),
+                    int_layernorm(&y),
+                    y.iter().map(|&v| igelu_q(v)).collect::<Vec<i64>>(),
+                    glue(LayerRole::Qkv, &y, 48, 4),
+                    glue(LayerRole::Fc1, &y, 48, 4),
+                    glue(LayerRole::Fc2, &y, 48, 4),
+                )
+            })
+        })
+        .collect();
+    for h in results {
+        assert_eq!(h.join().unwrap(), golden, "periphery must not depend on the thread");
+    }
+}
+
+fn quiet_params() -> MacroParams {
+    let mut p = MacroParams::default();
+    p.adc_bits = 6;
+    p.active_rows = 64;
+    p.rows = 64;
+    p.cols = 12;
+    p.sigma_cu_rel = 0.0;
+    p.nonlin_cubic_lsb = 0.0;
+    p.sigma_cmp_lsb = 0.0;
+    p.sigma_cmp_offset_lsb = 0.0;
+    p.temperature_k = 0.0;
+    p
+}
+
+/// d_ff = 96 > 64 active rows: fc2 row-tiles even on the tiny geometry.
+fn tiny_cfg() -> VitConfig {
+    VitConfig { image: 16, patch: 4, dim: 48, depth: 2, heads: 4, mlp_ratio: 2, num_classes: 4 }
+}
+
+fn images(n: usize, floats: usize) -> Vec<Vec<f32>> {
+    (0..n)
+        .map(|i| {
+            (0..floats).map(|j| (((i + 3) * 31 + j * 7) % 13) as f32 / 13.0 - 0.5).collect()
+        })
+        .collect()
+}
+
+#[test]
+fn zero_noise_serving_equals_reference_across_shards_threads_and_votes() {
+    let base = quiet_params();
+    let op = OperatingPoint::new(2, 2, CbMode::On);
+    let plan = PrecisionPlan { name: "periphery probe", attention: op, mlp: op };
+    let graph = ModelGraph::encoder(&tiny_cfg(), 2, &plan);
+    let imgs = images(3, 32);
+    let reference = {
+        let exec = ModelExecutor::new(&base, graph.clone(), PipelineConfig::default()).unwrap();
+        exec.reference_ints(&exec.featurize_images(&imgs))
+    };
+    // Periphery outputs are non-trivial: some activation past layer 0
+    // must be nonzero or the glue collapsed the signal.
+    assert!(reference.iter().any(|r| r.iter().any(|&v| v != 0)));
+    let votes: Vec<u32> = (0..graph.layer_count()).map(|i| [1u32, 6, 12][i % 3]).collect();
+    for threads in [1usize, 4] {
+        for shards in [1usize, 2] {
+            for per_layer_votes in [false, true] {
+                let mut g = graph.clone();
+                if per_layer_votes {
+                    set_votes(&mut g, &votes, 3);
+                }
+                let p = base.clone().with_threads(threads);
+                let cfg = PipelineConfig {
+                    shards,
+                    attention_dies: 2,
+                    mlp_dies: 1,
+                    overlap: per_layer_votes,
+                };
+                let mut exec = ModelExecutor::new(&p, g, cfg).unwrap();
+                let xs = exec.featurize_images(&imgs);
+                let got = exec.forward_ints(&xs).unwrap();
+                assert_eq!(
+                    got, reference,
+                    "threads {threads}, shards {shards}, votes {per_layer_votes}"
+                );
+            }
+        }
+    }
+}
+
+// ------------------------------------------------- planner == executor
+
+#[test]
+fn heterogeneous_vote_energy_is_priced_exactly_as_measured() {
+    let params = rig_params();
+    let mut graph = ModelGraph::encoder(&SweepConfig::full().cfg, 1, &rig_plan());
+    // A deliberately lopsided assignment: every grid step appears.
+    let votes: Vec<u32> =
+        (0..graph.layer_count()).map(|i| [1u32, 2, 3, 6, 8, 12][i % 6]).collect();
+    set_votes(&mut graph, &votes, 3);
+    let sched = Scheduler::with_topology(&params, 1, 1);
+    let imgs = images(4, 32);
+    let mut exec = ModelExecutor::new(&params, graph.clone(), PipelineConfig::default()).unwrap();
+    let xs = exec.featurize_images(&imgs);
+    exec.forward_ints(&xs).unwrap();
+    let measured = sum_ordered(exec.layer_costs().iter().map(|c| c.energy_pj));
+    let planned = planned_energy_pj(&sched, &graph, xs.len());
+    let rel = (measured - planned).abs() / planned.max(1e-12);
+    assert!(rel < 1e-9, "measured {measured} pJ != planned {planned} pJ (rel {rel:.2e})");
+    // And the ledger reports the effective per-layer vote point.
+    for (c, &v) in exec.layer_costs().iter().zip(&votes) {
+        assert_eq!(c.mv_votes, v as u64, "{}", c.name);
+        assert_eq!(c.mv_last_bits, 3, "{}", c.name);
+    }
+}

@@ -29,6 +29,7 @@ use cr_cim::cim::params::{CbMode, MacroParams};
 use cr_cim::coordinator::pipeline::{ModelExecutor, PipelineConfig};
 use cr_cim::coordinator::server::{BatchExecutor, Server, ServerConfig};
 use cr_cim::coordinator::stream::{pool_tokens, split_tokens};
+use cr_cim::coordinator::sweep::set_votes;
 use cr_cim::util::json::{self, Json};
 use cr_cim::util::pool::perturb;
 use cr_cim::vit::graph::{GraphConfig, ModelGraph};
@@ -50,7 +51,7 @@ fn tiny_params() -> MacroParams {
 }
 
 fn plan(a_bits: u32, w_bits: u32) -> PrecisionPlan {
-    let op = OperatingPoint { a_bits, w_bits, cb: CbMode::Off };
+    let op = OperatingPoint::new(a_bits, w_bits, CbMode::Off);
     PrecisionPlan { name: "perturb probe", attention: op, mlp: op }
 }
 
@@ -123,6 +124,82 @@ fn perturbed_pipeline_matches_reference_across_seeds_and_threads() {
         overlapped_yields > 0,
         "overlapped runs must inject yields at program/convert stage boundaries"
     );
+}
+
+#[test]
+fn zero_noise_outputs_are_invariant_across_vote_assignments() {
+    let base = tiny_params();
+    // CB on: the per-layer vote point controls the boosted trailing
+    // comparisons, so this grid exercises majority voting inside the
+    // conversion path itself — at zero noise every vote count must
+    // reproduce the exact reference walk bit for bit, under the same
+    // schedule perturbations as the rest of the campaign.
+    let op = OperatingPoint::new(2, 2, CbMode::On);
+    let cb_plan = PrecisionPlan { name: "vote probe", attention: op, mlp: op };
+    let graph = ModelGraph::encoder(&tiny_cfg(), 2, &cb_plan);
+    let imgs = images(3, 32);
+    // The reference is vote-independent: votes only repeat comparator
+    // decisions, and at sigma = 0 every repeat is identical.
+    let reference = {
+        let exec = ModelExecutor::new(&base, graph.clone(), PipelineConfig::default()).unwrap();
+        exec.reference_ints(&exec.featurize_images(&imgs))
+    };
+    let layer_count = graph.layer_count();
+    let ladder = [1u32, 2, 6, 12];
+    let assignments: Vec<Vec<u32>> = vec![
+        vec![1; layer_count],
+        vec![12; layer_count],
+        (0..layer_count).map(|i| ladder[i % ladder.len()]).collect(),
+    ];
+    for votes in &assignments {
+        let mut g = graph.clone();
+        set_votes(&mut g, votes, 3);
+        for seed in [1u64, 7] {
+            for threads in [2usize, 4] {
+                for overlap in [false, true] {
+                    let p = base.clone().with_threads(threads);
+                    let cfg =
+                        PipelineConfig { shards: 2, attention_dies: 2, mlp_dies: 1, overlap };
+                    let mut exec = ModelExecutor::new(&p, g.clone(), cfg).unwrap();
+                    let xs = exec.featurize_images(&imgs);
+                    let got = perturb::with_seed(seed, || exec.forward_ints(&xs).unwrap());
+                    assert_eq!(
+                        got, reference,
+                        "votes {votes:?}, seed {seed}, threads {threads}, overlap {overlap}"
+                    );
+                }
+            }
+        }
+    }
+    // The decode tier rides the same invariance: generation through a
+    // vote-reassigned CB-on decoder equals the exact greedy reference.
+    let mut dg = ModelGraph::decoder(&GraphConfig { vit: tiny_cfg(), context: 8 }, &cb_plan);
+    let prompt = [3u32, 1, 2];
+    let want = {
+        let exec = ModelExecutor::new(&base, dg.clone(), PipelineConfig::default()).unwrap();
+        exec.reference_decode(&prompt, 3).0
+    };
+    let votes: Vec<u32> =
+        (0..dg.layer_count()).map(|i| ladder[(i + 1) % ladder.len()]).collect();
+    set_votes(&mut dg, &votes, 3);
+    let p = base.clone().with_threads(2);
+    let cfg = PipelineConfig { shards: 2, attention_dies: 1, mlp_dies: 1, overlap: true };
+    let mut exec = ModelExecutor::new(&p, dg, cfg).unwrap();
+    let srv = Server::new(&ServerConfig {
+        addr: "unused".into(),
+        batch_sizes: vec![1, 4],
+        max_wait: Duration::from_millis(60_000),
+        wave_tokens: 2,
+        max_waves: 2,
+        ..ServerConfig::default()
+    })
+    .unwrap();
+    let conn = srv.open_conn();
+    let resps = perturb::with_seed(5, || {
+        srv.handle_line(&generate_line(10, &prompt, 3), conn).unwrap();
+        drain_responses(&srv, &mut exec, conn, 1)
+    });
+    assert_eq!(generated_of(&resps[0]), want, "generate must be vote-invariant at zero noise");
 }
 
 fn stream_line(id: usize, tokens: usize, img: &[f32]) -> String {

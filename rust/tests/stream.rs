@@ -52,7 +52,7 @@ fn tiny_params() -> MacroParams {
 }
 
 fn plan(a_bits: u32, w_bits: u32) -> PrecisionPlan {
-    let op = OperatingPoint { a_bits, w_bits, cb: CbMode::Off };
+    let op = OperatingPoint::new(a_bits, w_bits, CbMode::Off);
     PrecisionPlan { name: "probe plan", attention: op, mlp: op }
 }
 

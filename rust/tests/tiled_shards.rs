@@ -46,7 +46,7 @@ fn quiet64() -> MacroParams {
 }
 
 fn op_2b() -> OperatingPoint {
-    OperatingPoint { a_bits: 2, w_bits: 2, cb: CbMode::Off }
+    OperatingPoint::new(2, 2, CbMode::Off)
 }
 
 fn tile(k: usize, n: usize, nvec: usize, seed: u64) -> (Vec<Vec<i32>>, Vec<Vec<i32>>) {

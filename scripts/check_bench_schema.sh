@@ -1,12 +1,15 @@
 #!/usr/bin/env bash
-# Schema-drift guard for the hotpath bench report: the serving dashboards
-# and the cold/warm residency acceptance numbers key off
-# target/bench-reports/BENCH_pipeline.json, so CI fails loudly if a
+# Schema-drift guard for the bench reports: the serving dashboards and
+# the cold/warm residency acceptance numbers key off
+# target/bench-reports/BENCH_pipeline.json, and the accuracy/power
+# co-design figure keys off BENCH_accuracy.json, so CI fails loudly if a
 # refactor drops or renames a field. Run after `cargo bench --bench
-# hotpath` (CRCIM_BENCH_FAST=1 keeps it smoke-sized).
+# hotpath` and `crcim sweep --smoke` (CRCIM_BENCH_FAST=1 keeps both
+# smoke-sized).
 set -euo pipefail
 
 report="${1:-target/bench-reports/BENCH_pipeline.json}"
+accuracy_report="${2:-target/bench-reports/BENCH_accuracy.json}"
 
 if [[ ! -f "$report" ]]; then
   echo "FAIL: $report not found (did the hotpath bench run?)" >&2
@@ -88,8 +91,67 @@ else
   done
 fi
 
+# ---- accuracy tier: BENCH_accuracy.json (crcim sweep / bench accuracy) ----
+
+if [[ ! -f "$accuracy_report" ]]; then
+  echo "FAIL: $accuracy_report not found (did \`crcim sweep\` run?)" >&2
+  exit 1
+fi
+
+accuracy_keys=(
+  images
+  layers
+  sigma_cmp_lsb
+  mv_last_bits
+  pareto_count
+)
+for key in "${accuracy_keys[@]}"; do
+  if ! grep -Eq "\"$key\"[[:space:]]*:[[:space:]]*-?[0-9]" "$accuracy_report"; then
+    echo "FAIL: $accuracy_report key \"$key\" is missing or not numeric" >&2
+    fail=1
+  fi
+done
+for key in vote_grid points pareto_points; do
+  if ! grep -Eq "\"$key\"[[:space:]]*:[[:space:]]*\[" "$accuracy_report"; then
+    echo "FAIL: $accuracy_report is missing the \"$key\" array" >&2
+    fail=1
+  fi
+done
+if ! grep -Eq '"codesign"[[:space:]]*:[[:space:]]*\{' "$accuracy_report"; then
+  echo "FAIL: $accuracy_report is missing the \"codesign\" object" >&2
+  fail=1
+fi
+# Per-point and co-design fields: the keys only appear inside their
+# respective objects, so whole-report presence + numeric checks suffice.
+point_keys=(
+  accuracy
+  sqnr_db
+  energy_pj_per_inference
+  planned_energy_pj_per_inference
+  planned_rel_err
+  modeled_noise
+  sqnr_fom
+  energy_pj_per_vector
+  uniform6_energy_pj_per_vector
+  energy_vs_uniform6
+  noise_budget
+)
+for key in "${point_keys[@]}"; do
+  if ! grep -Eq "\"$key\"[[:space:]]*:[[:space:]]*-?[0-9]" "$accuracy_report"; then
+    echo "FAIL: $accuracy_report points/codesign are missing numeric \"$key\"" >&2
+    fail=1
+  fi
+done
+# A Pareto frontier needs at least two points or it is not a trade-off
+# curve; pareto_count is the scalar mirror emitted for exactly this.
+if ! grep -Eq '"pareto_count"[[:space:]]*:[[:space:]]*([2-9]|[1-9][0-9])' "$accuracy_report"; then
+  echo "FAIL: $accuracy_report pareto_count < 2; frontier is degenerate" >&2
+  fail=1
+fi
+
 if [[ $fail -ne 0 ]]; then
   exit 1
 fi
 
 echo "OK: $report carries all ${#required_keys[@]} required keys with typed values (incl. cold/warm pass, streaming wave, measured overlap + saturation curve)"
+echo "OK: $accuracy_report carries the accuracy-tier schema (vote grid, points, >=2 Pareto points, co-design block)"

@@ -69,6 +69,16 @@ if [ -f docs/ARCHITECTURE.md ] && \
     fail=1
 fi
 
+# The accuracy tier (deterministic digital periphery, per-layer
+# majority-voting operating points, accuracy-vs-energy sweeps) — the
+# periphery golden-vector tests and BENCH_accuracy.json's schema guard
+# both reference this section.
+if [ -f docs/ARCHITECTURE.md ] && \
+   ! grep -q '^## Accuracy tier' docs/ARCHITECTURE.md; then
+    echo "MISSING SECTION: docs/ARCHITECTURE.md '## Accuracy tier'"
+    fail=1
+fi
+
 for f in $files; do
     dir=$(dirname "$f")
     # Extract inline markdown link targets: [text](target)
